@@ -1,0 +1,101 @@
+//! E10 — baseline comparison: the AE scheme vs the related-work
+//! compressors from the paper's §2 survey.
+//!
+//! Runs the same small federated experiment once per compression scheme
+//! (identity, AE, top-k/DGC, 8-bit & 4-bit quantization, subsampling,
+//! count-sketch) and reports final accuracy, measured on-wire compression,
+//! and total uplink bytes — the "who wins, by what factor" comparison the
+//! paper's positioning implies (AE: far larger ratio, at the price of the
+//! one-time decoder shipment and pre-pass compute).
+//!
+//! ```bash
+//! cargo run --release --example baseline_comparison [-- --rounds 8]
+//! ```
+
+use anyhow::Result;
+use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::coordinator::FlDriver;
+use fedae::metrics::print_table;
+use fedae::runtime::{AePipeline, Runtime};
+use fedae::util::cli::Args;
+use fedae::util::human_bytes;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rt = Runtime::from_dir(args.get_or("artifacts", "artifacts"))?;
+    let pipeline = AePipeline::new(&rt, "mnist")?;
+    let rounds = args.get_usize("rounds", 8)?;
+
+    let schemes: Vec<(&str, CompressionConfig)> = vec![
+        ("identity (no compression)", CompressionConfig::Identity),
+        ("ae (this paper)", CompressionConfig::Ae { ae: "mnist".into() }),
+        ("topk 1% (DGC)", CompressionConfig::TopK { fraction: 0.01 }),
+        (
+            "quantize 8-bit (FedPAQ)",
+            CompressionConfig::Quantize { bits: 8, stochastic: false },
+        ),
+        (
+            "quantize 4-bit stoch.",
+            CompressionConfig::Quantize { bits: 4, stochastic: true },
+        ),
+        ("subsample 1%", CompressionConfig::Subsample { fraction: 0.01 }),
+        (
+            "sketch 5x640 (FetchSGD)",
+            CompressionConfig::Sketch { rows: 5, cols: 640, topk: 1024 },
+        ),
+    ];
+
+    let n_params = rt.manifest().model("mnist")?.n_params;
+    let mut rows = Vec::new();
+    for (label, compression) in schemes {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("baseline_{}", compression.kind_name());
+        cfg.model = "mnist".into();
+        cfg.compression = compression.clone();
+        cfg.fl.collaborators = 2;
+        cfg.fl.rounds = rounds;
+        cfg.fl.local_epochs = 3;
+        cfg.data.per_collab = args.get_usize("per-collab", 1024)?;
+        cfg.data.test_size = 512;
+        cfg.prepass.epochs = 30;
+        cfg.prepass.ae_epochs = 30;
+        cfg.seed = args.get_u64("seed", 3)?;
+
+        let pipe_ref = matches!(cfg.compression, CompressionConfig::Ae { .. }).then_some(&pipeline);
+        let mut driver = FlDriver::new(&rt, cfg, pipe_ref)?;
+        let out = driver.run()?;
+        let ledger = driver.network.ledger();
+        let ratio = ledger
+            .measured_update_ratio((n_params * 4) as u64)
+            .unwrap_or(1.0);
+        let one_time = ledger.bytes_for(
+            fedae::network::Direction::Up,
+            fedae::network::TrafficKind::DecoderShipment,
+        );
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.4}", out.eval_acc),
+            format!("{ratio:.0}x"),
+            human_bytes(ledger.update_bytes_up()),
+            if one_time > 0 { human_bytes(one_time) } else { "-".into() },
+        ]);
+        println!("{label}: done (acc {:.3})", out.eval_acc);
+    }
+
+    println!(
+        "\n== E10: {} rounds, 2 collaborators, synth-mnist ==",
+        rounds
+    );
+    println!(
+        "{}",
+        print_table(
+            &["scheme", "final_acc", "measured ratio", "update bytes", "one-time cost"],
+            &rows
+        )
+    );
+    println!(
+        "(AE's one-time cost is the decoder shipment the Fig 10/11 break-even \
+         analysis amortizes; see examples/savings_sweep.rs)"
+    );
+    Ok(())
+}

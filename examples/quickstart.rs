@@ -1,0 +1,74 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the AOT artifacts, runs the paper's pre-pass round for one
+//! collaborator (AE training on logged weight snapshots), then runs a few
+//! AE-compressed federated rounds and prints what travelled on the wire.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::coordinator::FlDriver;
+use fedae::runtime::{AePipeline, Runtime};
+use fedae::util::human_bytes;
+
+fn main() -> Result<()> {
+    // 1. Load the PJRT runtime over the AOT-compiled artifacts.
+    let rt = Runtime::from_dir("artifacts")?;
+    println!("runtime: platform={}", rt.platform_name());
+
+    // 2. Describe the experiment: 2 collaborators, MNIST-shaped model,
+    //    the paper's ~500x autoencoder compression.
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "quickstart".into();
+    cfg.model = "mnist".into();
+    cfg.compression = CompressionConfig::Ae { ae: "mnist".into() };
+    cfg.fl.collaborators = 2;
+    cfg.fl.rounds = 6;
+    cfg.fl.local_epochs = 2;
+    cfg.data.per_collab = 768;
+    cfg.data.test_size = 512;
+    cfg.prepass.epochs = 25;
+    cfg.prepass.ae_epochs = 20;
+
+    // 3. Build the AE pipeline + driver (this runs the pre-pass round:
+    //    each collaborator trains locally, trains its AE on the weight
+    //    snapshots, and ships the decoder half to the aggregator).
+    let pipeline = AePipeline::new(&rt, "mnist")?;
+    println!(
+        "AE: {} params, latent {}, nominal ratio {:.1}x",
+        pipeline.n_params,
+        pipeline.latent,
+        pipeline.input_dim as f64 / pipeline.latent as f64
+    );
+    let mut driver = FlDriver::new(&rt, cfg, Some(&pipeline))?;
+
+    // 4. Federated rounds: encode -> send -> decode -> aggregate.
+    for _ in 0..driver.config().fl.rounds {
+        let out = driver.run_round()?;
+        println!(
+            "round {:>2}: acc={:.3} loss={:.3} uplink={} (vs {} raw)",
+            out.round,
+            out.eval_acc,
+            out.eval_loss,
+            human_bytes(out.bytes_up),
+            human_bytes((15_910 * 4 * 2) as u64),
+        );
+    }
+
+    // 5. Report the measured on-wire compression.
+    let ledger = driver.network.ledger();
+    let ratio = ledger.measured_update_ratio((15_910 * 4) as u64).unwrap();
+    println!(
+        "\nmeasured update compression: {ratio:.0}x \
+         (update bytes {}, decoder shipment {})",
+        human_bytes(ledger.update_bytes_up()),
+        human_bytes(ledger.bytes_for(
+            fedae::network::Direction::Up,
+            fedae::network::TrafficKind::DecoderShipment
+        )),
+    );
+    Ok(())
+}

@@ -1,0 +1,242 @@
+"""AOT pipeline: lower every Layer-2 entry point to HLO *text* artifacts.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, per model family (mnist / cifar / mnist_deep):
+
+  * ``<name>.hlo.txt``       — HLO text for each exported entry point.
+  * ``init/<model>.bin``     — deterministic (seeded) initial flat params,
+                               raw little-endian f32 bytes for rust.
+  * ``manifest.json``        — shapes, param counts, latent dims, batch
+                               sizes, encoder/decoder splits — validated by
+                               the rust ``config`` module at load time.
+
+HLO **text** (never ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 rust crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch sizes baked into the exported executables (rust pads batches).
+MNIST_TRAIN_B = 64
+MNIST_EVAL_B = 256
+CIFAR_TRAIN_B = 32
+CIFAR_EVAL_B = 128
+AE_BATCH_MNIST = 16
+AE_BATCH_CIFAR = 8
+
+SEED = 42
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> stablehlo -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sh(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def classifier_exports(family: str):
+    """(name, fn, arg_shapes) triples for one classifier family."""
+    if family == "mnist":
+        n, d, tb, eb = M.MNIST_PARAMS, 784, MNIST_TRAIN_B, MNIST_EVAL_B
+        train, evalf = M.mnist_train_step, M.mnist_eval
+    else:
+        n, d, tb, eb = M.CIFAR_PARAMS, 3072, CIFAR_TRAIN_B, CIFAR_EVAL_B
+        train, evalf = M.cifar_train_step, M.cifar_eval
+    return [
+        (
+            f"{family}_train_step",
+            train,
+            [_sh(n), _sh(tb, d), _sh(tb, 10), _sh()],
+            ["params", "x", "y_onehot", "lr"],
+            ["params", "loss"],
+        ),
+        (
+            f"{family}_eval",
+            evalf,
+            [_sh(n), _sh(eb, d), _sh(eb, 10)],
+            ["params", "x", "y_onehot"],
+            ["loss", "acc"],
+        ),
+    ]
+
+
+def ae_exports(tag: str, spec: M.AeSpec, batch: int):
+    """(name, fn, arg_shapes) triples for one AE family."""
+    n_ae, n_in = spec.n_params, spec.input_dim
+
+    def train(ae, b, m, v, s):
+        return M.ae_train_step(spec, ae, b, m, v, s)
+
+    def enc(e, w):
+        return (M.ae_encode(spec, e, w),)
+
+    def dec(d, z):
+        return (M.ae_decode(spec, d, z),)
+
+    def rt(ae, w):
+        return M.ae_roundtrip(spec, ae, w)
+
+    return [
+        (
+            f"ae_train_step_{tag}",
+            train,
+            [_sh(n_ae), _sh(batch, n_in), _sh(n_ae), _sh(n_ae), _sh()],
+            ["ae_params", "batch", "adam_m", "adam_v", "step"],
+            ["ae_params", "adam_m", "adam_v", "mse", "acc"],
+        ),
+        (
+            f"encode_{tag}",
+            enc,
+            [_sh(spec.encoder_params), _sh(n_in)],
+            ["enc_params", "w"],
+            ["z"],
+        ),
+        (
+            f"decode_{tag}",
+            dec,
+            [_sh(spec.decoder_params), _sh(spec.latent)],
+            ["dec_params", "z"],
+            ["w_recon"],
+        ),
+        (
+            f"ae_roundtrip_{tag}",
+            rt,
+            [_sh(n_ae), _sh(n_in)],
+            ["ae_params", "w"],
+            ["w_recon", "mse", "acc"],
+        ),
+    ]
+
+
+def all_exports():
+    specs = {
+        "mnist": M.AeSpec(M.mnist_ae_dims()),
+        "cifar": M.AeSpec(M.cifar_ae_dims()),
+        "mnist_deep": M.AeSpec(M.MNIST_DEEP_AE_DIMS),
+    }
+    exports = []
+    exports += classifier_exports("mnist")
+    exports += classifier_exports("cifar")
+    exports += ae_exports("mnist", specs["mnist"], AE_BATCH_MNIST)
+    exports += ae_exports("cifar", specs["cifar"], AE_BATCH_CIFAR)
+    exports += ae_exports("mnist_deep", specs["mnist_deep"], AE_BATCH_MNIST)
+    return specs, exports
+
+
+def write_inits(out_dir: pathlib.Path, specs) -> dict:
+    """Deterministic initial params as raw LE f32 — loaded directly by rust."""
+    init_dir = out_dir / "init"
+    init_dir.mkdir(parents=True, exist_ok=True)
+    key = jax.random.PRNGKey(SEED)
+    k_mnist, k_cifar, k_ae1, k_ae2, k_ae3 = jax.random.split(key, 5)
+    blobs = {
+        "mnist_params": M.init_dense_params(k_mnist, M.MNIST_DIMS),
+        "cifar_params": M.init_cifar_params(k_cifar),
+        "ae_mnist_init": M.init_dense_params(k_ae1, specs["mnist"].dims),
+        "ae_cifar_init": M.init_dense_params(k_ae2, specs["cifar"].dims),
+        "ae_mnist_deep_init": M.init_dense_params(k_ae3, specs["mnist_deep"].dims),
+    }
+    entries = {}
+    for name, arr in blobs.items():
+        data = np.asarray(arr, dtype="<f4").tobytes()
+        path = init_dir / f"{name}.bin"
+        path.write_bytes(data)
+        entries[name] = {
+            "file": f"init/{name}.bin",
+            "len": int(arr.shape[0]),
+            "sha256": hashlib.sha256(data).hexdigest(),
+        }
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names to rebuild"
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    specs, exports = all_exports()
+    manifest = {
+        "seed": SEED,
+        "models": {
+            "mnist": {
+                "n_params": M.MNIST_PARAMS,
+                "input_dim": 784,
+                "classes": 10,
+                "train_batch": MNIST_TRAIN_B,
+                "eval_batch": MNIST_EVAL_B,
+            },
+            "cifar": {
+                "n_params": M.CIFAR_PARAMS,
+                "input_dim": 3072,
+                "classes": 10,
+                "train_batch": CIFAR_TRAIN_B,
+                "eval_batch": CIFAR_EVAL_B,
+            },
+        },
+        "autoencoders": {
+            tag: {
+                "dims": list(spec.dims),
+                "n_params": spec.n_params,
+                "latent": spec.latent,
+                "encoder_params": spec.encoder_params,
+                "decoder_params": spec.decoder_params,
+                "compression_ratio": spec.compression_ratio,
+                "train_batch": AE_BATCH_MNIST if "mnist" in tag else AE_BATCH_CIFAR,
+            }
+            for tag, spec in specs.items()
+        },
+        "artifacts": {},
+    }
+
+    for name, fn, shapes, in_names, out_names in exports:
+        path = out_dir / f"{name}.hlo.txt"
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"name": n_, "shape": list(s.shape), "dtype": "f32"}
+                for n_, s in zip(in_names, shapes)
+            ],
+            "outputs": out_names,
+        }
+        if (only is None or name in only) or not path.exists():
+            text = to_hlo_text(jax.jit(fn).lower(*shapes))
+            path.write_text(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        entry["sha256"] = hashlib.sha256(path.read_bytes()).hexdigest()
+        manifest["artifacts"][name] = entry
+
+    manifest["inits"] = write_inits(out_dir, specs)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

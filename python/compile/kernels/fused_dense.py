@@ -1,0 +1,235 @@
+"""Layer-1 Pallas kernels: tiled fused dense (matmul + bias + activation).
+
+This is the compute hot-spot of the paper's system. The autoencoder that
+compresses a collaborator's weight update is dominated by two enormous dense
+layers — encoder ``w[n_params] @ W1[n_params, latent]`` and decoder
+``z[latent] @ W2[latent, n_params]`` with ``n_params`` in the tens of
+thousands to hundreds of millions. Both reduce to a GEMM with one huge
+dimension, so the kernel below tiles the K (contraction) and N (output)
+dimensions through VMEM-sized blocks and fuses the bias add + activation
+into the final K-step of each output tile.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is (nN, nK) with
+K innermost so each output tile stays resident in VMEM while partial
+products accumulate — the classic MXU-friendly schedule. Under this
+sandbox's CPU PJRT we lower with ``interpret=True`` (numerics identical;
+Mosaic custom-calls cannot run on CPU).
+
+Correctness oracle: :mod:`compile.kernels.ref` — pytest + hypothesis sweep
+shapes/dtypes/tiles and ``assert_allclose`` against it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ACTIVATIONS, apply_activation
+
+# Default tile sizes. Chosen so an f32 working set
+#   x-tile (B x Kt) + w-tile (Kt x Nt) + o-tile (B x Nt)
+# fits comfortably in a 16 MiB VMEM budget for the batch sizes we export
+# (B <= 256): 1024*256*4B = 1 MiB per w-tile. See EXPERIMENTS.md §Perf for
+# the tile-sweep that selected these.
+DEFAULT_KT = 1024
+DEFAULT_NT = 256
+
+#: Per-w-tile VMEM budget for auto tile selection (bytes). One quarter of a
+#: 16 MiB VMEM leaves room for the x/o tiles and double buffering.
+AUTO_TILE_BUDGET = 4 * 2**20
+
+#: Sentinel: pick kt/nt from the GEMM geometry (see `auto_tiles`).
+AUTO = -1
+
+
+def auto_tiles(k_dim: int, n_dim: int) -> tuple:
+    """Pick (kt, nt) from GEMM geometry under the VMEM budget.
+
+    The AE has two extreme GEMV shapes: encoder (K huge, N = latent) and
+    decoder (K = latent, N huge). Fixed square-ish tiles leave one of them
+    with dozens-to-hundreds of tiny grid steps (EXPERIMENTS.md §Perf:
+    decode was 3x slower than encode, then encode 4x slower than decode,
+    before this heuristic). Strategy: whichever dimension is small gets
+    covered by a single tile; the large dimension then takes the biggest
+    tile the w-tile budget (kt*nt*4 <= AUTO_TILE_BUDGET) allows — for the
+    AE's GEMVs both collapse to a single grid step with a ~2 MiB w-tile.
+    """
+    nt0 = max(1, min(n_dim, DEFAULT_NT))
+    kt = max(1, min(k_dim, max(DEFAULT_KT, AUTO_TILE_BUDGET // (4 * nt0))))
+    nt = max(1, min(n_dim, AUTO_TILE_BUDGET // (4 * kt)))
+    return kt, nt
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, nk: int):
+    """Grid body: one (n, k) step of the tiled GEMM.
+
+    Grid is (nN, nK) with k the innermost (fastest) axis, so for a fixed
+    output tile ``n`` we sweep all K-tiles, accumulating into ``o_ref``
+    (whose index map pins the same block for every k). Bias + activation
+    are fused into the last K-step.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        o_ref[...] = apply_activation(acc, act)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _dense_pallas_f32(x, w, b, act: str, kt: int, nt: int) -> jnp.ndarray:
+    """Core tiled kernel launch. Inputs already f32, 2-D x."""
+    batch, k_dim = x.shape
+    _, n_dim = w.shape
+    if kt == AUTO or nt == AUTO:
+        auto_kt, auto_nt = auto_tiles(max(k_dim, 1), max(n_dim, 1))
+        kt = auto_kt if kt == AUTO else kt
+        nt = auto_nt if nt == AUTO else nt
+    kt = min(kt, max(k_dim, 1))
+    nt = min(nt, max(n_dim, 1))
+
+    xp = _pad_to(x, 1, kt)
+    wp = _pad_to(_pad_to(w, 0, kt), 1, nt)
+    bp = _pad_to(b, 0, nt)
+    nk = xp.shape[1] // kt
+    nn = wp.shape[1] // nt
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, act=act, nk=nk),
+        grid=(nn, nk),
+        in_specs=[
+            pl.BlockSpec((batch, kt), lambda n, k: (0, k)),
+            pl.BlockSpec((kt, nt), lambda n, k: (k, n)),
+            pl.BlockSpec((nt,), lambda n, k: (n,)),
+        ],
+        out_specs=pl.BlockSpec((batch, nt), lambda n, k: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((batch, nn * nt), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls.
+    )(xp, wp, bp)
+    return out[:, :n_dim]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_dense(x, w, b, act: str = "linear", kt: int = AUTO, nt: int = AUTO):
+    """Fused dense layer ``act(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: ``[B, K]`` (or ``[K]``, treated as batch 1) input.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+      act: one of :data:`compile.kernels.ref.ACTIVATIONS`.
+      kt / nt: K / N tile sizes (VMEM blocking).
+
+    Differentiable via a custom VJP whose backward matmuls are themselves
+    tiled Pallas launches, so AE training lowers to the same kernel family.
+    """
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    squeeze = x.ndim == 1
+    x2 = x[None, :] if squeeze else x
+    out = _dense_pallas_f32(
+        x2.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32), act, kt, nt
+    ).astype(x.dtype)
+    return out[0] if squeeze else out
+
+
+def matmul_tiled(x, w, kt: int = AUTO, nt: int = AUTO):
+    """Tiled Pallas matmul ``x @ w`` (no bias / activation).
+
+    Used by the custom VJP below and exported for the benches.
+    """
+    squeeze = x.ndim == 1
+    x2 = x[None, :] if squeeze else x
+    zeros = jnp.zeros((w.shape[1],), jnp.float32)
+    out = _dense_pallas_f32(
+        x2.astype(jnp.float32), w.astype(jnp.float32), zeros, "linear", kt, nt
+    ).astype(x.dtype)
+    return out[0] if squeeze else out
+
+
+def _act_grad_from_output(y: jnp.ndarray, act: str) -> jnp.ndarray:
+    """d(act)/d(pre-activation), expressed in terms of the *output* y.
+
+    All supported activations admit this form, so the VJP never has to
+    save the pre-activation tensor (halves residual memory).
+    """
+    if act == "linear":
+        return jnp.ones_like(y)
+    if act == "relu":
+        return (y > 0).astype(y.dtype)
+    if act == "tanh":
+        return 1.0 - y * y
+    if act == "sigmoid":
+        return y * (1.0 - y)
+    raise ValueError(act)
+
+
+def _fused_dense_fwd(x, w, b, act, kt, nt):
+    y = fused_dense(x, w, b, act, kt, nt)
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(act, kt, nt, res, g):
+    x, w, y = res
+    squeeze = x.ndim == 1
+    x2 = x[None, :] if squeeze else x
+    g2 = g[None, :] if squeeze else g
+    y2 = y[None, :] if squeeze else y
+    gp = (g2 * _act_grad_from_output(y2, act)).astype(jnp.float32)
+    # dx = g' @ w^T   — contraction over N: tile with (kt over N, nt over K).
+    dx = matmul_tiled(gp, w.astype(jnp.float32).T, kt, nt)
+    # dw = x^T @ g'   — contraction over B (small), N-tiled output.
+    dw = matmul_tiled(x2.astype(jnp.float32).T, gp, kt, nt)
+    db = jnp.sum(gp, axis=0)
+    if squeeze:
+        dx = dx[0]
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(jnp.float32)
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)
+
+
+def vmem_footprint_bytes(batch: int, kt: int, nt: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (perf model, DESIGN.md §9)."""
+    return dtype_bytes * (batch * kt + kt * nt + nt + batch * nt)
+
+
+def mxu_utilization_estimate(batch: int, k: int, n: int, kt: int, nt: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding).
+
+    The MXU consumes 128x128 tiles; padding B, Kt, Nt up to multiples of
+    the systolic dimensions wastes the remainder. This is the structural
+    efficiency metric we optimize under interpret=True (wallclock on CPU is
+    not a TPU proxy).
+    """
+
+    def _ceil(a: int, m: int) -> int:
+        return -(-a // m) * m
+
+    useful = batch * k * n
+    kt = min(kt, k)
+    nt = min(nt, n)
+    nk, nn = -(-k // kt), -(-n // nt)
+    issued = _ceil(batch, 8) * (nk * _ceil(kt, 128)) * (nn * _ceil(nt, 128))
+    return useful / issued

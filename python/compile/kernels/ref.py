@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. The pytest suite (and the
+hypothesis sweeps) assert ``assert_allclose(kernel(...), ref(...))`` over a
+wide range of shapes, dtypes and tile sizes — this file is the correctness
+ground truth for Layer 1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Activations supported by the fused dense kernel. Kept in one place so the
+#: kernel, the reference and the tests always agree on the set.
+ACTIVATIONS = ("linear", "relu", "tanh", "sigmoid")
+
+
+def apply_activation(y: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Apply one of the supported activations (reference semantics)."""
+    if act == "linear":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "sigmoid":
+        # Stable sigmoid; matches jax.nn.sigmoid numerics.
+        return 1.0 / (1.0 + jnp.exp(-y))
+    raise ValueError(f"unknown activation {act!r}; expected one of {ACTIVATIONS}")
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str = "linear") -> jnp.ndarray:
+    """Reference fused dense layer: ``act(x @ w + b)``.
+
+    x: [B, K], w: [K, N], b: [N] -> [B, N]. All math in f32 accumulation
+    (inputs are upcast), mirroring the kernel's accumulator dtype.
+    """
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    acc = acc + b.astype(jnp.float32)
+    return apply_activation(acc, act).astype(x.dtype)
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference tiled matmul: ``x @ w`` with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)

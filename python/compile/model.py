@@ -1,0 +1,347 @@
+"""Layer-2 JAX models: collaborator classifiers + the compressing autoencoder.
+
+Everything here operates on **flat f32 parameter vectors** — the same
+representation the rust coordinator ships over the (simulated) network —
+and is lowered once by :mod:`compile.aot` to HLO text artifacts executed
+from rust via PJRT. Python never runs on the request path.
+
+Models (paper §4.1):
+  * MNIST-shaped MLP classifier, 784-20-10  → exactly **15,910** params.
+  * CIFAR-shaped CNN classifier (scaled substitute, DESIGN.md §3)
+    → **51,082** params.
+  * Fully-connected funnel autoencoder (paper Fig 1 / Eq 1-3). For the
+    MNIST classifier with latent 32 the AE has exactly **1,034,182**
+    params and a ~500x compression ratio (15910/32 = 497.2x), matching
+    the paper's reported numbers. The CIFAR-shaped AE uses latent 30 for
+    a ~1703x ("~1720x") ratio.
+
+The AE's dense layers go through the Layer-1 Pallas kernel
+(:func:`compile.kernels.fused_dense.fused_dense`), whose custom VJP keeps
+AE training inside the same kernel family.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.fused_dense import fused_dense
+
+# ---------------------------------------------------------------------------
+# Model shape constants (single source of truth; mirrored in manifest.json).
+# ---------------------------------------------------------------------------
+
+MNIST_DIMS = (784, 20, 10)
+MNIST_PARAMS = 15_910  # = 784*20 + 20 + 20*10 + 10, paper §4.1.
+MNIST_LATENT = 32  # paper §5.1: "reduced to a 32 feature encoding" -> ~500x.
+
+# Scaled CIFAR-shaped CNN (substitution, DESIGN.md §3):
+#   conv 3x3x3->8, conv 3x3x8->16, 2x maxpool2 -> 8*8*16=1024, fc 1024->48->10
+CIFAR_CONV = ((3, 3, 3, 8), (3, 3, 8, 16))
+CIFAR_FC = ((1024, 48), (48, 10))
+CIFAR_PARAMS = 51_082
+CIFAR_LATENT = 30  # 51082/30 = 1702.7x  ("nearly 1720x").
+
+# Deep-funnel AE variant used by the dynamic-AE ablation (paper §4.2:
+# "complexity ... can be varied to control the AE model complexity").
+MNIST_DEEP_AE_DIMS = (MNIST_PARAMS, 128, 16, 128, MNIST_PARAMS)
+
+
+def mnist_ae_dims(latent: int = MNIST_LATENT) -> Tuple[int, ...]:
+    return (MNIST_PARAMS, latent, MNIST_PARAMS)
+
+
+def cifar_ae_dims(latent: int = CIFAR_LATENT) -> Tuple[int, ...]:
+    return (CIFAR_PARAMS, latent, CIFAR_PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter helpers.
+# ---------------------------------------------------------------------------
+
+
+def _take(flat: jnp.ndarray, offset: int, shape: Sequence[int]):
+    n = math.prod(shape)
+    return flat[offset : offset + n].reshape(shape), offset + n
+
+
+def dense_param_count(dims: Sequence[int]) -> int:
+    """Total parameter count of an MLP with layer sizes ``dims``."""
+    return sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+
+
+def init_dense_params(key: jax.Array, dims: Sequence[int]) -> jnp.ndarray:
+    """Glorot-uniform init of an MLP, returned as one flat f32 vector."""
+    parts = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        fan_in, fan_out = dims[i], dims[i + 1]
+        limit = math.sqrt(6.0 / (fan_in + fan_out))
+        parts.append(
+            jax.random.uniform(sub, (fan_in * fan_out,), jnp.float32, -limit, limit)
+        )
+        parts.append(jnp.zeros((fan_out,), jnp.float32))
+    return jnp.concatenate(parts)
+
+
+def unpack_dense(flat: jnp.ndarray, dims: Sequence[int]):
+    """Flat vector -> [(W, b), ...] for an MLP with layer sizes ``dims``."""
+    layers, off = [], 0
+    for i in range(len(dims) - 1):
+        w, off = _take(flat, off, (dims[i], dims[i + 1]))
+        b, off = _take(flat, off, (dims[i + 1],))
+        layers.append((w, b))
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# MNIST-shaped MLP classifier.
+# ---------------------------------------------------------------------------
+
+
+def mnist_logits(params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass. params: [15910] flat, x: [B, 784] -> [B, 10]."""
+    (w1, b1), (w2, b2) = unpack_dense(params, MNIST_DIMS)
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def softmax_xent(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are one-hot f32 [B, 10]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def accuracy(logits: jnp.ndarray, y_onehot: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(
+        (jnp.argmax(logits, -1) == jnp.argmax(y_onehot, -1)).astype(jnp.float32)
+    )
+
+
+def mnist_loss(params, x, y_onehot):
+    return softmax_xent(mnist_logits(params, x), y_onehot)
+
+
+def mnist_train_step(params, x, y_onehot, lr):
+    """One SGD step. Returns (params', loss). All-flat signature for rust."""
+    loss, grad = jax.value_and_grad(mnist_loss)(params, x, y_onehot)
+    return params - lr * grad, loss
+
+
+def mnist_eval(params, x, y_onehot):
+    """Returns (mean loss, accuracy) over the batch."""
+    logits = mnist_logits(params, x)
+    return softmax_xent(logits, y_onehot), accuracy(logits, y_onehot)
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-shaped CNN classifier (scaled substitute).
+# ---------------------------------------------------------------------------
+
+
+def cifar_param_count() -> int:
+    n = 0
+    for kh, kw, ci, co in CIFAR_CONV:
+        n += kh * kw * ci * co + co
+    for fi, fo in CIFAR_FC:
+        n += fi * fo + fo
+    return n
+
+
+assert cifar_param_count() == CIFAR_PARAMS
+
+
+def init_cifar_params(key: jax.Array) -> jnp.ndarray:
+    parts = []
+    for kh, kw, ci, co in CIFAR_CONV:
+        key, sub = jax.random.split(key)
+        fan_in = kh * kw * ci
+        limit = math.sqrt(6.0 / (fan_in + co))
+        parts.append(
+            jax.random.uniform(sub, (kh * kw * ci * co,), jnp.float32, -limit, limit)
+        )
+        parts.append(jnp.zeros((co,), jnp.float32))
+    for fi, fo in CIFAR_FC:
+        key, sub = jax.random.split(key)
+        limit = math.sqrt(6.0 / (fi + fo))
+        parts.append(jax.random.uniform(sub, (fi * fo,), jnp.float32, -limit, limit))
+        parts.append(jnp.zeros((fo,), jnp.float32))
+    return jnp.concatenate(parts)
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cifar_logits(params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass. params: [51082] flat, x: [B, 3072] (NHWC 32x32x3 flat)."""
+    off = 0
+    img = x.reshape((-1, 32, 32, 3))
+    for kh, kw, ci, co in CIFAR_CONV:
+        w, off = _take(params, off, (kh, kw, ci, co))
+        b, off = _take(params, off, (co,))
+        img = lax.conv_general_dilated(
+            img, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        img = jnp.maximum(img + b, 0.0)
+        img = _maxpool2(img)
+    h = img.reshape((img.shape[0], -1))
+    (f1i, f1o), (f2i, f2o) = CIFAR_FC
+    w1, off = _take(params, off, (f1i, f1o))
+    b1, off = _take(params, off, (f1o,))
+    w2, off = _take(params, off, (f2i, f2o))
+    b2, off = _take(params, off, (f2o,))
+    h = jnp.maximum(h @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def cifar_loss(params, x, y_onehot):
+    return softmax_xent(cifar_logits(params, x), y_onehot)
+
+
+def cifar_train_step(params, x, y_onehot, lr):
+    loss, grad = jax.value_and_grad(cifar_loss)(params, x, y_onehot)
+    return params - lr * grad, loss
+
+
+def cifar_eval(params, x, y_onehot):
+    logits = cifar_logits(params, x)
+    return softmax_xent(logits, y_onehot), accuracy(logits, y_onehot)
+
+
+# ---------------------------------------------------------------------------
+# Fully-connected funnel autoencoder (paper Fig 1, Eq 1-3).
+# ---------------------------------------------------------------------------
+
+#: |x - x'| tolerance defining the AE "accuracy" metric (paper Figs 4/6 plot
+#: an accuracy for the regression AE; we define it as the fraction of weight
+#: coordinates reconstructed within this absolute tolerance — documented in
+#: DESIGN.md/EXPERIMENTS.md).
+AE_ACC_TOL = 0.01
+
+
+class AeSpec(NamedTuple):
+    """Funnel AE architecture: symmetric dims, tanh hidden, linear output."""
+
+    dims: Tuple[int, ...]
+
+    @property
+    def n_params(self) -> int:
+        return dense_param_count(self.dims)
+
+    @property
+    def latent_index(self) -> int:
+        """Index (into dims) of the bottleneck layer."""
+        return min(range(len(self.dims)), key=lambda i: self.dims[i])
+
+    @property
+    def latent(self) -> int:
+        return self.dims[self.latent_index]
+
+    @property
+    def encoder_params(self) -> int:
+        """Number of leading flat params belonging to the encoder half."""
+        return dense_param_count(self.dims[: self.latent_index + 1])
+
+    @property
+    def decoder_params(self) -> int:
+        return self.n_params - self.encoder_params
+
+    @property
+    def input_dim(self) -> int:
+        return self.dims[0]
+
+    @property
+    def compression_ratio(self) -> float:
+        """Eq-4 numerator/denominator per update: n_input / latent."""
+        return self.dims[0] / self.latent
+
+
+def ae_layer_acts(dims: Sequence[int]) -> Tuple[str, ...]:
+    """tanh on every hidden layer (Eq 1 sigma), linear reconstruction (Eq 2)."""
+    n_layers = len(dims) - 1
+    return tuple("tanh" if i < n_layers - 1 else "linear" for i in range(n_layers))
+
+
+def ae_apply(spec: AeSpec, ae_params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Full AE forward (encode then decode), via the Pallas fused-dense kernel."""
+    h = x
+    acts = ae_layer_acts(spec.dims)
+    for (w, b), act in zip(unpack_dense(ae_params, spec.dims), acts):
+        h = fused_dense(h, w, b, act)
+    return h
+
+
+def ae_encode(spec: AeSpec, enc_params: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Encoder half: weight vector [n] (or batch [B, n]) -> latent z."""
+    enc_dims = spec.dims[: spec.latent_index + 1]
+    acts = ae_layer_acts(spec.dims)[: spec.latent_index]
+    h = x
+    for (w, b), act in zip(unpack_dense(enc_params, enc_dims), acts):
+        h = fused_dense(h, w, b, act)
+    return h
+
+
+def ae_decode(spec: AeSpec, dec_params: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Decoder half: latent z -> reconstructed weight vector."""
+    dec_dims = spec.dims[spec.latent_index :]
+    acts = ae_layer_acts(spec.dims)[spec.latent_index :]
+    h = z
+    for (w, b), act in zip(unpack_dense(dec_params, dec_dims), acts):
+        h = fused_dense(h, w, b, act)
+    return h
+
+
+def ae_metrics(x: jnp.ndarray, recon: jnp.ndarray):
+    """(mse, accuracy) of a reconstruction — the paper's Fig 4/6 y-axes."""
+    mse = jnp.mean((x - recon) ** 2)
+    acc = jnp.mean((jnp.abs(x - recon) < AE_ACC_TOL).astype(jnp.float32))
+    return mse, acc
+
+
+def ae_loss(spec: AeSpec, ae_params: jnp.ndarray, batch: jnp.ndarray):
+    """Eq 3: L(x, x') = ||x - x'||^2 (mean over batch and coords)."""
+    recon = ae_apply(spec, ae_params, batch)
+    mse, acc = ae_metrics(batch, recon)
+    return mse, acc
+
+
+# --- Adam optimizer (flat-vector state) ------------------------------------
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_update(params, grad, m, v, step, lr=ADAM_LR):
+    """One Adam step over flat vectors; ``step`` is the 1-based step count."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m / (1.0 - ADAM_B1**step)
+    vhat = v / (1.0 - ADAM_B2**step)
+    return params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def ae_train_step(spec: AeSpec, ae_params, batch, m, v, step):
+    """One Adam step of AE training on a batch of logged weight vectors.
+
+    Returns (ae_params', m', v', mse, acc). ``step`` is f32 scalar (1-based).
+    """
+    (mse, acc), grad = jax.value_and_grad(
+        lambda p: ae_loss(spec, p, batch), has_aux=True
+    )(ae_params)
+    ae_params, m, v = adam_update(ae_params, grad, m, v, step)
+    return ae_params, m, v, mse, acc
+
+
+def ae_roundtrip(spec: AeSpec, ae_params, w):
+    """Compress-then-reconstruct one weight vector; returns (w', mse, acc)."""
+    recon = ae_apply(spec, ae_params, w)
+    mse, acc = ae_metrics(w, recon)
+    return recon, mse, acc

@@ -1,0 +1,107 @@
+"""AOT pipeline consistency: manifest vs model constants vs artifacts on disk.
+
+These tests are gated on ``artifacts/`` existing (``make artifacts``); in a
+fresh checkout they skip rather than fail so pytest can run pre-build.
+"""
+import hashlib
+import json
+import pathlib
+import struct
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_all_artifacts_exist(manifest):
+    for name, entry in manifest["artifacts"].items():
+        path = ART / entry["file"]
+        assert path.exists(), f"missing artifact {name}"
+        assert path.stat().st_size > 0
+
+
+def test_artifact_hashes_match(manifest):
+    for name, entry in manifest["artifacts"].items():
+        data = (ART / entry["file"]).read_bytes()
+        assert hashlib.sha256(data).hexdigest() == entry["sha256"], name
+
+
+def test_manifest_model_constants(manifest):
+    assert manifest["models"]["mnist"]["n_params"] == M.MNIST_PARAMS
+    assert manifest["models"]["cifar"]["n_params"] == M.CIFAR_PARAMS
+    ae = manifest["autoencoders"]["mnist"]
+    assert ae["n_params"] == 1_034_182
+    assert ae["latent"] == M.MNIST_LATENT
+    assert ae["encoder_params"] + ae["decoder_params"] == ae["n_params"]
+
+
+def test_manifest_compression_ratios(manifest):
+    """The paper's headline ratios: ~500x (MNIST) and ~1720x (CIFAR)."""
+    assert 490 < manifest["autoencoders"]["mnist"]["compression_ratio"] < 500
+    assert 1600 < manifest["autoencoders"]["cifar"]["compression_ratio"] < 1721
+
+
+def test_expected_export_set(manifest):
+    names = set(manifest["artifacts"])
+    for family in ("mnist", "cifar"):
+        assert f"{family}_train_step" in names
+        assert f"{family}_eval" in names
+    for tag in ("mnist", "cifar", "mnist_deep"):
+        for kind in ("ae_train_step", "encode", "decode", "ae_roundtrip"):
+            assert f"{kind}_{tag}" in names
+
+
+def test_artifact_io_shapes(manifest):
+    arts = manifest["artifacts"]
+    enc = arts["encode_mnist"]
+    assert enc["inputs"][0]["shape"] == [
+        manifest["autoencoders"]["mnist"]["encoder_params"]
+    ]
+    assert enc["inputs"][1]["shape"] == [M.MNIST_PARAMS]
+    dec = arts["decode_mnist"]
+    assert dec["inputs"][1]["shape"] == [M.MNIST_LATENT]
+    ts = arts["mnist_train_step"]
+    assert ts["inputs"][1]["shape"] == [aot.MNIST_TRAIN_B, 784]
+    assert ts["inputs"][3]["shape"] == []  # lr scalar
+
+
+def test_init_blobs(manifest):
+    for name, entry in manifest["inits"].items():
+        path = ART / entry["file"]
+        data = path.read_bytes()
+        assert len(data) == 4 * entry["len"], name
+        assert hashlib.sha256(data).hexdigest() == entry["sha256"], name
+        # finite f32 values
+        first = struct.unpack("<f", data[:4])[0]
+        assert first == first  # not NaN
+
+
+def test_init_lengths_match_models(manifest):
+    inits = manifest["inits"]
+    assert inits["mnist_params"]["len"] == M.MNIST_PARAMS
+    assert inits["cifar_params"]["len"] == M.CIFAR_PARAMS
+    assert inits["ae_mnist_init"]["len"] == 1_034_182
+    assert (
+        inits["ae_mnist_deep_init"]["len"]
+        == M.dense_param_count(M.MNIST_DEEP_AE_DIMS)
+    )
+
+
+def test_hlo_text_is_parseable_header(manifest):
+    """Every artifact is HLO text (not a serialized proto blob)."""
+    for entry in manifest["artifacts"].values():
+        head = (ART / entry["file"]).read_text()[:200]
+        assert "HloModule" in head, entry["file"]

@@ -1,0 +1,211 @@
+"""L1 correctness: the Pallas fused-dense kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for Layer 1: hypothesis sweeps shapes,
+dtypes and tile sizes and asserts allclose against ``kernels.ref``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_dense import (
+    DEFAULT_KT,
+    DEFAULT_NT,
+    fused_dense,
+    matmul_tiled,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import ACTIVATIONS, apply_activation, dense_ref, matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_fused_dense_matches_ref_basic(act):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = _rand(k1, (4, 300), jnp.float32)
+    w = _rand(k2, (300, 37), jnp.float32)
+    b = _rand(k3, (37,), jnp.float32)
+    got = fused_dense(x, w, b, act, 128, 16)
+    want = dense_ref(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(jnp.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    k_dim=st.integers(1, 200),
+    n_dim=st.integers(1, 40),
+    kt=st.sampled_from([1, 7, 32, 128, DEFAULT_KT]),
+    nt=st.sampled_from([1, 5, 16, DEFAULT_NT]),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_dense_hypothesis_shapes(batch, k_dim, n_dim, kt, nt, act, seed):
+    """Shape/tile sweep: padding + tiling must never change the numbers."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (batch, k_dim), jnp.float32)
+    w = _rand(k2, (k_dim, n_dim), jnp.float32)
+    b = _rand(k3, (n_dim,), jnp.float32)
+    got = fused_dense(x, w, b, act, kt, nt)
+    want = dense_ref(x, w, b, act)
+    assert got.shape == (batch, n_dim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    k_dim=st.integers(1, 100),
+    n_dim=st.integers(1, 20),
+    seed=st.integers(0, 1000),
+)
+def test_fused_dense_dtypes(dtype, k_dim, n_dim, seed):
+    """Kernel accumulates in f32 regardless of input dtype, like the ref."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (2, k_dim), dtype)
+    w = _rand(k2, (k_dim, n_dim), dtype)
+    b = _rand(k3, (n_dim,), dtype)
+    got = fused_dense(x, w, b, "tanh")
+    want = dense_ref(x, w, b, "tanh")
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_fused_dense_1d_input():
+    """1-D input (single weight vector — the encode hot path) == batch of 1."""
+    k = jax.random.PRNGKey(3)
+    v = _rand(k, (513,), jnp.float32)
+    w = _rand(k, (513, 8), jnp.float32)
+    b = _rand(k, (8,), jnp.float32)
+    got = fused_dense(v, w, b, "sigmoid", 128, 4)
+    want = dense_ref(v[None, :], w, b, "sigmoid")[0]
+    assert got.shape == (8,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_tiled_matches_ref():
+    k = jax.random.PRNGKey(4)
+    x = _rand(k, (5, 77), jnp.float32)
+    w = _rand(k, (77, 13), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul_tiled(x, w, 32, 8)),
+        np.asarray(matmul_ref(x, w)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_fused_dense_grads_match_ref(act):
+    """Custom VJP (Pallas backward matmuls) vs jax.grad of the oracle."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = _rand(k1, (3, 90), jnp.float32)
+    w = _rand(k2, (90, 11), jnp.float32)
+    b = _rand(k3, (11,), jnp.float32)
+
+    def f(x, w, b):
+        return jnp.sum(fused_dense(x, w, b, act, 32, 4) ** 2)
+
+    def fr(x, w, b):
+        return jnp.sum(dense_ref(x, w, b, act) ** 2)
+
+    got = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    want = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for g, wnt in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(wnt), rtol=1e-4, atol=1e-4)
+
+
+def test_grads_1d_input():
+    k = jax.random.PRNGKey(9)
+    v = _rand(k, (60,), jnp.float32)
+    w = _rand(k, (60, 6), jnp.float32)
+    b = _rand(k, (6,), jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(fused_dense(v, w, b, "tanh", 16, 2)))(v)
+    gr = jax.grad(lambda v: jnp.sum(dense_ref(v[None], w, b, "tanh")))(v)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_dense_rejects_unknown_activation():
+    x = jnp.zeros((1, 4))
+    w = jnp.zeros((4, 2))
+    b = jnp.zeros((2,))
+    with pytest.raises(ValueError):
+        fused_dense(x, w, b, "gelu")
+    with pytest.raises(ValueError):
+        apply_activation(x, "swish")
+
+
+def test_jit_compatible():
+    """The kernel must lower inside jit (the AOT path depends on this)."""
+    k = jax.random.PRNGKey(11)
+    x = _rand(k, (2, 50), jnp.float32)
+    w = _rand(k, (50, 5), jnp.float32)
+    b = _rand(k, (5,), jnp.float32)
+    got = jax.jit(lambda x, w, b: fused_dense(x, w, b, "relu", 16, 4))(x, w, b)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(dense_ref(x, w, b, "relu")), rtol=1e-5, atol=1e-5
+    )
+
+
+# --- perf-model sanity (DESIGN.md §9) --------------------------------------
+
+
+def test_vmem_footprint_monotone_in_tiles():
+    assert vmem_footprint_bytes(16, 1024, 256) > vmem_footprint_bytes(16, 512, 128)
+    # Default tiles stay under a 16 MiB VMEM budget for the exported batches.
+    assert vmem_footprint_bytes(256, DEFAULT_KT, DEFAULT_NT) < 16 * 2**20
+
+
+def test_mxu_utilization_bounds():
+    u = mxu_utilization_estimate(16, 15910, 32, DEFAULT_KT, DEFAULT_NT)
+    assert 0.0 < u <= 1.0
+    # Tiny tiles on a huge GEMM waste almost the whole MXU tile.
+    assert mxu_utilization_estimate(1, 15910, 32, 8, 8) < u
+
+
+# --- auto tile selection (perf pass, EXPERIMENTS.md §Perf L1) ---------------
+
+
+def test_auto_tiles_budget_and_coverage():
+    from compile.kernels.fused_dense import AUTO_TILE_BUDGET, auto_tiles
+
+    for k, n in [(15910, 32), (32, 15910), (51082, 30), (30, 51082),
+                 (1024, 1024), (1, 1), (7, 3_000_000)]:
+        kt, nt = auto_tiles(k, n)
+        assert 1 <= kt <= k and 1 <= nt <= n
+        assert kt * nt * 4 <= AUTO_TILE_BUDGET, f"w-tile over budget at {(k, n)}"
+    # Both AE GEMV shapes collapse to a single grid step.
+    assert auto_tiles(15910, 32) == (15910, 32)
+    assert auto_tiles(32, 15910) == (32, 15910)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k_dim=st.integers(1, 400),
+    n_dim=st.integers(1, 400),
+    seed=st.integers(0, 1000),
+)
+def test_auto_equals_explicit_tiles(k_dim, n_dim, seed):
+    """AUTO tile selection must not change the numbers, only the schedule."""
+    from compile.kernels.fused_dense import AUTO
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (2, k_dim), jnp.float32)
+    w = _rand(k2, (k_dim, n_dim), jnp.float32)
+    b = _rand(k3, (n_dim,), jnp.float32)
+    got = fused_dense(x, w, b, "tanh", AUTO, AUTO)
+    want = dense_ref(x, w, b, "tanh")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

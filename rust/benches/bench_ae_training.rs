@@ -1,0 +1,61 @@
+//! Bench E1/E3 support — AE training-step throughput (the pre-pass cost
+//! the paper's §4.3 worries about: "computational overhead while training
+//! this network").
+//!
+//! Times one Adam step of each exported AE (PJRT-compiled XLA, Pallas
+//! fused-dense inside) and reports steps/s plus the projected pre-pass
+//! wall-clock for the paper's schedules.
+//!
+//! `cargo bench --bench bench_ae_training`
+
+use fedae::metrics::print_table;
+use fedae::runtime::{AdamState, AePipeline, Runtime};
+use fedae::util::bench_timings;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::from_dir("artifacts")?;
+    println!("== AE train-step throughput (pre-pass cost model) ==");
+
+    let mut rows = Vec::new();
+    for tag in ["mnist", "cifar", "mnist_deep"] {
+        let pipeline = AePipeline::new(&rt, tag)?;
+        let mut ae = rt.load_init(&format!("ae_{tag}_init"))?;
+        let mut adam = AdamState::zeros(ae.len());
+        // Synthetic weights batch (values in the weight-scale regime).
+        let batch: Vec<f32> = (0..pipeline.train_batch * pipeline.input_dim)
+            .map(|i| ((i as f32 * 0.37).sin()) * 0.05)
+            .collect();
+        let (mean, p50, p95) = bench_timings(3, 15, || {
+            let _ = pipeline.train_step(&mut ae, &mut adam, &batch).unwrap();
+        });
+        // Paper-style schedule: 40 snapshots, batch b, 30 epochs.
+        let steps = (40usize.div_ceil(pipeline.train_batch)) * 30;
+        rows.push(vec![
+            tag.to_string(),
+            pipeline.n_params.to_string(),
+            pipeline.train_batch.to_string(),
+            format!("{mean:.1} / {p50:.1} / {p95:.1}"),
+            format!("{:.1}", 1000.0 / mean),
+            format!("{:.1}s", steps as f64 * mean / 1000.0),
+        ]);
+    }
+    println!(
+        "{}",
+        print_table(
+            &[
+                "ae",
+                "params",
+                "batch",
+                "step ms (mean/p50/p95)",
+                "steps/s",
+                "prepass(40x30)",
+            ],
+            &rows
+        )
+    );
+    Ok(())
+}

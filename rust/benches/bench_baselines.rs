@@ -1,0 +1,69 @@
+//! Bench E10 support — compress/decompress latency and wire size of every
+//! baseline compressor across update dimensionalities (the paper's §2
+//! related-work set), no PJRT needed.
+//!
+//! `cargo bench --bench bench_baselines`
+
+use fedae::compression::{self};
+use fedae::config::CompressionConfig;
+use fedae::metrics::print_table;
+use fedae::util::bench_timings;
+use fedae::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== baseline compressor micro-benchmarks ==");
+    let mut rng = Rng::new(7);
+    for &n in &[15_910usize, 51_082, 550_570] {
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let schemes = [
+            ("identity", CompressionConfig::Identity),
+            ("topk 1%", CompressionConfig::TopK { fraction: 0.01 }),
+            (
+                "quant 8b",
+                CompressionConfig::Quantize { bits: 8, stochastic: false },
+            ),
+            (
+                "quant 4b stoch",
+                CompressionConfig::Quantize { bits: 4, stochastic: true },
+            ),
+            ("subsample 1%", CompressionConfig::Subsample { fraction: 0.01 }),
+            (
+                "sketch 5x1024",
+                CompressionConfig::Sketch { rows: 5, cols: 1024, topk: 512 },
+            ),
+        ];
+        let mut rows = Vec::new();
+        for (label, cfg) in schemes {
+            let mut c = compression::from_config(&cfg, n, 42)?;
+            let mut d = compression::from_config(&cfg, n, 42)?;
+            let update = c.compress(0, &w)?;
+            let wire = update.wire_bytes();
+            let (cm, _, _) = bench_timings(2, 10, || {
+                let _ = c.compress(1, &w).unwrap();
+            });
+            let (dm, _, _) = bench_timings(2, 10, || {
+                let _ = d.decompress(&update).unwrap();
+            });
+            rows.push(vec![
+                label.to_string(),
+                format!("{:.1}x", (n * 4) as f64 / wire as f64),
+                format!("{wire}"),
+                format!("{cm:.2}"),
+                format!("{dm:.2}"),
+            ]);
+        }
+        println!("\n-- n = {n} params --");
+        println!(
+            "{}",
+            print_table(
+                &["scheme", "wire ratio", "wire bytes", "compress ms", "decompress ms"],
+                &rows
+            )
+        );
+    }
+    println!(
+        "\n(AE numbers live in bench_compression — they need the PJRT runtime. \
+         At n=550,570 the paper's 1720x AE dwarfs every baseline's ratio.)"
+    );
+    Ok(())
+}

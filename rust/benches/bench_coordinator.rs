@@ -1,0 +1,89 @@
+//! Bench — L3 coordinator overhead: aggregation algorithms and the round
+//! state machine at increasing collaborator counts, isolated from PJRT
+//! compute (synthetic updates). The coordinator must not be the
+//! bottleneck (EXPERIMENTS.md §Perf): these paths are O(C·n) single-pass.
+//!
+//! `cargo bench --bench bench_coordinator`
+
+use fedae::aggregation::{self, WeightedUpdate};
+use fedae::compression::CompressedUpdate;
+use fedae::config::AggregationConfig;
+use fedae::coordinator::RoundState;
+use fedae::metrics::print_table;
+use fedae::util::bench_timings;
+use fedae::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== L3 coordinator micro-benchmarks (no PJRT) ==");
+    let n = 51_082; // CIFAR-shaped update
+    let mut rng = Rng::new(3);
+
+    // Aggregation scaling over collaborators.
+    let mut rows = Vec::new();
+    for &collabs in &[2usize, 8, 32, 128] {
+        let updates: Vec<WeightedUpdate> = (0..collabs)
+            .map(|_| WeightedUpdate {
+                weight: 1.0 + rng.uniform() * 100.0,
+                values: (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect(),
+            })
+            .collect();
+        for cfg in [
+            AggregationConfig::Mean,
+            AggregationConfig::FedAvg,
+            AggregationConfig::Median,
+            AggregationConfig::TrimmedMean { trim: 0.1 },
+        ] {
+            let mut agg = aggregation::from_config(&cfg)?;
+            let iters = if matches!(cfg, AggregationConfig::Median | AggregationConfig::TrimmedMean { .. })
+                && collabs >= 32
+            {
+                3
+            } else {
+                10
+            };
+            let (mean, p50, _) = bench_timings(1, iters, || {
+                let _ = agg.aggregate(&updates).unwrap();
+            });
+            rows.push(vec![
+                agg.name().to_string(),
+                collabs.to_string(),
+                format!("{mean:.2}"),
+                format!("{p50:.2}"),
+                format!("{:.1}", (collabs * n) as f64 / mean / 1e3), // Melem/s
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        print_table(
+            &["aggregator", "collabs", "mean ms", "p50 ms", "Melem/s"],
+            &rows
+        )
+    );
+
+    // Round state machine throughput.
+    let mut rows = Vec::new();
+    for &collabs in &[10usize, 100, 1000] {
+        let payload = CompressedUpdate::Latent {
+            z: vec![0.0; 32],
+            n: n as u32,
+        };
+        let (mean, _, _) = bench_timings(1, 20, || {
+            let mut state = RoundState::new(0, 0..collabs);
+            for c in 0..collabs {
+                state.accept(0, c, 100, payload.clone()).unwrap();
+            }
+            assert!(state.is_complete());
+        });
+        rows.push(vec![
+            collabs.to_string(),
+            format!("{mean:.3}"),
+            format!("{:.0}", collabs as f64 / mean * 1000.0),
+        ]);
+    }
+    println!(
+        "{}",
+        print_table(&["collabs", "round accept ms", "updates/s"], &rows)
+    );
+    Ok(())
+}

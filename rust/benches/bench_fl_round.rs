@@ -1,0 +1,74 @@
+//! Bench — end-to-end federated-round latency (the system's "request
+//! path"): broadcast -> local train -> encode -> decode -> aggregate ->
+//! eval, per compression scheme. Complements bench_coordinator (which
+//! isolates L3) by timing the whole stack including PJRT compute.
+//!
+//! `cargo bench --bench bench_fl_round`
+
+use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::coordinator::FlDriver;
+use fedae::metrics::print_table;
+use fedae::runtime::{AePipeline, Runtime};
+use fedae::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::from_dir("artifacts")?;
+    let pipeline = AePipeline::new(&rt, "mnist")?;
+    println!("== end-to-end round latency, 2 collaborators, synth-mnist ==");
+
+    let mut rows = Vec::new();
+    for (label, compression) in [
+        ("identity", CompressionConfig::Identity),
+        ("ae", CompressionConfig::Ae { ae: "mnist".into() }),
+        ("topk 1%", CompressionConfig::TopK { fraction: 0.01 }),
+        (
+            "quantize 8b",
+            CompressionConfig::Quantize { bits: 8, stochastic: false },
+        ),
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "mnist".into();
+        cfg.compression = compression.clone();
+        cfg.fl.collaborators = 2;
+        cfg.fl.rounds = 64; // driver cap; we time 8 rounds below
+        cfg.fl.local_epochs = 1;
+        cfg.data.per_collab = 256;
+        cfg.data.test_size = 256;
+        cfg.prepass.epochs = 6;
+        cfg.prepass.ae_epochs = 4;
+        cfg.seed = 5;
+        let pipe_ref =
+            matches!(cfg.compression, CompressionConfig::Ae { .. }).then_some(&pipeline);
+
+        let setup = Stopwatch::start();
+        let mut driver = FlDriver::new(&rt, cfg, pipe_ref)?;
+        let setup_s = setup.elapsed_secs();
+
+        driver.run_round()?; // warm the executable cache
+        let sw = Stopwatch::start();
+        let rounds = 8;
+        for _ in 0..rounds {
+            driver.run_round()?;
+        }
+        let per_round_ms = sw.elapsed_ms() / rounds as f64;
+        rows.push(vec![
+            label.to_string(),
+            format!("{setup_s:.2}s"),
+            format!("{per_round_ms:.1}"),
+            format!("{:.1}", 1000.0 / per_round_ms),
+        ]);
+    }
+    println!(
+        "{}",
+        print_table(
+            &["compression", "setup (incl. prepass)", "round ms", "rounds/s"],
+            &rows
+        )
+    );
+    println!("(setup for `ae` includes the pre-pass: classifier + AE training per collaborator)");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Bench — PJRT executable latency for every request-path artifact:
+//! classifier train/eval steps, AE encode/decode/roundtrip. This is the
+//! L3 hot path's compute budget; see EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench bench_roundtrip`
+
+use fedae::metrics::print_table;
+use fedae::runtime::{AePipeline, EvalStep, Runtime, TrainStep};
+use fedae::util::bench_timings;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = Runtime::from_dir("artifacts")?;
+    println!("== PJRT artifact latency (platform: {}) ==", rt.platform_name());
+    let mut rows = Vec::new();
+
+    for family in ["mnist", "cifar"] {
+        let params = rt.load_init(&format!("{family}_params"))?;
+        let ts = TrainStep::new(&rt, family)?;
+        let x = vec![0.1f32; ts.batch * ts.input_dim];
+        let mut y = vec![0.0f32; ts.batch * ts.classes];
+        for b in 0..ts.batch {
+            y[b * ts.classes + b % 10] = 1.0;
+        }
+        let (m, p50, p95) = bench_timings(3, 25, || {
+            let _ = ts.step(&params, &x, &y, 0.05).unwrap();
+        });
+        rows.push(vec![
+            format!("{family}_train_step"),
+            format!("B={}", ts.batch),
+            format!("{m:.2}"),
+            format!("{p50:.2}"),
+            format!("{p95:.2}"),
+        ]);
+
+        let ev = EvalStep::new(&rt, family)?;
+        let xe = vec![0.1f32; ev.batch * ev.input_dim];
+        let mut ye = vec![0.0f32; ev.batch * ev.classes];
+        for b in 0..ev.batch {
+            ye[b * ev.classes + b % 10] = 1.0;
+        }
+        let (m, p50, p95) = bench_timings(3, 25, || {
+            let _ = ev.eval(&params, &xe, &ye).unwrap();
+        });
+        rows.push(vec![
+            format!("{family}_eval"),
+            format!("B={}", ev.batch),
+            format!("{m:.2}"),
+            format!("{p50:.2}"),
+            format!("{p95:.2}"),
+        ]);
+    }
+
+    for tag in ["mnist", "cifar", "mnist_deep"] {
+        let pipe = AePipeline::new(&rt, tag)?;
+        let ae = rt.load_init(&format!("ae_{tag}_init"))?;
+        let (enc, dec) = pipe.split(&ae)?;
+        let w = vec![0.01f32; pipe.input_dim];
+        let (m, p50, p95) = bench_timings(3, 25, || {
+            let _ = pipe.encode(&enc, &w).unwrap();
+        });
+        rows.push(vec![
+            format!("encode_{tag}"),
+            format!("n={}", pipe.input_dim),
+            format!("{m:.2}"),
+            format!("{p50:.2}"),
+            format!("{p95:.2}"),
+        ]);
+        let z = pipe.encode(&enc, &w)?;
+        let (m, p50, p95) = bench_timings(3, 25, || {
+            let _ = pipe.decode(&dec, &z).unwrap();
+        });
+        rows.push(vec![
+            format!("decode_{tag}"),
+            format!("z={}", pipe.latent),
+            format!("{m:.2}"),
+            format!("{p50:.2}"),
+            format!("{p95:.2}"),
+        ]);
+        let (m, p50, p95) = bench_timings(3, 15, || {
+            let _ = pipe.roundtrip(&ae, &w).unwrap();
+        });
+        rows.push(vec![
+            format!("ae_roundtrip_{tag}"),
+            String::new(),
+            format!("{m:.2}"),
+            format!("{p50:.2}"),
+            format!("{p95:.2}"),
+        ]);
+    }
+
+    println!(
+        "{}",
+        print_table(&["artifact", "shape", "mean ms", "p50 ms", "p95 ms"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Bench E7/E8 — regenerate the Fig 10/11 series (analytic, paper's own
+//! constants) and time the sweep machinery at large-scale-FL grid sizes.
+//!
+//! `cargo bench --bench bench_savings`
+
+use fedae::metrics::print_table;
+use fedae::savings::{PAPER_CIFAR, REPO_MNIST};
+use fedae::util::bench_timings;
+
+fn main() -> anyhow::Result<()> {
+    println!("== E7 (Fig 10): SR vs collaborators, single decoder ==");
+    let collab_grid: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 40, 64, 128, 256, 512, 1000, 2000, 5000];
+    let mut rows = Vec::new();
+    for rounds in [8usize, 41, 100] {
+        let sweep = PAPER_CIFAR.sweep_collabs(rounds, &collab_grid)?;
+        for (c, sr) in &sweep {
+            if [1usize, 40, 1000, 5000].contains(c) {
+                rows.push(vec![
+                    rounds.to_string(),
+                    c.to_string(),
+                    format!("{sr:.2}"),
+                    if *sr >= 1.0 { "saves".into() } else { "costs".into() },
+                ]);
+            }
+        }
+    }
+    println!("{}", print_table(&["rounds", "collabs", "SR", "verdict"], &rows));
+    println!(
+        "break-even: R=8 -> {} collabs (paper: 40); SR(1000)@R=41 = {:.0}x (paper: ~120x)",
+        PAPER_CIFAR.breakeven_collabs_single_decoder(8)?,
+        PAPER_CIFAR.savings_ratio_single_decoder(41, 1000)?
+    );
+
+    println!("\n== E8 (Fig 11): SR vs rounds, per-collaborator decoders ==");
+    let round_grid: Vec<usize> = vec![10, 100, 320, 321, 640, 1000, 10_000];
+    let rows: Vec<Vec<String>> = PAPER_CIFAR
+        .sweep_rounds(7, &round_grid)?
+        .into_iter()
+        .map(|(r, sr)| {
+            vec![
+                r.to_string(),
+                format!("{sr:.3}"),
+                if sr >= 1.0 { "saves".into() } else { "costs".into() },
+            ]
+        })
+        .collect();
+    println!("{}", print_table(&["rounds", "SR", "verdict"], &rows));
+    println!(
+        "break-even: {} rounds (paper: 320)",
+        PAPER_CIFAR.breakeven_rounds_per_collab_decoders()?
+    );
+
+    // Perf: a 1M-point sweep must stay trivially cheap (it backs the CLI
+    // and any dashboarding a deployment would do).
+    let big_grid: Vec<usize> = (1..=1_000_000).step_by(100).collect();
+    let (mean, p50, p95) = bench_timings(1, 10, || {
+        let _ = PAPER_CIFAR.sweep_collabs(100, &big_grid).unwrap();
+    });
+    println!(
+        "\nsweep perf: {} points -> mean {mean:.2} ms, p50 {p50:.2} ms, p95 {p95:.2} ms",
+        big_grid.len()
+    );
+
+    println!(
+        "\nrepo-scale model: ratio {:.1}x, case-b break-even {} rounds",
+        REPO_MNIST.compression_ratio(),
+        REPO_MNIST.breakeven_rounds_per_collab_decoders()?
+    );
+    Ok(())
+}

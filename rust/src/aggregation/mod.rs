@@ -1,0 +1,366 @@
+//! Server-side aggregation algorithms.
+//!
+//! The paper's FL setup (§5.2) uses "a simple averaging-based aggregation
+//! algorithm"; [`Mean`] reproduces that. [`FedAvg`] (sample-weighted),
+//! [`Median`], [`TrimmedMean`] and [`FedAvgM`] are included so the benches
+//! can show the AE scheme is aggregation-agnostic (it is "orthogonal",
+//! paper §4.2).
+
+use crate::config::AggregationConfig;
+use crate::error::{FedAeError, Result};
+
+/// One collaborator's (possibly reconstructed) model/update for a round.
+#[derive(Debug, Clone)]
+pub struct WeightedUpdate {
+    /// Aggregation weight (e.g. local sample count).
+    pub weight: f64,
+    pub values: Vec<f32>,
+}
+
+/// An aggregation algorithm combining per-collaborator vectors into the
+/// next global vector.
+pub trait Aggregator {
+    fn name(&self) -> &str;
+
+    /// Combine updates (all same length, validated by the caller via
+    /// [`validate_updates`]).
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>>;
+}
+
+/// Shared validation: non-empty, equal lengths, finite weights.
+pub fn validate_updates(updates: &[WeightedUpdate]) -> Result<usize> {
+    let first = updates
+        .first()
+        .ok_or_else(|| FedAeError::Coordination("aggregate called with no updates".into()))?;
+    let n = first.values.len();
+    for (i, u) in updates.iter().enumerate() {
+        if u.values.len() != n {
+            return Err(FedAeError::Coordination(format!(
+                "update {i} has {} values, expected {n}",
+                u.values.len()
+            )));
+        }
+        if !u.weight.is_finite() || u.weight < 0.0 {
+            return Err(FedAeError::Coordination(format!(
+                "update {i} has invalid weight {}",
+                u.weight
+            )));
+        }
+    }
+    Ok(n)
+}
+
+/// Unweighted coordinate-wise mean (the paper's §5.2 aggregator).
+#[derive(Debug, Default)]
+pub struct Mean;
+
+impl Aggregator for Mean {
+    fn name(&self) -> &str {
+        "mean"
+    }
+
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let n = validate_updates(updates)?;
+        let mut out = vec![0.0f32; n];
+        let scale = 1.0 / updates.len() as f32;
+        for u in updates {
+            for (o, &v) in out.iter_mut().zip(&u.values) {
+                *o += v * scale;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Sample-count-weighted mean (McMahan et al. 2017).
+#[derive(Debug, Default)]
+pub struct FedAvg;
+
+impl Aggregator for FedAvg {
+    fn name(&self) -> &str {
+        "fedavg"
+    }
+
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let n = validate_updates(updates)?;
+        let total: f64 = updates.iter().map(|u| u.weight).sum();
+        if total <= 0.0 {
+            return Err(FedAeError::Coordination(
+                "fedavg: total weight is zero".into(),
+            ));
+        }
+        let mut out = vec![0.0f64; n];
+        for u in updates {
+            let w = u.weight / total;
+            for (o, &v) in out.iter_mut().zip(&u.values) {
+                *o += v as f64 * w;
+            }
+        }
+        Ok(out.into_iter().map(|v| v as f32).collect())
+    }
+}
+
+/// Coordinate-wise median (byzantine-robust baseline).
+#[derive(Debug, Default)]
+pub struct Median;
+
+impl Aggregator for Median {
+    fn name(&self) -> &str {
+        "median"
+    }
+
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let n = validate_updates(updates)?;
+        let mut out = vec![0.0f32; n];
+        let mut col = vec![0.0f32; updates.len()];
+        for i in 0..n {
+            for (c, u) in col.iter_mut().zip(updates) {
+                *c = u.values[i];
+            }
+            col.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let m = col.len();
+            out[i] = if m % 2 == 1 {
+                col[m / 2]
+            } else {
+                (col[m / 2 - 1] + col[m / 2]) / 2.0
+            };
+        }
+        Ok(out)
+    }
+}
+
+/// Trimmed mean: drop the `trim` fraction of extremes at each end.
+#[derive(Debug)]
+pub struct TrimmedMean {
+    pub trim: f64,
+}
+
+impl TrimmedMean {
+    pub fn new(trim: f64) -> Result<TrimmedMean> {
+        if !(0.0..0.5).contains(&trim) {
+            return Err(FedAeError::Config(format!(
+                "trim fraction {trim} not in [0, 0.5)"
+            )));
+        }
+        Ok(TrimmedMean { trim })
+    }
+}
+
+impl Aggregator for TrimmedMean {
+    fn name(&self) -> &str {
+        "trimmed_mean"
+    }
+
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let n = validate_updates(updates)?;
+        let m = updates.len();
+        let cut = ((m as f64) * self.trim).floor() as usize;
+        if 2 * cut >= m {
+            return Err(FedAeError::Coordination(format!(
+                "trimmed mean: cut {cut} leaves no updates of {m}"
+            )));
+        }
+        let mut out = vec![0.0f32; n];
+        let mut col = vec![0.0f32; m];
+        for i in 0..n {
+            for (c, u) in col.iter_mut().zip(updates) {
+                *c = u.values[i];
+            }
+            col.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let kept = &col[cut..m - cut];
+            out[i] = kept.iter().sum::<f32>() / kept.len() as f32;
+        }
+        Ok(out)
+    }
+}
+
+/// FedAvg with server-side momentum.
+#[derive(Debug)]
+pub struct FedAvgM {
+    pub beta: f64,
+    momentum: Vec<f32>,
+    prev_global: Vec<f32>,
+    inner: FedAvg,
+}
+
+impl FedAvgM {
+    pub fn new(beta: f64) -> Result<FedAvgM> {
+        if !(0.0..1.0).contains(&beta) {
+            return Err(FedAeError::Config(format!("beta {beta} not in [0,1)")));
+        }
+        Ok(FedAvgM {
+            beta,
+            momentum: Vec::new(),
+            prev_global: Vec::new(),
+            inner: FedAvg,
+        })
+    }
+}
+
+impl Aggregator for FedAvgM {
+    fn name(&self) -> &str {
+        "fedavgm"
+    }
+
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let avg = self.inner.aggregate(updates)?;
+        if self.prev_global.is_empty() {
+            self.prev_global = avg.clone();
+            self.momentum = vec![0.0; avg.len()];
+            return Ok(avg);
+        }
+        if avg.len() != self.prev_global.len() {
+            return Err(FedAeError::Coordination(
+                "fedavgm: dimension changed between rounds".into(),
+            ));
+        }
+        // delta = avg - prev; momentum = beta*momentum + delta; new = prev + momentum
+        let mut out = vec![0.0f32; avg.len()];
+        for i in 0..avg.len() {
+            let delta = avg[i] - self.prev_global[i];
+            self.momentum[i] = (self.beta as f32) * self.momentum[i] + delta;
+            out[i] = self.prev_global[i] + self.momentum[i];
+        }
+        self.prev_global = out.clone();
+        Ok(out)
+    }
+}
+
+/// Build an aggregator from config.
+pub fn from_config(cfg: &AggregationConfig) -> Result<Box<dyn Aggregator>> {
+    Ok(match cfg {
+        AggregationConfig::FedAvg => Box::new(FedAvg),
+        AggregationConfig::Mean => Box::new(Mean),
+        AggregationConfig::Median => Box::new(Median),
+        AggregationConfig::TrimmedMean { trim } => Box::new(TrimmedMean::new(*trim)?),
+        AggregationConfig::FedAvgM { beta } => Box::new(FedAvgM::new(*beta)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(weight: f64, values: Vec<f32>) -> WeightedUpdate {
+        WeightedUpdate { weight, values }
+    }
+
+    #[test]
+    fn mean_ignores_weights() {
+        let mut agg = Mean;
+        let out = agg
+            .aggregate(&[upd(1.0, vec![0.0, 2.0]), upd(100.0, vec![2.0, 4.0])])
+            .unwrap();
+        assert_eq!(out, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn fedavg_respects_weights() {
+        let mut agg = FedAvg;
+        let out = agg
+            .aggregate(&[upd(1.0, vec![0.0]), upd(3.0, vec![4.0])])
+            .unwrap();
+        assert_eq!(out, vec![3.0]);
+    }
+
+    #[test]
+    fn fedavg_zero_weight_total_rejected() {
+        let mut agg = FedAvg;
+        assert!(agg
+            .aggregate(&[upd(0.0, vec![1.0]), upd(0.0, vec![2.0])])
+            .is_err());
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        let mut agg = Median;
+        let out = agg
+            .aggregate(&[
+                upd(1.0, vec![1.0]),
+                upd(1.0, vec![2.0]),
+                upd(1.0, vec![1000.0]),
+            ])
+            .unwrap();
+        assert_eq!(out, vec![2.0]);
+        // Even count -> midpoint.
+        let out = agg
+            .aggregate(&[upd(1.0, vec![1.0]), upd(1.0, vec![3.0])])
+            .unwrap();
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let mut agg = TrimmedMean::new(0.25).unwrap();
+        let out = agg
+            .aggregate(&[
+                upd(1.0, vec![-100.0]),
+                upd(1.0, vec![1.0]),
+                upd(1.0, vec![2.0]),
+                upd(1.0, vec![100.0]),
+            ])
+            .unwrap();
+        assert_eq!(out, vec![1.5]);
+        assert!(TrimmedMean::new(0.5).is_err());
+    }
+
+    #[test]
+    fn fedavgm_momentum_accelerates() {
+        let mut agg = FedAvgM::new(0.5).unwrap();
+        // Round 0 initializes.
+        let g0 = agg.aggregate(&[upd(1.0, vec![0.0])]).unwrap();
+        assert_eq!(g0, vec![0.0]);
+        // Consistent +1 deltas: momentum should make steps exceed 1.
+        let g1 = agg.aggregate(&[upd(1.0, vec![1.0])]).unwrap();
+        assert_eq!(g1, vec![1.0]);
+        let g2 = agg.aggregate(&[upd(1.0, vec![2.0])]).unwrap();
+        assert!(g2[0] > 2.0, "momentum should overshoot, got {}", g2[0]);
+    }
+
+    #[test]
+    fn validation_errors() {
+        let mut agg = Mean;
+        assert!(agg.aggregate(&[]).is_err());
+        assert!(agg
+            .aggregate(&[upd(1.0, vec![1.0]), upd(1.0, vec![1.0, 2.0])])
+            .is_err());
+        assert!(agg
+            .aggregate(&[upd(f64::NAN, vec![1.0])])
+            .is_err());
+        assert!(agg.aggregate(&[upd(-1.0, vec![1.0])]).is_err());
+    }
+
+    #[test]
+    fn from_config_builds_all() {
+        for cfg in [
+            AggregationConfig::FedAvg,
+            AggregationConfig::Mean,
+            AggregationConfig::Median,
+            AggregationConfig::TrimmedMean { trim: 0.1 },
+            AggregationConfig::FedAvgM { beta: 0.9 },
+        ] {
+            assert!(from_config(&cfg).is_ok());
+        }
+        assert!(from_config(&AggregationConfig::TrimmedMean { trim: 0.9 }).is_err());
+    }
+
+    #[test]
+    fn aggregators_preserve_identity() {
+        // All schemes return w when every collaborator sends the same w.
+        let w = vec![0.5f32, -1.0, 2.0];
+        let updates: Vec<WeightedUpdate> =
+            (0..4).map(|_| upd(2.0, w.clone())).collect();
+        for cfg in [
+            AggregationConfig::FedAvg,
+            AggregationConfig::Mean,
+            AggregationConfig::Median,
+            AggregationConfig::TrimmedMean { trim: 0.25 },
+        ] {
+            let mut agg = from_config(&cfg).unwrap();
+            let out = agg.aggregate(&updates).unwrap();
+            for (a, b) in out.iter().zip(&w) {
+                assert!((a - b).abs() < 1e-6, "{} failed", agg.name());
+            }
+        }
+    }
+}

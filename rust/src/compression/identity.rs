@@ -1,0 +1,60 @@
+//! Identity (no-compression) baseline: ships the raw f32 update.
+
+use super::{CompressedUpdate, UpdateCompressor};
+use crate::error::Result;
+
+/// The FL baseline every compression scheme is measured against.
+#[derive(Debug, Default)]
+pub struct IdentityCompressor;
+
+impl IdentityCompressor {
+    pub fn new() -> IdentityCompressor {
+        IdentityCompressor
+    }
+}
+
+impl UpdateCompressor for IdentityCompressor {
+    fn name(&self) -> &str {
+        "identity"
+    }
+
+    fn compress(&mut self, _round: usize, w: &[f32]) -> Result<CompressedUpdate> {
+        Ok(CompressedUpdate::Raw {
+            values: w.to_vec(),
+        })
+    }
+
+    fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Raw { values } => Ok(values.clone()),
+            other => Err(crate::error::FedAeError::Compression(format!(
+                "identity got {other:?}"
+            ))),
+        }
+    }
+
+    fn nominal_ratio(&self, _n: usize) -> Option<f64> {
+        Some(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lossless_roundtrip() {
+        let mut c = IdentityCompressor::new();
+        let w = vec![1.0, -2.5, 3.75];
+        let u = c.compress(0, &w).unwrap();
+        assert_eq!(c.decompress(&u).unwrap(), w);
+        assert_eq!(c.nominal_ratio(100), Some(1.0));
+    }
+
+    #[test]
+    fn rejects_wrong_variant() {
+        let mut c = IdentityCompressor::new();
+        let u = CompressedUpdate::Latent { z: vec![], n: 0 };
+        assert!(c.decompress(&u).is_err());
+    }
+}

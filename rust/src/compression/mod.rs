@@ -1,0 +1,397 @@
+//! Update compression plugins.
+//!
+//! The paper's contribution — autoencoder compression of weight updates —
+//! implemented in [`ae`], alongside the related-work baselines its §2
+//! surveys, so the benches can regenerate "who wins" comparisons:
+//!
+//! | plugin | paper §2 reference |
+//! |---|---|
+//! | [`ae::AeCompressor`] | this paper |
+//! | [`topk::TopKCompressor`] | DGC (Lin et al. 2017) / STC |
+//! | [`quantize::QuantizeCompressor`] | FedPAQ / QSGD-style uniform quantization |
+//! | [`subsample::SubsampleCompressor`] | sub-sampling (Reisizadeh et al. 2020) |
+//! | [`sketch::SketchCompressor`] | FetchSGD (Rothchild et al. 2020) |
+//! | [`identity::IdentityCompressor`] | no-compression FL baseline |
+//!
+//! Every plugin implements [`UpdateCompressor`]; the coordinator treats
+//! them uniformly and the ledger meters their real serialized bytes.
+
+pub mod ae;
+pub mod identity;
+pub mod quantize;
+pub mod sketch;
+pub mod subsample;
+pub mod topk;
+
+use crate::error::{FedAeError, Result};
+use crate::tensor::{bytes_to_f32s, f32s_to_bytes};
+
+/// A compressed weight update, as it travels on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressedUpdate {
+    /// Raw f32 update (identity).
+    Raw { values: Vec<f32> },
+    /// AE latent code (the paper's scheme).
+    Latent { z: Vec<f32>, n: u32 },
+    /// Sparse (index, value) pairs.
+    Sparse {
+        indices: Vec<u32>,
+        values: Vec<f32>,
+        n: u32,
+    },
+    /// Uniformly quantized values.
+    Quantized {
+        bits: u8,
+        min: f32,
+        scale: f32,
+        /// Bit-packed codes, `n` logical values.
+        packed: Vec<u8>,
+        n: u32,
+    },
+    /// Count-sketch table.
+    Sketch {
+        rows: u32,
+        cols: u32,
+        table: Vec<f32>,
+        seed: u64,
+        n: u32,
+    },
+}
+
+impl CompressedUpdate {
+    /// Serialize to wire bytes (goes inside `Message::EncodedUpdate`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            CompressedUpdate::Raw { values } => {
+                out.push(0);
+                put_u32(&mut out, values.len() as u32);
+                out.extend_from_slice(&f32s_to_bytes(values));
+            }
+            CompressedUpdate::Latent { z, n } => {
+                out.push(1);
+                put_u32(&mut out, *n);
+                put_u32(&mut out, z.len() as u32);
+                out.extend_from_slice(&f32s_to_bytes(z));
+            }
+            CompressedUpdate::Sparse { indices, values, n } => {
+                out.push(2);
+                put_u32(&mut out, *n);
+                put_u32(&mut out, indices.len() as u32);
+                for &i in indices {
+                    put_u32(&mut out, i);
+                }
+                out.extend_from_slice(&f32s_to_bytes(values));
+            }
+            CompressedUpdate::Quantized {
+                bits,
+                min,
+                scale,
+                packed,
+                n,
+            } => {
+                out.push(3);
+                out.push(*bits);
+                out.extend_from_slice(&min.to_le_bytes());
+                out.extend_from_slice(&scale.to_le_bytes());
+                put_u32(&mut out, *n);
+                put_u32(&mut out, packed.len() as u32);
+                out.extend_from_slice(packed);
+            }
+            CompressedUpdate::Sketch {
+                rows,
+                cols,
+                table,
+                seed,
+                n,
+            } => {
+                out.push(4);
+                put_u32(&mut out, *rows);
+                put_u32(&mut out, *cols);
+                put_u32(&mut out, *n);
+                out.extend_from_slice(&seed.to_le_bytes());
+                out.extend_from_slice(&f32s_to_bytes(table));
+            }
+        }
+        out
+    }
+
+    /// Parse from wire bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<CompressedUpdate> {
+        let mut cur = Cur { b: bytes, p: 0 };
+        let tag = cur.u8()?;
+        let update = match tag {
+            0 => {
+                let n = cur.u32()? as usize;
+                CompressedUpdate::Raw {
+                    values: cur.f32s(n)?,
+                }
+            }
+            1 => {
+                let n = cur.u32()?;
+                let k = cur.u32()? as usize;
+                CompressedUpdate::Latent { z: cur.f32s(k)?, n }
+            }
+            2 => {
+                let n = cur.u32()?;
+                let k = cur.u32()? as usize;
+                let mut indices = Vec::with_capacity(k);
+                for _ in 0..k {
+                    indices.push(cur.u32()?);
+                }
+                CompressedUpdate::Sparse {
+                    indices,
+                    values: cur.f32s(k)?,
+                    n,
+                }
+            }
+            3 => {
+                let bits = cur.u8()?;
+                let min = cur.f32()?;
+                let scale = cur.f32()?;
+                let n = cur.u32()?;
+                let k = cur.u32()? as usize;
+                CompressedUpdate::Quantized {
+                    bits,
+                    min,
+                    scale,
+                    packed: cur.bytes(k)?.to_vec(),
+                    n,
+                }
+            }
+            4 => {
+                let rows = cur.u32()?;
+                let cols = cur.u32()?;
+                let n = cur.u32()?;
+                let seed = cur.u64()?;
+                let table = cur.f32s((rows * cols) as usize)?;
+                CompressedUpdate::Sketch {
+                    rows,
+                    cols,
+                    table,
+                    seed,
+                    n,
+                }
+            }
+            t => {
+                return Err(FedAeError::Compression(format!(
+                    "unknown compressed-update tag {t}"
+                )))
+            }
+        };
+        if cur.p != bytes.len() {
+            return Err(FedAeError::Compression(format!(
+                "trailing bytes in compressed update: {} of {}",
+                cur.p,
+                bytes.len()
+            )));
+        }
+        Ok(update)
+    }
+
+    /// On-wire payload size.
+    pub fn wire_bytes(&self) -> u64 {
+        self.to_bytes().len() as u64
+    }
+
+    /// Logical (uncompressed) dimensionality of the update this encodes.
+    pub fn logical_n(&self) -> usize {
+        match self {
+            CompressedUpdate::Raw { values } => values.len(),
+            CompressedUpdate::Latent { n, .. }
+            | CompressedUpdate::Sparse { n, .. }
+            | CompressedUpdate::Quantized { n, .. }
+            | CompressedUpdate::Sketch { n, .. } => *n as usize,
+        }
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.p + n > self.b.len() {
+            return Err(FedAeError::Compression("truncated update payload".into()));
+        }
+        let out = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.bytes(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        bytes_to_f32s(self.bytes(n * 4)?)
+    }
+}
+
+/// A weight-update compressor: collaborator side produces a
+/// [`CompressedUpdate`], server side reconstructs the full vector.
+///
+/// Compressors may be stateful (residual accumulation in top-k, the AE's
+/// encoder/decoder halves), so compress/decompress take `&mut self`.
+/// (Not `Send`: the AE compressor borrows the PJRT runtime; the TCP
+/// deployment mode constructs one compressor per worker thread instead.)
+pub trait UpdateCompressor {
+    /// Short name for logs/benches.
+    fn name(&self) -> &str;
+
+    /// Compress a full weight(-update) vector. `round` lets stateful
+    /// schemes key their state.
+    fn compress(&mut self, round: usize, w: &[f32]) -> Result<CompressedUpdate>;
+
+    /// Reconstruct a full vector from the compressed form (server side).
+    fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>>;
+
+    /// The analytic compression ratio (logical f32 bytes / wire bytes)
+    /// for an `n`-dim update, if fixed by construction. The ledger always
+    /// reports the *measured* ratio too.
+    fn nominal_ratio(&self, n: usize) -> Option<f64> {
+        let _ = n;
+        None
+    }
+}
+
+/// Build a compressor from config (AE needs the runtime, so it has its own
+/// constructor in [`ae`]).
+pub fn from_config(
+    cfg: &crate::config::CompressionConfig,
+    n_params: usize,
+    seed: u64,
+) -> Result<Box<dyn UpdateCompressor>> {
+    use crate::config::CompressionConfig as C;
+    Ok(match cfg {
+        C::Identity => Box::new(identity::IdentityCompressor::new()),
+        C::TopK { fraction } => Box::new(topk::TopKCompressor::new(n_params, *fraction)?),
+        C::Quantize { bits, stochastic } => Box::new(quantize::QuantizeCompressor::new(
+            *bits,
+            *stochastic,
+            seed,
+        )?),
+        C::Subsample { fraction } => {
+            Box::new(subsample::SubsampleCompressor::new(n_params, *fraction, seed)?)
+        }
+        C::Sketch { rows, cols, topk } => {
+            Box::new(sketch::SketchCompressor::new(*rows, *cols, *topk, seed)?)
+        }
+        C::Ae { .. } => {
+            return Err(FedAeError::Config(
+                "AE compressor needs a runtime; use ae::AeCompressor::new".into(),
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip_all_variants() {
+        let updates = vec![
+            CompressedUpdate::Raw {
+                values: vec![1.0, -2.0],
+            },
+            CompressedUpdate::Latent {
+                z: vec![0.5; 32],
+                n: 15910,
+            },
+            CompressedUpdate::Sparse {
+                indices: vec![3, 99, 1000],
+                values: vec![0.1, -0.2, 0.3],
+                n: 4096,
+            },
+            CompressedUpdate::Quantized {
+                bits: 4,
+                min: -1.0,
+                scale: 0.125,
+                packed: vec![0xAB, 0xCD],
+                n: 4,
+            },
+            CompressedUpdate::Sketch {
+                rows: 2,
+                cols: 3,
+                table: vec![1.0; 6],
+                seed: 99,
+                n: 50,
+            },
+        ];
+        for u in updates {
+            let bytes = u.to_bytes();
+            assert_eq!(bytes.len() as u64, u.wire_bytes());
+            assert_eq!(CompressedUpdate::from_bytes(&bytes).unwrap(), u);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(CompressedUpdate::from_bytes(&[]).is_err());
+        assert!(CompressedUpdate::from_bytes(&[9, 0, 0]).is_err()); // bad tag
+        let mut good = CompressedUpdate::Latent {
+            z: vec![1.0],
+            n: 10,
+        }
+        .to_bytes();
+        good.push(0); // trailing byte
+        assert!(CompressedUpdate::from_bytes(&good).is_err());
+        let truncated = &CompressedUpdate::Raw {
+            values: vec![1.0, 2.0],
+        }
+        .to_bytes()[..6];
+        assert!(CompressedUpdate::from_bytes(truncated).is_err());
+    }
+
+    #[test]
+    fn latent_wire_ratio_matches_paper() {
+        // 15910-dim update as a 32-dim latent: ~497x on the wire
+        // (modulo the 9-byte envelope).
+        let u = CompressedUpdate::Latent {
+            z: vec![0.0; 32],
+            n: 15910,
+        };
+        let ratio = (15910.0 * 4.0) / u.wire_bytes() as f64;
+        assert!(ratio > 450.0, "ratio {ratio}");
+        assert_eq!(u.logical_n(), 15910);
+    }
+
+    #[test]
+    fn from_config_builds_all_but_ae() {
+        use crate::config::CompressionConfig as C;
+        for cfg in [
+            C::Identity,
+            C::TopK { fraction: 0.01 },
+            C::Quantize {
+                bits: 8,
+                stochastic: true,
+            },
+            C::Subsample { fraction: 0.1 },
+            C::Sketch {
+                rows: 3,
+                cols: 64,
+                topk: 10,
+            },
+        ] {
+            assert!(from_config(&cfg, 1000, 7).is_ok(), "{cfg:?}");
+        }
+        assert!(from_config(&C::Ae { ae: "mnist".into() }, 1000, 7).is_err());
+    }
+}

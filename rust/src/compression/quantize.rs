@@ -1,0 +1,259 @@
+//! Uniform quantization baseline (FedPAQ / QSGD family, paper §2:
+//! "mapping weight parameter values to a smaller set of discrete finite
+//! values"). Supports deterministic (nearest) and stochastic rounding,
+//! bit-packing 1..=16 bits per value.
+
+use super::{CompressedUpdate, UpdateCompressor};
+use crate::error::{FedAeError, Result};
+use crate::util::rng::Rng;
+
+/// b-bit uniform quantizer over the update's [min, max] range.
+#[derive(Debug)]
+pub struct QuantizeCompressor {
+    bits: u8,
+    stochastic: bool,
+    rng: Rng,
+    name: String,
+}
+
+impl QuantizeCompressor {
+    pub fn new(bits: u8, stochastic: bool, seed: u64) -> Result<QuantizeCompressor> {
+        if !(1..=16).contains(&bits) {
+            return Err(FedAeError::Compression(format!(
+                "quantize bits {bits} outside 1..=16"
+            )));
+        }
+        Ok(QuantizeCompressor {
+            bits,
+            stochastic,
+            rng: Rng::new(seed),
+            name: format!(
+                "quantize({bits}b{})",
+                if stochastic { ",stoch" } else { "" }
+            ),
+        })
+    }
+
+    fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+}
+
+/// Pack `codes` (each < 2^bits) into a dense bitstream.
+fn pack_bits(codes: &[u32], bits: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity((codes.len() * bits as usize + 7) / 8);
+    let mut acc: u64 = 0;
+    let mut nbits = 0u32;
+    for &c in codes {
+        acc |= (c as u64) << nbits;
+        nbits += bits as u32;
+        while nbits >= 8 {
+            out.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xFF) as u8);
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`].
+fn unpack_bits(packed: &[u8], bits: u8, n: usize) -> Result<Vec<u32>> {
+    let needed = (n * bits as usize + 7) / 8;
+    if packed.len() < needed {
+        return Err(FedAeError::Compression(format!(
+            "packed stream too short: {} < {needed}",
+            packed.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut acc: u64 = 0;
+    let mut nbits = 0u32;
+    let mask = (1u64 << bits) - 1;
+    let mut iter = packed.iter();
+    for _ in 0..n {
+        while nbits < bits as u32 {
+            acc |= (*iter.next().unwrap() as u64) << nbits;
+            nbits += 8;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= bits;
+        nbits -= bits as u32;
+    }
+    Ok(out)
+}
+
+impl UpdateCompressor for QuantizeCompressor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compress(&mut self, _round: usize, w: &[f32]) -> Result<CompressedUpdate> {
+        if w.is_empty() {
+            return Ok(CompressedUpdate::Quantized {
+                bits: self.bits,
+                min: 0.0,
+                scale: 0.0,
+                packed: vec![],
+                n: 0,
+            });
+        }
+        let mut min = f32::INFINITY;
+        let mut max = f32::NEG_INFINITY;
+        for &x in w {
+            if !x.is_finite() {
+                return Err(FedAeError::Compression("non-finite value in update".into()));
+            }
+            min = min.min(x);
+            max = max.max(x);
+        }
+        let levels = self.levels();
+        let scale = if max > min {
+            (max - min) / levels as f32
+        } else {
+            0.0
+        };
+        let codes: Vec<u32> = w
+            .iter()
+            .map(|&x| {
+                if scale == 0.0 {
+                    return 0;
+                }
+                let pos = (x - min) / scale;
+                let code = if self.stochastic {
+                    let floor = pos.floor();
+                    let frac = pos - floor;
+                    floor as u32 + (self.rng.uniform() < frac as f64) as u32
+                } else {
+                    pos.round() as u32
+                };
+                code.min(levels)
+            })
+            .collect();
+        Ok(CompressedUpdate::Quantized {
+            bits: self.bits,
+            min,
+            scale,
+            packed: pack_bits(&codes, self.bits),
+            n: w.len() as u32,
+        })
+    }
+
+    fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Quantized {
+                bits,
+                min,
+                scale,
+                packed,
+                n,
+            } => {
+                let codes = unpack_bits(packed, *bits, *n as usize)?;
+                Ok(codes
+                    .into_iter()
+                    .map(|c| min + c as f32 * scale)
+                    .collect())
+            }
+            other => Err(FedAeError::Compression(format!("quantize got {other:?}"))),
+        }
+    }
+
+    fn nominal_ratio(&self, _n: usize) -> Option<f64> {
+        Some(32.0 / self.bits as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for bits in [1u8, 3, 4, 7, 8, 11, 16] {
+            let mask = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..100).map(|i| (i * 2654435761u64 as usize) as u32 & mask).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(unpack_bits(&packed, bits, codes.len()).unwrap(), codes);
+        }
+    }
+
+    #[test]
+    fn deterministic_quantization_error_bound() {
+        let mut c = QuantizeCompressor::new(8, false, 0).unwrap();
+        let w: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.7).sin()).collect();
+        let u = c.compress(0, &w).unwrap();
+        let out = c.decompress(&u).unwrap();
+        // Max error <= scale/2 = (range / 255) / 2.
+        let scale = 2.0 / 255.0;
+        for (a, b) in w.iter().zip(&out) {
+            assert!((a - b).abs() <= scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        let mut c = QuantizeCompressor::new(2, true, 42).unwrap();
+        // A value exactly halfway between two levels: mean over many
+        // compressions should approach the value itself.
+        let w = vec![0.0f32, 0.5, 1.5, 3.0]; // range [0,3], levels {0,1,2,3}
+        let mut mean = vec![0.0f64; 4];
+        let reps = 3000;
+        for r in 0..reps {
+            let u = c.compress(r, &w).unwrap();
+            let out = c.decompress(&u).unwrap();
+            for (m, &v) in mean.iter_mut().zip(&out) {
+                *m += v as f64 / reps as f64;
+            }
+        }
+        assert!((mean[1] - 0.5).abs() < 0.05, "mean={mean:?}");
+        assert!((mean[2] - 1.5).abs() < 0.05, "mean={mean:?}");
+    }
+
+    #[test]
+    fn constant_vector() {
+        let mut c = QuantizeCompressor::new(8, false, 0).unwrap();
+        let w = vec![2.5f32; 16];
+        let u = c.compress(0, &w).unwrap();
+        assert_eq!(c.decompress(&u).unwrap(), w);
+    }
+
+    #[test]
+    fn empty_vector() {
+        let mut c = QuantizeCompressor::new(4, false, 0).unwrap();
+        let u = c.compress(0, &[]).unwrap();
+        assert_eq!(c.decompress(&u).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn wire_size_shrinks_with_bits() {
+        let w: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let b8 = QuantizeCompressor::new(8, false, 0)
+            .unwrap()
+            .compress(0, &w)
+            .unwrap()
+            .wire_bytes();
+        let b4 = QuantizeCompressor::new(4, false, 0)
+            .unwrap()
+            .compress(0, &w)
+            .unwrap()
+            .wire_bytes();
+        let b1 = QuantizeCompressor::new(1, false, 0)
+            .unwrap()
+            .compress(0, &w)
+            .unwrap()
+            .wire_bytes();
+        assert!(b4 < b8 && b1 < b4);
+        // 8-bit: ~4x smaller than raw 16 KiB.
+        assert!((4096.0 * 4.0) / b8 as f64 > 3.5);
+    }
+
+    #[test]
+    fn rejects_nan_and_bad_bits() {
+        assert!(QuantizeCompressor::new(0, false, 0).is_err());
+        assert!(QuantizeCompressor::new(17, false, 0).is_err());
+        let mut c = QuantizeCompressor::new(8, false, 0).unwrap();
+        assert!(c.compress(0, &[f32::NAN]).is_err());
+    }
+}

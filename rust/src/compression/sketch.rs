@@ -1,0 +1,213 @@
+//! Count-sketch compression — the FetchSGD baseline (Rothchild et al.
+//! 2020; paper §2: "uses sketching and streaming to compress weight
+//! updates by summarizing them through a linear sketching algorithm").
+//!
+//! Compress: project the n-dim update into an r x c count-sketch table
+//! with per-row hash + sign functions. Decompress: median-of-rows
+//! estimate per coordinate, keeping only the top-k largest recovered
+//! magnitudes (FetchSGD's heavy-hitter recovery).
+
+use super::{CompressedUpdate, UpdateCompressor};
+use crate::error::{FedAeError, Result};
+
+/// Count-sketch compressor.
+#[derive(Debug)]
+pub struct SketchCompressor {
+    rows: usize,
+    cols: usize,
+    topk: usize,
+    seed: u64,
+    name: String,
+}
+
+impl SketchCompressor {
+    pub fn new(rows: usize, cols: usize, topk: usize, seed: u64) -> Result<SketchCompressor> {
+        if rows == 0 || cols == 0 || topk == 0 {
+            return Err(FedAeError::Compression(
+                "sketch rows/cols/topk must be > 0".into(),
+            ));
+        }
+        Ok(SketchCompressor {
+            rows,
+            cols,
+            topk,
+            seed,
+            name: format!("sketch({rows}x{cols},k={topk})"),
+        })
+    }
+
+    /// Hash of (row, coordinate) -> (column, sign). SplitMix64-style mix.
+    #[inline]
+    fn hash(seed: u64, row: usize, i: usize) -> u64 {
+        let mut z = seed
+            ^ (row as u64).wrapping_mul(0xA076_1D64_78BD_642F)
+            ^ (i as u64).wrapping_mul(0xE703_7ED1_A0B4_28DB);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    fn bucket_sign(&self, seed: u64, row: usize, i: usize) -> (usize, f32) {
+        let h = Self::hash(seed, row, i);
+        let col = (h % self.cols as u64) as usize;
+        let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+        (col, sign)
+    }
+}
+
+impl UpdateCompressor for SketchCompressor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compress(&mut self, _round: usize, w: &[f32]) -> Result<CompressedUpdate> {
+        let mut table = vec![0.0f32; self.rows * self.cols];
+        for (i, &x) in w.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            for r in 0..self.rows {
+                let (col, sign) = self.bucket_sign(self.seed, r, i);
+                table[r * self.cols + col] += sign * x;
+            }
+        }
+        Ok(CompressedUpdate::Sketch {
+            rows: self.rows as u32,
+            cols: self.cols as u32,
+            table,
+            seed: self.seed,
+            n: w.len() as u32,
+        })
+    }
+
+    fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Sketch {
+                rows,
+                cols,
+                table,
+                seed,
+                n,
+            } => {
+                let rows = *rows as usize;
+                let cols = *cols as usize;
+                if table.len() != rows * cols {
+                    return Err(FedAeError::Compression(format!(
+                        "sketch table size {} != {rows}x{cols}",
+                        table.len()
+                    )));
+                }
+                if cols != self.cols || rows != self.rows {
+                    return Err(FedAeError::Compression(format!(
+                        "sketch geometry mismatch: update {rows}x{cols}, compressor {}x{}",
+                        self.rows, self.cols
+                    )));
+                }
+                let n = *n as usize;
+                // Median-of-rows estimate per coordinate.
+                let mut est: Vec<(usize, f32)> = Vec::with_capacity(n);
+                let mut row_vals = vec![0.0f32; rows];
+                for i in 0..n {
+                    for r in 0..rows {
+                        let (col, sign) = self.bucket_sign(*seed, r, i);
+                        row_vals[r] = sign * table[r * cols + col];
+                    }
+                    row_vals.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                    let median = if rows % 2 == 1 {
+                        row_vals[rows / 2]
+                    } else {
+                        (row_vals[rows / 2 - 1] + row_vals[rows / 2]) / 2.0
+                    };
+                    est.push((i, median));
+                }
+                // Keep top-k heavy hitters, zero the rest (FetchSGD recovery).
+                let k = self.topk.min(n);
+                est.sort_unstable_by(|a, b| {
+                    b.1.abs().partial_cmp(&a.1.abs()).unwrap()
+                });
+                let mut out = vec![0.0f32; n];
+                for &(i, v) in est.iter().take(k) {
+                    out[i] = v;
+                }
+                Ok(out)
+            }
+            other => Err(FedAeError::Compression(format!("sketch got {other:?}"))),
+        }
+    }
+
+    fn nominal_ratio(&self, n: usize) -> Option<f64> {
+        Some((n as f64 * 4.0) / ((self.rows * self.cols) as f64 * 4.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_heavy_hitters() {
+        // A sparse vector with a few large coordinates in a sea of zeros —
+        // the regime count-sketch is built for.
+        let n = 2000;
+        let mut w = vec![0.0f32; n];
+        w[17] = 5.0;
+        w[423] = -4.0;
+        w[1999] = 3.0;
+        let mut c = SketchCompressor::new(5, 256, 3, 99).unwrap();
+        let u = c.compress(0, &w).unwrap();
+        let out = c.decompress(&u).unwrap();
+        assert!((out[17] - 5.0).abs() < 0.5, "got {}", out[17]);
+        assert!((out[423] + 4.0).abs() < 0.5, "got {}", out[423]);
+        assert!((out[1999] - 3.0).abs() < 0.5, "got {}", out[1999]);
+        // Everything else zeroed by top-k recovery.
+        let nonzero = out.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, 3);
+    }
+
+    #[test]
+    fn linearity_of_sketch() {
+        // Sketches are linear: sketch(a) + sketch(b) == sketch(a+b).
+        let mut c = SketchCompressor::new(3, 64, 10, 5).unwrap();
+        let a: Vec<f32> = (0..100).map(|i| (i as f32 * 0.1).sin()).collect();
+        let b: Vec<f32> = (0..100).map(|i| (i as f32 * 0.2).cos()).collect();
+        let ua = c.compress(0, &a).unwrap();
+        let ub = c.compress(0, &b).unwrap();
+        let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let usum = c.compress(0, &sum).unwrap();
+        if let (
+            CompressedUpdate::Sketch { table: ta, .. },
+            CompressedUpdate::Sketch { table: tb, .. },
+            CompressedUpdate::Sketch { table: ts, .. },
+        ) = (&ua, &ub, &usum)
+        {
+            for i in 0..ta.len() {
+                assert!((ta[i] + tb[i] - ts[i]).abs() < 1e-4);
+            }
+        } else {
+            panic!("wrong variants");
+        }
+    }
+
+    #[test]
+    fn ratio() {
+        let c = SketchCompressor::new(5, 100, 10, 0).unwrap();
+        // n=5000 -> table 500 -> 10x.
+        assert!((c.nominal_ratio(5000).unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let mut c5 = SketchCompressor::new(5, 64, 10, 0).unwrap();
+        let mut c3 = SketchCompressor::new(3, 64, 10, 0).unwrap();
+        let u = c5.compress(0, &vec![1.0; 100]).unwrap();
+        assert!(c3.decompress(&u).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_dims() {
+        assert!(SketchCompressor::new(0, 10, 1, 0).is_err());
+        assert!(SketchCompressor::new(1, 0, 1, 0).is_err());
+        assert!(SketchCompressor::new(1, 1, 0, 0).is_err());
+    }
+}

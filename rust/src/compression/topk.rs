@@ -1,0 +1,195 @@
+//! Top-k magnitude sparsification with local residual accumulation —
+//! the Deep Gradient Compression baseline (Lin et al. 2017; paper §2:
+//! "only communicates the weights above the set threshold, and the others
+//! are accumulated locally on the device").
+
+use super::{CompressedUpdate, UpdateCompressor};
+use crate::error::{FedAeError, Result};
+
+/// DGC-style compressor: sends the k largest-|.|, accumulates the rest.
+#[derive(Debug)]
+pub struct TopKCompressor {
+    n: usize,
+    k: usize,
+    fraction: f64,
+    /// Residual: coordinates not yet communicated accumulate here.
+    residual: Vec<f32>,
+    name: String,
+}
+
+impl TopKCompressor {
+    pub fn new(n: usize, fraction: f64) -> Result<TopKCompressor> {
+        if !(0.0 < fraction && fraction <= 1.0) {
+            return Err(FedAeError::Compression(format!(
+                "top-k fraction {fraction} not in (0,1]"
+            )));
+        }
+        let k = ((n as f64 * fraction).ceil() as usize).clamp(1, n.max(1));
+        Ok(TopKCompressor {
+            n,
+            k,
+            fraction,
+            residual: vec![0.0; n],
+            name: format!("topk({fraction})"),
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Current residual L2 (diagnostics / tests).
+    pub fn residual_l2(&self) -> f64 {
+        crate::tensor::l2_norm(&self.residual)
+    }
+}
+
+impl UpdateCompressor for TopKCompressor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compress(&mut self, _round: usize, w: &[f32]) -> Result<CompressedUpdate> {
+        if w.len() != self.n {
+            return Err(FedAeError::Compression(format!(
+                "top-k expects {} dims, got {}",
+                self.n,
+                w.len()
+            )));
+        }
+        // Accumulate into residual, then pick the k largest magnitudes.
+        for (r, &x) in self.residual.iter_mut().zip(w) {
+            *r += x;
+        }
+        // Select k largest |residual| via partial sort of indices.
+        let mut idx: Vec<u32> = (0..self.n as u32).collect();
+        let k = self.k.min(self.n);
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            let ma = self.residual[a as usize].abs();
+            let mb = self.residual[b as usize].abs();
+            mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut top: Vec<u32> = idx[..k].to_vec();
+        top.sort_unstable();
+        let values: Vec<f32> = top
+            .iter()
+            .map(|&i| {
+                let v = self.residual[i as usize];
+                self.residual[i as usize] = 0.0; // communicated -> cleared
+                v
+            })
+            .collect();
+        Ok(CompressedUpdate::Sparse {
+            indices: top,
+            values,
+            n: self.n as u32,
+        })
+    }
+
+    fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Sparse { indices, values, n } => {
+                if indices.len() != values.len() {
+                    return Err(FedAeError::Compression(
+                        "sparse index/value length mismatch".into(),
+                    ));
+                }
+                let mut out = vec![0.0f32; *n as usize];
+                for (&i, &v) in indices.iter().zip(values) {
+                    let i = i as usize;
+                    if i >= out.len() {
+                        return Err(FedAeError::Compression(format!(
+                            "sparse index {i} out of bounds (n={n})"
+                        )));
+                    }
+                    out[i] = v;
+                }
+                Ok(out)
+            }
+            other => Err(FedAeError::Compression(format!("top-k got {other:?}"))),
+        }
+    }
+
+    fn nominal_ratio(&self, n: usize) -> Option<f64> {
+        // Each kept coordinate costs 8 bytes (u32 idx + f32 val).
+        let k = ((n as f64 * self.fraction).ceil()).max(1.0);
+        Some((n as f64 * 4.0) / (k * 8.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let mut c = TopKCompressor::new(6, 0.34).unwrap(); // k = 3
+        assert_eq!(c.k(), 3);
+        let w = vec![0.1, -5.0, 0.2, 4.0, -0.05, 3.0];
+        let u = c.compress(0, &w).unwrap();
+        let out = c.decompress(&u).unwrap();
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 4.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn residual_accumulates_and_flushes() {
+        let mut c = TopKCompressor::new(4, 0.25).unwrap(); // k = 1
+        // Round 0: only the largest (|0.9|) goes; 0.5 accumulates.
+        let u0 = c.compress(0, &[0.5, 0.9, 0.0, 0.0]).unwrap();
+        assert_eq!(c.decompress(&u0).unwrap(), vec![0.0, 0.9, 0.0, 0.0]);
+        // Round 1: another 0.5 arrives -> residual 1.0 now wins.
+        let u1 = c.compress(1, &[0.5, 0.1, 0.0, 0.0]).unwrap();
+        let out1 = c.decompress(&u1).unwrap();
+        assert_eq!(out1, vec![1.0, 0.0, 0.0, 0.0]);
+        // Nothing lost: total communicated == total input (eventually).
+        assert!(c.residual_l2() > 0.0); // 0.1 still pending
+    }
+
+    #[test]
+    fn conservation_under_repeated_rounds() {
+        // Sum of (communicated + residual) equals sum of inputs exactly.
+        let mut c = TopKCompressor::new(32, 0.1).unwrap();
+        let mut communicated = vec![0.0f64; 32];
+        let mut fed = vec![0.0f64; 32];
+        let mut rng = crate::util::rng::Rng::new(3);
+        for round in 0..20 {
+            let w: Vec<f32> = (0..32).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            for (f, &x) in fed.iter_mut().zip(&w) {
+                *f += x as f64;
+            }
+            let u = c.compress(round, &w).unwrap();
+            let d = c.decompress(&u).unwrap();
+            for (s, &x) in communicated.iter_mut().zip(&d) {
+                *s += x as f64;
+            }
+        }
+        for i in 0..32 {
+            let pending = c.residual[i] as f64;
+            assert!(
+                (fed[i] - communicated[i] - pending).abs() < 1e-4,
+                "coordinate {i} leaked"
+            );
+        }
+    }
+
+    #[test]
+    fn ratio_formula() {
+        let c = TopKCompressor::new(1000, 0.01).unwrap();
+        // 10 coords x 8 B vs 1000 x 4 B -> 50x.
+        assert!((c.nominal_ratio(1000).unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(TopKCompressor::new(10, 0.0).is_err());
+        assert!(TopKCompressor::new(10, 1.5).is_err());
+        let mut c = TopKCompressor::new(4, 0.5).unwrap();
+        assert!(c.compress(0, &[1.0, 2.0]).is_err());
+        let bad = CompressedUpdate::Sparse {
+            indices: vec![10],
+            values: vec![1.0],
+            n: 4,
+        };
+        assert!(c.decompress(&bad).is_err());
+    }
+}

@@ -1,0 +1,384 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m compile.aot`).
+//!
+//! The manifest is the contract between the build-time python layer and the
+//! rust runtime: artifact file names, input/output shapes, model parameter
+//! counts, AE latent dims and encoder/decoder splits. [`Manifest::load`]
+//! validates internal consistency so shape bugs surface at startup, not
+//! mid-experiment.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{FedAeError, Result};
+use crate::util::json::Json;
+
+/// One exported HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    pub sha256: String,
+}
+
+/// Named input tensor spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Classifier model description.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub n_params: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+/// Autoencoder description.
+#[derive(Debug, Clone)]
+pub struct AeEntry {
+    pub dims: Vec<usize>,
+    pub n_params: usize,
+    pub latent: usize,
+    pub encoder_params: usize,
+    pub decoder_params: usize,
+    pub compression_ratio: f64,
+    pub train_batch: usize,
+}
+
+/// Initial-parameter blob description.
+#[derive(Debug, Clone)]
+pub struct InitEntry {
+    pub file: String,
+    pub len: usize,
+    pub sha256: String,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub autoencoders: BTreeMap<String, AeEntry>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub inits: BTreeMap<String, InitEntry>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let json = Json::load(path).map_err(|e| {
+            FedAeError::Artifact(format!(
+                "cannot load manifest {}: {e} (run `make artifacts`)",
+                path.display()
+            ))
+        })?;
+        let manifest = Self::from_json(&json)?;
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    pub fn from_json(json: &Json) -> Result<Manifest> {
+        let seed = json.req_usize("seed")? as u64;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in json
+            .at(&["models"])?
+            .as_obj()
+            .ok_or_else(|| FedAeError::Config("`models` is not an object".into()))?
+        {
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    n_params: m.req_usize("n_params")?,
+                    input_dim: m.req_usize("input_dim")?,
+                    classes: m.req_usize("classes")?,
+                    train_batch: m.req_usize("train_batch")?,
+                    eval_batch: m.req_usize("eval_batch")?,
+                },
+            );
+        }
+
+        let mut autoencoders = BTreeMap::new();
+        for (name, a) in json
+            .at(&["autoencoders"])?
+            .as_obj()
+            .ok_or_else(|| FedAeError::Config("`autoencoders` is not an object".into()))?
+        {
+            let dims = a
+                .at(&["dims"])?
+                .as_arr()
+                .ok_or_else(|| FedAeError::Config("ae dims not an array".into()))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| FedAeError::Config("ae dim not an integer".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            autoencoders.insert(
+                name.clone(),
+                AeEntry {
+                    dims,
+                    n_params: a.req_usize("n_params")?,
+                    latent: a.req_usize("latent")?,
+                    encoder_params: a.req_usize("encoder_params")?,
+                    decoder_params: a.req_usize("decoder_params")?,
+                    compression_ratio: a.req_f64("compression_ratio")?,
+                    train_batch: a.req_usize("train_batch")?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, e) in json
+            .at(&["artifacts"])?
+            .as_obj()
+            .ok_or_else(|| FedAeError::Config("`artifacts` is not an object".into()))?
+        {
+            let inputs = e
+                .at(&["inputs"])?
+                .as_arr()
+                .ok_or_else(|| FedAeError::Config("artifact inputs not an array".into()))?
+                .iter()
+                .map(|inp| {
+                    let shape = inp
+                        .at(&["shape"])?
+                        .as_arr()
+                        .ok_or_else(|| FedAeError::Config("input shape not an array".into()))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize().ok_or_else(|| {
+                                FedAeError::Config("input dim not an integer".into())
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok(TensorSpec {
+                        name: inp.req_str("name")?.to_string(),
+                        shape,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .at(&["outputs"])?
+                .as_arr()
+                .ok_or_else(|| FedAeError::Config("artifact outputs not an array".into()))?
+                .iter()
+                .map(|o| {
+                    o.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| FedAeError::Config("output name not a string".into()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: e.req_str("file")?.to_string(),
+                    inputs,
+                    outputs,
+                    sha256: e.req_str("sha256")?.to_string(),
+                },
+            );
+        }
+
+        let mut inits = BTreeMap::new();
+        for (name, e) in json
+            .at(&["inits"])?
+            .as_obj()
+            .ok_or_else(|| FedAeError::Config("`inits` is not an object".into()))?
+        {
+            inits.insert(
+                name.clone(),
+                InitEntry {
+                    file: e.req_str("file")?.to_string(),
+                    len: e.req_usize("len")?,
+                    sha256: e.req_str("sha256")?.to_string(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            seed,
+            models,
+            autoencoders,
+            artifacts,
+            inits,
+        })
+    }
+
+    /// Internal-consistency checks (encoder+decoder == total, ratios, the
+    /// artifact set needed by the runtime).
+    pub fn validate(&self) -> Result<()> {
+        for (name, ae) in &self.autoencoders {
+            if ae.encoder_params + ae.decoder_params != ae.n_params {
+                return Err(FedAeError::Artifact(format!(
+                    "ae `{name}`: encoder {} + decoder {} != total {}",
+                    ae.encoder_params, ae.decoder_params, ae.n_params
+                )));
+            }
+            let latent = *ae.dims.iter().min().ok_or_else(|| {
+                FedAeError::Artifact(format!("ae `{name}` has empty dims"))
+            })?;
+            if latent != ae.latent {
+                return Err(FedAeError::Artifact(format!(
+                    "ae `{name}`: min(dims) {} != latent {}",
+                    latent, ae.latent
+                )));
+            }
+            let want_ratio = ae.dims[0] as f64 / ae.latent as f64;
+            if (want_ratio - ae.compression_ratio).abs() > 1e-6 {
+                return Err(FedAeError::Artifact(format!(
+                    "ae `{name}`: ratio {} inconsistent with dims ({want_ratio})",
+                    ae.compression_ratio
+                )));
+            }
+        }
+        for family in self.models.keys() {
+            for kind in ["train_step", "eval"] {
+                let key = format!("{family}_{kind}");
+                if !self.artifacts.contains_key(&key) {
+                    return Err(FedAeError::Artifact(format!("missing artifact `{key}`")));
+                }
+            }
+        }
+        for tag in self.autoencoders.keys() {
+            for kind in ["ae_train_step", "encode", "decode", "ae_roundtrip"] {
+                let key = format!("{kind}_{tag}");
+                if !self.artifacts.contains_key(&key) {
+                    return Err(FedAeError::Artifact(format!("missing artifact `{key}`")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| FedAeError::Config(format!("unknown model `{name}`")))
+    }
+
+    pub fn ae(&self, name: &str) -> Result<&AeEntry> {
+        self.autoencoders
+            .get(name)
+            .ok_or_else(|| FedAeError::Config(format!("unknown autoencoder `{name}`")))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| FedAeError::Artifact(format!("unknown artifact `{name}`")))
+    }
+
+    pub fn init(&self, name: &str) -> Result<&InitEntry> {
+        self.inits
+            .get(name)
+            .ok_or_else(|| FedAeError::Artifact(format!("unknown init blob `{name}`")))
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    /// A minimal synthetic manifest for unit tests (no artifacts needed).
+    pub fn test_manifest_json() -> String {
+        r#"{
+          "seed": 42,
+          "models": {
+            "toy": {"n_params": 10, "input_dim": 4, "classes": 2,
+                     "train_batch": 2, "eval_batch": 4}
+          },
+          "autoencoders": {
+            "toy": {"dims": [10, 2, 10], "n_params": 52, "latent": 2,
+                     "encoder_params": 22, "decoder_params": 30,
+                     "compression_ratio": 5.0, "train_batch": 2}
+          },
+          "artifacts": {
+            "toy_train_step": {"file": "t.hlo.txt", "sha256": "x",
+              "inputs": [{"name": "params", "shape": [10], "dtype": "f32"}],
+              "outputs": ["params", "loss"]},
+            "toy_eval": {"file": "e.hlo.txt", "sha256": "x",
+              "inputs": [], "outputs": ["loss", "acc"]},
+            "ae_train_step_toy": {"file": "a.hlo.txt", "sha256": "x",
+              "inputs": [], "outputs": []},
+            "encode_toy": {"file": "en.hlo.txt", "sha256": "x",
+              "inputs": [], "outputs": ["z"]},
+            "decode_toy": {"file": "de.hlo.txt", "sha256": "x",
+              "inputs": [], "outputs": ["w"]},
+            "ae_roundtrip_toy": {"file": "rt.hlo.txt", "sha256": "x",
+              "inputs": [], "outputs": []}
+          },
+          "inits": {
+            "toy_params": {"file": "init/toy.bin", "len": 10, "sha256": "x"}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let json = Json::parse(&test_manifest_json()).unwrap();
+        let m = Manifest::from_json(&json).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.seed, 42);
+        assert_eq!(m.model("toy").unwrap().n_params, 10);
+        assert_eq!(m.ae("toy").unwrap().latent, 2);
+        assert_eq!(
+            m.artifact("toy_train_step").unwrap().inputs[0],
+            TensorSpec {
+                name: "params".into(),
+                shape: vec![10]
+            }
+        );
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_split() {
+        let doc = test_manifest_json().replace("\"encoder_params\": 22", "\"encoder_params\": 23");
+        let m = Manifest::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let doc = test_manifest_json().replace("\"encode_toy\"", "\"enc0de_toy\"");
+        let m = Manifest::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        let err = m.validate().unwrap_err();
+        assert!(err.to_string().contains("encode_toy"));
+    }
+
+    #[test]
+    fn rejects_bad_ratio() {
+        let doc = test_manifest_json().replace("\"compression_ratio\": 5.0", "\"compression_ratio\": 7.0");
+        let m = Manifest::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec {
+            name: "x".into(),
+            shape: vec![64, 784],
+        };
+        assert_eq!(t.elements(), 50_176);
+        let scalar = TensorSpec {
+            name: "lr".into(),
+            shape: vec![],
+        };
+        assert_eq!(scalar.elements(), 1);
+    }
+}

@@ -1,0 +1,457 @@
+//! Typed experiment configuration.
+//!
+//! Experiments are described by a JSON document (file or built-in preset)
+//! parsed into [`ExperimentConfig`]. Every field has a sensible default so
+//! configs only state what they change; [`ExperimentConfig::validate`]
+//! cross-checks against the artifact [`manifest::Manifest`] at startup.
+
+pub mod manifest;
+
+use crate::error::{FedAeError, Result};
+use crate::util::json::Json;
+
+/// Which compressor the collaborators use (paper's AE + the related-work
+/// baselines implemented in [`crate::compression`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressionConfig {
+    /// No compression: raw f32 updates (the FL baseline).
+    Identity,
+    /// The paper's autoencoder compression. `ae` names a manifest AE entry.
+    Ae { ae: String },
+    /// Top-k magnitude sparsification with residual accumulation (DGC-like).
+    TopK { fraction: f64 },
+    /// Uniform quantization to `bits` bits (optionally stochastic rounding).
+    Quantize { bits: u8, stochastic: bool },
+    /// Random-mask subsampling; mask is re-derived from a shared seed.
+    Subsample { fraction: f64 },
+    /// Count-sketch compression (FetchSGD-like).
+    Sketch { rows: usize, cols: usize, topk: usize },
+}
+
+impl CompressionConfig {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            CompressionConfig::Identity => "identity",
+            CompressionConfig::Ae { .. } => "ae",
+            CompressionConfig::TopK { .. } => "topk",
+            CompressionConfig::Quantize { .. } => "quantize",
+            CompressionConfig::Subsample { .. } => "subsample",
+            CompressionConfig::Sketch { .. } => "sketch",
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let kind = j.req_str("kind")?;
+        Ok(match kind {
+            "identity" | "none" => CompressionConfig::Identity,
+            "ae" => CompressionConfig::Ae {
+                ae: j.get("ae").and_then(|v| v.as_str()).unwrap_or("mnist").to_string(),
+            },
+            "topk" => CompressionConfig::TopK {
+                fraction: j.get("fraction").and_then(|v| v.as_f64()).unwrap_or(0.01),
+            },
+            "quantize" => CompressionConfig::Quantize {
+                bits: j.get("bits").and_then(|v| v.as_usize()).unwrap_or(8) as u8,
+                stochastic: j.get("stochastic").and_then(|v| v.as_bool()).unwrap_or(false),
+            },
+            "subsample" => CompressionConfig::Subsample {
+                fraction: j.get("fraction").and_then(|v| v.as_f64()).unwrap_or(0.01),
+            },
+            "sketch" => CompressionConfig::Sketch {
+                rows: j.get("rows").and_then(|v| v.as_usize()).unwrap_or(5),
+                cols: j.get("cols").and_then(|v| v.as_usize()).unwrap_or(256),
+                topk: j.get("topk").and_then(|v| v.as_usize()).unwrap_or(256),
+            },
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "unknown compression kind `{other}`"
+                )))
+            }
+        })
+    }
+}
+
+/// Server-side aggregation algorithm.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AggregationConfig {
+    /// Sample-count-weighted mean (McMahan et al. 2017).
+    FedAvg,
+    /// Unweighted coordinate-wise mean (the paper §5.2 uses simple averaging).
+    Mean,
+    /// Coordinate-wise median (byzantine-robust baseline).
+    Median,
+    /// Trimmed mean discarding `trim` fraction at each end.
+    TrimmedMean { trim: f64 },
+    /// FedAvg with server momentum `beta`.
+    FedAvgM { beta: f64 },
+}
+
+impl AggregationConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(match j.req_str("kind")? {
+            "fedavg" => AggregationConfig::FedAvg,
+            "mean" => AggregationConfig::Mean,
+            "median" => AggregationConfig::Median,
+            "trimmed_mean" => AggregationConfig::TrimmedMean {
+                trim: j.get("trim").and_then(|v| v.as_f64()).unwrap_or(0.1),
+            },
+            "fedavgm" => AggregationConfig::FedAvgM {
+                beta: j.get("beta").and_then(|v| v.as_f64()).unwrap_or(0.9),
+            },
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "unknown aggregation kind `{other}`"
+                )))
+            }
+        })
+    }
+}
+
+/// FL topology + schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlConfig {
+    pub collaborators: usize,
+    pub rounds: usize,
+    pub local_epochs: usize,
+    /// Fraction of collaborators sampled per round (client selection).
+    pub participation: f64,
+}
+
+impl Default for FlConfig {
+    fn default() -> Self {
+        // Paper §5.2: 40 communication rounds x 5 local epochs, 2 collabs.
+        FlConfig {
+            collaborators: 2,
+            rounds: 40,
+            local_epochs: 5,
+            participation: 1.0,
+        }
+    }
+}
+
+/// Synthetic-data shape + sharding strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    pub per_collab: usize,
+    pub test_size: usize,
+    pub sharding: Sharding,
+    /// Dirichlet alpha for `label_skew` sharding.
+    pub alpha: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sharding {
+    Iid,
+    LabelSkew,
+    /// Paper §5.2's colour-imbalance: odd collaborators see grayscale data.
+    ColorImbalance,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            per_collab: 2048,
+            test_size: 1024,
+            sharding: Sharding::Iid,
+            alpha: 0.5,
+        }
+    }
+}
+
+/// Local-training hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub lr: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { lr: 0.05 }
+    }
+}
+
+/// Pre-pass round schedule (paper §3, Fig 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrepassConfig {
+    /// Local epochs run to collect the weights dataset.
+    pub epochs: usize,
+    /// Log a weight snapshot every `snapshot_every` epochs.
+    pub snapshot_every: usize,
+    /// Adam epochs for AE training over the weights dataset.
+    pub ae_epochs: usize,
+}
+
+impl Default for PrepassConfig {
+    fn default() -> Self {
+        PrepassConfig {
+            epochs: 40,
+            snapshot_every: 1,
+            ae_epochs: 30,
+        }
+    }
+}
+
+/// Simulated network parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    pub bandwidth_mbps: f64,
+    pub latency_ms: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            bandwidth_mbps: 100.0,
+            latency_ms: 20.0,
+        }
+    }
+}
+
+/// Root experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Manifest model family ("mnist" | "cifar").
+    pub model: String,
+    pub compression: CompressionConfig,
+    pub aggregation: AggregationConfig,
+    pub fl: FlConfig,
+    pub data: DataConfig,
+    pub train: TrainConfig,
+    pub prepass: PrepassConfig,
+    pub network: NetworkConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 1,
+            model: "mnist".into(),
+            compression: CompressionConfig::Ae { ae: "mnist".into() },
+            aggregation: AggregationConfig::Mean,
+            fl: FlConfig::default(),
+            data: DataConfig::default(),
+            train: TrainConfig::default(),
+            prepass: PrepassConfig::default(),
+            network: NetworkConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from a JSON document; unspecified fields keep defaults.
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = j.get("name").and_then(|v| v.as_str()) {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = j.get("seed").and_then(|v| v.as_usize()) {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = j.get("model").and_then(|v| v.as_str()) {
+            cfg.model = v.to_string();
+        }
+        if let Some(c) = j.get("compression") {
+            cfg.compression = CompressionConfig::from_json(c)?;
+        }
+        if let Some(a) = j.get("aggregation") {
+            cfg.aggregation = AggregationConfig::from_json(a)?;
+        }
+        if let Some(f) = j.get("fl") {
+            if let Some(v) = f.get("collaborators").and_then(|v| v.as_usize()) {
+                cfg.fl.collaborators = v;
+            }
+            if let Some(v) = f.get("rounds").and_then(|v| v.as_usize()) {
+                cfg.fl.rounds = v;
+            }
+            if let Some(v) = f.get("local_epochs").and_then(|v| v.as_usize()) {
+                cfg.fl.local_epochs = v;
+            }
+            if let Some(v) = f.get("participation").and_then(|v| v.as_f64()) {
+                cfg.fl.participation = v;
+            }
+        }
+        if let Some(d) = j.get("data") {
+            if let Some(v) = d.get("per_collab").and_then(|v| v.as_usize()) {
+                cfg.data.per_collab = v;
+            }
+            if let Some(v) = d.get("test_size").and_then(|v| v.as_usize()) {
+                cfg.data.test_size = v;
+            }
+            if let Some(v) = d.get("alpha").and_then(|v| v.as_f64()) {
+                cfg.data.alpha = v;
+            }
+            if let Some(v) = d.get("sharding").and_then(|v| v.as_str()) {
+                cfg.data.sharding = match v {
+                    "iid" => Sharding::Iid,
+                    "label_skew" => Sharding::LabelSkew,
+                    "color_imbalance" => Sharding::ColorImbalance,
+                    other => {
+                        return Err(FedAeError::Config(format!(
+                            "unknown sharding `{other}`"
+                        )))
+                    }
+                };
+            }
+        }
+        if let Some(t) = j.get("train") {
+            if let Some(v) = t.get("lr").and_then(|v| v.as_f64()) {
+                cfg.train.lr = v as f32;
+            }
+        }
+        if let Some(p) = j.get("prepass") {
+            if let Some(v) = p.get("epochs").and_then(|v| v.as_usize()) {
+                cfg.prepass.epochs = v;
+            }
+            if let Some(v) = p.get("snapshot_every").and_then(|v| v.as_usize()) {
+                cfg.prepass.snapshot_every = v;
+            }
+            if let Some(v) = p.get("ae_epochs").and_then(|v| v.as_usize()) {
+                cfg.prepass.ae_epochs = v;
+            }
+        }
+        if let Some(n) = j.get("network") {
+            if let Some(v) = n.get("bandwidth_mbps").and_then(|v| v.as_f64()) {
+                cfg.network.bandwidth_mbps = v;
+            }
+            if let Some(v) = n.get("latency_ms").and_then(|v| v.as_f64()) {
+                cfg.network.latency_ms = v;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<ExperimentConfig> {
+        let j = Json::load(path)?;
+        Self::from_json(&j)
+    }
+
+    /// Cross-check against the artifact manifest.
+    pub fn validate(&self, manifest: &manifest::Manifest) -> Result<()> {
+        let model = manifest.model(&self.model)?;
+        if let CompressionConfig::Ae { ae } = &self.compression {
+            let entry = manifest.ae(ae)?;
+            if entry.dims[0] != model.n_params {
+                return Err(FedAeError::Config(format!(
+                    "AE `{ae}` compresses {}-dim updates but model `{}` has {} params",
+                    entry.dims[0], self.model, model.n_params
+                )));
+            }
+        }
+        if self.fl.collaborators == 0 || self.fl.rounds == 0 {
+            return Err(FedAeError::Config("collaborators/rounds must be > 0".into()));
+        }
+        if !(0.0 < self.fl.participation && self.fl.participation <= 1.0) {
+            return Err(FedAeError::Config(format!(
+                "participation {} not in (0, 1]",
+                self.fl.participation
+            )));
+        }
+        if let CompressionConfig::TopK { fraction } | CompressionConfig::Subsample { fraction } =
+            &self.compression
+        {
+            if !(0.0 < *fraction && *fraction <= 1.0) {
+                return Err(FedAeError::Config(format!(
+                    "compression fraction {fraction} not in (0, 1]"
+                )));
+            }
+        }
+        if let CompressionConfig::Quantize { bits, .. } = &self.compression {
+            if !(1..=16).contains(bits) {
+                return Err(FedAeError::Config(format!(
+                    "quantize bits {bits} outside 1..=16"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_section_5_2() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.fl.rounds, 40);
+        assert_eq!(cfg.fl.local_epochs, 5);
+        assert_eq!(cfg.fl.collaborators, 2);
+    }
+
+    #[test]
+    fn parses_partial_json() {
+        let j = Json::parse(
+            r#"{"name": "exp1", "model": "cifar",
+                "compression": {"kind": "topk", "fraction": 0.05},
+                "fl": {"rounds": 10},
+                "data": {"sharding": "color_imbalance"}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.name, "exp1");
+        assert_eq!(cfg.model, "cifar");
+        assert_eq!(
+            cfg.compression,
+            CompressionConfig::TopK { fraction: 0.05 }
+        );
+        assert_eq!(cfg.fl.rounds, 10);
+        assert_eq!(cfg.fl.local_epochs, 5); // default preserved
+        assert_eq!(cfg.data.sharding, Sharding::ColorImbalance);
+    }
+
+    #[test]
+    fn rejects_unknown_kinds() {
+        let j = Json::parse(r#"{"compression": {"kind": "zip"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"aggregation": {"kind": "avg2"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"data": {"sharding": "nope"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn all_compression_kinds_parse() {
+        for (doc, name) in [
+            (r#"{"kind": "identity"}"#, "identity"),
+            (r#"{"kind": "ae", "ae": "cifar"}"#, "ae"),
+            (r#"{"kind": "topk"}"#, "topk"),
+            (r#"{"kind": "quantize", "bits": 4}"#, "quantize"),
+            (r#"{"kind": "subsample", "fraction": 0.1}"#, "subsample"),
+            (r#"{"kind": "sketch", "rows": 3}"#, "sketch"),
+        ] {
+            let c = CompressionConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
+            assert_eq!(c.kind_name(), name);
+        }
+    }
+
+    #[test]
+    fn validate_against_test_manifest() {
+        let mjson = Json::parse(&manifest::tests::test_manifest_json()).unwrap();
+        let m = manifest::Manifest::from_json(&mjson).unwrap();
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "toy".into();
+        cfg.compression = CompressionConfig::Ae { ae: "toy".into() };
+        cfg.validate(&m).unwrap();
+
+        cfg.compression = CompressionConfig::Ae { ae: "missing".into() };
+        assert!(cfg.validate(&m).is_err());
+
+        cfg.compression = CompressionConfig::TopK { fraction: 2.0 };
+        assert!(cfg.validate(&m).is_err());
+
+        cfg.compression = CompressionConfig::Quantize {
+            bits: 0,
+            stochastic: false,
+        };
+        assert!(cfg.validate(&m).is_err());
+
+        cfg.compression = CompressionConfig::Identity;
+        cfg.fl.participation = 0.0;
+        assert!(cfg.validate(&m).is_err());
+    }
+}

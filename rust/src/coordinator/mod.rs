@@ -1,0 +1,568 @@
+//! Aggregator/coordinator: the server side of the federation.
+//!
+//! * [`RoundState`] — per-round state machine accepting updates with
+//!   duplicate / stale / unknown-collaborator protection.
+//! * [`DecoderRegistry`] — decoders shipped at the end of the pre-pass
+//!   round, keyed by collaborator (paper §5.3 case (b)) or shared
+//!   (case (a)).
+//! * [`FlDriver`] — the in-process experiment driver: wires collaborators,
+//!   compressors, aggregation, the simulated network and metrics into the
+//!   paper's federated loop (Fig 3), including the pre-pass round (Fig 2).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::aggregation::{Aggregator, WeightedUpdate};
+use crate::collaborator::{run_prepass, Collaborator, PrepassResult};
+use crate::compression::{ae::AeCompressor, CompressedUpdate, UpdateCompressor};
+use crate::config::{CompressionConfig, ExperimentConfig, Sharding};
+use crate::data::{make_shards, Dataset, SynthKind};
+use crate::error::{FedAeError, Result};
+use crate::metrics::{ExperimentLog, RoundRecord};
+use crate::network::{Direction, SimulatedNetwork, TrafficKind};
+use crate::runtime::{AePipeline, EvalStep, Runtime};
+use crate::tensor;
+use crate::transport::Message;
+
+/// Per-round server state machine.
+#[derive(Debug)]
+pub struct RoundState {
+    pub round: usize,
+    expected: BTreeSet<usize>,
+    received: BTreeMap<usize, (u32, CompressedUpdate)>,
+}
+
+impl RoundState {
+    pub fn new(round: usize, expected: impl IntoIterator<Item = usize>) -> RoundState {
+        RoundState {
+            round,
+            expected: expected.into_iter().collect(),
+            received: BTreeMap::new(),
+        }
+    }
+
+    /// Accept one update; enforces protocol invariants.
+    pub fn accept(
+        &mut self,
+        round: usize,
+        collab: usize,
+        n_samples: u32,
+        update: CompressedUpdate,
+    ) -> Result<()> {
+        if round != self.round {
+            return Err(FedAeError::Coordination(format!(
+                "stale/early update: got round {round}, current {}",
+                self.round
+            )));
+        }
+        if !self.expected.contains(&collab) {
+            return Err(FedAeError::Coordination(format!(
+                "unknown or unselected collaborator {collab} for round {round}"
+            )));
+        }
+        if self.received.contains_key(&collab) {
+            return Err(FedAeError::Coordination(format!(
+                "duplicate update from collaborator {collab} in round {round}"
+            )));
+        }
+        self.received.insert(collab, (n_samples, update));
+        Ok(())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.received.len() == self.expected.len()
+    }
+
+    pub fn received_count(&self) -> usize {
+        self.received.len()
+    }
+
+    pub fn missing(&self) -> Vec<usize> {
+        self.expected
+            .iter()
+            .filter(|c| !self.received.contains_key(c))
+            .copied()
+            .collect()
+    }
+
+    /// Drain the received updates (ordered by collaborator id).
+    pub fn take_updates(self) -> Vec<(usize, u32, CompressedUpdate)> {
+        self.received
+            .into_iter()
+            .map(|(c, (n, u))| (c, n, u))
+            .collect()
+    }
+}
+
+/// Decoders shipped to the server at the end of the pre-pass round.
+#[derive(Debug, Default)]
+pub struct DecoderRegistry {
+    decoders: BTreeMap<usize, Vec<f32>>,
+}
+
+impl DecoderRegistry {
+    pub fn register(&mut self, collab: usize, dec_params: Vec<f32>) -> Result<()> {
+        if self.decoders.contains_key(&collab) {
+            return Err(FedAeError::Coordination(format!(
+                "decoder already registered for collaborator {collab}"
+            )));
+        }
+        self.decoders.insert(collab, dec_params);
+        Ok(())
+    }
+
+    pub fn get(&self, collab: usize) -> Result<&[f32]> {
+        self.decoders
+            .get(&collab)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| {
+                FedAeError::Coordination(format!(
+                    "no decoder registered for collaborator {collab}"
+                ))
+            })
+    }
+
+    pub fn len(&self) -> usize {
+        self.decoders.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.decoders.is_empty()
+    }
+}
+
+/// Outcome of one communication round.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    pub round: usize,
+    /// (collaborator, local train loss).
+    pub train_losses: Vec<(usize, f32)>,
+    /// Post-aggregation global eval.
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    /// Mean reconstruction MSE across updates (NaN for lossless).
+    pub mean_recon_mse: f32,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+/// The whole-experiment driver (single-process simulation).
+pub struct FlDriver<'rt> {
+    cfg: ExperimentConfig,
+    rt: &'rt Runtime,
+    collaborators: Vec<Collaborator<'rt>>,
+    /// Server-side decompressors, one per collaborator.
+    server_decompressors: Vec<Box<dyn UpdateCompressor + 'rt>>,
+    aggregator: Box<dyn Aggregator>,
+    pub network: SimulatedNetwork,
+    eval: EvalStep<'rt>,
+    test: Dataset,
+    global: Vec<f32>,
+    pub log: ExperimentLog,
+    rng: crate::util::rng::Rng,
+    /// Pre-pass results per collaborator (kept for figures/validation).
+    pub prepass_results: Vec<PrepassResult>,
+    round: usize,
+}
+
+impl<'rt> std::fmt::Debug for FlDriver<'rt> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlDriver")
+            .field("experiment", &self.cfg.name)
+            .field("collaborators", &self.collaborators.len())
+            .field("round", &self.round)
+            .finish()
+    }
+}
+
+impl<'rt> FlDriver<'rt> {
+    /// Build the full experiment from config: shards, collaborators,
+    /// compressors (running the pre-pass round when the AE scheme is
+    /// selected), aggregation and the simulated network.
+    ///
+    /// `pipeline` must be provided when `cfg.compression` is `Ae`.
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: ExperimentConfig,
+        pipeline: Option<&'rt AePipeline<'rt>>,
+    ) -> Result<FlDriver<'rt>> {
+        cfg.validate(rt.manifest())?;
+        let model = rt.manifest().model(&cfg.model)?.clone();
+        let kind = match cfg.model.as_str() {
+            "mnist" => SynthKind::Mnist,
+            "cifar" => SynthKind::Cifar,
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "no synthetic data family for model `{other}`"
+                )))
+            }
+        };
+        if cfg.data.sharding == Sharding::ColorImbalance && kind != SynthKind::Cifar {
+            return Err(FedAeError::Config(
+                "color_imbalance sharding requires the cifar model".into(),
+            ));
+        }
+        let (shards, test) = make_shards(
+            kind,
+            cfg.data.sharding,
+            cfg.data.alpha,
+            cfg.fl.collaborators,
+            cfg.data.per_collab,
+            cfg.data.test_size,
+            cfg.seed,
+        )?;
+        let global = rt.load_init(&format!("{}_params", cfg.model))?;
+        let eval = EvalStep::new(rt, &cfg.model)?;
+        let mut network = SimulatedNetwork::from_config(&cfg.network);
+        let aggregator = crate::aggregation::from_config(&cfg.aggregation)?;
+        let mut rng = crate::util::rng::Rng::new(cfg.seed);
+        let mut log = ExperimentLog::new(cfg.name.clone());
+
+        // Build compressors (+ pre-pass when using the AE scheme).
+        let mut collaborators = Vec::with_capacity(cfg.fl.collaborators);
+        let mut server_decompressors: Vec<Box<dyn UpdateCompressor + 'rt>> = Vec::new();
+        let mut prepass_results = Vec::new();
+
+        match &cfg.compression {
+            CompressionConfig::Ae { ae } => {
+                let pipeline = pipeline.ok_or_else(|| {
+                    FedAeError::Config("AE compression requires an AePipeline".into())
+                })?;
+                if &pipeline.tag != ae {
+                    return Err(FedAeError::Config(format!(
+                        "pipeline is `{}`, config wants `{ae}`",
+                        pipeline.tag
+                    )));
+                }
+                let ae_init = rt.load_init(&format!("ae_{ae}_init"))?;
+                let mut registry = DecoderRegistry::default();
+                for (id, shard) in shards.into_iter().enumerate() {
+                    // Pre-pass (Fig 2): local training + AE training.
+                    let pp = run_prepass(
+                        rt,
+                        &cfg.model,
+                        pipeline,
+                        &shard,
+                        &cfg.prepass,
+                        &cfg.train,
+                        &global,
+                        &ae_init,
+                        cfg.seed.wrapping_add(id as u64),
+                    )?;
+                    // Ship the decoder (metered, Eq. 5 cost).
+                    let ship = Message::DecoderShipment {
+                        collab_id: id as u32,
+                        ae_tag: ae.clone(),
+                        dec_params: pp.dec_params.clone(),
+                    };
+                    network.send(
+                        0,
+                        id,
+                        Direction::Up,
+                        TrafficKind::DecoderShipment,
+                        ship.wire_bytes(),
+                    );
+                    registry.register(id, pp.dec_params.clone())?;
+                    server_decompressors
+                        .push(Box::new(AeCompressor::server(pipeline, pp.dec_params.clone())?));
+                    let comp =
+                        Box::new(AeCompressor::collaborator(pipeline, pp.enc_params.clone())?);
+                    collaborators.push(Collaborator::new(
+                        rt,
+                        &cfg.model,
+                        id,
+                        shard,
+                        global.clone(),
+                        comp,
+                        cfg.seed.wrapping_add(1000 + id as u64),
+                    )?);
+                    log.add_summary(
+                        format!("prepass_c{id}_final_ae_acc"),
+                        pp.ae_history.last().map(|h| h.1).unwrap_or(0.0),
+                    );
+                    prepass_results.push(pp);
+                }
+            }
+            other => {
+                for (id, shard) in shards.into_iter().enumerate() {
+                    let seed = cfg.seed.wrapping_mul(31).wrapping_add(id as u64);
+                    let comp = crate::compression::from_config(other, model.n_params, seed)?;
+                    let decomp = crate::compression::from_config(other, model.n_params, seed)?;
+                    server_decompressors.push(decomp);
+                    collaborators.push(Collaborator::new(
+                        rt,
+                        &cfg.model,
+                        id,
+                        shard,
+                        global.clone(),
+                        comp,
+                        cfg.seed.wrapping_add(1000 + id as u64),
+                    )?);
+                }
+            }
+        }
+
+        let _ = rng.next_u64(); // decorrelate selection stream from sharding
+        Ok(FlDriver {
+            cfg,
+            rt,
+            collaborators,
+            server_decompressors,
+            aggregator,
+            network,
+            eval,
+            test,
+            global,
+            log,
+            rng,
+            prepass_results,
+            round: 0,
+        })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn global_params(&self) -> &[f32] {
+        &self.global
+    }
+
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Evaluate the global model on the shared test set.
+    pub fn eval_global(&self) -> Result<(f32, f32)> {
+        self.eval_params(&self.global)
+    }
+
+    /// Evaluate arbitrary params on the shared test set.
+    pub fn eval_params(&self, params: &[f32]) -> Result<(f32, f32)> {
+        let idx: Vec<usize> = (0..self.test.len()).collect();
+        let (x, y) = self.test.gather_batch(&idx, self.eval.batch);
+        self.eval.eval(params, &x, &y)
+    }
+
+    /// Client selection for a round (participation sampling).
+    fn select_round_participants(&mut self) -> Vec<usize> {
+        let n = self.collaborators.len();
+        let k = ((n as f64 * self.cfg.fl.participation).round() as usize).clamp(1, n);
+        if k == n {
+            (0..n).collect()
+        } else {
+            let mut sel = self.rng.sample_indices(n, k);
+            sel.sort_unstable();
+            sel
+        }
+    }
+
+    /// Run one communication round (paper Fig 3).
+    pub fn run_round(&mut self) -> Result<RoundOutcome> {
+        let round = self.round;
+        let participants = self.select_round_participants();
+        let mut state = RoundState::new(round, participants.iter().copied());
+
+        let mut bytes_down = 0u64;
+        let mut bytes_up = 0u64;
+        let mut train_losses = Vec::with_capacity(participants.len());
+
+        // 1. Broadcast the global model.
+        let broadcast = Message::GlobalModel {
+            round: round as u32,
+            params: self.global.clone(),
+        };
+        for &cid in &participants {
+            self.network.send(
+                round,
+                cid,
+                Direction::Down,
+                TrafficKind::GlobalModel,
+                broadcast.wire_bytes(),
+            );
+            bytes_down += broadcast.wire_bytes();
+            self.collaborators[cid].set_global(&self.global);
+        }
+
+        // 2. Local training + compressed upload.
+        let mut local_evals: Vec<(usize, f32, f32)> = Vec::with_capacity(participants.len());
+        for &cid in &participants {
+            let loss =
+                self.collaborators[cid].local_train(self.cfg.fl.local_epochs, &self.cfg.train)?;
+            train_losses.push((cid, loss));
+            // Per-collaborator post-training eval on the shared test set —
+            // the paper's Fig 8/9 per-collaborator series.
+            let (ll, la) = self.eval_params(self.collaborators[cid].params())?;
+            local_evals.push((cid, ll, la));
+            let update = self.collaborators[cid].compressed_update(round)?;
+            let msg = Message::EncodedUpdate {
+                round: round as u32,
+                collab_id: cid as u32,
+                n_samples: self.collaborators[cid].n_samples() as u32,
+                payload: update.to_bytes(),
+            };
+            bytes_up += msg.wire_bytes();
+            self.network.send(
+                round,
+                cid,
+                Direction::Up,
+                TrafficKind::Update,
+                msg.wire_bytes(),
+            );
+            state.accept(
+                round,
+                cid,
+                self.collaborators[cid].n_samples() as u32,
+                update,
+            )?;
+        }
+        if !state.is_complete() {
+            return Err(FedAeError::Coordination(format!(
+                "round {round} incomplete: missing {:?}",
+                state.missing()
+            )));
+        }
+
+        // 3. Server-side reconstruction + aggregation.
+        let mut weighted = Vec::with_capacity(participants.len());
+        let mut recon_mses = Vec::new();
+        for (cid, n_samples, update) in state.take_updates() {
+            let recon = self.server_decompressors[cid].decompress(&update)?;
+            if let Err(i) = tensor::check_finite(&recon) {
+                return Err(FedAeError::Coordination(format!(
+                    "non-finite reconstruction from collaborator {cid} at index {i}"
+                )));
+            }
+            recon_mses.push(tensor::mse(&recon, self.collaborators[cid].params()) as f32);
+            weighted.push(WeightedUpdate {
+                weight: n_samples as f64,
+                values: recon,
+            });
+        }
+        self.global = self.aggregator.aggregate(&weighted)?;
+
+        // 4. Evaluate the new global model.
+        let (eval_loss, eval_acc) = self.eval_global()?;
+
+        let mean_recon_mse = if recon_mses.is_empty() {
+            f32::NAN
+        } else {
+            recon_mses.iter().sum::<f32>() / recon_mses.len() as f32
+        };
+
+        // Record per-collaborator metrics.
+        for (&(cid, train_loss), &(_, local_eval_loss, local_eval_acc)) in
+            train_losses.iter().zip(&local_evals)
+        {
+            self.log.push(RoundRecord {
+                round,
+                collaborator: cid,
+                train_loss,
+                eval_loss,
+                eval_acc,
+                local_eval_loss,
+                local_eval_acc,
+                bytes_up: bytes_up / participants.len() as u64,
+                bytes_down: bytes_down / participants.len() as u64,
+                recon_mse: mean_recon_mse,
+            });
+        }
+
+        self.round += 1;
+        Ok(RoundOutcome {
+            round,
+            train_losses,
+            eval_loss,
+            eval_acc,
+            mean_recon_mse,
+            bytes_up,
+            bytes_down,
+        })
+    }
+
+    /// Run the configured number of rounds; returns the final outcome.
+    pub fn run(&mut self) -> Result<RoundOutcome> {
+        let mut last = None;
+        for _ in 0..self.cfg.fl.rounds {
+            last = Some(self.run_round()?);
+        }
+        let outcome = last.ok_or_else(|| FedAeError::Config("zero rounds".into()))?;
+        let model = self.rt.manifest().model(&self.cfg.model)?;
+        let raw_bytes = (model.n_params * 4) as u64;
+        if let Some(ratio) = self.network.ledger().measured_update_ratio(raw_bytes) {
+            self.log.add_summary("measured_update_ratio", format!("{ratio:.1}"));
+        }
+        self.log.add_summary(
+            "total_bytes_up_updates",
+            self.network.ledger().update_bytes_up(),
+        );
+        self.log.add_summary(
+            "decoder_shipment_bytes",
+            self.network
+                .ledger()
+                .bytes_for(Direction::Up, TrafficKind::DecoderShipment),
+        );
+        self.log
+            .add_summary("final_eval_acc", format!("{:.4}", outcome.eval_acc));
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd() -> CompressedUpdate {
+        CompressedUpdate::Raw {
+            values: vec![1.0, 2.0],
+        }
+    }
+
+    #[test]
+    fn round_state_accepts_expected() {
+        let mut s = RoundState::new(3, [0, 1, 2]);
+        s.accept(3, 1, 10, upd()).unwrap();
+        assert!(!s.is_complete());
+        assert_eq!(s.missing(), vec![0, 2]);
+        s.accept(3, 0, 5, upd()).unwrap();
+        s.accept(3, 2, 7, upd()).unwrap();
+        assert!(s.is_complete());
+        let updates = s.take_updates();
+        assert_eq!(updates.len(), 3);
+        assert_eq!(updates[0].0, 0); // ordered by collaborator
+        assert_eq!(updates[1].1, 10);
+    }
+
+    #[test]
+    fn round_state_rejects_stale_round() {
+        let mut s = RoundState::new(5, [0]);
+        let err = s.accept(4, 0, 1, upd()).unwrap_err();
+        assert!(err.to_string().contains("stale"));
+        assert!(s.accept(6, 0, 1, upd()).is_err());
+    }
+
+    #[test]
+    fn round_state_rejects_duplicate() {
+        let mut s = RoundState::new(0, [0, 1]);
+        s.accept(0, 0, 1, upd()).unwrap();
+        let err = s.accept(0, 0, 1, upd()).unwrap_err();
+        assert!(err.to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn round_state_rejects_unknown_collaborator() {
+        let mut s = RoundState::new(0, [0, 1]);
+        let err = s.accept(0, 9, 1, upd()).unwrap_err();
+        assert!(err.to_string().contains("unknown"));
+    }
+
+    #[test]
+    fn decoder_registry_single_registration() {
+        let mut reg = DecoderRegistry::default();
+        assert!(reg.is_empty());
+        reg.register(0, vec![1.0]).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.get(0).unwrap(), &[1.0]);
+        assert!(reg.register(0, vec![2.0]).is_err());
+        assert!(reg.get(1).is_err());
+    }
+}

@@ -1,0 +1,562 @@
+//! Synthetic data substrate (DESIGN.md §3 substitution for MNIST/CIFAR).
+//!
+//! The paper's AE compresses *weight-update trajectories*, not images, so
+//! any learnable 10-class task with the same model geometry produces the
+//! behaviour under study. This module generates deterministic, seeded
+//! image-classification datasets:
+//!
+//! * **synth-mnist** — 28x28x1: each class is a smoothed random stroke/blob
+//!   template; samples are the template plus pixel noise and a random shift.
+//! * **synth-cifar** — 32x32x3: each class is a colour/texture field built
+//!   from low-frequency sinusoids with class-specific frequencies and a
+//!   class-specific palette; samples add noise. A grayscale variant drops
+//!   chroma — used for the paper's §5.2 colour-imbalance experiment.
+//!
+//! Shards: IID, Dirichlet label-skew, and colour-imbalance (odd-indexed
+//! collaborators get grayscale data, reproducing Fig 8/9's setup).
+
+use crate::config::Sharding;
+use crate::error::{FedAeError, Result};
+use crate::util::rng::Rng;
+
+pub const NUM_CLASSES: usize = 10;
+
+/// Which synthetic family to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    /// 784-dim, single channel.
+    Mnist,
+    /// 3072-dim, RGB.
+    Cifar,
+}
+
+impl SynthKind {
+    pub fn input_dim(&self) -> usize {
+        match self {
+            SynthKind::Mnist => 28 * 28,
+            SynthKind::Cifar => 32 * 32 * 3,
+        }
+    }
+}
+
+/// Generation spec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthSpec {
+    pub kind: SynthKind,
+    /// Drop chroma (CIFAR only): every pixel's channels replaced by luma.
+    pub grayscale: bool,
+    /// Pixel noise std.
+    pub noise: f32,
+}
+
+impl SynthSpec {
+    pub fn mnist() -> SynthSpec {
+        SynthSpec {
+            kind: SynthKind::Mnist,
+            grayscale: false,
+            noise: 0.30,
+        }
+    }
+
+    pub fn cifar() -> SynthSpec {
+        SynthSpec {
+            kind: SynthKind::Cifar,
+            grayscale: false,
+            noise: 0.35,
+        }
+    }
+
+    pub fn cifar_grayscale() -> SynthSpec {
+        SynthSpec {
+            grayscale: true,
+            ..SynthSpec::cifar()
+        }
+    }
+}
+
+/// An in-memory labelled dataset, row-major `[n, input_dim]`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<u32>,
+    pub input_dim: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.input_dim..(i + 1) * self.input_dim]
+    }
+
+    /// Copy `batch` rows (by index) into a dense `[batch*input_dim]` buffer
+    /// plus a one-hot `[batch*NUM_CLASSES]` label buffer. Index lists
+    /// shorter than `batch` wrap around (padding with repeats) so the
+    /// fixed-batch artifacts can always run.
+    pub fn gather_batch(&self, idx: &[usize], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        assert!(!idx.is_empty(), "gather_batch on empty index list");
+        let mut x = Vec::with_capacity(batch * self.input_dim);
+        let mut y = vec![0.0f32; batch * NUM_CLASSES];
+        for b in 0..batch {
+            let i = idx[b % idx.len()];
+            x.extend_from_slice(self.row(i));
+            y[b * NUM_CLASSES + self.y[i] as usize] = 1.0;
+        }
+        (x, y)
+    }
+
+    /// Class histogram (for shard-skew diagnostics).
+    pub fn class_counts(&self) -> [usize; NUM_CLASSES] {
+        let mut counts = [0usize; NUM_CLASSES];
+        for &y in &self.y {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Class template bank: deterministic per (kind, seed).
+struct Templates {
+    kind: SynthKind,
+    /// [NUM_CLASSES * input_dim]
+    data: Vec<f32>,
+}
+
+impl Templates {
+    fn new(kind: SynthKind, seed: u64) -> Templates {
+        let dim = kind.input_dim();
+        let mut data = vec![0.0f32; NUM_CLASSES * dim];
+        let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+        for c in 0..NUM_CLASSES {
+            let t = &mut data[c * dim..(c + 1) * dim];
+            match kind {
+                SynthKind::Mnist => template_mnist(&mut rng, t),
+                SynthKind::Cifar => template_cifar(&mut rng, c, t),
+            }
+        }
+        Templates { kind, data }
+    }
+
+    fn class(&self, c: usize) -> &[f32] {
+        let dim = self.kind.input_dim();
+        &self.data[c * dim..(c + 1) * dim]
+    }
+}
+
+/// Smoothed random blobs: a handful of Gaussian bumps on a 28x28 canvas.
+fn template_mnist(rng: &mut Rng, out: &mut [f32]) {
+    let bumps = 3 + rng.below(3);
+    for _ in 0..bumps {
+        let cx = rng.uniform_in(6.0, 22.0);
+        let cy = rng.uniform_in(6.0, 22.0);
+        let sx = rng.uniform_in(2.0, 5.0);
+        let sy = rng.uniform_in(2.0, 5.0);
+        let amp = rng.uniform_in(0.6, 1.0);
+        for yy in 0..28 {
+            for xx in 0..28 {
+                let dx = (xx as f32 - cx) / sx;
+                let dy = (yy as f32 - cy) / sy;
+                out[yy * 28 + xx] += amp * (-0.5 * (dx * dx + dy * dy)).exp();
+            }
+        }
+    }
+    // Clamp to [0, 1] like normalized pixel data.
+    for v in out.iter_mut() {
+        *v = v.min(1.0);
+    }
+}
+
+/// Low-frequency colour texture: class-specific sinusoid frequencies and
+/// palette over a 32x32 RGB canvas (NHWC flat layout to match the model).
+fn template_cifar(rng: &mut Rng, class: usize, out: &mut [f32]) {
+    let fx = 0.5 + class as f32 * 0.37 + rng.uniform_in(0.0, 0.2);
+    let fy = 0.8 + class as f32 * 0.23 + rng.uniform_in(0.0, 0.2);
+    let phase = rng.uniform_in(0.0, std::f32::consts::TAU);
+    // Class palette: distinct RGB gains.
+    let gains = [
+        0.5 + 0.5 * ((class as f32 * 1.3).sin().abs()),
+        0.5 + 0.5 * ((class as f32 * 2.1 + 1.0).sin().abs()),
+        0.5 + 0.5 * ((class as f32 * 0.7 + 2.0).sin().abs()),
+    ];
+    for yy in 0..32 {
+        for xx in 0..32 {
+            let base = ((xx as f32 * fx / 32.0 * std::f32::consts::TAU
+                + yy as f32 * fy / 32.0 * std::f32::consts::TAU
+                + phase)
+                .sin()
+                + 1.0)
+                / 2.0;
+            for ch in 0..3 {
+                out[(yy * 32 + xx) * 3 + ch] = (base * gains[ch]).clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Generate `n` samples with the given label distribution. `class_probs`
+/// must sum to ~1; labels are sampled from it.
+///
+/// `template_seed` fixes the class template bank and `sample_seed` the
+/// noise/shift stream: shards and the test set of one experiment share a
+/// template seed (same underlying task) while differing in sample seeds.
+pub fn generate(
+    spec: SynthSpec,
+    template_seed: u64,
+    sample_seed: u64,
+    n: usize,
+    class_probs: &[f64],
+) -> Result<Dataset> {
+    if class_probs.len() != NUM_CLASSES {
+        return Err(FedAeError::Config(format!(
+            "class_probs must have {NUM_CLASSES} entries, got {}",
+            class_probs.len()
+        )));
+    }
+    let dim = spec.kind.input_dim();
+    let templates = Templates::new(spec.kind, template_seed);
+    let mut rng = Rng::new(sample_seed);
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+
+    // Cumulative distribution for label sampling.
+    let mut cdf = [0.0f64; NUM_CLASSES];
+    let mut acc = 0.0;
+    for (i, &p) in class_probs.iter().enumerate() {
+        acc += p.max(0.0);
+        cdf[i] = acc;
+    }
+    if acc <= 0.0 {
+        return Err(FedAeError::Config("class_probs sums to zero".into()));
+    }
+
+    let mut sample = vec![0.0f32; dim];
+    for _ in 0..n {
+        let u = rng.uniform() * acc;
+        let label = cdf.iter().position(|&c| u < c).unwrap_or(NUM_CLASSES - 1);
+        let template = templates.class(label);
+
+        match spec.kind {
+            SynthKind::Mnist => {
+                // Random +-2px toroidal shift + noise.
+                let sx = rng.below(5) as isize - 2;
+                let sy = rng.below(5) as isize - 2;
+                for yy in 0..28isize {
+                    for xx in 0..28isize {
+                        let src_y = (yy - sy).rem_euclid(28) as usize;
+                        let src_x = (xx - sx).rem_euclid(28) as usize;
+                        sample[(yy * 28 + xx) as usize] = (template[src_y * 28 + src_x]
+                            + rng.normal_f32(0.0, spec.noise))
+                        .clamp(0.0, 1.0);
+                    }
+                }
+            }
+            SynthKind::Cifar => {
+                // Random toroidal shift, per-sample gain, then pixel noise —
+                // keeps the class signal but forces real generalization.
+                let sx = rng.below(13) as isize - 6;
+                let sy = rng.below(13) as isize - 6;
+                let gain = rng.uniform_in(0.55, 1.0);
+                for yy in 0..32isize {
+                    for xx in 0..32isize {
+                        let src_y = (yy - sy).rem_euclid(32) as usize;
+                        let src_x = (xx - sx).rem_euclid(32) as usize;
+                        for ch in 0..3 {
+                            let t = template[(src_y * 32 + src_x) * 3 + ch];
+                            sample[(yy as usize * 32 + xx as usize) * 3 + ch] =
+                                (t * gain + rng.normal_f32(0.0, spec.noise)).clamp(0.0, 1.0);
+                        }
+                    }
+                }
+                if spec.grayscale {
+                    // Replace channels by luma (ITU-R 601).
+                    for px in 0..(32 * 32) {
+                        let r = sample[px * 3];
+                        let g = sample[px * 3 + 1];
+                        let b = sample[px * 3 + 2];
+                        let luma = 0.299 * r + 0.587 * g + 0.114 * b;
+                        sample[px * 3] = luma;
+                        sample[px * 3 + 1] = luma;
+                        sample[px * 3 + 2] = luma;
+                    }
+                }
+            }
+        }
+        x.extend_from_slice(&sample);
+        y.push(label as u32);
+    }
+    Ok(Dataset {
+        x,
+        y,
+        input_dim: dim,
+    })
+}
+
+/// Uniform class distribution.
+pub fn uniform_probs() -> Vec<f64> {
+    vec![1.0 / NUM_CLASSES as f64; NUM_CLASSES]
+}
+
+/// Build per-collaborator shards plus a shared IID test set.
+///
+/// * `Iid` — every collaborator samples uniformly.
+/// * `LabelSkew` — per-collaborator class distribution ~ Dirichlet(alpha).
+/// * `ColorImbalance` — paper §5.2: even collaborators get colour data,
+///   odd collaborators get grayscale (CIFAR only; for MNIST it degrades
+///   to IID since there is no chroma).
+pub fn make_shards(
+    kind: SynthKind,
+    sharding: Sharding,
+    alpha: f64,
+    n_collabs: usize,
+    per_collab: usize,
+    test_size: usize,
+    seed: u64,
+) -> Result<(Vec<Dataset>, Dataset)> {
+    let mut root = Rng::new(seed);
+    let mut shards = Vec::with_capacity(n_collabs);
+    for c in 0..n_collabs {
+        let shard_seed = seed.wrapping_add(1 + c as u64).wrapping_mul(0x9E37_79B9);
+        let (spec, probs) = match sharding {
+            Sharding::Iid => (base_spec(kind), uniform_probs()),
+            Sharding::LabelSkew => (base_spec(kind), root.dirichlet(alpha, NUM_CLASSES)),
+            Sharding::ColorImbalance => {
+                let spec = if kind == SynthKind::Cifar && c % 2 == 1 {
+                    SynthSpec::cifar_grayscale()
+                } else {
+                    base_spec(kind)
+                };
+                (spec, uniform_probs())
+            }
+        };
+        shards.push(generate(spec, seed, shard_seed, per_collab, &probs)?);
+    }
+    // Test set: colour, uniform labels, fixed derived seed.
+    let test = generate(base_spec(kind), seed, seed ^ 0x7E57_5E7, test_size, &uniform_probs())?;
+    Ok((shards, test))
+}
+
+fn base_spec(kind: SynthKind) -> SynthSpec {
+    match kind {
+        SynthKind::Mnist => SynthSpec::mnist(),
+        SynthKind::Cifar => SynthSpec::cifar(),
+    }
+}
+
+/// Deterministic batch index iterator: shuffles once per epoch.
+#[derive(Debug)]
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, seed: u64) -> BatchIter {
+        assert!(n > 0 && batch > 0);
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        BatchIter {
+            order,
+            pos: 0,
+            batch,
+            rng,
+        }
+    }
+
+    /// Next batch of indices; reshuffles at epoch boundaries.
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        if self.pos + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let out = self.order[self.pos..end].to_vec();
+        self.pos = end;
+        out
+    }
+
+    /// Number of batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.order.len() / self.batch).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate(SynthSpec::mnist(), 7, 7, 16, &uniform_probs()).unwrap();
+        let b = generate(SynthSpec::mnist(), 7, 7, 16, &uniform_probs()).unwrap();
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = generate(SynthSpec::mnist(), 8, 8, 16, &uniform_probs()).unwrap();
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        for spec in [SynthSpec::mnist(), SynthSpec::cifar()] {
+            let d = generate(spec, 1, 1, 10, &uniform_probs()).unwrap();
+            assert_eq!(d.len(), 10);
+            assert_eq!(d.x.len(), 10 * spec.kind.input_dim());
+            assert!(d.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            assert!(d.y.iter().all(|&y| (y as usize) < NUM_CLASSES));
+        }
+    }
+
+    #[test]
+    fn grayscale_kills_chroma() {
+        let d = generate(SynthSpec::cifar_grayscale(), 3, 3, 4, &uniform_probs()).unwrap();
+        for i in 0..d.len() {
+            let row = d.row(i);
+            for px in 0..(32 * 32) {
+                assert!((row[px * 3] - row[px * 3 + 1]).abs() < 1e-6);
+                assert!((row[px * 3] - row[px * 3 + 2]).abs() < 1e-6);
+            }
+        }
+        // Colour version must have chroma somewhere.
+        let c = generate(SynthSpec::cifar(), 3, 3, 4, &uniform_probs()).unwrap();
+        let has_chroma = (0..c.len()).any(|i| {
+            let row = c.row(i);
+            (0..(32 * 32)).any(|px| (row[px * 3] - row[px * 3 + 1]).abs() > 0.05)
+        });
+        assert!(has_chroma);
+    }
+
+    #[test]
+    fn skewed_probs_skew_labels() {
+        let mut probs = vec![0.0; NUM_CLASSES];
+        probs[3] = 1.0;
+        let d = generate(SynthSpec::mnist(), 5, 5, 50, &probs).unwrap();
+        assert!(d.y.iter().all(|&y| y == 3));
+    }
+
+    #[test]
+    fn rejects_bad_probs() {
+        assert!(generate(SynthSpec::mnist(), 1, 1, 4, &[0.5, 0.5]).is_err());
+        assert!(generate(SynthSpec::mnist(), 1, 1, 4, &vec![0.0; NUM_CLASSES]).is_err());
+    }
+
+    #[test]
+    fn gather_batch_pads_by_wrapping() {
+        let d = generate(SynthSpec::mnist(), 2, 2, 3, &uniform_probs()).unwrap();
+        let (x, y) = d.gather_batch(&[0, 1], 4);
+        assert_eq!(x.len(), 4 * 784);
+        assert_eq!(y.len(), 4 * NUM_CLASSES);
+        // Row 2 repeats row 0.
+        assert_eq!(&x[2 * 784..3 * 784], d.row(0));
+        for b in 0..4 {
+            let hot: f32 = y[b * NUM_CLASSES..(b + 1) * NUM_CLASSES].iter().sum();
+            assert_eq!(hot, 1.0);
+        }
+    }
+
+    #[test]
+    fn iid_shards_roughly_uniform() {
+        let (shards, test) = make_shards(
+            SynthKind::Mnist,
+            Sharding::Iid,
+            0.5,
+            3,
+            300,
+            100,
+            11,
+        )
+        .unwrap();
+        assert_eq!(shards.len(), 3);
+        assert_eq!(test.len(), 100);
+        for s in &shards {
+            let counts = s.class_counts();
+            for &c in &counts {
+                assert!(c > 10, "IID shard class count too skewed: {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn label_skew_shards_are_skewed() {
+        let (shards, _) = make_shards(
+            SynthKind::Mnist,
+            Sharding::LabelSkew,
+            0.1,
+            4,
+            400,
+            50,
+            13,
+        )
+        .unwrap();
+        // With alpha=0.1 at least one shard should be dominated by few classes.
+        let max_frac = shards
+            .iter()
+            .map(|s| {
+                let counts = s.class_counts();
+                *counts.iter().max().unwrap() as f64 / s.len() as f64
+            })
+            .fold(0.0, f64::max);
+        assert!(max_frac > 0.5, "expected skew, max class fraction {max_frac}");
+    }
+
+    #[test]
+    fn color_imbalance_alternates() {
+        let (shards, _) = make_shards(
+            SynthKind::Cifar,
+            Sharding::ColorImbalance,
+            0.5,
+            2,
+            20,
+            10,
+            17,
+        )
+        .unwrap();
+        // Shard 1 grayscale: R==G everywhere.
+        let g = &shards[1];
+        for i in 0..g.len() {
+            let row = g.row(i);
+            for px in 0..(32 * 32) {
+                assert!((row[px * 3] - row[px * 3 + 1]).abs() < 1e-6);
+            }
+        }
+        // Shard 0 colour.
+        let c = &shards[0];
+        let has_chroma = (0..c.len()).any(|i| {
+            let row = c.row(i);
+            (0..(32 * 32)).any(|px| (row[px * 3] - row[px * 3 + 1]).abs() > 0.05)
+        });
+        assert!(has_chroma);
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 3, 5);
+        assert_eq!(it.batches_per_epoch(), 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            for i in it.next_batch() {
+                seen.insert(i);
+            }
+        }
+        assert!(seen.len() >= 9); // one epoch covers (almost) all samples
+        // Iterator keeps producing fresh batches across epochs.
+        for _ in 0..10 {
+            assert_eq!(it.next_batch().len(), 3);
+        }
+    }
+
+    #[test]
+    fn templates_differ_across_classes() {
+        let t = Templates::new(SynthKind::Cifar, 9);
+        assert_ne!(t.class(0), t.class(1));
+        let t2 = Templates::new(SynthKind::Mnist, 9);
+        assert_ne!(t2.class(2), t2.class(7));
+    }
+}

@@ -1,0 +1,79 @@
+//! Crate-wide error type.
+//!
+//! Library modules return [`FedAeError`] so callers can match on failure
+//! classes (artifact problems vs protocol violations vs config errors);
+//! binaries and examples use `anyhow` at the top level.
+
+use thiserror::Error;
+
+/// All failure classes produced by the fedae library.
+#[derive(Debug, Error)]
+pub enum FedAeError {
+    /// An artifact file is missing, unreadable, or fails validation
+    /// against `manifest.json`.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// An XLA / PJRT call failed.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Config file missing/invalid or inconsistent with the manifest.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed JSON.
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Wire-protocol violation (bad frame, unknown message kind,
+    /// out-of-order round, unexpected payload length).
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// A compressor was fed an update of the wrong dimensionality or an
+    /// incompatible [`crate::compression::CompressedUpdate`] variant.
+    #[error("compression error: {0}")]
+    Compression(String),
+
+    /// Coordinator state-machine violation (duplicate update for a round,
+    /// update for a stale round, unknown collaborator, missing decoder).
+    #[error("coordination error: {0}")]
+    Coordination(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for FedAeError {
+    fn from(e: xla::Error) -> Self {
+        FedAeError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, FedAeError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_class() {
+        let e = FedAeError::Artifact("missing foo.hlo.txt".into());
+        assert!(e.to_string().contains("artifact error"));
+        let e = FedAeError::Json {
+            offset: 17,
+            msg: "unexpected token".into(),
+        };
+        assert!(e.to_string().contains("byte 17"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: FedAeError = io.into();
+        assert!(matches!(e, FedAeError::Io(_)));
+    }
+}

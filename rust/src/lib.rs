@@ -1,0 +1,67 @@
+//! # fedae — Federated Learning with Autoencoder-Compressed Weight Updates
+//!
+//! Production-grade reproduction of *"Communication Optimization in Large
+//! Scale Federated Learning using Autoencoder Compressed Weight Updates"*
+//! (Chandar et al., 2021) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the FL runtime: aggregator/coordinator,
+//!   collaborator drivers, compression plugins (the paper's AE scheme plus
+//!   the baselines from its related-work section), aggregation algorithms,
+//!   a simulated network substrate with exact byte accounting, a wire
+//!   protocol, config system, metrics and CLI.
+//! * **Layer 2** — JAX classifier + autoencoder models
+//!   (`python/compile/model.py`), AOT-lowered once to HLO text artifacts.
+//! * **Layer 1** — the Pallas tiled fused-dense kernel
+//!   (`python/compile/kernels/fused_dense.py`) the AE lowers through.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts via the PJRT C API (`xla` crate) and every training /
+//! encode / decode step executes as a compiled XLA computation driven
+//! from rust.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use fedae::prelude::*;
+//!
+//! let manifest = Manifest::load("artifacts/manifest.json")?;
+//! let runtime = Runtime::load(&manifest, "artifacts")?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! See `examples/quickstart.rs` for an end-to-end federated round and
+//! `examples/fl_two_collab.rs` for the paper's Fig 8/9 experiment.
+
+pub mod aggregation;
+pub mod collaborator;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod metrics;
+pub mod models;
+pub mod network;
+pub mod runtime;
+pub mod savings;
+pub mod tensor;
+pub mod testing;
+pub mod transport;
+pub mod util;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::aggregation::{Aggregator, FedAvg};
+    pub use crate::collaborator::Collaborator;
+    pub use crate::compression::{CompressedUpdate, UpdateCompressor};
+    pub use crate::config::manifest::Manifest;
+    pub use crate::config::ExperimentConfig;
+    pub use crate::coordinator::{FlDriver, RoundOutcome};
+    pub use crate::data::{Dataset, SynthSpec};
+    pub use crate::error::FedAeError;
+    pub use crate::metrics::ExperimentLog;
+    pub use crate::models::{AeKind, ModelKind};
+    pub use crate::network::SimulatedNetwork;
+    pub use crate::runtime::Runtime;
+    pub use crate::savings::SavingsModel;
+}

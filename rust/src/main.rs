@@ -1,0 +1,453 @@
+//! `fedae` — CLI for the AE-compressed federated learning runtime.
+//!
+//! Subcommands:
+//! * `train`    — run a federated experiment from a JSON config (or flags).
+//! * `prepass`  — run only the pre-pass round and report AE training curves.
+//! * `savings`  — evaluate the paper's Eq. 4–6 savings model (Figs 10/11).
+//! * `inspect`  — print manifest / artifact info.
+//! * `serve` / `worker` — TCP leader/worker deployment of the same protocol.
+//!
+//! Examples:
+//! ```text
+//! fedae train --model mnist --compression ae --rounds 10
+//! fedae savings --rounds 100 --max-collabs 2000
+//! fedae serve --port 7070 --collabs 2 &
+//! fedae worker --connect 127.0.0.1:7070 --id 0
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::coordinator::FlDriver;
+use fedae::metrics::{ascii_plot, print_table};
+use fedae::runtime::{AePipeline, Runtime};
+use fedae::savings::{SavingsModel, PAPER_CIFAR};
+use fedae::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("prepass") => cmd_prepass(&args),
+        Some("savings") => cmd_savings(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("serve") => fedae_serve(&args),
+        Some("worker") => fedae_worker(&args),
+        _ => {
+            eprintln!(
+                "usage: fedae <train|prepass|savings|inspect|serve|worker> [--flags]\n\
+                 \n\
+                 train    --config <file.json> | [--model mnist|cifar] [--compression ae|identity|topk|quantize|subsample|sketch]\n\
+                 \u{20}        [--rounds N] [--collabs N] [--local-epochs N] [--seed N] [--out metrics.json]\n\
+                 prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N]\n\
+                 savings  [--rounds N] [--max-collabs N] [--mnist]\n\
+                 inspect  [--artifacts DIR]\n\
+                 serve    --port P --collabs N [--rounds N]\n\
+                 worker   --connect HOST:PORT --id K"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+/// Build an ExperimentConfig from either --config or individual flags.
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::load(path).with_context(|| format!("loading config {path}"))?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+        // Keep the AE paired with the model unless overridden.
+        if matches!(cfg.compression, CompressionConfig::Ae { .. }) {
+            cfg.compression = CompressionConfig::Ae { ae: m.to_string() };
+        }
+    }
+    if let Some(c) = args.get("compression") {
+        cfg.compression = match c {
+            "ae" => CompressionConfig::Ae {
+                ae: args.get_or("ae", &cfg.model).to_string(),
+            },
+            "identity" => CompressionConfig::Identity,
+            "topk" => CompressionConfig::TopK {
+                fraction: args.get_f64("fraction", 0.01)?,
+            },
+            "quantize" => CompressionConfig::Quantize {
+                bits: args.get_usize("bits", 8)? as u8,
+                stochastic: args.flag("stochastic"),
+            },
+            "subsample" => CompressionConfig::Subsample {
+                fraction: args.get_f64("fraction", 0.01)?,
+            },
+            "sketch" => CompressionConfig::Sketch {
+                rows: args.get_usize("rows", 5)?,
+                cols: args.get_usize("cols", 256)?,
+                topk: args.get_usize("topk", 256)?,
+            },
+            other => bail!("unknown compression `{other}`"),
+        };
+    }
+    cfg.fl.rounds = args.get_usize("rounds", cfg.fl.rounds)?;
+    cfg.fl.collaborators = args.get_usize("collabs", cfg.fl.collaborators)?;
+    cfg.fl.local_epochs = args.get_usize("local-epochs", cfg.fl.local_epochs)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.prepass.epochs = args.get_usize("prepass-epochs", cfg.prepass.epochs)?;
+    cfg.prepass.ae_epochs = args.get_usize("ae-epochs", cfg.prepass.ae_epochs)?;
+    cfg.data.per_collab = args.get_usize("per-collab", cfg.data.per_collab)?;
+    cfg.data.test_size = args.get_usize("test-size", cfg.data.test_size)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let cfg = config_from_args(args)?;
+    println!(
+        "experiment `{}`: model={} compression={} rounds={} collabs={}",
+        cfg.name,
+        cfg.model,
+        cfg.compression.kind_name(),
+        cfg.fl.rounds,
+        cfg.fl.collaborators
+    );
+    let pipeline;
+    let pipe_ref = match &cfg.compression {
+        CompressionConfig::Ae { ae } => {
+            pipeline = AePipeline::new(&rt, ae)?;
+            println!(
+                "pre-pass: training {}-dim AE (latent {}, ratio {:.0}x) per collaborator ...",
+                pipeline.input_dim,
+                pipeline.latent,
+                pipeline.input_dim as f64 / pipeline.latent as f64
+            );
+            Some(&pipeline)
+        }
+        _ => None,
+    };
+    let mut driver = FlDriver::new(&rt, cfg, pipe_ref)?;
+    for r in 0..driver.config().fl.rounds {
+        let out = driver.run_round()?;
+        println!(
+            "round {r:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e}",
+            out.eval_loss, out.eval_acc, out.bytes_up, out.bytes_down, out.mean_recon_mse
+        );
+    }
+    let acc = driver.log.final_accuracy().unwrap_or(0.0);
+    let ledger = driver.network.ledger();
+    println!(
+        "done: final_acc={acc:.4} total_bytes={} update_bytes_up={}",
+        ledger.total_bytes(),
+        ledger.update_bytes_up()
+    );
+    if let Some(out) = args.get("out") {
+        driver.log.write_json(out)?;
+        println!("metrics written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_prepass(args: &Args) -> Result<()> {
+    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let model = args.get_or("model", "mnist").to_string();
+    let ae_tag = args.get_or("ae", &model).to_string();
+    let pipeline = AePipeline::new(&rt, &ae_tag)?;
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = model.clone();
+    cfg.prepass.epochs = args.get_usize("epochs", 30)?;
+    cfg.prepass.ae_epochs = args.get_usize("ae-epochs", 25)?;
+    cfg.seed = args.get_u64("seed", 1)?;
+
+    let kind = if model == "mnist" {
+        fedae::data::SynthKind::Mnist
+    } else {
+        fedae::data::SynthKind::Cifar
+    };
+    let (shards, test) = fedae::data::make_shards(
+        kind,
+        fedae::config::Sharding::Iid,
+        0.5,
+        1,
+        args.get_usize("per-collab", 2048)?,
+        512,
+        cfg.seed,
+    )?;
+    let init = rt.load_init(&format!("{model}_params"))?;
+    let ae_init = rt.load_init(&format!("ae_{ae_tag}_init"))?;
+    println!(
+        "prepass: model={model} ({} params), AE={ae_tag} ({} params, latent {})",
+        init.len(),
+        pipeline.n_params,
+        pipeline.latent
+    );
+    let pp = fedae::collaborator::run_prepass(
+        &rt,
+        &model,
+        &pipeline,
+        &shards[0],
+        &cfg.prepass,
+        &cfg.train,
+        &init,
+        &ae_init,
+        cfg.seed,
+    )?;
+    let mse_series: Vec<(usize, f64)> = pp
+        .ae_history
+        .iter()
+        .enumerate()
+        .map(|(i, (mse, _))| (i, *mse as f64))
+        .collect();
+    let acc_series: Vec<(usize, f64)> = pp
+        .ae_history
+        .iter()
+        .enumerate()
+        .map(|(i, (_, acc))| (i, *acc as f64))
+        .collect();
+    println!(
+        "{}",
+        ascii_plot("AE training accuracy (Fig 4/6)", &[("acc", &acc_series)], 60, 12)
+    );
+    println!(
+        "{}",
+        ascii_plot("AE training MSE", &[("mse", &mse_series)], 60, 12)
+    );
+    let val = fedae::collaborator::validation_model(
+        &rt,
+        &model,
+        &pipeline,
+        &pp.ae_params,
+        &pp.snapshots,
+        pp.n_snapshots,
+        &test,
+    )?;
+    let rows: Vec<Vec<String>> = val
+        .iter()
+        .map(|p| {
+            vec![
+                p.snapshot.to_string(),
+                format!("{:.4}", p.orig_acc),
+                format!("{:.4}", p.recon_acc),
+                format!("{:.2e}", p.weight_mse),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        print_table(&["snapshot", "orig_acc", "ae_acc", "weight_mse"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_savings(args: &Args) -> Result<()> {
+    let model: SavingsModel = if args.flag("mnist") {
+        fedae::savings::REPO_MNIST
+    } else {
+        PAPER_CIFAR
+    };
+    let rounds = args.get_usize("rounds", 100)?;
+    let max_collabs = args.get_usize("max-collabs", 2000)?;
+    println!(
+        "savings model: orig={} comp={} ae={} (ratio {:.1}x)",
+        model.original_size,
+        model.compressed_size,
+        model.autoencoder_size,
+        model.compression_ratio()
+    );
+    let grid: Vec<usize> = (0..)
+        .map(|i| 1usize << i)
+        .take_while(|&c| c <= max_collabs)
+        .chain([max_collabs])
+        .collect();
+    let sweep = model.sweep_collabs(rounds, &grid)?;
+    let series: Vec<(usize, f64)> = sweep.clone();
+    println!(
+        "{}",
+        ascii_plot(
+            &format!("Fig 10: savings ratio vs collaborators (single decoder, R={rounds})"),
+            &[("SR", &series)],
+            64,
+            14
+        )
+    );
+    println!(
+        "break-even (case a): {} collaborators at R={rounds}",
+        model.breakeven_collabs_single_decoder(rounds)?
+    );
+    println!(
+        "break-even (case b): {} rounds (independent of collaborators)",
+        model.breakeven_rounds_per_collab_decoders()?
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let m = rt.manifest();
+    println!("platform: {}", rt.platform_name());
+    let rows: Vec<Vec<String>> = m
+        .models
+        .iter()
+        .map(|(name, e)| {
+            vec![
+                name.clone(),
+                e.n_params.to_string(),
+                e.input_dim.to_string(),
+                e.train_batch.to_string(),
+            ]
+        })
+        .collect();
+    println!("{}", print_table(&["model", "params", "input", "batch"], &rows));
+    let rows: Vec<Vec<String>> = m
+        .autoencoders
+        .iter()
+        .map(|(name, e)| {
+            vec![
+                name.clone(),
+                format!("{:?}", e.dims),
+                e.n_params.to_string(),
+                format!("{:.1}x", e.compression_ratio),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        print_table(&["autoencoder", "dims", "params", "ratio"], &rows)
+    );
+    println!("artifacts: {}", m.artifacts.len());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// TCP leader/worker mode
+// ---------------------------------------------------------------------------
+
+/// Leader: accept N workers, run FedAvg rounds over TCP using the same
+/// wire protocol the simulator meters.
+fn fedae_serve(args: &Args) -> Result<()> {
+    use fedae::aggregation::{Aggregator, FedAvg, WeightedUpdate};
+    use fedae::transport::{Message, TcpTransport};
+
+    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let port = args.get_usize("port", 7070)?;
+    let n_workers = args.get_usize("collabs", 2)?;
+    let rounds = args.get_usize("rounds", 5)?;
+    let model = args.get_or("model", "mnist").to_string();
+    let mut global = rt.load_init(&format!("{model}_params"))?;
+
+    let listener = std::net::TcpListener::bind(("0.0.0.0", port as u16))?;
+    println!("leader: waiting for {n_workers} workers on :{port}");
+    let mut workers = Vec::new();
+    while workers.len() < n_workers {
+        let (stream, addr) = listener.accept()?;
+        let mut t = TcpTransport::new(stream);
+        match t.recv()? {
+            Message::Hello { collab_id, .. } => {
+                println!("worker {collab_id} joined from {addr}");
+                workers.push((collab_id as usize, t));
+            }
+            m => bail!("expected Hello, got {m:?}"),
+        }
+    }
+
+    let mut agg = FedAvg;
+    for round in 0..rounds {
+        for (_, t) in workers.iter_mut() {
+            t.send(&Message::GlobalModel {
+                round: round as u32,
+                params: global.clone(),
+            })?;
+        }
+        let mut updates = Vec::new();
+        for (wid, t) in workers.iter_mut() {
+            match t.recv()? {
+                Message::EncodedUpdate {
+                    round: r,
+                    n_samples,
+                    payload,
+                    ..
+                } if r as usize == round => {
+                    let u = fedae::compression::CompressedUpdate::from_bytes(&payload)?;
+                    let values = match u {
+                        fedae::compression::CompressedUpdate::Raw { values } => values,
+                        other => bail!("leader expects raw updates in TCP demo, got {other:?}"),
+                    };
+                    updates.push(WeightedUpdate {
+                        weight: n_samples as f64,
+                        values,
+                    });
+                }
+                m => bail!("worker {wid}: unexpected {m:?}"),
+            }
+        }
+        global = agg.aggregate(&updates)?;
+        println!("round {round}: aggregated {} updates", updates.len());
+    }
+    for (_, t) in workers.iter_mut() {
+        t.send(&Message::Shutdown)?;
+    }
+    println!("leader done");
+    Ok(())
+}
+
+/// Worker: connect, train locally each round, send raw updates.
+fn fedae_worker(args: &Args) -> Result<()> {
+    use fedae::transport::{Message, TcpTransport, PROTOCOL_VERSION};
+
+    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let addr = args
+        .get("connect")
+        .context("worker needs --connect HOST:PORT")?;
+    let id = args.get_usize("id", 0)?;
+    let model = args.get_or("model", "mnist").to_string();
+    let kind = if model == "mnist" {
+        fedae::data::SynthKind::Mnist
+    } else {
+        fedae::data::SynthKind::Cifar
+    };
+    let (shards, _) = fedae::data::make_shards(
+        kind,
+        fedae::config::Sharding::Iid,
+        0.5,
+        id + 1,
+        args.get_usize("per-collab", 1024)?,
+        16,
+        args.get_u64("seed", 1)?,
+    )?;
+    let shard = shards.into_iter().last().unwrap();
+    let train = fedae::runtime::TrainStep::new(&rt, &model)?;
+    let mut batches = fedae::data::BatchIter::new(shard.len(), train.batch, id as u64);
+    let mut t = TcpTransport::connect(addr)?;
+    t.send(&Message::Hello {
+        collab_id: id as u32,
+        version: PROTOCOL_VERSION,
+    })?;
+    loop {
+        match t.recv()? {
+            Message::GlobalModel { round, params } => {
+                let mut p = params;
+                for _ in 0..batches.batches_per_epoch() {
+                    let idx = batches.next_batch();
+                    let (x, y) = shard.gather_batch(&idx, train.batch);
+                    let (np, _) = train.step(&p, &x, &y, 0.05)?;
+                    p = np;
+                }
+                let update = fedae::compression::CompressedUpdate::Raw { values: p };
+                t.send(&Message::EncodedUpdate {
+                    round,
+                    collab_id: id as u32,
+                    n_samples: shard.len() as u32,
+                    payload: update.to_bytes(),
+                })?;
+                println!("worker {id}: round {round} done");
+            }
+            Message::Shutdown => {
+                println!("worker {id}: shutdown");
+                return Ok(());
+            }
+            m => bail!("worker: unexpected {m:?}"),
+        }
+    }
+}

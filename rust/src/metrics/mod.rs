@@ -1,0 +1,363 @@
+//! Metrics: per-round records, experiment logs, CSV/JSON emitters and a
+//! terminal ASCII plotter used by the examples to render the paper's
+//! figures (loss/accuracy sawtooth curves, savings-ratio sweeps).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::json::{obj, Json};
+
+/// One collaborator's metrics for one communication round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub collaborator: usize,
+    /// Mean local training loss over the round's local epochs.
+    pub train_loss: f32,
+    /// Eval on the shared test set after aggregation.
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    /// This collaborator's *local* model evaluated on the shared test set
+    /// right after its local training (pre-aggregation) — the per-
+    /// collaborator series the paper's Figs 8/9 plot.
+    pub local_eval_loss: f32,
+    pub local_eval_acc: f32,
+    /// Bytes this collaborator sent uplink this round.
+    pub bytes_up: u64,
+    /// Bytes received downlink this round.
+    pub bytes_down: u64,
+    /// Reconstruction error of the decompressed update (NaN when the
+    /// compressor is lossless/identity).
+    pub recon_mse: f32,
+}
+
+/// A whole experiment's log.
+#[derive(Debug, Default, Clone)]
+pub struct ExperimentLog {
+    pub name: String,
+    pub records: Vec<RoundRecord>,
+    /// Free-form (key, value) summary entries printed at the end.
+    pub summary: Vec<(String, String)>,
+}
+
+impl ExperimentLog {
+    pub fn new(name: impl Into<String>) -> ExperimentLog {
+        ExperimentLog {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn add_summary(&mut self, key: impl Into<String>, value: impl ToString) {
+        self.summary.push((key.into(), value.to_string()));
+    }
+
+    /// Per-round mean of a field across collaborators.
+    pub fn per_round<F: Fn(&RoundRecord) -> f64>(&self, f: F) -> Vec<(usize, f64)> {
+        let mut by_round: std::collections::BTreeMap<usize, (f64, usize)> = Default::default();
+        for r in &self.records {
+            let e = by_round.entry(r.round).or_insert((0.0, 0));
+            e.0 += f(r);
+            e.1 += 1;
+        }
+        by_round
+            .into_iter()
+            .map(|(round, (sum, n))| (round, sum / n as f64))
+            .collect()
+    }
+
+    /// Series of one collaborator's records.
+    pub fn collaborator_series<F: Fn(&RoundRecord) -> f64>(
+        &self,
+        collab: usize,
+        f: F,
+    ) -> Vec<(usize, f64)> {
+        self.records
+            .iter()
+            .filter(|r| r.collaborator == collab)
+            .map(|r| (r.round, f(r)))
+            .collect()
+    }
+
+    /// Final-round mean eval accuracy.
+    pub fn final_accuracy(&self) -> Option<f64> {
+        let last = self.records.iter().map(|r| r.round).max()?;
+        let vals: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.round == last)
+            .map(|r| r.eval_acc as f64)
+            .collect();
+        Some(vals.iter().sum::<f64>() / vals.len() as f64)
+    }
+
+    pub fn total_bytes_up(&self) -> u64 {
+        self.records.iter().map(|r| r.bytes_up).sum()
+    }
+
+    /// CSV dump (one row per record).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,collaborator,train_loss,eval_loss,eval_acc,local_eval_loss,local_eval_acc,bytes_up,bytes_down,recon_mse\n",
+        );
+        for r in &self.records {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{},{},{},{}",
+                r.round,
+                r.collaborator,
+                r.train_loss,
+                r.eval_loss,
+                r.eval_acc,
+                r.local_eval_loss,
+                r.local_eval_acc,
+                r.bytes_up,
+                r.bytes_down,
+                r.recon_mse
+            );
+        }
+        out
+    }
+
+    /// JSON dump (records + summary).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", self.name.as_str().into()),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("round", r.round.into()),
+                                ("collaborator", r.collaborator.into()),
+                                ("train_loss", (r.train_loss as f64).into()),
+                                ("eval_loss", (r.eval_loss as f64).into()),
+                                ("eval_acc", (r.eval_acc as f64).into()),
+                                ("local_eval_loss", (r.local_eval_loss as f64).into()),
+                                ("local_eval_acc", (r.local_eval_acc as f64).into()),
+                                ("bytes_up", (r.bytes_up as usize).into()),
+                                ("bytes_down", (r.bytes_down as usize).into()),
+                                ("recon_mse", (r.recon_mse as f64).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "summary",
+                Json::Obj(
+                    self.summary
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Render an ASCII line chart of one or more labelled series. Used by the
+/// examples to display the paper's figures directly in the terminal.
+pub fn ascii_plot(title: &str, series: &[(&str, &[(usize, f64)])], width: usize, height: usize) -> String {
+    const MARKS: [char; 6] = ['*', '+', 'o', 'x', '#', '@'];
+    let mut out = format!("  {title}\n");
+    let all: Vec<(usize, f64)> = series
+        .iter()
+        .flat_map(|(_, s)| s.iter().copied())
+        .filter(|(_, v)| v.is_finite())
+        .collect();
+    if all.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let (xmin, xmax) = all
+        .iter()
+        .fold((usize::MAX, 0usize), |(lo, hi), (x, _)| (lo.min(*x), hi.max(*x)));
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), (_, y)| {
+            (lo.min(*y), hi.max(*y))
+        });
+    let yspan = if (ymax - ymin).abs() < 1e-12 { 1.0 } else { ymax - ymin };
+    let xspan = (xmax - xmin).max(1) as f64;
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for (x, y) in s.iter().filter(|(_, v)| v.is_finite()) {
+            let col = (((*x - xmin) as f64 / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((ymax - y) / yspan) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = MARKS[si % MARKS.len()];
+        }
+    }
+    let _ = writeln!(out, "  {ymax:>10.4} ┤");
+    for row in grid {
+        let line: String = row.into_iter().collect();
+        let _ = writeln!(out, "             │{line}");
+    }
+    let _ = writeln!(out, "  {ymin:>10.4} ┤{}", "─".repeat(width));
+    let _ = writeln!(out, "             {xmin:<10} ... {xmax:>10} (round)");
+    for (si, (label, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "             {} = {label}", MARKS[si % MARKS.len()]);
+    }
+    out
+}
+
+/// Fixed-width table printer for bench/experiment output.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let header_line: Vec<String> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+        .collect();
+    let _ = writeln!(out, "| {} |", header_line.join(" | "));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    let _ = writeln!(out, "|-{}-|", sep.join("-|-"));
+    for row in rows {
+        let cells: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+            .collect();
+        let _ = writeln!(out, "| {} |", cells.join(" | "));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, collab: usize, acc: f32) -> RoundRecord {
+        RoundRecord {
+            round,
+            collaborator: collab,
+            train_loss: 1.0,
+            eval_loss: 0.5,
+            eval_acc: acc,
+            local_eval_loss: 0.6,
+            local_eval_acc: acc,
+            bytes_up: 100,
+            bytes_down: 200,
+            recon_mse: 0.01,
+        }
+    }
+
+    #[test]
+    fn per_round_averages_across_collaborators() {
+        let mut log = ExperimentLog::new("t");
+        log.push(rec(0, 0, 0.4));
+        log.push(rec(0, 1, 0.6));
+        log.push(rec(1, 0, 0.8));
+        let series = log.per_round(|r| r.eval_acc as f64);
+        assert_eq!(series.len(), 2);
+        assert!((series[0].1 - 0.5).abs() < 1e-6);
+        assert!((series[1].1 - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn final_accuracy_uses_last_round() {
+        let mut log = ExperimentLog::new("t");
+        log.push(rec(0, 0, 0.1));
+        log.push(rec(3, 0, 0.9));
+        assert!((log.final_accuracy().unwrap() - 0.9).abs() < 1e-6);
+        assert!(ExperimentLog::new("e").final_accuracy().is_none());
+    }
+
+    #[test]
+    fn collaborator_series_filters() {
+        let mut log = ExperimentLog::new("t");
+        log.push(rec(0, 0, 0.1));
+        log.push(rec(0, 1, 0.2));
+        log.push(rec(1, 1, 0.3));
+        let s = log.collaborator_series(1, |r| r.eval_acc as f64);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].0, 0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = ExperimentLog::new("t");
+        log.push(rec(0, 0, 0.5));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("round,collaborator"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut log = ExperimentLog::new("t");
+        log.push(rec(2, 1, 0.75));
+        log.add_summary("ratio", "497.2");
+        let j = log.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.at(&["name"]).unwrap().as_str(), Some("t"));
+        assert_eq!(
+            parsed.at(&["summary", "ratio"]).unwrap().as_str(),
+            Some("497.2")
+        );
+        assert_eq!(
+            parsed.at(&["records"]).unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let s1: Vec<(usize, f64)> = (0..20).map(|i| (i, (i as f64 * 0.4).sin())).collect();
+        let s2: Vec<(usize, f64)> = (0..20).map(|i| (i, i as f64 / 20.0)).collect();
+        let plot = ascii_plot("test", &[("sin", &s1), ("lin", &s2)], 40, 10);
+        assert!(plot.contains("test"));
+        assert!(plot.contains('*'));
+        assert!(plot.contains('+'));
+        // Empty series doesn't panic.
+        let empty = ascii_plot("e", &[("none", &[])], 10, 4);
+        assert!(empty.contains("no data"));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let t = print_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "2".into()],
+            ],
+        );
+        assert!(t.contains("| name   | value |"));
+        assert!(t.contains("| longer | 2     |"));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut log = ExperimentLog::new("t");
+        log.push(rec(0, 0, 0.5));
+        log.push(rec(1, 0, 0.5));
+        assert_eq!(log.total_bytes_up(), 200);
+    }
+}

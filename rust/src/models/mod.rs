@@ -1,0 +1,131 @@
+//! Model registry: names tying config strings to manifest entries,
+//! artifact names and init blobs.
+//!
+//! The paper's two collaborator models (a 15,910-param MNIST-shaped MLP
+//! and a CIFAR-shaped CNN) and three autoencoder variants (the paper's
+//! ~500x MNIST AE, the ~1720x CIFAR AE, and a deeper funnel for the
+//! dynamic-complexity ablation of §4.2).
+
+use crate::config::manifest::{AeEntry, Manifest, ModelEntry};
+use crate::error::{FedAeError, Result};
+
+/// Classifier family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// 784-20-10 MLP — exactly the paper's 15,910 parameters.
+    Mnist,
+    /// Scaled CIFAR-shaped CNN (51,082 params; DESIGN.md §3 substitution).
+    Cifar,
+}
+
+impl ModelKind {
+    pub fn from_name(name: &str) -> Result<ModelKind> {
+        match name {
+            "mnist" => Ok(ModelKind::Mnist),
+            "cifar" => Ok(ModelKind::Cifar),
+            other => Err(FedAeError::Config(format!("unknown model `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Mnist => "mnist",
+            ModelKind::Cifar => "cifar",
+        }
+    }
+
+    /// Manifest init-blob name for the global model initialization.
+    pub fn init_name(&self) -> String {
+        format!("{}_params", self.name())
+    }
+
+    /// The AE tag that compresses this model's updates by default.
+    pub fn default_ae(&self) -> AeKind {
+        match self {
+            ModelKind::Mnist => AeKind::Mnist,
+            ModelKind::Cifar => AeKind::Cifar,
+        }
+    }
+
+    pub fn entry<'m>(&self, manifest: &'m Manifest) -> Result<&'m ModelEntry> {
+        manifest.model(self.name())
+    }
+}
+
+/// Autoencoder variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AeKind {
+    /// 15910-32-15910: the paper's 1,034,182-param, ~500x AE.
+    Mnist,
+    /// 51082-30-51082: ~1703x ("~1720x") for the scaled CIFAR model.
+    Cifar,
+    /// 15910-128-16-128-15910 deep funnel (dynamic-complexity ablation).
+    MnistDeep,
+}
+
+impl AeKind {
+    pub fn from_name(name: &str) -> Result<AeKind> {
+        match name {
+            "mnist" => Ok(AeKind::Mnist),
+            "cifar" => Ok(AeKind::Cifar),
+            "mnist_deep" => Ok(AeKind::MnistDeep),
+            other => Err(FedAeError::Config(format!("unknown autoencoder `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AeKind::Mnist => "mnist",
+            AeKind::Cifar => "cifar",
+            AeKind::MnistDeep => "mnist_deep",
+        }
+    }
+
+    /// Manifest init-blob name for this AE's initial parameters.
+    pub fn init_name(&self) -> String {
+        format!("ae_{}_init", self.name())
+    }
+
+    pub fn entry<'m>(&self, manifest: &'m Manifest) -> Result<&'m AeEntry> {
+        manifest.ae(self.name())
+    }
+
+    /// Which classifier this AE is shaped for.
+    pub fn model(&self) -> ModelKind {
+        match self {
+            AeKind::Mnist | AeKind::MnistDeep => ModelKind::Mnist,
+            AeKind::Cifar => ModelKind::Cifar,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrip() {
+        for kind in [ModelKind::Mnist, ModelKind::Cifar] {
+            assert_eq!(ModelKind::from_name(kind.name()).unwrap(), kind);
+        }
+        for kind in [AeKind::Mnist, AeKind::Cifar, AeKind::MnistDeep] {
+            assert_eq!(AeKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert!(ModelKind::from_name("vgg").is_err());
+        assert!(AeKind::from_name("conv").is_err());
+    }
+
+    #[test]
+    fn ae_model_pairing() {
+        assert_eq!(AeKind::Mnist.model(), ModelKind::Mnist);
+        assert_eq!(AeKind::MnistDeep.model(), ModelKind::Mnist);
+        assert_eq!(AeKind::Cifar.model(), ModelKind::Cifar);
+        assert_eq!(ModelKind::Mnist.default_ae(), AeKind::Mnist);
+    }
+
+    #[test]
+    fn init_names() {
+        assert_eq!(ModelKind::Mnist.init_name(), "mnist_params");
+        assert_eq!(AeKind::MnistDeep.init_name(), "ae_mnist_deep_init");
+    }
+}

@@ -1,0 +1,280 @@
+//! Simulated network substrate with exact byte accounting.
+//!
+//! The paper's headline quantity — the Savings Ratio of Eq. 4 — is a
+//! statement about *bytes on the wire*. This module meters every transfer
+//! through a [`TrafficLedger`] (bytes are measured from real frame lengths,
+//! not analytic formulas) and models transfer time over configurable
+//! bandwidth/latency links so experiments can also report wall-clock
+//! communication cost at deployment-like scales.
+
+use std::collections::BTreeMap;
+
+use crate::config::NetworkConfig;
+
+/// Direction of a transfer relative to the aggregator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Direction {
+    /// Collaborator -> server (weight updates).
+    Up,
+    /// Server -> collaborator (global model, acks).
+    Down,
+}
+
+/// What kind of payload a transfer carried (for per-category reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TrafficKind {
+    /// Encoded (compressed) weight update.
+    Update,
+    /// Global model broadcast.
+    GlobalModel,
+    /// One-time decoder shipment at the end of the pre-pass round.
+    DecoderShipment,
+    /// Control-plane traffic (hello, acks, eval reports).
+    Control,
+}
+
+impl TrafficKind {
+    pub const ALL: [TrafficKind; 4] = [
+        TrafficKind::Update,
+        TrafficKind::GlobalModel,
+        TrafficKind::DecoderShipment,
+        TrafficKind::Control,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficKind::Update => "update",
+            TrafficKind::GlobalModel => "global_model",
+            TrafficKind::DecoderShipment => "decoder_shipment",
+            TrafficKind::Control => "control",
+        }
+    }
+}
+
+/// One recorded transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transfer {
+    pub round: usize,
+    pub collaborator: usize,
+    pub direction: Direction,
+    pub kind: TrafficKind,
+    pub bytes: u64,
+    /// Simulated wall-clock cost of this transfer in seconds.
+    pub sim_seconds: f64,
+}
+
+/// A bandwidth/latency link model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub bandwidth_bps: f64,
+    pub latency_s: f64,
+}
+
+impl Link {
+    pub fn from_config(cfg: &NetworkConfig) -> Link {
+        Link {
+            bandwidth_bps: cfg.bandwidth_mbps * 1e6,
+            latency_s: cfg.latency_ms * 1e-3,
+        }
+    }
+
+    /// Transfer time for a payload: latency + serialization.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        assert!(self.bandwidth_bps > 0.0);
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// The simulated network: a uniform link plus the traffic ledger.
+#[derive(Debug)]
+pub struct SimulatedNetwork {
+    link: Link,
+    ledger: TrafficLedger,
+}
+
+impl SimulatedNetwork {
+    pub fn new(link: Link) -> SimulatedNetwork {
+        SimulatedNetwork {
+            link,
+            ledger: TrafficLedger::default(),
+        }
+    }
+
+    pub fn from_config(cfg: &NetworkConfig) -> SimulatedNetwork {
+        SimulatedNetwork::new(Link::from_config(cfg))
+    }
+
+    /// Record a transfer; returns its simulated duration.
+    pub fn send(
+        &mut self,
+        round: usize,
+        collaborator: usize,
+        direction: Direction,
+        kind: TrafficKind,
+        bytes: u64,
+    ) -> f64 {
+        let sim_seconds = self.link.transfer_time(bytes);
+        self.ledger.record(Transfer {
+            round,
+            collaborator,
+            direction,
+            kind,
+            bytes,
+            sim_seconds,
+        });
+        sim_seconds
+    }
+
+    pub fn ledger(&self) -> &TrafficLedger {
+        &self.ledger
+    }
+
+    pub fn link(&self) -> Link {
+        self.link
+    }
+}
+
+/// Aggregated traffic accounting.
+#[derive(Debug, Default, Clone)]
+pub struct TrafficLedger {
+    transfers: Vec<Transfer>,
+    by_kind: BTreeMap<(Direction, TrafficKind), u64>,
+    total_bytes: u64,
+    total_sim_seconds: f64,
+}
+
+impl TrafficLedger {
+    pub fn record(&mut self, t: Transfer) {
+        *self.by_kind.entry((t.direction, t.kind)).or_insert(0) += t.bytes;
+        self.total_bytes += t.bytes;
+        self.total_sim_seconds += t.sim_seconds;
+        self.transfers.push(t);
+    }
+
+    pub fn transfers(&self) -> &[Transfer] {
+        &self.transfers
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    pub fn total_sim_seconds(&self) -> f64 {
+        self.total_sim_seconds
+    }
+
+    pub fn bytes_for(&self, direction: Direction, kind: TrafficKind) -> u64 {
+        self.by_kind.get(&(direction, kind)).copied().unwrap_or(0)
+    }
+
+    /// Total uplink bytes spent on (compressed) updates — the numerator the
+    /// paper's compression ratios act on.
+    pub fn update_bytes_up(&self) -> u64 {
+        self.bytes_for(Direction::Up, TrafficKind::Update)
+    }
+
+    /// Bytes for a specific round.
+    pub fn bytes_in_round(&self, round: usize) -> u64 {
+        self.transfers
+            .iter()
+            .filter(|t| t.round == round)
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    /// Conservation invariant: the by-kind index matches the raw log.
+    /// (Checked by property tests.)
+    pub fn check_conservation(&self) -> bool {
+        let from_log: u64 = self.transfers.iter().map(|t| t.bytes).sum();
+        let from_index: u64 = self.by_kind.values().sum();
+        from_log == self.total_bytes && from_index == self.total_bytes
+    }
+
+    /// Measured compression ratio: raw update bytes / compressed update
+    /// bytes, given the uncompressed per-update size.
+    pub fn measured_update_ratio(&self, raw_update_bytes: u64) -> Option<f64> {
+        let n_updates = self
+            .transfers
+            .iter()
+            .filter(|t| t.direction == Direction::Up && t.kind == TrafficKind::Update)
+            .count() as u64;
+        let sent = self.update_bytes_up();
+        if sent == 0 || n_updates == 0 {
+            return None;
+        }
+        Some((raw_update_bytes * n_updates) as f64 / sent as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Link {
+        Link {
+            bandwidth_bps: 1e6,
+            latency_s: 0.01,
+        }
+    }
+
+    #[test]
+    fn transfer_time_formula() {
+        let l = link();
+        // 1 Mbit payload over 1 Mbps + 10 ms latency = 1.01 s.
+        assert!((l.transfer_time(125_000) - 1.01).abs() < 1e-9);
+        assert!((l.transfer_time(0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_accounting() {
+        let mut net = SimulatedNetwork::new(link());
+        net.send(0, 0, Direction::Up, TrafficKind::Update, 100);
+        net.send(0, 1, Direction::Up, TrafficKind::Update, 150);
+        net.send(0, 0, Direction::Down, TrafficKind::GlobalModel, 1000);
+        net.send(0, 0, Direction::Up, TrafficKind::Control, 10);
+        let ledger = net.ledger();
+        assert_eq!(ledger.total_bytes(), 1260);
+        assert_eq!(ledger.update_bytes_up(), 250);
+        assert_eq!(
+            ledger.bytes_for(Direction::Down, TrafficKind::GlobalModel),
+            1000
+        );
+        assert!(ledger.check_conservation());
+        assert_eq!(ledger.bytes_in_round(0), 1260);
+        assert_eq!(ledger.bytes_in_round(1), 0);
+    }
+
+    #[test]
+    fn measured_ratio() {
+        let mut net = SimulatedNetwork::new(link());
+        // Two updates of 50 bytes each, raw size 5000 -> ratio 100x.
+        net.send(0, 0, Direction::Up, TrafficKind::Update, 50);
+        net.send(0, 1, Direction::Up, TrafficKind::Update, 50);
+        let r = net.ledger().measured_update_ratio(5000).unwrap();
+        assert!((r - 100.0).abs() < 1e-9);
+        let empty = SimulatedNetwork::new(link());
+        assert!(empty.ledger().measured_update_ratio(5000).is_none());
+    }
+
+    #[test]
+    fn sim_seconds_accumulate() {
+        let mut net = SimulatedNetwork::new(link());
+        let t1 = net.send(0, 0, Direction::Up, TrafficKind::Update, 125_000);
+        assert!(t1 > 1.0);
+        let total = net.ledger().total_sim_seconds();
+        assert!((total - t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_config_units() {
+        let cfg = NetworkConfig {
+            bandwidth_mbps: 8.0,
+            latency_ms: 5.0,
+        };
+        let l = Link::from_config(&cfg);
+        assert!((l.bandwidth_bps - 8e6).abs() < 1e-6);
+        assert!((l.latency_s - 0.005).abs() < 1e-12);
+        // 1 MB over 8 Mbps = 1 s + 5 ms.
+        assert!((l.transfer_time(1_000_000) - 1.005).abs() < 1e-9);
+    }
+}

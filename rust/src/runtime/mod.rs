@@ -1,0 +1,400 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): each artifact listed in
+//! `manifest.json` is parsed from HLO **text** (`HloModuleProto::from_text_file`
+//! — text, not serialized proto, because jax>=0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects), compiled once, and cached in a
+//! name -> executable map. Typed wrappers ([`TrainStep`], [`AePipeline`], …)
+//! convert between rust `Vec<f32>` and XLA literals and validate shapes
+//! against the manifest so dimension bugs fail loudly.
+//!
+//! This module is the *only* place the crate touches XLA; everything above
+//! it (coordinator, compressors, benches) works with plain f32 slices.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::config::manifest::{ArtifactEntry, Manifest};
+use crate::error::{FedAeError, Result};
+use crate::tensor;
+
+/// A loaded PJRT CPU runtime with compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    manifest: Manifest,
+    /// Lazily compiled executables (compiling all 16 up front costs ~s).
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("artifacts_dir", &self.artifacts_dir)
+            .field("platform", &self.client.platform_name())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the given artifacts directory.
+    pub fn load(manifest: &Manifest, artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            manifest: manifest.clone(),
+            executables: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Convenience: load manifest + runtime from an artifacts dir.
+    pub fn from_dir(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        Runtime::load(&manifest, dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an executable by artifact name.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.artifact(name)?;
+        let path = self.artifacts_dir.join(&entry.file);
+        if !path.exists() {
+            return Err(FedAeError::Artifact(format!(
+                "artifact file {} missing (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| FedAeError::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (used at coordinator startup so the
+    /// first round isn't billed the compile time).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.executable(name)?;
+        }
+        Ok(())
+    }
+
+    /// Validate input lengths against the manifest entry, f32-only.
+    fn check_inputs(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<()> {
+        if entry.inputs.len() != inputs.len() {
+            return Err(FedAeError::Artifact(format!(
+                "artifact `{}` expects {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (spec, arr) in entry.inputs.iter().zip(inputs) {
+            if spec.elements() != arr.len() {
+                return Err(FedAeError::Artifact(format!(
+                    "artifact `{}` input `{}` expects {} elements (shape {:?}), got {}",
+                    entry.name,
+                    spec.name,
+                    spec.elements(),
+                    spec.shape,
+                    arr.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on flat f32 inputs; returns the flat f32 outputs
+    /// (the exported computations all return tuples of f32 tensors).
+    pub fn run(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.artifact(name)?.clone();
+        self.check_inputs(&entry, inputs)?;
+        let exe = self.executable(name)?;
+
+        let literals: Vec<xla::Literal> = entry
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, arr)| {
+                let lit = xla::Literal::vec1(arr);
+                if spec.shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(FedAeError::from)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let buffer = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| FedAeError::Xla("execute returned no buffers".into()))?;
+        let tuple = buffer.to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for part in parts {
+            outputs.push(part.to_vec::<f32>()?);
+        }
+        if outputs.len() != entry.outputs.len() {
+            return Err(FedAeError::Artifact(format!(
+                "artifact `{}` returned {} outputs, manifest says {}",
+                name,
+                outputs.len(),
+                entry.outputs.len()
+            )));
+        }
+        Ok(outputs)
+    }
+
+    /// Load an initial-parameter blob (`artifacts/init/<name>.bin`).
+    pub fn load_init(&self, name: &str) -> Result<Vec<f32>> {
+        let entry = self.manifest.init(name)?;
+        let v = tensor::load_f32_file(self.artifacts_dir.join(&entry.file))?;
+        if v.len() != entry.len {
+            return Err(FedAeError::Artifact(format!(
+                "init blob `{name}`: expected {} f32s, file has {}",
+                entry.len,
+                v.len()
+            )));
+        }
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed wrappers
+// ---------------------------------------------------------------------------
+
+/// Scalar helper: the exported scalars come back as 1-element vectors.
+fn scalar(v: &[f32], what: &str) -> Result<f32> {
+    v.first()
+        .copied()
+        .ok_or_else(|| FedAeError::Xla(format!("empty scalar output for {what}")))
+}
+
+/// One SGD step of a classifier (`<family>_train_step` artifact).
+#[derive(Debug)]
+pub struct TrainStep<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+}
+
+impl<'rt> TrainStep<'rt> {
+    pub fn new(rt: &'rt Runtime, family: &str) -> Result<Self> {
+        let m = rt.manifest().model(family)?;
+        Ok(TrainStep {
+            rt,
+            artifact: format!("{family}_train_step"),
+            batch: m.train_batch,
+            input_dim: m.input_dim,
+            classes: m.classes,
+        })
+    }
+
+    /// Run one step. `x` is `[batch * input_dim]`, `y_onehot` is
+    /// `[batch * classes]`. Returns (new_params, loss).
+    pub fn step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y_onehot: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let out = self.rt.run(&self.artifact, &[params, x, y_onehot, &[lr]])?;
+        let mut it = out.into_iter();
+        let params = it.next().unwrap();
+        let loss = scalar(&it.next().unwrap(), "loss")?;
+        Ok((params, loss))
+    }
+}
+
+/// Batched evaluation (`<family>_eval` artifact).
+#[derive(Debug)]
+pub struct EvalStep<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub classes: usize,
+}
+
+impl<'rt> EvalStep<'rt> {
+    pub fn new(rt: &'rt Runtime, family: &str) -> Result<Self> {
+        let m = rt.manifest().model(family)?;
+        Ok(EvalStep {
+            rt,
+            artifact: format!("{family}_eval"),
+            batch: m.eval_batch,
+            input_dim: m.input_dim,
+            classes: m.classes,
+        })
+    }
+
+    /// Returns (loss, accuracy) over one eval batch.
+    pub fn eval(&self, params: &[f32], x: &[f32], y_onehot: &[f32]) -> Result<(f32, f32)> {
+        let out = self.rt.run(&self.artifact, &[params, x, y_onehot])?;
+        Ok((scalar(&out[0], "loss")?, scalar(&out[1], "acc")?))
+    }
+}
+
+/// Adam state for AE training, kept as flat vectors.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl AdamState {
+    pub fn zeros(n: usize) -> AdamState {
+        AdamState {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0.0,
+        }
+    }
+}
+
+/// The full AE pipeline for one manifest AE entry: training, encode,
+/// decode and roundtrip, all as compiled artifacts.
+#[derive(Debug)]
+pub struct AePipeline<'rt> {
+    rt: &'rt Runtime,
+    pub tag: String,
+    pub input_dim: usize,
+    pub latent: usize,
+    pub n_params: usize,
+    pub encoder_params: usize,
+    pub decoder_params: usize,
+    pub train_batch: usize,
+}
+
+impl<'rt> AePipeline<'rt> {
+    pub fn new(rt: &'rt Runtime, tag: &str) -> Result<Self> {
+        let ae = rt.manifest().ae(tag)?;
+        Ok(AePipeline {
+            rt,
+            tag: tag.to_string(),
+            input_dim: ae.dims[0],
+            latent: ae.latent,
+            n_params: ae.n_params,
+            encoder_params: ae.encoder_params,
+            decoder_params: ae.decoder_params,
+            train_batch: ae.train_batch,
+        })
+    }
+
+    /// One Adam step over a batch of `train_batch` weight vectors.
+    /// Returns (mse, accuracy); params/state update in place.
+    pub fn train_step(
+        &self,
+        ae_params: &mut Vec<f32>,
+        adam: &mut AdamState,
+        batch: &[f32],
+    ) -> Result<(f32, f32)> {
+        adam.step += 1.0;
+        let out = self.rt.run(
+            &format!("ae_train_step_{}", self.tag),
+            &[ae_params, batch, &adam.m, &adam.v, &[adam.step]],
+        )?;
+        let mut it = out.into_iter();
+        *ae_params = it.next().unwrap();
+        adam.m = it.next().unwrap();
+        adam.v = it.next().unwrap();
+        let mse = scalar(&it.next().unwrap(), "mse")?;
+        let acc = scalar(&it.next().unwrap(), "acc")?;
+        Ok((mse, acc))
+    }
+
+    /// Split trained AE params into (encoder, decoder) halves — the paper's
+    /// pre-pass hand-off: encoder stays on the collaborator, decoder ships
+    /// to the aggregator.
+    pub fn split(&self, ae_params: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        if ae_params.len() != self.n_params {
+            return Err(FedAeError::Compression(format!(
+                "ae `{}` expects {} params, got {}",
+                self.tag,
+                self.n_params,
+                ae_params.len()
+            )));
+        }
+        Ok((
+            ae_params[..self.encoder_params].to_vec(),
+            ae_params[self.encoder_params..].to_vec(),
+        ))
+    }
+
+    /// Encoder: weight vector -> latent.
+    pub fn encode(&self, enc_params: &[f32], w: &[f32]) -> Result<Vec<f32>> {
+        let out = self
+            .rt
+            .run(&format!("encode_{}", self.tag), &[enc_params, w])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Decoder: latent -> reconstructed weight vector.
+    pub fn decode(&self, dec_params: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        let out = self
+            .rt
+            .run(&format!("decode_{}", self.tag), &[dec_params, z])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Whole-AE roundtrip with metrics: (reconstruction, mse, accuracy).
+    pub fn roundtrip(&self, ae_params: &[f32], w: &[f32]) -> Result<(Vec<f32>, f32, f32)> {
+        let out = self
+            .rt
+            .run(&format!("ae_roundtrip_{}", self.tag), &[ae_params, w])?;
+        let mut it = out.into_iter();
+        let recon = it.next().unwrap();
+        let mse = scalar(&it.next().unwrap(), "mse")?;
+        let acc = scalar(&it.next().unwrap(), "acc")?;
+        Ok((recon, mse, acc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests needing no artifacts; integration tests against the real
+    //! artifacts live in `rust/tests/runtime_integration.rs`.
+    use super::*;
+
+    #[test]
+    fn adam_state_zeros() {
+        let s = AdamState::zeros(4);
+        assert_eq!(s.m, vec![0.0; 4]);
+        assert_eq!(s.v, vec![0.0; 4]);
+        assert_eq!(s.step, 0.0);
+    }
+
+    #[test]
+    fn scalar_helper() {
+        assert_eq!(scalar(&[3.5], "x").unwrap(), 3.5);
+        assert!(scalar(&[], "x").is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Flat parameter-vector utilities.
+//!
+//! Models, updates and autoencoder parameters all travel through the
+//! system as flat `f32` vectors (the same layout the JAX side uses), so
+//! this module provides the vector algebra, statistics and (de)serialization
+//! the coordinator and compressors need. Hot-path functions are written as
+//! single-pass loops over slices; see EXPERIMENTS.md §Perf.
+
+use crate::error::{FedAeError, Result};
+
+/// Elementwise `a += b`.
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += *y;
+    }
+}
+
+/// Elementwise `a -= b`.
+pub fn sub_assign(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x -= *y;
+    }
+}
+
+/// `a += alpha * b` (saxpy).
+pub fn axpy(a: &mut [f32], alpha: f32, b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += alpha * *y;
+    }
+}
+
+/// Scale in place.
+pub fn scale(a: &mut [f32], alpha: f32) {
+    for x in a.iter_mut() {
+        *x *= alpha;
+    }
+}
+
+/// `out = a - b` into a fresh vector.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Mean squared error between two vectors.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// L2 norm.
+pub fn l2_norm(a: &[f32]) -> f64 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Cosine similarity; 0.0 when either vector is all-zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na = l2_norm(a);
+    let nb = l2_norm(b);
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+/// Summary statistics of a parameter vector (logged per round).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VecStats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f32,
+    pub max: f32,
+    pub l2: f64,
+}
+
+/// Single-pass mean/std/min/max/l2.
+pub fn stats(a: &[f32]) -> VecStats {
+    if a.is_empty() {
+        return VecStats {
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            l2: 0.0,
+        };
+    }
+    let mut sum = 0.0f64;
+    let mut sumsq = 0.0f64;
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in a {
+        let xd = x as f64;
+        sum += xd;
+        sumsq += xd * xd;
+        min = min.min(x);
+        max = max.max(x);
+    }
+    let n = a.len() as f64;
+    let mean = sum / n;
+    let var = (sumsq / n - mean * mean).max(0.0);
+    VecStats {
+        mean,
+        std: var.sqrt(),
+        min,
+        max,
+        l2: sumsq.sqrt(),
+    }
+}
+
+/// Fraction of coordinates where `|a - b| < tol` — the AE "accuracy"
+/// metric from the paper's Figs 4/6 (see python `model.AE_ACC_TOL`).
+pub fn within_tol_fraction(a: &[f32], b: &[f32], tol: f32) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 1.0;
+    }
+    let hits = a
+        .iter()
+        .zip(b)
+        .filter(|(x, y)| (*x - *y).abs() < tol)
+        .count();
+    hits as f64 / a.len() as f64
+}
+
+// --- raw f32 (de)serialization (LE) ----------------------------------------
+
+/// Encode a f32 slice as little-endian bytes (the wire / disk format).
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian bytes into f32s.
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(FedAeError::Protocol(format!(
+            "f32 payload length {} not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Load a raw little-endian f32 file (the `artifacts/init/*.bin` blobs).
+pub fn load_f32_file(path: impl AsRef<std::path::Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(&path)?;
+    bytes_to_f32s(&bytes).map_err(|_| {
+        FedAeError::Artifact(format!(
+            "{} is not a raw f32 file",
+            path.as_ref().display()
+        ))
+    })
+}
+
+/// Assert all values are finite (guards against NaN propagation through
+/// aggregation). Returns the first offending index.
+pub fn check_finite(a: &[f32]) -> std::result::Result<(), usize> {
+    for (i, &x) in a.iter().enumerate() {
+        if !x.is_finite() {
+            return Err(i);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = vec![1.0, 2.0];
+        axpy(&mut a, 2.0, &[10.0, 20.0]);
+        assert_eq!(a, vec![21.0, 42.0]);
+        scale(&mut a, 0.5);
+        assert_eq!(a, vec![10.5, 21.0]);
+    }
+
+    #[test]
+    fn add_sub() {
+        let mut a = vec![3.0, 4.0];
+        add_assign(&mut a, &[1.0, 1.0]);
+        assert_eq!(a, vec![4.0, 5.0]);
+        sub_assign(&mut a, &[4.0, 5.0]);
+        assert_eq!(a, vec![0.0, 0.0]);
+        assert_eq!(sub(&[5.0, 1.0], &[2.0, 1.0]), vec![3.0, 0.0]);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((mse(&[0.0, 0.0], &[3.0, 4.0]) - 12.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_single_pass_matches_naive() {
+        let v = vec![1.0f32, -2.0, 3.5, 0.0, 7.25];
+        let s = stats(&v);
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / 5.0;
+        assert!((s.mean - mean).abs() < 1e-12);
+        assert_eq!(s.min, -2.0);
+        assert_eq!(s.max, 7.25);
+        let var = v
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / 5.0;
+        assert!((s.std - var.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn within_tol() {
+        let f = within_tol_fraction(&[0.0, 0.0, 0.0, 0.0], &[0.0, 0.005, 0.02, 1.0], 0.01);
+        assert!((f - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let b = f32s_to_bytes(&v);
+        assert_eq!(b.len(), 16);
+        assert_eq!(bytes_to_f32s(&b).unwrap(), v);
+        assert!(bytes_to_f32s(&b[..3]).is_err());
+    }
+
+    #[test]
+    fn finite_check() {
+        assert!(check_finite(&[1.0, 2.0]).is_ok());
+        assert_eq!(check_finite(&[1.0, f32::NAN, 2.0]), Err(1));
+        assert_eq!(check_finite(&[f32::INFINITY]), Err(0));
+    }
+}

@@ -1,0 +1,150 @@
+//! Property-based testing mini-framework (no proptest in this sandbox).
+//!
+//! [`prop::check`] runs a property over many seeded random cases and, on
+//! failure, reports the failing case number and seed so the exact case can
+//! be replayed (`PropConfig::only_seed`). Generators are plain closures
+//! over [`crate::util::rng::Rng`], composing naturally with the crate's
+//! deterministic RNG.
+
+pub mod prop {
+    use crate::util::rng::Rng;
+
+    /// Property-run configuration.
+    #[derive(Debug, Clone)]
+    pub struct PropConfig {
+        /// Number of random cases.
+        pub cases: usize,
+        /// Base seed; case `i` uses `seed + i`.
+        pub seed: u64,
+        /// Replay a single failing case.
+        pub only_seed: Option<u64>,
+    }
+
+    impl Default for PropConfig {
+        fn default() -> Self {
+            PropConfig {
+                cases: 128,
+                seed: 0xF00D,
+                only_seed: None,
+            }
+        }
+    }
+
+    /// Run `property` over `cfg.cases` seeded RNGs. The property returns
+    /// `Err(reason)` to fail. Panics with seed info on first failure.
+    pub fn check_with<F>(cfg: &PropConfig, name: &str, mut property: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        if let Some(seed) = cfg.only_seed {
+            let mut rng = Rng::new(seed);
+            if let Err(why) = property(&mut rng) {
+                panic!("property `{name}` failed (replay seed {seed}): {why}");
+            }
+            return;
+        }
+        for case in 0..cfg.cases {
+            let seed = cfg.seed.wrapping_add(case as u64);
+            let mut rng = Rng::new(seed);
+            if let Err(why) = property(&mut rng) {
+                panic!(
+                    "property `{name}` failed on case {case}/{} (replay seed {seed}): {why}",
+                    cfg.cases
+                );
+            }
+        }
+    }
+
+    /// Run with default config (128 cases).
+    pub fn check<F>(name: &str, property: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        check_with(&PropConfig::default(), name, property);
+    }
+
+    // --- common generators --------------------------------------------------
+
+    /// Random f32 vector with entries in [-scale, scale].
+    pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.uniform_in(-scale, scale)).collect()
+    }
+
+    /// Random length in [lo, hi].
+    pub fn len_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Assert two f32 slices are elementwise close.
+    pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if (x - y).abs() > tol {
+                return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop::check("always_true", |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        prop::check("always_false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_are_bounded() {
+        prop::check("gen_bounds", |rng| {
+            let n = prop::len_in(rng, 1, 50);
+            if !(1..=50).contains(&n) {
+                return Err(format!("len {n} out of range"));
+            }
+            let v = prop::vec_f32(rng, n, 2.0);
+            if v.len() != n {
+                return Err("wrong length".into());
+            }
+            if v.iter().any(|x| x.abs() > 2.0) {
+                return Err("out of scale".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assert_close_checks() {
+        assert!(prop::assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(prop::assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(prop::assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+
+    #[test]
+    fn replay_single_seed() {
+        let cfg = prop::PropConfig {
+            only_seed: Some(42),
+            ..Default::default()
+        };
+        let mut calls = 0;
+        prop::check_with(&cfg, "replay", |_| {
+            calls += 1;
+            Ok(())
+        });
+        assert_eq!(calls, 1);
+    }
+}

@@ -1,0 +1,483 @@
+//! Wire protocol: framed messages between collaborators and the aggregator.
+//!
+//! Frame layout (little-endian): `[u32 payload_len][u16 kind][payload]`.
+//! The byte counts fed into the [`crate::network::TrafficLedger`] are real
+//! frame lengths from this module — the compression ratios reported in
+//! EXPERIMENTS.md are measured on-wire, not analytic.
+//!
+//! Two transports implement the same protocol:
+//! * [`InProcChannel`] — mpsc pairs for the single-process simulator.
+//! * [`TcpTransport`] — std::net TCP for the leader/worker deployment mode
+//!   (`fedae serve` / `fedae worker`).
+
+use std::io::{Read, Write};
+use std::sync::mpsc;
+
+use crate::error::{FedAeError, Result};
+use crate::tensor::{bytes_to_f32s, f32s_to_bytes};
+
+/// Protocol version; bump on wire-format changes.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// All protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Collaborator -> server: join the federation.
+    Hello { collab_id: u32, version: u16 },
+    /// Server -> collaborator: global model for a round.
+    GlobalModel { round: u32, params: Vec<f32> },
+    /// Collaborator -> server: one-time decoder shipment (pre-pass end).
+    DecoderShipment {
+        collab_id: u32,
+        ae_tag: String,
+        dec_params: Vec<f32>,
+    },
+    /// Collaborator -> server: compressed weight update for a round.
+    /// `payload` is a serialized [`crate::compression::CompressedUpdate`].
+    EncodedUpdate {
+        round: u32,
+        collab_id: u32,
+        n_samples: u32,
+        payload: Vec<u8>,
+    },
+    /// Collaborator -> server: local evaluation metrics.
+    EvalReport {
+        round: u32,
+        collab_id: u32,
+        loss: f32,
+        acc: f32,
+    },
+    /// Server -> collaborator: end of experiment.
+    Shutdown,
+}
+
+impl Message {
+    fn kind(&self) -> u16 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::GlobalModel { .. } => 2,
+            Message::DecoderShipment { .. } => 3,
+            Message::EncodedUpdate { .. } => 4,
+            Message::EvalReport { .. } => 5,
+            Message::Shutdown => 6,
+        }
+    }
+
+    /// Serialize into a complete frame (header + payload).
+    pub fn to_frame(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        match self {
+            Message::Hello { collab_id, version } => {
+                put_u32(&mut payload, *collab_id);
+                put_u16(&mut payload, *version);
+            }
+            Message::GlobalModel { round, params } => {
+                put_u32(&mut payload, *round);
+                put_u32(&mut payload, params.len() as u32);
+                payload.extend_from_slice(&f32s_to_bytes(params));
+            }
+            Message::DecoderShipment {
+                collab_id,
+                ae_tag,
+                dec_params,
+            } => {
+                put_u32(&mut payload, *collab_id);
+                put_str(&mut payload, ae_tag);
+                put_u32(&mut payload, dec_params.len() as u32);
+                payload.extend_from_slice(&f32s_to_bytes(dec_params));
+            }
+            Message::EncodedUpdate {
+                round,
+                collab_id,
+                n_samples,
+                payload: p,
+            } => {
+                put_u32(&mut payload, *round);
+                put_u32(&mut payload, *collab_id);
+                put_u32(&mut payload, *n_samples);
+                put_u32(&mut payload, p.len() as u32);
+                payload.extend_from_slice(p);
+            }
+            Message::EvalReport {
+                round,
+                collab_id,
+                loss,
+                acc,
+            } => {
+                put_u32(&mut payload, *round);
+                put_u32(&mut payload, *collab_id);
+                payload.extend_from_slice(&loss.to_le_bytes());
+                payload.extend_from_slice(&acc.to_le_bytes());
+            }
+            Message::Shutdown => {}
+        }
+        let mut frame = Vec::with_capacity(6 + payload.len());
+        put_u32(&mut frame, payload.len() as u32);
+        put_u16(&mut frame, self.kind());
+        frame.extend_from_slice(&payload);
+        frame
+    }
+
+    /// Size on the wire, computed analytically (no serialization — this is
+    /// on the coordinator's per-round hot path; see EXPERIMENTS.md §Perf).
+    /// Invariant `wire_bytes() == to_frame().len()` is property-tested.
+    pub fn wire_bytes(&self) -> u64 {
+        let payload = match self {
+            Message::Hello { .. } => 6,
+            Message::GlobalModel { params, .. } => 8 + 4 * params.len(),
+            Message::DecoderShipment {
+                ae_tag, dec_params, ..
+            } => 12 + ae_tag.len() + 4 * dec_params.len(),
+            Message::EncodedUpdate { payload, .. } => 16 + payload.len(),
+            Message::EvalReport { .. } => 16,
+            Message::Shutdown => 0,
+        };
+        6 + payload as u64
+    }
+
+    /// Parse one message from a complete frame.
+    pub fn from_frame(frame: &[u8]) -> Result<Message> {
+        if frame.len() < 6 {
+            return Err(FedAeError::Protocol("frame shorter than header".into()));
+        }
+        let len = u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]) as usize;
+        let kind = u16::from_le_bytes([frame[4], frame[5]]);
+        let payload = &frame[6..];
+        if payload.len() != len {
+            return Err(FedAeError::Protocol(format!(
+                "frame length mismatch: header says {len}, payload is {}",
+                payload.len()
+            )));
+        }
+        let mut cur = Cursor { buf: payload, pos: 0 };
+        let msg = match kind {
+            1 => Message::Hello {
+                collab_id: cur.u32()?,
+                version: cur.u16()?,
+            },
+            2 => {
+                let round = cur.u32()?;
+                let n = cur.u32()? as usize;
+                Message::GlobalModel {
+                    round,
+                    params: cur.f32s(n)?,
+                }
+            }
+            3 => {
+                let collab_id = cur.u32()?;
+                let ae_tag = cur.str()?;
+                let n = cur.u32()? as usize;
+                Message::DecoderShipment {
+                    collab_id,
+                    ae_tag,
+                    dec_params: cur.f32s(n)?,
+                }
+            }
+            4 => {
+                let round = cur.u32()?;
+                let collab_id = cur.u32()?;
+                let n_samples = cur.u32()?;
+                let n = cur.u32()? as usize;
+                Message::EncodedUpdate {
+                    round,
+                    collab_id,
+                    n_samples,
+                    payload: cur.bytes(n)?.to_vec(),
+                }
+            }
+            5 => Message::EvalReport {
+                round: cur.u32()?,
+                collab_id: cur.u32()?,
+                loss: cur.f32()?,
+                acc: cur.f32()?,
+            },
+            6 => Message::Shutdown,
+            other => {
+                return Err(FedAeError::Protocol(format!(
+                    "unknown message kind {other}"
+                )))
+            }
+        };
+        if cur.pos != payload.len() {
+            return Err(FedAeError::Protocol(format!(
+                "trailing bytes in frame: consumed {}, payload {}",
+                cur.pos,
+                payload.len()
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(FedAeError::Protocol(format!(
+                "truncated frame: wanted {n} bytes at {}, have {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.bytes(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        bytes_to_f32s(self.bytes(n * 4)?)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| FedAeError::Protocol("non-utf8 string field".into()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transports
+// ---------------------------------------------------------------------------
+
+/// Bidirectional in-process message channel (one endpoint).
+#[derive(Debug)]
+pub struct InProcChannel {
+    pub tx: mpsc::Sender<Message>,
+    pub rx: mpsc::Receiver<Message>,
+}
+
+impl InProcChannel {
+    /// Create a connected (server_end, client_end) pair.
+    pub fn pair() -> (InProcChannel, InProcChannel) {
+        let (tx_a, rx_b) = mpsc::channel();
+        let (tx_b, rx_a) = mpsc::channel();
+        (
+            InProcChannel { tx: tx_a, rx: rx_a },
+            InProcChannel { tx: tx_b, rx: rx_b },
+        )
+    }
+
+    pub fn send(&self, msg: Message) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| FedAeError::Protocol("peer hung up".into()))
+    }
+
+    pub fn recv(&self) -> Result<Message> {
+        self.rx
+            .recv()
+            .map_err(|_| FedAeError::Protocol("peer hung up".into()))
+    }
+
+    pub fn try_recv(&self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// TCP transport: blocking framed reads/writes over a socket.
+#[derive(Debug)]
+pub struct TcpTransport {
+    stream: std::net::TcpStream,
+}
+
+impl TcpTransport {
+    pub fn new(stream: std::net::TcpStream) -> TcpTransport {
+        stream.set_nodelay(true).ok();
+        TcpTransport { stream }
+    }
+
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        Ok(TcpTransport::new(std::net::TcpStream::connect(addr)?))
+    }
+
+    /// Write one message; returns bytes written (for the ledger).
+    pub fn send(&mut self, msg: &Message) -> Result<u64> {
+        let frame = msg.to_frame();
+        self.stream.write_all(&frame)?;
+        Ok(frame.len() as u64)
+    }
+
+    /// Blocking read of one message.
+    pub fn recv(&mut self) -> Result<Message> {
+        let mut header = [0u8; 6];
+        self.stream.read_exact(&mut header)?;
+        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+        const MAX_FRAME: usize = 1 << 30;
+        if len > MAX_FRAME {
+            return Err(FedAeError::Protocol(format!("frame too large: {len}")));
+        }
+        let mut frame = header.to_vec();
+        frame.resize(6 + len, 0);
+        self.stream.read_exact(&mut frame[6..])?;
+        Message::from_frame(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let frame = msg.to_frame();
+        assert_eq!(frame.len() as u64, msg.wire_bytes());
+        let back = Message::from_frame(&frame).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Message::Hello {
+            collab_id: 3,
+            version: PROTOCOL_VERSION,
+        });
+        roundtrip(Message::GlobalModel {
+            round: 7,
+            params: vec![1.0, -2.5, 3.25],
+        });
+        roundtrip(Message::DecoderShipment {
+            collab_id: 1,
+            ae_tag: "mnist".into(),
+            dec_params: vec![0.5; 10],
+        });
+        roundtrip(Message::EncodedUpdate {
+            round: 2,
+            collab_id: 0,
+            n_samples: 128,
+            payload: vec![1, 2, 3, 4, 5],
+        });
+        roundtrip(Message::EvalReport {
+            round: 4,
+            collab_id: 9,
+            loss: 0.25,
+            acc: 0.9,
+        });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn wire_bytes_reflect_compression() {
+        // A 32-float latent frame must be ~500x smaller than a 15910-float raw frame.
+        let raw = Message::GlobalModel {
+            round: 0,
+            params: vec![0.0; 15910],
+        };
+        let latent = Message::EncodedUpdate {
+            round: 0,
+            collab_id: 0,
+            n_samples: 1,
+            payload: vec![0u8; 32 * 4],
+        };
+        let ratio = raw.wire_bytes() as f64 / latent.wire_bytes() as f64;
+        assert!(ratio > 400.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rejects_malformed_frames() {
+        assert!(Message::from_frame(&[0, 0]).is_err()); // short header
+        let mut frame = Message::Shutdown.to_frame();
+        frame[0] = 99; // header length lies
+        assert!(Message::from_frame(&frame).is_err());
+        // Unknown kind.
+        let mut frame = Message::Shutdown.to_frame();
+        frame[4] = 42;
+        assert!(Message::from_frame(&frame).is_err());
+        // Truncated interior.
+        let good = Message::GlobalModel {
+            round: 1,
+            params: vec![1.0; 4],
+        }
+        .to_frame();
+        let mut bad = good.clone();
+        bad.truncate(good.len() - 4);
+        bad[0..4].copy_from_slice(&(((good.len() - 6 - 4) as u32).to_le_bytes()));
+        assert!(Message::from_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut frame = Message::EvalReport {
+            round: 0,
+            collab_id: 0,
+            loss: 1.0,
+            acc: 0.5,
+        }
+        .to_frame();
+        frame.extend_from_slice(&[0, 0, 0, 0]);
+        frame[0..4].copy_from_slice(&20u32.to_le_bytes()); // 16 + 4 trailing
+        assert!(Message::from_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn inproc_pair_duplex() {
+        let (server, client) = InProcChannel::pair();
+        client
+            .send(Message::Hello {
+                collab_id: 1,
+                version: PROTOCOL_VERSION,
+            })
+            .unwrap();
+        match server.recv().unwrap() {
+            Message::Hello { collab_id, .. } => assert_eq!(collab_id, 1),
+            m => panic!("unexpected {m:?}"),
+        }
+        server.send(Message::Shutdown).unwrap();
+        assert_eq!(client.recv().unwrap(), Message::Shutdown);
+        assert!(client.try_recv().is_none());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::new(stream);
+            let msg = t.recv().unwrap();
+            t.send(&msg).unwrap(); // echo
+        });
+        let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
+        let msg = Message::EncodedUpdate {
+            round: 5,
+            collab_id: 2,
+            n_samples: 64,
+            payload: vec![9; 128],
+        };
+        let sent = c.send(&msg).unwrap();
+        assert_eq!(sent, msg.wire_bytes());
+        assert_eq!(c.recv().unwrap(), msg);
+        handle.join().unwrap();
+    }
+}

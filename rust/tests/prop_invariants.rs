@@ -1,0 +1,466 @@
+//! Property-based invariants (crate-local mini-proptest, no artifacts
+//! needed): coordinator state machine, ledger conservation, compressor
+//! round-trips, aggregation bounds, savings-model monotonicity, wire
+//! formats, JSON round-trips.
+
+use fedae::aggregation::{self, Aggregator, WeightedUpdate};
+use fedae::compression::{self, CompressedUpdate, UpdateCompressor};
+use fedae::config::{AggregationConfig, CompressionConfig};
+use fedae::coordinator::RoundState;
+use fedae::network::{Direction, SimulatedNetwork, TrafficKind, Link};
+use fedae::savings::SavingsModel;
+use fedae::testing::prop;
+use fedae::transport::Message;
+use fedae::util::json::Json;
+
+#[test]
+fn prop_ledger_conservation_under_random_traffic() {
+    prop::check("ledger_conservation", |rng| {
+        let mut net = SimulatedNetwork::new(Link {
+            bandwidth_bps: 1e6 + rng.uniform() * 1e9,
+            latency_s: rng.uniform() * 0.1,
+        });
+        let n = prop::len_in(rng, 1, 200);
+        let mut expected_total = 0u64;
+        for _ in 0..n {
+            let bytes = rng.below(100_000) as u64;
+            let dir = if rng.below(2) == 0 {
+                Direction::Up
+            } else {
+                Direction::Down
+            };
+            let kind = TrafficKind::ALL[rng.below(4)];
+            net.send(rng.below(50), rng.below(10), dir, kind, bytes);
+            expected_total += bytes;
+        }
+        if net.ledger().total_bytes() != expected_total {
+            return Err(format!(
+                "total {} != expected {expected_total}",
+                net.ledger().total_bytes()
+            ));
+        }
+        if !net.ledger().check_conservation() {
+            return Err("by-kind index does not match log".into());
+        }
+        // Per-kind sums partition the total.
+        let mut sum = 0u64;
+        for dir in [Direction::Up, Direction::Down] {
+            for kind in TrafficKind::ALL {
+                sum += net.ledger().bytes_for(dir, kind);
+            }
+        }
+        if sum != expected_total {
+            return Err(format!("partition sum {sum} != {expected_total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_state_no_double_counting() {
+    prop::check("round_state", |rng| {
+        let n = prop::len_in(rng, 1, 20);
+        let round = rng.below(100);
+        let mut state = RoundState::new(round, 0..n);
+        let mut accepted = 0;
+        // Random interleaving of valid + invalid accepts.
+        for _ in 0..n * 3 {
+            let collab = rng.below(n * 2); // half are unknown
+            let r = if rng.below(4) == 0 { round + 1 } else { round };
+            let ok = state
+                .accept(
+                    r,
+                    collab,
+                    1,
+                    CompressedUpdate::Raw { values: vec![0.0] },
+                )
+                .is_ok();
+            if ok {
+                accepted += 1;
+            }
+        }
+        if state.received_count() != accepted {
+            return Err(format!(
+                "received {} != accepted {accepted}",
+                state.received_count()
+            ));
+        }
+        if state.received_count() + state.missing().len() != n {
+            return Err("received + missing != expected".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_error_bounded_by_half_step() {
+    prop::check("quantize_error_bound", |rng| {
+        let bits = 1 + rng.below(8) as u8;
+        let n = prop::len_in(rng, 1, 400);
+        let scale = (rng.uniform() * 10.0 + 0.01) as f32;
+        let w = prop::vec_f32(rng, n, scale);
+        let mut c =
+            compression::quantize::QuantizeCompressor::new(bits, false, rng.next_u64()).unwrap();
+        let u = c.compress(0, &w).unwrap();
+        let out = c.decompress(&u).unwrap();
+        let (lo, hi) = w
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| {
+                (l.min(x), h.max(x))
+            });
+        let step = (hi - lo) / ((1u32 << bits) - 1) as f32;
+        for (i, (a, b)) in w.iter().zip(&out).enumerate() {
+            if (a - b).abs() > step / 2.0 + 1e-5 {
+                return Err(format!(
+                    "bits={bits} i={i}: |{a}-{b}| > step/2 ({})",
+                    step / 2.0
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_communicated_plus_residual_conserves_mass() {
+    prop::check("topk_conservation", |rng| {
+        let n = prop::len_in(rng, 4, 128);
+        let fraction = 0.05 + rng.uniform() * 0.5;
+        let mut c = compression::topk::TopKCompressor::new(n, fraction).unwrap();
+        let rounds = prop::len_in(rng, 1, 10);
+        let mut fed = vec![0.0f64; n];
+        let mut sent = vec![0.0f64; n];
+        for round in 0..rounds {
+            let w = prop::vec_f32(rng, n, 1.0);
+            for (f, &x) in fed.iter_mut().zip(&w) {
+                *f += x as f64;
+            }
+            let u = c.compress(round, &w).unwrap();
+            let d = c.decompress(&u).unwrap();
+            for (s, &x) in sent.iter_mut().zip(&d) {
+                *s += x as f64;
+            }
+        }
+        // fed == sent + residual, coordinate-wise.
+        let residual_l2 = c.residual_l2();
+        let discrepancy: f64 = fed
+            .iter()
+            .zip(&sent)
+            .map(|(f, s)| (f - s).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        if (discrepancy - residual_l2).abs() > 1e-3 * (1.0 + residual_l2) {
+            return Err(format!(
+                "||fed - sent|| = {discrepancy} but residual L2 = {residual_l2}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compressed_update_wire_roundtrip() {
+    prop::check("compressed_update_wire", |rng| {
+        let n = prop::len_in(rng, 1, 200);
+        let update = match rng.below(5) {
+            0 => CompressedUpdate::Raw {
+                values: prop::vec_f32(rng, n, 3.0),
+            },
+            1 => CompressedUpdate::Latent {
+                z: prop::vec_f32(rng, n.min(64), 1.0),
+                n: n as u32,
+            },
+            2 => {
+                let k = prop::len_in(rng, 1, n);
+                CompressedUpdate::Sparse {
+                    indices: (0..k).map(|_| rng.below(n) as u32).collect(),
+                    values: prop::vec_f32(rng, k, 2.0),
+                    n: n as u32,
+                }
+            }
+            3 => CompressedUpdate::Quantized {
+                bits: 1 + rng.below(16) as u8,
+                min: rng.uniform_in(-5.0, 0.0),
+                scale: rng.uniform_in(0.0, 1.0),
+                packed: (0..prop::len_in(rng, 1, 128))
+                    .map(|_| rng.below(256) as u8)
+                    .collect(),
+                n: n as u32,
+            },
+            _ => {
+                let rows = prop::len_in(rng, 1, 5);
+                let cols = prop::len_in(rng, 1, 32);
+                CompressedUpdate::Sketch {
+                    rows: rows as u32,
+                    cols: cols as u32,
+                    table: prop::vec_f32(rng, rows * cols, 1.0),
+                    seed: rng.next_u64(),
+                    n: n as u32,
+                }
+            }
+        };
+        let bytes = update.to_bytes();
+        let back = CompressedUpdate::from_bytes(&bytes)
+            .map_err(|e| format!("parse failed: {e}"))?;
+        if back != update {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transport_frames_roundtrip() {
+    prop::check("transport_frames", |rng| {
+        let msg = match rng.below(6) {
+            0 => Message::Hello {
+                collab_id: rng.below(1000) as u32,
+                version: rng.below(10) as u16,
+            },
+            1 => {
+                let n = prop::len_in(rng, 0, 300);
+                Message::GlobalModel {
+                    round: rng.below(500) as u32,
+                    params: prop::vec_f32(rng, n, 1.0),
+                }
+            }
+            2 => {
+                let n = prop::len_in(rng, 0, 100);
+                Message::DecoderShipment {
+                    collab_id: rng.below(50) as u32,
+                    ae_tag: ["mnist", "cifar", "mnist_deep", ""][rng.below(4)].to_string(),
+                    dec_params: prop::vec_f32(rng, n, 1.0),
+                }
+            }
+            3 => Message::EncodedUpdate {
+                round: rng.below(500) as u32,
+                collab_id: rng.below(50) as u32,
+                n_samples: rng.below(10_000) as u32,
+                payload: (0..prop::len_in(rng, 0, 256))
+                    .map(|_| rng.below(256) as u8)
+                    .collect(),
+            },
+            4 => Message::EvalReport {
+                round: rng.below(500) as u32,
+                collab_id: rng.below(50) as u32,
+                loss: rng.uniform_in(0.0, 10.0),
+                acc: rng.uniform_in(0.0, 1.0),
+            },
+            _ => Message::Shutdown,
+        };
+        let frame = msg.to_frame();
+        let back = Message::from_frame(&frame).map_err(|e| format!("{e}"))?;
+        if back != msg {
+            return Err("frame roundtrip mismatch".into());
+        }
+        if frame.len() as u64 != msg.wire_bytes() {
+            return Err("wire_bytes inconsistent".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregators_bounded_by_input_envelope() {
+    prop::check("aggregation_envelope", |rng| {
+        let n = prop::len_in(rng, 1, 50);
+        let m = prop::len_in(rng, 1, 8);
+        let updates: Vec<WeightedUpdate> = (0..m)
+            .map(|_| WeightedUpdate {
+                weight: 1.0 + rng.uniform() * 10.0,
+                values: prop::vec_f32(rng, n, 5.0),
+            })
+            .collect();
+        for cfg in [
+            AggregationConfig::FedAvg,
+            AggregationConfig::Mean,
+            AggregationConfig::Median,
+        ] {
+            let mut agg = aggregation::from_config(&cfg).unwrap();
+            let out = agg.aggregate(&updates).map_err(|e| format!("{e}"))?;
+            for i in 0..n {
+                let lo = updates
+                    .iter()
+                    .map(|u| u.values[i])
+                    .fold(f32::INFINITY, f32::min);
+                let hi = updates
+                    .iter()
+                    .map(|u| u.values[i])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                if out[i] < lo - 1e-5 || out[i] > hi + 1e-5 {
+                    return Err(format!(
+                        "{}: coord {i} = {} outside [{lo}, {hi}]",
+                        agg.name(),
+                        out[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fedavg_equal_weights_equals_mean() {
+    prop::check("fedavg_vs_mean", |rng| {
+        let n = prop::len_in(rng, 1, 64);
+        let m = prop::len_in(rng, 1, 6);
+        let updates: Vec<WeightedUpdate> = (0..m)
+            .map(|_| WeightedUpdate {
+                weight: 3.0,
+                values: prop::vec_f32(rng, n, 2.0),
+            })
+            .collect();
+        let a = aggregation::FedAvg.aggregate(&updates).unwrap();
+        let b = aggregation::Mean.aggregate(&updates).unwrap();
+        prop::assert_close(&a, &b, 1e-5)
+    });
+}
+
+#[test]
+fn prop_savings_ratio_monotone_and_bounded() {
+    prop::check("savings_monotone", |rng| {
+        let orig = 1_000.0 + rng.uniform() * 1e6;
+        let comp = 1.0 + rng.uniform() * (orig / 10.0);
+        let ae = orig * (2.0 + rng.uniform() * 100.0);
+        let m = SavingsModel {
+            original_size: orig,
+            compressed_size: comp,
+            autoencoder_size: ae,
+        };
+        let rounds = 1 + rng.below(500);
+        // Monotone in collaborators, bounded by compression ratio.
+        let mut prev = 0.0;
+        for c in [1usize, 2, 8, 64, 512, 4096] {
+            let sr = m
+                .savings_ratio_single_decoder(rounds, c)
+                .map_err(|e| format!("{e}"))?;
+            if sr < prev {
+                return Err(format!("SR not monotone at C={c}: {sr} < {prev}"));
+            }
+            if sr > m.compression_ratio() {
+                return Err(format!("SR {sr} exceeds compression ratio"));
+            }
+            prev = sr;
+        }
+        // Case (b) really is collaborator-independent.
+        let a = m
+            .savings_ratio_per_collab_decoders(rounds, 1)
+            .map_err(|e| format!("{e}"))?;
+        let b = m
+            .savings_ratio_per_collab_decoders(rounds, 1 + rng.below(1000))
+            .map_err(|e| format!("{e}"))?;
+        if (a - b).abs() > 1e-9 * (1.0 + a.abs()) {
+            return Err(format!("case (b) depends on collaborators: {a} vs {b}"));
+        }
+        // Break-even brackets SR = 1.
+        if let Ok(be) = m.breakeven_collabs_single_decoder(rounds) {
+            let sr = m.savings_ratio_single_decoder(rounds, be).unwrap();
+            if sr < 1.0 {
+                return Err(format!("break-even {be} has SR {sr} < 1"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subsample_mask_shared_between_sides() {
+    prop::check("subsample_shared_mask", |rng| {
+        let n = prop::len_in(rng, 2, 300);
+        let fraction = 0.05 + rng.uniform() * 0.9;
+        let seed = rng.next_u64();
+        // Collaborator and server build independent instances from the seed.
+        let mut collab =
+            compression::subsample::SubsampleCompressor::new(n, fraction, seed).unwrap();
+        let mut server =
+            compression::subsample::SubsampleCompressor::new(n, fraction, seed).unwrap();
+        let w = prop::vec_f32(rng, n, 1.0);
+        let round = rng.below(100);
+        let u = collab.compress(round, &w).unwrap();
+        let out = server.decompress(&u).unwrap();
+        // Every nonzero output coordinate matches the input exactly.
+        for (a, b) in out.iter().zip(&w) {
+            if *a != 0.0 && a != b {
+                return Err(format!("mismatch {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_value_roundtrip() {
+    prop::check("json_roundtrip", |rng| {
+        fn gen(rng: &mut fedae::util::rng::Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.below(2) == 0),
+                2 => Json::Num((rng.uniform() * 2e6 - 1e6).round() / 8.0),
+                3 => Json::Str(
+                    (0..rng.below(12))
+                        .map(|_| {
+                            let chars = ['a', 'Z', '0', ' ', '"', '\\', '\n', 'é', '☃'];
+                            chars[rng.below(chars.len())]
+                        })
+                        .collect(),
+                ),
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        for serialized in [v.to_string(), v.to_string_pretty()] {
+            let back = Json::parse(&serialized).map_err(|e| format!("{e}: {serialized}"))?;
+            if back != v {
+                return Err(format!("roundtrip mismatch: {serialized}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compressors_from_config_roundtrip_dimensionality() {
+    prop::check("compressor_dims", |rng| {
+        let n = prop::len_in(rng, 8, 256);
+        let w = prop::vec_f32(rng, n, 1.0);
+        let cfgs = [
+            CompressionConfig::Identity,
+            CompressionConfig::TopK {
+                fraction: 0.1 + rng.uniform() * 0.9,
+            },
+            CompressionConfig::Quantize {
+                bits: 1 + rng.below(16) as u8,
+                stochastic: rng.below(2) == 0,
+            },
+            CompressionConfig::Subsample {
+                fraction: 0.1 + rng.uniform() * 0.9,
+            },
+            CompressionConfig::Sketch {
+                rows: 1 + rng.below(5),
+                cols: 8 + rng.below(64),
+                topk: 1 + rng.below(n),
+            },
+        ];
+        for cfg in cfgs {
+            let seed = rng.next_u64();
+            let mut c = compression::from_config(&cfg, n, seed).unwrap();
+            let mut d = compression::from_config(&cfg, n, seed).unwrap();
+            let u = c.compress(0, &w).map_err(|e| format!("{e}"))?;
+            let out = d.decompress(&u).map_err(|e| format!("{e}"))?;
+            if out.len() != n {
+                return Err(format!(
+                    "{}: decompressed {} dims, expected {n}",
+                    c.name(),
+                    out.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}

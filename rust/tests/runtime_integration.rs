@@ -1,0 +1,217 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! Gated on `artifacts/manifest.json` existing (run `make artifacts`); in a
+//! fresh checkout each test skips with a message instead of failing.
+
+use fedae::runtime::{AdamState, AePipeline, EvalStep, Runtime, TrainStep};
+use fedae::tensor;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::from_dir("artifacts").expect("runtime loads"))
+}
+
+macro_rules! rt_or_skip {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn manifest_matches_paper_constants() {
+    let rt = rt_or_skip!();
+    let m = rt.manifest();
+    // Paper §4.1 / §5.1 exact numbers.
+    assert_eq!(m.model("mnist").unwrap().n_params, 15_910);
+    assert_eq!(m.ae("mnist").unwrap().n_params, 1_034_182);
+    assert_eq!(m.ae("mnist").unwrap().latent, 32);
+    let ratio = m.ae("mnist").unwrap().compression_ratio;
+    assert!((490.0..500.0).contains(&ratio), "~500x, got {ratio}");
+    let cifar_ratio = m.ae("cifar").unwrap().compression_ratio;
+    assert!((1600.0..1721.0).contains(&cifar_ratio), "~1720x, got {cifar_ratio}");
+}
+
+#[test]
+fn init_blobs_load_and_are_finite() {
+    let rt = rt_or_skip!();
+    for name in [
+        "mnist_params",
+        "cifar_params",
+        "ae_mnist_init",
+        "ae_cifar_init",
+        "ae_mnist_deep_init",
+    ] {
+        let v = rt.load_init(name).unwrap();
+        assert!(!v.is_empty(), "{name} empty");
+        assert!(tensor::check_finite(&v).is_ok(), "{name} has non-finite");
+    }
+    assert!(rt.load_init("nope").is_err());
+}
+
+#[test]
+fn train_step_reduces_loss_over_steps() {
+    let rt = rt_or_skip!();
+    let ts = TrainStep::new(&rt, "mnist").unwrap();
+    let mut params = rt.load_init("mnist_params").unwrap();
+    // Deterministic toy batch: one-hot-ish patterns per class.
+    let mut x = vec![0.0f32; ts.batch * ts.input_dim];
+    let mut y = vec![0.0f32; ts.batch * ts.classes];
+    for b in 0..ts.batch {
+        let cls = b % 10;
+        for px in 0..20 {
+            x[b * ts.input_dim + cls * 20 + px] = 1.0;
+        }
+        y[b * ts.classes + cls] = 1.0;
+    }
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        let (p, loss) = ts.step(&params, &x, &y, 0.1).unwrap();
+        params = p;
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    assert!(
+        last < first.unwrap() * 0.5,
+        "loss {} -> {last} did not halve",
+        first.unwrap()
+    );
+}
+
+#[test]
+fn eval_matches_train_loss_shape() {
+    let rt = rt_or_skip!();
+    let ev = EvalStep::new(&rt, "mnist").unwrap();
+    let params = rt.load_init("mnist_params").unwrap();
+    let x = vec![0.1f32; ev.batch * ev.input_dim];
+    let mut y = vec![0.0f32; ev.batch * ev.classes];
+    for b in 0..ev.batch {
+        y[b * ev.classes + b % 10] = 1.0;
+    }
+    let (loss, acc) = ev.eval(&params, &x, &y).unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let rt = rt_or_skip!();
+    // Too few inputs.
+    assert!(rt.run("mnist_eval", &[&[0.0]]).is_err());
+    // Wrong element count.
+    let bad = vec![0.0f32; 3];
+    let m = rt.manifest().model("mnist").unwrap().clone();
+    let x = vec![0.0f32; m.eval_batch * m.input_dim];
+    let y = vec![0.0f32; m.eval_batch * 10];
+    assert!(rt.run("mnist_eval", &[&bad, &x, &y]).is_err());
+    // Unknown artifact.
+    assert!(rt.run("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn encode_decode_split_consistency() {
+    let rt = rt_or_skip!();
+    let pipe = AePipeline::new(&rt, "mnist").unwrap();
+    let ae_params = rt.load_init("ae_mnist_init").unwrap();
+    let (enc, dec) = pipe.split(&ae_params).unwrap();
+    assert_eq!(enc.len(), pipe.encoder_params);
+    assert_eq!(dec.len(), pipe.decoder_params);
+
+    let w = rt.load_init("mnist_params").unwrap();
+    let z = pipe.encode(&enc, &w).unwrap();
+    assert_eq!(z.len(), pipe.latent);
+    let recon = pipe.decode(&dec, &z).unwrap();
+    assert_eq!(recon.len(), pipe.input_dim);
+
+    // encode∘decode == roundtrip artifact (same HLO graph pieces).
+    let (recon2, mse, acc) = pipe.roundtrip(&ae_params, &w).unwrap();
+    for (a, b) in recon.iter().zip(&recon2) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+    // Artifact-reported MSE matches rust-side computation.
+    let rust_mse = tensor::mse(&w, &recon2) as f32;
+    assert!(
+        (mse - rust_mse).abs() < 1e-6 * (1.0 + mse.abs()),
+        "artifact mse {mse} vs rust {rust_mse}"
+    );
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(pipe.split(&ae_params[..100]).is_err());
+}
+
+#[test]
+fn ae_train_step_learns_constant_batch() {
+    let rt = rt_or_skip!();
+    let pipe = AePipeline::new(&rt, "mnist").unwrap();
+    let mut ae = rt.load_init("ae_mnist_init").unwrap();
+    let mut adam = AdamState::zeros(ae.len());
+    let w = rt.load_init("mnist_params").unwrap();
+    let mut batch = Vec::with_capacity(pipe.train_batch * pipe.input_dim);
+    for _ in 0..pipe.train_batch {
+        batch.extend_from_slice(&w);
+    }
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let (mse, _acc) = pipe.train_step(&mut ae, &mut adam, &batch).unwrap();
+        if first.is_none() {
+            first = Some(mse);
+        }
+        last = mse;
+    }
+    assert!(
+        last < first.unwrap() * 0.2,
+        "AE mse {} -> {last}: not learning",
+        first.unwrap()
+    );
+    assert_eq!(adam.step, 25.0);
+}
+
+#[test]
+fn deep_ae_variant_works() {
+    let rt = rt_or_skip!();
+    let pipe = AePipeline::new(&rt, "mnist_deep").unwrap();
+    let ae = rt.load_init("ae_mnist_deep_init").unwrap();
+    let w = rt.load_init("mnist_params").unwrap();
+    let (recon, mse, _) = pipe.roundtrip(&ae, &w).unwrap();
+    assert_eq!(recon.len(), 15_910);
+    assert!(mse.is_finite());
+    assert_eq!(pipe.latent, 16);
+}
+
+#[test]
+fn warmup_compiles_artifacts() {
+    let rt = rt_or_skip!();
+    rt.warmup(&["mnist_eval", "encode_mnist"]).unwrap();
+    assert!(rt.warmup(&["missing_artifact"]).is_err());
+}
+
+#[test]
+fn cifar_pipeline_end_to_end() {
+    let rt = rt_or_skip!();
+    let ts = TrainStep::new(&rt, "cifar").unwrap();
+    let params = rt.load_init("cifar_params").unwrap();
+    let x = vec![0.2f32; ts.batch * ts.input_dim];
+    let mut y = vec![0.0f32; ts.batch * ts.classes];
+    for b in 0..ts.batch {
+        y[b * ts.classes + b % 10] = 1.0;
+    }
+    let (p2, loss) = ts.step(&params, &x, &y, 0.01).unwrap();
+    assert_eq!(p2.len(), 51_082);
+    assert!(loss.is_finite());
+
+    let pipe = AePipeline::new(&rt, "cifar").unwrap();
+    let ae = rt.load_init("ae_cifar_init").unwrap();
+    let (enc, dec) = pipe.split(&ae).unwrap();
+    let z = pipe.encode(&enc, &p2).unwrap();
+    assert_eq!(z.len(), 30);
+    let recon = pipe.decode(&dec, &z).unwrap();
+    assert_eq!(recon.len(), 51_082);
+}
