@@ -12,7 +12,7 @@
 //! cargo run --release --example baseline_comparison [-- --rounds 8]
 //! ```
 
-use anyhow::Result;
+use fedae::error::Result;
 use fedae::config::{CompressionConfig, ExperimentConfig};
 use fedae::coordinator::FlDriver;
 use fedae::metrics::print_table;

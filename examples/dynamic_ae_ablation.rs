@@ -14,7 +14,7 @@
 //! cargo run --release --example dynamic_ae_ablation
 //! ```
 
-use anyhow::Result;
+use fedae::error::Result;
 use fedae::collaborator::{run_prepass, validation_model};
 use fedae::config::{ExperimentConfig, Sharding};
 use fedae::data::{make_shards, SynthKind};

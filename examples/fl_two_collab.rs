@@ -16,7 +16,7 @@
 //! The run (loss curve, measured on-wire ratio) is recorded in
 //! EXPERIMENTS.md §E5/E6.
 
-use anyhow::Result;
+use fedae::error::Result;
 use fedae::config::{CompressionConfig, ExperimentConfig, Sharding};
 use fedae::coordinator::FlDriver;
 use fedae::metrics::{ascii_plot, print_table};

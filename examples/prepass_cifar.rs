@@ -13,7 +13,7 @@
 //! cargo run --release --example prepass_cifar [-- --epochs 40 --ae-epochs 30]
 //! ```
 
-use anyhow::Result;
+use fedae::error::Result;
 use fedae::collaborator::{run_prepass, validation_model};
 use fedae::config::{ExperimentConfig, Sharding};
 use fedae::data::{make_shards, SynthKind};

@@ -1,21 +1,23 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
-//! Loads the AOT artifacts, runs the paper's pre-pass round for one
-//! collaborator (AE training on logged weight snapshots), then runs a few
-//! AE-compressed federated rounds and prints what travelled on the wire.
+//! Runs the paper's pre-pass round per collaborator (AE training on logged
+//! weight snapshots), then a few AE-compressed federated rounds, and prints
+//! what travelled on the wire. Works from a clean checkout on the native
+//! backend; with `--features xla` + compiled artifacts it runs the PJRT
+//! fast path instead.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
-use anyhow::Result;
+use fedae::error::Result;
 use fedae::config::{CompressionConfig, ExperimentConfig};
 use fedae::coordinator::FlDriver;
 use fedae::runtime::{AePipeline, Runtime};
 use fedae::util::human_bytes;
 
 fn main() -> Result<()> {
-    // 1. Load the PJRT runtime over the AOT-compiled artifacts.
+    // 1. Load the runtime (native backend, or PJRT over AOT artifacts).
     let rt = Runtime::from_dir("artifacts")?;
     println!("runtime: platform={}", rt.platform_name());
 

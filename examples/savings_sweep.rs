@@ -16,7 +16,7 @@
 //! cargo run --release --example savings_sweep
 //! ```
 
-use anyhow::Result;
+use fedae::error::Result;
 use fedae::metrics::{ascii_plot, print_table};
 use fedae::savings::{from_measured, PAPER_CIFAR, REPO_MNIST};
 use fedae::util::cli::Args;

@@ -10,7 +10,7 @@ use fedae::metrics::print_table;
 use fedae::util::bench_timings;
 use fedae::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fedae::error::Result<()> {
     println!("== baseline compressor micro-benchmarks ==");
     let mut rng = Rng::new(7);
     for &n in &[15_910usize, 51_082, 550_570] {

@@ -13,7 +13,7 @@ use fedae::metrics::print_table;
 use fedae::util::bench_timings;
 use fedae::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fedae::error::Result<()> {
     println!("== L3 coordinator micro-benchmarks (no PJRT) ==");
     let n = 51_082; // CIFAR-shaped update
     let mut rng = Rng::new(3);

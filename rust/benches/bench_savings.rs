@@ -7,7 +7,7 @@ use fedae::metrics::print_table;
 use fedae::savings::{PAPER_CIFAR, REPO_MNIST};
 use fedae::util::bench_timings;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fedae::error::Result<()> {
     println!("== E7 (Fig 10): SR vs collaborators, single decoder ==");
     let collab_grid: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 40, 64, 128, 256, 512, 1000, 2000, 5000];
     let mut rows = Vec::new();

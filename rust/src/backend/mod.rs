@@ -1,0 +1,54 @@
+//! Compute backends: where artifact computations actually execute.
+//!
+//! The FL stack above this module (coordinator, collaborators, compressors,
+//! benches) only ever sees flat `f32` slices going into and coming out of
+//! *named computations* (`mnist_train_step`, `encode_mnist`, ...), described
+//! by the artifact manifest. The [`Backend`] trait is that seam:
+//!
+//! * [`NativeBackend`] (default) — a pure-rust implementation of every
+//!   computation the manifest describes: classifier SGD train/eval steps,
+//!   and the paper's funnel-autoencoder train/encode/decode/roundtrip with
+//!   Adam, all over the [`crate::tensor`] flat-vector substrate. Builds and
+//!   runs everywhere with zero non-std dependencies.
+//! * `XlaBackend` (`--features xla`) — the compiled-HLO fast path: loads
+//!   the AOT artifacts emitted by `python -m compile.aot` and executes them
+//!   through the PJRT C API, with the Pallas fused-dense kernel on the AE's
+//!   inner loops. Requires the real `xla` crate (the workspace ships a
+//!   no-op stub so the feature always type-checks; see README §XLA).
+//!
+//! Both backends implement the *same semantics* (the python layer is the
+//! reference; the native gradients are cross-checked against
+//! `jax.value_and_grad` — see `python/tests`), so everything above the
+//! trait is backend-agnostic.
+
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+pub use self::native::NativeBackend;
+#[cfg(feature = "xla")]
+pub use self::xla::XlaBackend;
+
+use crate::config::manifest::ArtifactEntry;
+use crate::error::Result;
+
+/// A compute backend executing manifest-described computations on flat
+/// `f32` tensors.
+pub trait Backend {
+    /// Human-readable platform identifier (for logs / `fedae inspect`).
+    fn platform_name(&self) -> String;
+
+    /// Execute one artifact on flat inputs. Input lengths are validated
+    /// against the manifest by [`crate::runtime::Runtime::run`] before this
+    /// is called; implementations return one flat vector per manifest
+    /// output, in manifest order.
+    fn execute(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+
+    /// Prepare an artifact ahead of time (compile it, for backends that
+    /// compile). The default is a no-op: the native backend has nothing to
+    /// warm up.
+    fn warmup(&self, entry: &ArtifactEntry) -> Result<()> {
+        let _ = entry;
+        Ok(())
+    }
+}

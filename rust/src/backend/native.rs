@@ -1,0 +1,1280 @@
+//! Pure-rust compute backend: the default way fedae executes.
+//!
+//! Implements every computation the artifact manifest describes — classifier
+//! SGD train/eval steps and the funnel-autoencoder train / encode / decode /
+//! roundtrip with Adam — directly over flat `f32` vectors, with **zero
+//! non-std dependencies**. The semantics (parameter layout, activations,
+//! losses, optimizer constants) mirror `python/compile/model.py` exactly;
+//! the hand-derived gradients are verified two ways: against
+//! `jax.value_and_grad` during development, and by the finite-difference
+//! checks in this module's tests on every `cargo test`.
+//!
+//! Parameter layout (shared with the JAX/XLA path): per dense layer,
+//! weights are `[fan_in * fan_out]` input-major (`h = x @ W + b`) followed
+//! by the bias, layers concatenated in forward order. Classifiers use ReLU
+//! hidden activations; autoencoders use tanh on every hidden layer and a
+//! linear reconstruction (paper Eq. 1–3).
+
+use std::collections::BTreeMap;
+
+use crate::config::manifest::{
+    AeEntry, ArtifactEntry, InitEntry, Manifest, ModelEntry, TensorSpec,
+};
+use crate::error::{FedAeError, Result};
+use crate::tensor;
+use crate::util::rng::Rng;
+
+use super::Backend;
+
+// --- optimizer / metric constants (mirror python/compile/model.py) ---------
+
+/// Adam learning rate used for AE training.
+pub const ADAM_LR: f32 = 1e-3;
+/// Adam first-moment decay.
+pub const ADAM_B1: f32 = 0.9;
+/// Adam second-moment decay.
+pub const ADAM_B2: f32 = 0.999;
+/// Adam epsilon.
+pub const ADAM_EPS: f32 = 1e-8;
+/// |x - x'| tolerance defining the AE "accuracy" metric (paper Figs 4/6).
+pub const AE_ACC_TOL: f32 = 0.01;
+
+// --- the scaled CIFAR-shaped CNN (mirrors python CIFAR_CONV / CIFAR_FC) ----
+
+/// conv 3x3x3->8, conv 3x3x8->16, two 2x maxpools, fc 1024->48->10.
+const CNN_INPUT_DIM: usize = 32 * 32 * 3;
+const CNN_CLASSES: usize = 10;
+/// 224 + 1168 + 49200 + 490.
+const CNN_PARAMS: usize = 51_082;
+
+/// The pure-rust backend.
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl std::fmt::Debug for NativeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NativeBackend")
+            .field("models", &self.manifest.models.len())
+            .field("autoencoders", &self.manifest.autoencoders.len())
+            .finish()
+    }
+}
+
+impl NativeBackend {
+    pub fn new(manifest: Manifest) -> NativeBackend {
+        NativeBackend { manifest }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform_name(&self) -> String {
+        "native-cpu (pure rust)".to_string()
+    }
+
+    fn execute(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let name = entry.name.as_str();
+        if let Some(tag) = name.strip_prefix("ae_train_step_") {
+            return self.ae_train_step(tag, inputs);
+        }
+        if let Some(tag) = name.strip_prefix("ae_roundtrip_") {
+            return self.ae_roundtrip(tag, inputs);
+        }
+        if let Some(tag) = name.strip_prefix("encode_") {
+            return self.ae_encode(tag, inputs);
+        }
+        if let Some(tag) = name.strip_prefix("decode_") {
+            return self.ae_decode(tag, inputs);
+        }
+        if let Some(family) = name.strip_suffix("_train_step") {
+            if self.manifest.models.contains_key(family) {
+                return self.classifier_train_step(family, inputs);
+            }
+        }
+        if let Some(family) = name.strip_suffix("_eval") {
+            if self.manifest.models.contains_key(family) {
+                return self.classifier_eval(family, inputs);
+            }
+        }
+        Err(FedAeError::Artifact(format!(
+            "native backend has no implementation for artifact `{name}`"
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared dense-MLP machinery
+// ---------------------------------------------------------------------------
+
+/// Per-layer activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Act {
+    Relu,
+    Tanh,
+    Linear,
+}
+
+/// Total parameter count of an MLP with layer sizes `dims`.
+fn dense_param_count(dims: &[usize]) -> usize {
+    (0..dims.len() - 1)
+        .map(|i| dims[i] * dims[i + 1] + dims[i + 1])
+        .sum()
+}
+
+fn apply_act(pre: &mut [f32], act: Act) {
+    match act {
+        Act::Relu => {
+            for v in pre.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Act::Tanh => {
+            for v in pre.iter_mut() {
+                *v = v.tanh();
+            }
+        }
+        Act::Linear => {}
+    }
+}
+
+/// `out[b, :] = x[b, :] @ W + bias` for input-major `W: [fi * fo]`.
+fn dense_forward(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    fi: usize,
+    fo: usize,
+    batch: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * fo];
+    for b in 0..batch {
+        let xrow = &x[b * fi..(b + 1) * fi];
+        let orow = &mut out[b * fo..(b + 1) * fo];
+        orow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &w[i * fo..(i + 1) * fo];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Forward pass of an MLP (post-activation outputs per layer).
+fn mlp_forward(
+    params: &[f32],
+    dims: &[usize],
+    acts: &[Act],
+    x: &[f32],
+    batch: usize,
+) -> Vec<Vec<f32>> {
+    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(dims.len() - 1);
+    let mut off = 0usize;
+    for (layer, &act) in acts.iter().enumerate() {
+        let (fi, fo) = (dims[layer], dims[layer + 1]);
+        let input: &[f32] = if layer == 0 { x } else { &outs[layer - 1] };
+        let w = &params[off..off + fi * fo];
+        let bias = &params[off + fi * fo..off + fi * fo + fo];
+        off += fi * fo + fo;
+        let mut pre = dense_forward(input, w, bias, fi, fo, batch);
+        apply_act(&mut pre, act);
+        outs.push(pre);
+    }
+    outs
+}
+
+/// Backward pass given `dlast = dLoss/d(output of the final layer)`.
+/// Returns the flat parameter gradient (same layout as `params`) plus
+/// `dLoss/dx` (needed when the MLP is the head of a larger network, e.g.
+/// the CNN's fully-connected block).
+fn mlp_backward(
+    params: &[f32],
+    dims: &[usize],
+    acts: &[Act],
+    x: &[f32],
+    batch: usize,
+    outs: &[Vec<f32>],
+    dlast: Vec<f32>,
+) -> (Vec<f32>, Vec<f32>) {
+    let n_layers = dims.len() - 1;
+    let mut offsets = Vec::with_capacity(n_layers);
+    let mut off = 0usize;
+    for layer in 0..n_layers {
+        offsets.push(off);
+        off += dims[layer] * dims[layer + 1] + dims[layer + 1];
+    }
+    let mut grad = vec![0.0f32; off];
+    let mut d = dlast;
+    for layer in (0..n_layers).rev() {
+        let (fi, fo) = (dims[layer], dims[layer + 1]);
+        let h = &outs[layer];
+        // Activation derivative, using post-activation values.
+        match acts[layer] {
+            Act::Relu => {
+                for (dv, &hv) in d.iter_mut().zip(h) {
+                    if hv <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+            }
+            Act::Tanh => {
+                for (dv, &hv) in d.iter_mut().zip(h) {
+                    *dv *= 1.0 - hv * hv;
+                }
+            }
+            Act::Linear => {}
+        }
+        let input: &[f32] = if layer == 0 { x } else { &outs[layer - 1] };
+        let w = &params[offsets[layer]..offsets[layer] + fi * fo];
+        let (gw, gb) = grad[offsets[layer]..offsets[layer] + fi * fo + fo].split_at_mut(fi * fo);
+        let mut dprev = vec![0.0f32; batch * fi];
+        for b in 0..batch {
+            let xrow = &input[b * fi..(b + 1) * fi];
+            let drow = &d[b * fo..(b + 1) * fo];
+            for (o, &dv) in drow.iter().enumerate() {
+                gb[o] += dv;
+            }
+            let dprow = &mut dprev[b * fi..(b + 1) * fi];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[i * fo..(i + 1) * fo];
+                let gwrow = &mut gw[i * fo..(i + 1) * fo];
+                let mut acc = 0.0f32;
+                for o in 0..fo {
+                    let dv = drow[o];
+                    gwrow[o] += xv * dv;
+                    acc += wrow[o] * dv;
+                }
+                dprow[i] = acc;
+            }
+        }
+        d = dprev;
+    }
+    (grad, d)
+}
+
+/// Softmax cross-entropy over one-hot targets: (mean loss, accuracy,
+/// dLoss/dlogits). The gradient already includes the 1/batch factor.
+fn softmax_xent(
+    logits: &[f32],
+    y_onehot: &[f32],
+    batch: usize,
+    classes: usize,
+) -> (f32, f32, Vec<f32>) {
+    let mut loss = 0.0f32;
+    let mut hits = 0usize;
+    let mut dlogits = vec![0.0f32; batch * classes];
+    for b in 0..batch {
+        let z = &logits[b * classes..(b + 1) * classes];
+        let y = &y_onehot[b * classes..(b + 1) * classes];
+        let zmax = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sumexp = 0.0f32;
+        for &v in z {
+            sumexp += (v - zmax).exp();
+        }
+        let log_sumexp = sumexp.ln();
+        let mut row_loss = 0.0f32;
+        let d = &mut dlogits[b * classes..(b + 1) * classes];
+        for c in 0..classes {
+            let logp = z[c] - zmax - log_sumexp;
+            row_loss -= y[c] * logp;
+            d[c] = (logp.exp() - y[c]) / batch as f32;
+        }
+        loss += row_loss;
+        let pred = argmax(z);
+        let label = argmax(y);
+        if pred == label {
+            hits += 1;
+        }
+    }
+    (loss / batch as f32, hits as f32 / batch as f32, dlogits)
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Classifiers
+// ---------------------------------------------------------------------------
+
+/// Resolved classifier architecture for a manifest model entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum ClassifierSpec {
+    /// `input -> hidden (ReLU) -> classes`, hidden derived from `n_params`.
+    Mlp { dims: [usize; 3] },
+    /// The scaled CIFAR-shaped CNN (fixed geometry, 51,082 params).
+    CifarCnn,
+}
+
+fn classifier_spec(family: &str, m: &ModelEntry) -> Result<ClassifierSpec> {
+    let denom = m.input_dim + 1 + m.classes;
+    let num = m.n_params.saturating_sub(m.classes);
+    if num > 0 && num % denom == 0 {
+        let hidden = num / denom;
+        return Ok(ClassifierSpec::Mlp {
+            dims: [m.input_dim, hidden, m.classes],
+        });
+    }
+    if m.input_dim == CNN_INPUT_DIM && m.classes == CNN_CLASSES && m.n_params == CNN_PARAMS {
+        return Ok(ClassifierSpec::CifarCnn);
+    }
+    Err(FedAeError::Artifact(format!(
+        "native backend cannot derive an architecture for model `{family}` \
+         ({} params, input {}, {} classes)",
+        m.n_params, m.input_dim, m.classes
+    )))
+}
+
+impl NativeBackend {
+    fn classifier_train_step(&self, family: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let [params, x, y, lr] = expect_inputs::<4>(family, inputs)?;
+        let m = self.manifest.model(family)?;
+        let batch = m.train_batch;
+        let lr = lr.first().copied().unwrap_or(0.0);
+        let spec = classifier_spec(family, m)?;
+        let (loss, _acc, grad) = classifier_loss_grad(&spec, params, x, y, batch)?;
+        let mut new_params = params.to_vec();
+        tensor::axpy(&mut new_params, -lr, &grad);
+        Ok(vec![new_params, vec![loss]])
+    }
+
+    fn classifier_eval(&self, family: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let [params, x, y] = expect_inputs::<3>(family, inputs)?;
+        let m = self.manifest.model(family)?;
+        let batch = m.eval_batch;
+        let spec = classifier_spec(family, m)?;
+        let logits = classifier_logits(&spec, params, x, batch)?;
+        let (loss, acc, _) = softmax_xent(&logits, y, batch, m.classes);
+        Ok(vec![vec![loss], vec![acc]])
+    }
+}
+
+fn classifier_logits(
+    spec: &ClassifierSpec,
+    params: &[f32],
+    x: &[f32],
+    batch: usize,
+) -> Result<Vec<f32>> {
+    match spec {
+        ClassifierSpec::Mlp { dims } => {
+            let outs = mlp_forward(params, dims, &[Act::Relu, Act::Linear], x, batch);
+            Ok(outs.into_iter().next_back().unwrap())
+        }
+        ClassifierSpec::CifarCnn => Ok(cnn_forward(params, x, batch).logits),
+    }
+}
+
+fn classifier_loss_grad(
+    spec: &ClassifierSpec,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+) -> Result<(f32, f32, Vec<f32>)> {
+    match spec {
+        ClassifierSpec::Mlp { dims } => {
+            let acts = [Act::Relu, Act::Linear];
+            let outs = mlp_forward(params, dims, &acts, x, batch);
+            let (loss, acc, dlogits) = softmax_xent(outs.last().unwrap(), y, batch, dims[2]);
+            let (grad, _) = mlp_backward(params, dims, &acts, x, batch, &outs, dlogits);
+            Ok((loss, acc, grad))
+        }
+        ClassifierSpec::CifarCnn => {
+            let (loss, acc, grad) = cnn_loss_grad(params, x, y, batch);
+            Ok((loss, acc, grad))
+        }
+    }
+}
+
+// --- CNN implementation ----------------------------------------------------
+
+/// Flat-parameter offsets of the CNN (conv w/b, conv w/b, fc w/b, fc w/b).
+const C1W: usize = 0; // 3*3*3*8 = 216
+const C1B: usize = 216; // 8
+const C2W: usize = 224; // 3*3*8*16 = 1152
+const C2B: usize = 1376; // 16
+const FC: usize = 1392; // fc block: 1024->48->10 = 49_690 params
+
+struct CnnCache {
+    act1: Vec<f32>,  // [B,32,32,8] post-ReLU
+    pool1: Vec<f32>, // [B,16,16,8]
+    arg1: Vec<u32>,  // argmax indices into act1
+    act2: Vec<f32>,  // [B,16,16,16] post-ReLU
+    arg2: Vec<u32>,  // argmax indices into act2
+    h0: Vec<f32>,    // [B,1024] (= pool2, NHWC-flat)
+    fc_outs: Vec<Vec<f32>>,
+    logits: Vec<f32>,
+}
+
+const FC_DIMS: [usize; 3] = [1024, 48, 10];
+const FC_ACTS: [Act; 2] = [Act::Relu, Act::Linear];
+
+/// 3x3 SAME convolution + bias, NHWC layout, weights (kh,kw,ci,co)-major.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_fwd(
+    img: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    co: usize,
+    wk: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * h * w * co];
+    let mut acc = vec![0.0f32; co];
+    for b in 0..batch {
+        for y in 0..h {
+            for x in 0..w {
+                acc.copy_from_slice(bias);
+                for kh in 0..3 {
+                    let sy = y + kh;
+                    if sy < 1 || sy > h {
+                        continue;
+                    }
+                    let sy = sy - 1;
+                    for kw in 0..3 {
+                        let sx = x + kw;
+                        if sx < 1 || sx > w {
+                            continue;
+                        }
+                        let sx = sx - 1;
+                        let ibase = ((b * h + sy) * w + sx) * ci;
+                        let wbase = (kh * 3 + kw) * ci;
+                        for c in 0..ci {
+                            let xv = img[ibase + c];
+                            if xv != 0.0 {
+                                let wrow = &wk[(wbase + c) * co..(wbase + c + 1) * co];
+                                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                    *a += xv * wv;
+                                }
+                            }
+                        }
+                    }
+                }
+                let obase = ((b * h + y) * w + x) * co;
+                out[obase..obase + co].copy_from_slice(&acc);
+            }
+        }
+    }
+    out
+}
+
+/// Gradients of the 3x3 SAME convolution: accumulates into `gw` and
+/// optionally the input gradient `dimg`.
+#[allow(clippy::too_many_arguments)]
+fn conv3x3_bwd(
+    img: &[f32],
+    dpre: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    co: usize,
+    wk: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    mut dimg: Option<&mut [f32]>,
+) {
+    for b in 0..batch {
+        for y in 0..h {
+            for x in 0..w {
+                let dbase = ((b * h + y) * w + x) * co;
+                let drow = &dpre[dbase..dbase + co];
+                for (o, &dv) in drow.iter().enumerate() {
+                    gb[o] += dv;
+                }
+                for kh in 0..3 {
+                    let sy = y + kh;
+                    if sy < 1 || sy > h {
+                        continue;
+                    }
+                    let sy = sy - 1;
+                    for kw in 0..3 {
+                        let sx = x + kw;
+                        if sx < 1 || sx > w {
+                            continue;
+                        }
+                        let sx = sx - 1;
+                        let ibase = ((b * h + sy) * w + sx) * ci;
+                        let wbase = (kh * 3 + kw) * ci;
+                        for c in 0..ci {
+                            let xv = img[ibase + c];
+                            let wrow = &wk[(wbase + c) * co..(wbase + c + 1) * co];
+                            let gwrow = &mut gw[(wbase + c) * co..(wbase + c + 1) * co];
+                            let mut acc = 0.0f32;
+                            for o in 0..co {
+                                let dv = drow[o];
+                                gwrow[o] += xv * dv;
+                                acc += wrow[o] * dv;
+                            }
+                            if let Some(di) = dimg.as_deref_mut() {
+                                di[ibase + c] += acc;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// 2x2 max-pool recording argmax indices (for exact backprop routing).
+fn maxpool2(act: &[f32], batch: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; batch * oh * ow * c];
+    let mut arg = vec![0u32; batch * oh * ow * c];
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0usize;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx = ((b * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ch;
+                            if act[idx] > best {
+                                best = act[idx];
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    let oidx = ((b * oh + oy) * ow + ox) * c + ch;
+                    out[oidx] = best;
+                    arg[oidx] = best_idx as u32;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+fn cnn_forward(params: &[f32], x: &[f32], batch: usize) -> CnnCache {
+    let mut pre1 = conv3x3_fwd(x, batch, 32, 32, 3, 8, &params[C1W..C1B], &params[C1B..C2W]);
+    apply_act(&mut pre1, Act::Relu);
+    let act1 = pre1;
+    let (pool1, arg1) = maxpool2(&act1, batch, 32, 32, 8);
+    let mut pre2 = conv3x3_fwd(&pool1, batch, 16, 16, 8, 16, &params[C2W..C2B], &params[C2B..FC]);
+    apply_act(&mut pre2, Act::Relu);
+    let act2 = pre2;
+    let (h0, arg2) = maxpool2(&act2, batch, 16, 16, 16);
+    let fc_outs = mlp_forward(&params[FC..], &FC_DIMS, &FC_ACTS, &h0, batch);
+    let logits = fc_outs.last().unwrap().clone();
+    CnnCache {
+        act1,
+        pool1,
+        arg1,
+        act2,
+        arg2,
+        h0,
+        fc_outs,
+        logits,
+    }
+}
+
+fn cnn_loss_grad(params: &[f32], x: &[f32], y: &[f32], batch: usize) -> (f32, f32, Vec<f32>) {
+    let cache = cnn_forward(params, x, batch);
+    let (loss, acc, dlogits) = softmax_xent(&cache.logits, y, batch, CNN_CLASSES);
+    let mut grad = vec![0.0f32; CNN_PARAMS];
+
+    // FC block backward; mlp_backward also hands back dLoss/dh0 so the
+    // gradient can keep flowing into the conv stack.
+    let fc_params = &params[FC..];
+    let (fc_grad, dh0) = mlp_backward(
+        fc_params,
+        &FC_DIMS,
+        &FC_ACTS,
+        &cache.h0,
+        batch,
+        &cache.fc_outs,
+        dlogits,
+    );
+    grad[FC..].copy_from_slice(&fc_grad);
+
+    // Un-pool dh0 into dact2, apply ReLU mask.
+    let mut dact2 = vec![0.0f32; cache.act2.len()];
+    for (o, &src) in cache.arg2.iter().enumerate() {
+        dact2[src as usize] += dh0[o];
+    }
+    for (dv, &hv) in dact2.iter_mut().zip(&cache.act2) {
+        if hv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+
+    // conv2 backward.
+    let mut dpool1 = vec![0.0f32; cache.pool1.len()];
+    {
+        let (gw_slice, rest) = grad[C2W..FC].split_at_mut(C2B - C2W);
+        conv3x3_bwd(
+            &cache.pool1,
+            &dact2,
+            batch,
+            16,
+            16,
+            8,
+            16,
+            &params[C2W..C2B],
+            gw_slice,
+            rest,
+            Some(&mut dpool1),
+        );
+    }
+
+    // Un-pool into dact1, ReLU mask, conv1 backward (input grad not needed).
+    let mut dact1 = vec![0.0f32; cache.act1.len()];
+    for (o, &src) in cache.arg1.iter().enumerate() {
+        dact1[src as usize] += dpool1[o];
+    }
+    for (dv, &hv) in dact1.iter_mut().zip(&cache.act1) {
+        if hv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+    {
+        let (gw_slice, rest) = grad[C1W..C2W].split_at_mut(C1B - C1W);
+        conv3x3_bwd(
+            x, &dact1, batch, 32, 32, 3, 8, &params[C1W..C1B], gw_slice, rest, None,
+        );
+    }
+
+    (loss, acc, grad)
+}
+
+// ---------------------------------------------------------------------------
+// Autoencoders
+// ---------------------------------------------------------------------------
+
+/// Resolved AE architecture: symmetric funnel dims, tanh hidden layers,
+/// linear reconstruction (python `AeSpec` + `ae_layer_acts`).
+#[derive(Debug, Clone)]
+struct AeSpec {
+    dims: Vec<usize>,
+    latent_index: usize,
+}
+
+impl AeSpec {
+    fn from_entry(tag: &str, e: &AeEntry) -> Result<AeSpec> {
+        if e.dims.len() < 3 {
+            return Err(FedAeError::Artifact(format!(
+                "ae `{tag}`: need at least [in, latent, out] dims, got {:?}",
+                e.dims
+            )));
+        }
+        let latent_index = e
+            .dims
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &d)| d)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if latent_index == 0 || latent_index == e.dims.len() - 1 {
+            return Err(FedAeError::Artifact(format!(
+                "ae `{tag}`: bottleneck must be interior, dims {:?}",
+                e.dims
+            )));
+        }
+        let spec = AeSpec {
+            dims: e.dims.clone(),
+            latent_index,
+        };
+        if dense_param_count(&spec.dims) != e.n_params
+            || dense_param_count(&spec.dims[..=latent_index]) != e.encoder_params
+        {
+            return Err(FedAeError::Artifact(format!(
+                "ae `{tag}`: manifest param counts do not match a dense funnel \
+                 over dims {:?}",
+                e.dims
+            )));
+        }
+        Ok(spec)
+    }
+
+    /// tanh on every hidden layer, linear reconstruction (Eq. 1–3).
+    fn acts(&self) -> Vec<Act> {
+        let n_layers = self.dims.len() - 1;
+        (0..n_layers)
+            .map(|i| if i < n_layers - 1 { Act::Tanh } else { Act::Linear })
+            .collect()
+    }
+}
+
+impl NativeBackend {
+    fn ae_spec(&self, tag: &str) -> Result<AeSpec> {
+        AeSpec::from_entry(tag, self.manifest.ae(tag)?)
+    }
+
+    /// One Adam step on a batch of weight vectors. Inputs:
+    /// `[ae_params, batch, m, v, step]` -> `[ae_params', m', v', mse, acc]`.
+    fn ae_train_step(&self, tag: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let [params, batch_x, m_in, v_in, step] = expect_inputs::<5>(tag, inputs)?;
+        let spec = self.ae_spec(tag)?;
+        let entry = self.manifest.ae(tag)?;
+        let batch = entry.train_batch;
+        let acts = spec.acts();
+        let outs = mlp_forward(params, &spec.dims, &acts, batch_x, batch);
+        let recon = outs.last().unwrap();
+        let mse = tensor::mse(recon, batch_x) as f32;
+        let acc = tensor::within_tol_fraction(recon, batch_x, AE_ACC_TOL) as f32;
+        let scale = 2.0 / recon.len() as f32;
+        let dlast: Vec<f32> = recon
+            .iter()
+            .zip(batch_x)
+            .map(|(r, x)| (r - x) * scale)
+            .collect();
+        let (grad, _) = mlp_backward(params, &spec.dims, &acts, batch_x, batch, &outs, dlast);
+
+        // Adam (python `adam_update`): flat state, 1-based step.
+        let t = step.first().copied().unwrap_or(1.0).max(1.0);
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        let mut new_p = params.to_vec();
+        let mut new_m = m_in.to_vec();
+        let mut new_v = v_in.to_vec();
+        for i in 0..grad.len() {
+            let g = grad[i];
+            new_m[i] = ADAM_B1 * new_m[i] + (1.0 - ADAM_B1) * g;
+            new_v[i] = ADAM_B2 * new_v[i] + (1.0 - ADAM_B2) * g * g;
+            let mhat = new_m[i] / bc1;
+            let vhat = new_v[i] / bc2;
+            new_p[i] -= ADAM_LR * mhat / (vhat.sqrt() + ADAM_EPS);
+        }
+        Ok(vec![new_p, new_m, new_v, vec![mse], vec![acc]])
+    }
+
+    /// Encoder half: `[enc_params, w] -> [z]`.
+    fn ae_encode(&self, tag: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let [enc_params, w] = expect_inputs::<2>(tag, inputs)?;
+        let spec = self.ae_spec(tag)?;
+        let acts = spec.acts();
+        let enc_dims = &spec.dims[..=spec.latent_index];
+        let enc_acts = &acts[..spec.latent_index];
+        let outs = mlp_forward(enc_params, enc_dims, enc_acts, w, 1);
+        Ok(vec![outs.into_iter().next_back().unwrap()])
+    }
+
+    /// Decoder half: `[dec_params, z] -> [w]`.
+    fn ae_decode(&self, tag: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let [dec_params, z] = expect_inputs::<2>(tag, inputs)?;
+        let spec = self.ae_spec(tag)?;
+        let acts = spec.acts();
+        let dec_dims = &spec.dims[spec.latent_index..];
+        let dec_acts = &acts[spec.latent_index..];
+        let outs = mlp_forward(dec_params, dec_dims, dec_acts, z, 1);
+        Ok(vec![outs.into_iter().next_back().unwrap()])
+    }
+
+    /// Whole-AE roundtrip: `[ae_params, w] -> [recon, mse, acc]`.
+    fn ae_roundtrip(&self, tag: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let [ae_params, w] = expect_inputs::<2>(tag, inputs)?;
+        let spec = self.ae_spec(tag)?;
+        let acts = spec.acts();
+        let outs = mlp_forward(ae_params, &spec.dims, &acts, w, 1);
+        let recon = outs.into_iter().next_back().unwrap();
+        let mse = tensor::mse(&recon, w) as f32;
+        let acc = tensor::within_tol_fraction(&recon, w, AE_ACC_TOL) as f32;
+        Ok(vec![recon, vec![mse], vec![acc]])
+    }
+}
+
+/// Destructure `inputs` into exactly `N` slices with a clear error.
+fn expect_inputs<'a, const N: usize>(what: &str, inputs: &[&'a [f32]]) -> Result<[&'a [f32]; N]> {
+    if inputs.len() != N {
+        return Err(FedAeError::Artifact(format!(
+            "`{what}`: expected {N} inputs, got {}",
+            inputs.len()
+        )));
+    }
+    let mut out: [&[f32]; N] = [&[]; N];
+    out.copy_from_slice(inputs);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Built-in manifest + deterministic initial parameters
+// ---------------------------------------------------------------------------
+
+/// Seed baked into the built-in manifest (and thus into every synthesized
+/// init blob).
+pub const BUILTIN_SEED: u64 = 42;
+
+fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+    }
+}
+
+fn artifact(name: &str, inputs: Vec<TensorSpec>, outputs: &[&str]) -> (String, ArtifactEntry) {
+    (
+        name.to_string(),
+        ArtifactEntry {
+            name: name.to_string(),
+            file: format!("native/{name}.builtin"),
+            inputs,
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            sha256: "native".to_string(),
+        },
+    )
+}
+
+/// The manifest the native backend serves when no on-disk artifacts exist.
+///
+/// Geometry matches `python/compile/model.py`: the paper's exact 15,910-param
+/// MNIST MLP with its 1,034,182-param ~497x AE, the scaled 51,082-param
+/// CIFAR-shaped CNN with a latent-30 (~1703x) AE, and the deep-funnel
+/// ablation AE (latent 16, ~994x). A miniature `toy` family (172-param MLP,
+/// latent-8 AE) is included so tests and benches can exercise the full
+/// pipeline cheaply.
+pub fn builtin_manifest() -> Manifest {
+    let mut models = BTreeMap::new();
+    models.insert(
+        "mnist".to_string(),
+        ModelEntry {
+            n_params: 15_910,
+            input_dim: 784,
+            classes: 10,
+            train_batch: 32,
+            eval_batch: 256,
+        },
+    );
+    models.insert(
+        "cifar".to_string(),
+        ModelEntry {
+            n_params: CNN_PARAMS,
+            input_dim: CNN_INPUT_DIM,
+            classes: CNN_CLASSES,
+            train_batch: 16,
+            eval_batch: 64,
+        },
+    );
+    models.insert(
+        "toy".to_string(),
+        ModelEntry {
+            n_params: 16 * 6 + 6 + 6 * 10 + 10, // 16 -> 6 -> 10 MLP = 172
+            input_dim: 16,
+            classes: 10,
+            train_batch: 4,
+            eval_batch: 8,
+        },
+    );
+
+    let mut autoencoders = BTreeMap::new();
+    for (tag, dims, train_batch) in [
+        ("mnist", vec![15_910usize, 32, 15_910], 8usize),
+        ("cifar", vec![CNN_PARAMS, 30, CNN_PARAMS], 8),
+        ("mnist_deep", vec![15_910, 128, 16, 128, 15_910], 8),
+        ("toy", vec![172, 8, 172], 4),
+    ] {
+        let latent = *dims.iter().min().unwrap();
+        let latent_index = dims.iter().position(|&d| d == latent).unwrap();
+        let n_params = dense_param_count(&dims);
+        let encoder_params = dense_param_count(&dims[..=latent_index]);
+        autoencoders.insert(
+            tag.to_string(),
+            AeEntry {
+                compression_ratio: dims[0] as f64 / latent as f64,
+                n_params,
+                latent,
+                encoder_params,
+                decoder_params: n_params - encoder_params,
+                train_batch,
+                dims,
+            },
+        );
+    }
+
+    let mut artifacts = BTreeMap::new();
+    for (family, m) in &models {
+        let (name, entry) = artifact(
+            &format!("{family}_train_step"),
+            vec![
+                spec("params", &[m.n_params]),
+                spec("x", &[m.train_batch, m.input_dim]),
+                spec("y", &[m.train_batch, m.classes]),
+                spec("lr", &[]),
+            ],
+            &["params", "loss"],
+        );
+        artifacts.insert(name, entry);
+        let (name, entry) = artifact(
+            &format!("{family}_eval"),
+            vec![
+                spec("params", &[m.n_params]),
+                spec("x", &[m.eval_batch, m.input_dim]),
+                spec("y", &[m.eval_batch, m.classes]),
+            ],
+            &["loss", "acc"],
+        );
+        artifacts.insert(name, entry);
+    }
+    for (tag, ae) in &autoencoders {
+        let n = ae.n_params;
+        let d0 = ae.dims[0];
+        let (name, entry) = artifact(
+            &format!("ae_train_step_{tag}"),
+            vec![
+                spec("ae_params", &[n]),
+                spec("batch", &[ae.train_batch, d0]),
+                spec("m", &[n]),
+                spec("v", &[n]),
+                spec("step", &[]),
+            ],
+            &["ae_params", "m", "v", "mse", "acc"],
+        );
+        artifacts.insert(name, entry);
+        let (name, entry) = artifact(
+            &format!("encode_{tag}"),
+            vec![spec("enc_params", &[ae.encoder_params]), spec("w", &[d0])],
+            &["z"],
+        );
+        artifacts.insert(name, entry);
+        let (name, entry) = artifact(
+            &format!("decode_{tag}"),
+            vec![spec("dec_params", &[ae.decoder_params]), spec("z", &[ae.latent])],
+            &["w"],
+        );
+        artifacts.insert(name, entry);
+        let (name, entry) = artifact(
+            &format!("ae_roundtrip_{tag}"),
+            vec![spec("ae_params", &[n]), spec("w", &[d0])],
+            &["recon", "mse", "acc"],
+        );
+        artifacts.insert(name, entry);
+    }
+
+    let mut inits = BTreeMap::new();
+    for (family, m) in &models {
+        inits.insert(
+            format!("{family}_params"),
+            InitEntry {
+                file: format!("native/{family}_params.bin"),
+                len: m.n_params,
+                sha256: "native".to_string(),
+            },
+        );
+    }
+    for (tag, ae) in &autoencoders {
+        inits.insert(
+            format!("ae_{tag}_init"),
+            InitEntry {
+                file: format!("native/ae_{tag}_init.bin"),
+                len: ae.n_params,
+                sha256: "native".to_string(),
+            },
+        );
+    }
+
+    Manifest {
+        seed: BUILTIN_SEED,
+        models,
+        autoencoders,
+        artifacts,
+        inits,
+    }
+}
+
+fn name_seed(base: u64, name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    base ^ h
+}
+
+/// Glorot-uniform init of a dense layer stack (biases zero), matching
+/// python `init_dense_params`'s layout (values differ: PRNGs differ).
+fn dense_init(rng: &mut Rng, dims: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(dense_param_count(dims));
+    for i in 0..dims.len() - 1 {
+        let (fi, fo) = (dims[i], dims[i + 1]);
+        let limit = (6.0 / (fi + fo) as f64).sqrt() as f32;
+        for _ in 0..fi * fo {
+            out.push(rng.uniform_in(-limit, limit));
+        }
+        let new_len = out.len() + fo;
+        out.resize(new_len, 0.0);
+    }
+    out
+}
+
+/// Deterministically synthesize the named init blob from the manifest
+/// geometry (used when no on-disk artifact blobs exist).
+pub fn synth_init(manifest: &Manifest, name: &str) -> Result<Vec<f32>> {
+    let mut rng = Rng::new(name_seed(manifest.seed, name));
+    if let Some(family) = name.strip_suffix("_params") {
+        if let Ok(m) = manifest.model(family) {
+            return match classifier_spec(family, m)? {
+                ClassifierSpec::Mlp { dims } => Ok(dense_init(&mut rng, &dims)),
+                ClassifierSpec::CifarCnn => {
+                    let mut out = Vec::with_capacity(CNN_PARAMS);
+                    for (kh, kw, ci, co) in [(3usize, 3usize, 3usize, 8usize), (3, 3, 8, 16)] {
+                        let fan_in = kh * kw * ci;
+                        let limit = (6.0 / (fan_in + co) as f64).sqrt() as f32;
+                        for _ in 0..fan_in * co {
+                            out.push(rng.uniform_in(-limit, limit));
+                        }
+                        let new_len = out.len() + co;
+                        out.resize(new_len, 0.0);
+                    }
+                    out.extend(dense_init(&mut rng, &FC_DIMS));
+                    Ok(out)
+                }
+            };
+        }
+    }
+    if let Some(tag) = name.strip_prefix("ae_") {
+        if let Some(tag) = tag.strip_suffix("_init") {
+            if let Ok(ae) = manifest.ae(tag) {
+                return Ok(dense_init(&mut rng, &ae.dims));
+            }
+        }
+    }
+    Err(FedAeError::Artifact(format!(
+        "cannot synthesize init blob `{name}`: not described by the manifest"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry_for(name: &str) -> ArtifactEntry {
+        ArtifactEntry {
+            name: name.to_string(),
+            file: String::new(),
+            inputs: vec![],
+            outputs: vec![],
+            sha256: String::new(),
+        }
+    }
+
+    #[test]
+    fn builtin_manifest_validates_and_matches_paper_constants() {
+        let m = builtin_manifest();
+        m.validate().unwrap();
+        assert_eq!(m.model("mnist").unwrap().n_params, 15_910);
+        assert_eq!(m.ae("mnist").unwrap().n_params, 1_034_182);
+        assert_eq!(m.ae("mnist").unwrap().latent, 32);
+        assert_eq!(m.model("cifar").unwrap().n_params, 51_082);
+        assert_eq!(m.ae("cifar").unwrap().latent, 30);
+        let ratio = m.ae("cifar").unwrap().compression_ratio;
+        assert!((1600.0..1721.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn synth_inits_match_manifest_lengths() {
+        let m = builtin_manifest();
+        for (name, entry) in &m.inits {
+            let v = synth_init(&m, name).unwrap();
+            assert_eq!(v.len(), entry.len, "{name}");
+            assert!(tensor::check_finite(&v).is_ok(), "{name}");
+            // Deterministic.
+            assert_eq!(synth_init(&m, name).unwrap(), v, "{name}");
+        }
+        assert!(synth_init(&m, "nope_params").is_err());
+    }
+
+    #[test]
+    fn classifier_spec_derivation() {
+        let m = builtin_manifest();
+        assert_eq!(
+            classifier_spec("mnist", m.model("mnist").unwrap()).unwrap(),
+            ClassifierSpec::Mlp {
+                dims: [784, 20, 10]
+            }
+        );
+        assert_eq!(
+            classifier_spec("cifar", m.model("cifar").unwrap()).unwrap(),
+            ClassifierSpec::CifarCnn
+        );
+        let bogus = ModelEntry {
+            n_params: 1234,
+            input_dim: 100,
+            classes: 10,
+            train_batch: 1,
+            eval_batch: 1,
+        };
+        assert!(classifier_spec("bogus", &bogus).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let be = NativeBackend::new(builtin_manifest());
+        assert!(be.execute(&entry_for("frobnicate_mnist"), &[]).is_err());
+        assert!(be.execute(&entry_for("vgg_train_step"), &[]).is_err());
+    }
+
+    /// Finite-difference check of the MLP classifier gradient.
+    #[test]
+    fn mlp_gradient_matches_finite_difference() {
+        let dims = [16usize, 6, 10];
+        let mut rng = Rng::new(1);
+        let params: Vec<f32> = (0..dense_param_count(&dims))
+            .map(|_| rng.uniform_in(-0.3, 0.3))
+            .collect();
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 16).map(|_| rng.uniform_in(0.0, 1.0)).collect();
+        let mut y = vec![0.0f32; batch * 10];
+        for b in 0..batch {
+            y[b * 10 + (b * 3) % 10] = 1.0;
+        }
+        let spec = ClassifierSpec::Mlp { dims };
+        let (_, _, grad) = classifier_loss_grad(&spec, &params, &x, &y, batch).unwrap();
+        let loss_at = |p: &[f32]| {
+            let logits = classifier_logits(&spec, p, &x, batch).unwrap();
+            softmax_xent(&logits, &y, batch, 10).0 as f64
+        };
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, 50, 101, 171] {
+            let mut plus = params.clone();
+            plus[idx] += eps;
+            let mut minus = params.clone();
+            minus[idx] -= eps;
+            let num = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
+            assert!(
+                (num - grad[idx] as f64).abs() < 5e-3,
+                "param {idx}: analytic {} vs numeric {num}",
+                grad[idx]
+            );
+        }
+    }
+
+    /// Finite-difference check of the AE gradient (tanh hidden + linear out),
+    /// exercised through the public ae_train_step path with Adam factored
+    /// out by inspecting the returned first moment (m' = (1-B1) * grad at
+    /// step 1 from zero state).
+    #[test]
+    fn ae_gradient_matches_finite_difference() {
+        let be = NativeBackend::new(builtin_manifest());
+        let spec = be.ae_spec("toy").unwrap();
+        let acts = spec.acts();
+        let n = dense_param_count(&spec.dims); // 2932 for [172, 8, 172]
+        let mut rng = Rng::new(2);
+        let params: Vec<f32> = (0..n).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let batch_x: Vec<f32> = (0..4 * 172).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+        let zeros = vec![0.0f32; n];
+        let out = be
+            .ae_train_step("toy", &[&params, &batch_x, &zeros, &zeros, &[1.0]])
+            .unwrap();
+        let grad: Vec<f32> = out[1].iter().map(|&m| m / (1.0 - ADAM_B1)).collect();
+        let mse_at = |p: &[f32]| {
+            let outs = mlp_forward(p, &spec.dims, &acts, &batch_x, 4);
+            tensor::mse(outs.last().unwrap(), &batch_x)
+        };
+        let eps = 1e-3f32;
+        // Indices covering encoder w/b and decoder w/b blocks.
+        for idx in [0usize, 700, 1380, 1400, 2800, 2931] {
+            let mut plus = params.clone();
+            plus[idx] += eps;
+            let mut minus = params.clone();
+            minus[idx] -= eps;
+            let num = (mse_at(&plus) - mse_at(&minus)) / (2.0 * eps as f64);
+            assert!(
+                (num - grad[idx] as f64).abs() < 1e-3,
+                "param {idx}: analytic {} vs numeric {num}",
+                grad[idx]
+            );
+        }
+    }
+
+    /// Finite-difference spot-check of the CNN gradient (covers conv1,
+    /// conv2, both pools and the FC head).
+    #[test]
+    fn cnn_gradient_matches_finite_difference() {
+        let mut rng = Rng::new(3);
+        let m = builtin_manifest();
+        let params = synth_init(&m, "cifar_params").unwrap();
+        let batch = 1;
+        let x: Vec<f32> = (0..batch * CNN_INPUT_DIM)
+            .map(|_| rng.uniform_in(0.0, 1.0))
+            .collect();
+        let mut y = vec![0.0f32; batch * 10];
+        y[3] = 1.0;
+        let (_, _, grad) = cnn_loss_grad(&params, &x, &y, batch);
+        let loss_at = |p: &[f32]| {
+            let c = cnn_forward(p, &x, batch);
+            softmax_xent(&c.logits, &y, batch, 10).0 as f64
+        };
+        let eps = 3e-3f32;
+        // One index per parameter block: conv1 w/b, conv2 w/b, fc1 w/b, fc2 w/b.
+        for idx in [5usize, 216, 300, 1380, 2000, 50_550, 50_600, 51_080] {
+            let mut plus = params.clone();
+            plus[idx] += eps;
+            let mut minus = params.clone();
+            minus[idx] -= eps;
+            let num = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
+            assert!(
+                (num - grad[idx] as f64).abs() < 2e-2 * (1.0 + num.abs()),
+                "param {idx}: analytic {} vs numeric {num}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_train_steps_reduce_loss() {
+        let be = NativeBackend::new(builtin_manifest());
+        let m = builtin_manifest();
+        let mut params = synth_init(&m, "toy_params").unwrap();
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..4 * 16).map(|_| rng.uniform_in(0.0, 1.0)).collect();
+        let mut y = vec![0.0f32; 4 * 10];
+        for b in 0..4 {
+            y[b * 10 + b] = 1.0;
+        }
+        let entry = entry_for("toy_train_step");
+        let mut first = None;
+        let mut last = 0.0f32;
+        for _ in 0..60 {
+            let out = be.execute(&entry, &[&params, &x, &y, &[0.5]]).unwrap();
+            let mut it = out.into_iter();
+            params = it.next().unwrap();
+            last = it.next().unwrap()[0];
+            if first.is_none() {
+                first = Some(last);
+            }
+        }
+        assert!(
+            last < first.unwrap() * 0.5,
+            "loss {} -> {last} did not halve",
+            first.unwrap()
+        );
+        assert!(tensor::check_finite(&params).is_ok());
+    }
+
+    #[test]
+    fn ae_roundtrip_consistent_with_encode_decode() {
+        let be = NativeBackend::new(builtin_manifest());
+        let m = builtin_manifest();
+        let ae = m.ae("toy").unwrap().clone();
+        let params = synth_init(&m, "ae_toy_init").unwrap();
+        let mut rng = Rng::new(8);
+        let w: Vec<f32> = (0..172).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let enc = &params[..ae.encoder_params];
+        let dec = &params[ae.encoder_params..];
+        let z = be.ae_encode("toy", &[enc, &w]).unwrap().remove(0);
+        assert_eq!(z.len(), 8);
+        let recon = be.ae_decode("toy", &[dec, &z]).unwrap().remove(0);
+        let rt = be.ae_roundtrip("toy", &[&params, &w]).unwrap();
+        assert_eq!(recon.len(), 172);
+        for (a, b) in recon.iter().zip(&rt[0]) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // Reported mse matches a rust-side recomputation.
+        let mse = tensor::mse(&rt[0], &w) as f32;
+        assert!((rt[1][0] - mse).abs() < 1e-6);
+    }
+}

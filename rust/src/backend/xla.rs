@@ -1,0 +1,117 @@
+//! PJRT/XLA compute backend (`--features xla`): the compiled-HLO fast path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): each artifact listed in
+//! `manifest.json` is parsed from HLO **text** (`HloModuleProto::from_text_file`
+//! — text, not serialized proto, because jax>=0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects), compiled once, and cached in a
+//! name -> executable map.
+//!
+//! The workspace builds this module against a bundled no-op `xla` stub so
+//! `cargo check --features xla` stays green everywhere; to actually run the
+//! PJRT path, point the `xla` dependency in `rust/Cargo.toml` at a real
+//! xla-rs checkout (see README §XLA backend).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::config::manifest::ArtifactEntry;
+use crate::error::{FedAeError, Result};
+
+use super::Backend;
+
+/// A loaded PJRT CPU runtime with compiled executables.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    /// Lazily compiled executables (compiling all up front costs seconds).
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for XlaBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaBackend")
+            .field("artifacts_dir", &self.artifacts_dir)
+            .field("platform", &self.client.platform_name())
+            .finish()
+    }
+}
+
+impl XlaBackend {
+    /// Create a CPU PJRT client over the given artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaBackend {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            executables: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an executable for an artifact.
+    fn executable(&self, entry: &ArtifactEntry) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(&entry.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(&entry.file);
+        if !path.exists() {
+            return Err(FedAeError::Artifact(format!(
+                "artifact file {} missing (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| FedAeError::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.executables
+            .lock()
+            .unwrap()
+            .insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn execute(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(entry)?;
+
+        let literals: Vec<xla::Literal> = entry
+            .inputs
+            .iter()
+            .zip(inputs)
+            .map(|(spec, arr)| {
+                let lit = xla::Literal::vec1(arr);
+                if spec.shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(FedAeError::from)
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let buffer = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| FedAeError::Xla("execute returned no buffers".into()))?;
+        let tuple = buffer.to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for part in parts {
+            outputs.push(part.to_vec::<f32>()?);
+        }
+        Ok(outputs)
+    }
+
+    fn warmup(&self, entry: &ArtifactEntry) -> Result<()> {
+        self.executable(entry).map(|_| ())
+    }
+}

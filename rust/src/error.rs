@@ -2,50 +2,78 @@
 //!
 //! Library modules return [`FedAeError`] so callers can match on failure
 //! classes (artifact problems vs protocol violations vs config errors);
-//! binaries and examples use `anyhow` at the top level.
+//! binaries and examples use `Box<dyn Error>` at the top level.
+//!
+//! Implemented by hand (no `thiserror`): this crate builds fully offline
+//! against a zero-dependency default feature set.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure classes produced by the fedae library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum FedAeError {
     /// An artifact file is missing, unreadable, or fails validation
     /// against `manifest.json`.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// An XLA / PJRT call failed.
-    #[error("xla error: {0}")]
+    /// An XLA / PJRT call failed (or the `xla` feature is not enabled).
     Xla(String),
 
     /// Config file missing/invalid or inconsistent with the manifest.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed JSON.
-    #[error("json parse error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Wire-protocol violation (bad frame, unknown message kind,
     /// out-of-order round, unexpected payload length).
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// A compressor was fed an update of the wrong dimensionality or an
     /// incompatible [`crate::compression::CompressedUpdate`] variant.
-    #[error("compression error: {0}")]
     Compression(String),
 
     /// Coordinator state-machine violation (duplicate update for a round,
     /// update for a stale round, unknown collaborator, missing decoder).
-    #[error("coordination error: {0}")]
     Coordination(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for FedAeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FedAeError::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            FedAeError::Xla(msg) => write!(f, "xla error: {msg}"),
+            FedAeError::Config(msg) => write!(f, "config error: {msg}"),
+            FedAeError::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            FedAeError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            FedAeError::Compression(msg) => write!(f, "compression error: {msg}"),
+            FedAeError::Coordination(msg) => write!(f, "coordination error: {msg}"),
+            FedAeError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FedAeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FedAeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FedAeError {
+    fn from(e: std::io::Error) -> Self {
+        FedAeError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for FedAeError {
     fn from(e: xla::Error) -> Self {
         FedAeError::Xla(e.to_string())
@@ -75,5 +103,14 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: FedAeError = io.into();
         assert!(matches!(e, FedAeError::Io(_)));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let io = std::io::Error::other("disk on fire");
+        let e: FedAeError = io.into();
+        assert!(e.source().is_some());
+        assert!(FedAeError::Config("x".into()).source().is_none());
     }
 }

@@ -14,25 +14,40 @@
 //! * **Layer 1** — the Pallas tiled fused-dense kernel
 //!   (`python/compile/kernels/fused_dense.py`) the AE lowers through.
 //!
-//! Python never runs on the request path: [`runtime`] loads the HLO
-//! artifacts via the PJRT C API (`xla` crate) and every training /
-//! encode / decode step executes as a compiled XLA computation driven
-//! from rust.
+//! Compute goes through the [`backend::Backend`] trait. By default the
+//! pure-rust [`backend::NativeBackend`] implements every training / encode /
+//! decode step directly on the [`tensor`] substrate, so `cargo build` and
+//! `cargo test` work from a clean checkout with no XLA toolchain. With
+//! `--features xla`, [`runtime`] instead loads the AOT-compiled HLO
+//! artifacts via the PJRT C API and every step executes as a compiled XLA
+//! computation driven from rust — python never runs on the request path.
 //!
 //! ## Quick tour
 //!
-//! ```no_run
+//! ```
 //! use fedae::prelude::*;
 //!
-//! let manifest = Manifest::load("artifacts/manifest.json")?;
-//! let runtime = Runtime::load(&manifest, "artifacts")?;
-//! # Ok::<(), anyhow::Error>(())
+//! // A clean checkout needs no artifacts: the native backend serves a
+//! // built-in manifest with deterministic initial parameters.
+//! let rt = Runtime::native();
+//! let pipeline = AePipeline::new(&rt, "mnist")?;
+//! assert_eq!(pipeline.latent, 32); // the paper's ~497x MNIST AE
+//! # Ok::<(), fedae::error::FedAeError>(())
 //! ```
 //!
 //! See `examples/quickstart.rs` for an end-to-end federated round and
 //! `examples/fl_two_collab.rs` for the paper's Fig 8/9 experiment.
 
+// This crate is clippy-clean under `-D warnings` on current stable; the
+// allows below keep that achievable across clippy versions (lints have been
+// added/renamed between releases) and for the deliberately argument-heavy
+// experiment entry points.
+#![allow(unknown_lints)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::manual_div_ceil)]
+
 pub mod aggregation;
+pub mod backend;
 pub mod collaborator;
 pub mod compression;
 pub mod config;
@@ -52,6 +67,7 @@ pub mod util;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::aggregation::{Aggregator, FedAvg};
+    pub use crate::backend::{Backend, NativeBackend};
     pub use crate::collaborator::Collaborator;
     pub use crate::compression::{CompressedUpdate, UpdateCompressor};
     pub use crate::config::manifest::Manifest;
@@ -62,6 +78,6 @@ pub mod prelude {
     pub use crate::metrics::ExperimentLog;
     pub use crate::models::{AeKind, ModelKind};
     pub use crate::network::SimulatedNetwork;
-    pub use crate::runtime::Runtime;
+    pub use crate::runtime::{AePipeline, Runtime};
     pub use crate::savings::SavingsModel;
 }

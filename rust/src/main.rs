@@ -15,14 +15,16 @@
 //! fedae worker --connect 127.0.0.1:7070 --id 0
 //! ```
 
-use anyhow::{bail, Context, Result};
-
 use fedae::config::{CompressionConfig, ExperimentConfig};
 use fedae::coordinator::FlDriver;
+use fedae::error::FedAeError;
 use fedae::metrics::{ascii_plot, print_table};
 use fedae::runtime::{AePipeline, Runtime};
 use fedae::savings::{SavingsModel, PAPER_CIFAR};
 use fedae::util::cli::Args;
+
+/// Binary-level result: any error class, printed with `Display` on exit.
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -57,7 +59,8 @@ fn artifacts_dir(args: &Args) -> String {
 /// Build an ExperimentConfig from either --config or individual flags.
 fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = if let Some(path) = args.get("config") {
-        ExperimentConfig::load(path).with_context(|| format!("loading config {path}"))?
+        ExperimentConfig::load(path)
+            .map_err(|e| FedAeError::Config(format!("loading config {path}: {e}")))?
     } else {
         ExperimentConfig::default()
     };
@@ -89,7 +92,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
                 cols: args.get_usize("cols", 256)?,
                 topk: args.get_usize("topk", 256)?,
             },
-            other => bail!("unknown compression `{other}`"),
+            other => return Err(format!("unknown compression `{other}`").into()),
         };
     }
     cfg.fl.rounds = args.get_usize("rounds", cfg.fl.rounds)?;
@@ -348,7 +351,7 @@ fn fedae_serve(args: &Args) -> Result<()> {
                 println!("worker {collab_id} joined from {addr}");
                 workers.push((collab_id as usize, t));
             }
-            m => bail!("expected Hello, got {m:?}"),
+            m => return Err(format!("expected Hello, got {m:?}").into()),
         }
     }
 
@@ -372,14 +375,19 @@ fn fedae_serve(args: &Args) -> Result<()> {
                     let u = fedae::compression::CompressedUpdate::from_bytes(&payload)?;
                     let values = match u {
                         fedae::compression::CompressedUpdate::Raw { values } => values,
-                        other => bail!("leader expects raw updates in TCP demo, got {other:?}"),
+                        other => {
+                            return Err(format!(
+                                "leader expects raw updates in TCP demo, got {other:?}"
+                            )
+                            .into())
+                        }
                     };
                     updates.push(WeightedUpdate {
                         weight: n_samples as f64,
                         values,
                     });
                 }
-                m => bail!("worker {wid}: unexpected {m:?}"),
+                m => return Err(format!("worker {wid}: unexpected {m:?}").into()),
             }
         }
         global = agg.aggregate(&updates)?;
@@ -399,7 +407,7 @@ fn fedae_worker(args: &Args) -> Result<()> {
     let rt = Runtime::from_dir(artifacts_dir(args))?;
     let addr = args
         .get("connect")
-        .context("worker needs --connect HOST:PORT")?;
+        .ok_or("worker needs --connect HOST:PORT")?;
     let id = args.get_usize("id", 0)?;
     let model = args.get_or("model", "mnist").to_string();
     let kind = if model == "mnist" {
@@ -447,7 +455,7 @@ fn fedae_worker(args: &Args) -> Result<()> {
                 println!("worker {id}: shutdown");
                 return Ok(());
             }
-            m => bail!("worker: unexpected {m:?}"),
+            m => return Err(format!("worker: unexpected {m:?}").into()),
         }
     }
 }

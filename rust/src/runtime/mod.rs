@@ -1,58 +1,100 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Runtime: manifest-described computations over a pluggable [`Backend`].
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU client): each artifact listed in
-//! `manifest.json` is parsed from HLO **text** (`HloModuleProto::from_text_file`
-//! — text, not serialized proto, because jax>=0.5 emits 64-bit instruction
-//! ids that xla_extension 0.5.1 rejects), compiled once, and cached in a
-//! name -> executable map. Typed wrappers ([`TrainStep`], [`AePipeline`], …)
-//! convert between rust `Vec<f32>` and XLA literals and validate shapes
-//! against the manifest so dimension bugs fail loudly.
+//! [`Runtime`] owns the artifact [`Manifest`] and a compute backend, and
+//! exposes the computations the FL stack needs through typed wrappers
+//! ([`TrainStep`], [`EvalStep`], [`AePipeline`]) that convert between rust
+//! `Vec<f32>` and backend tensors and validate shapes against the manifest
+//! so dimension bugs fail loudly.
 //!
-//! This module is the *only* place the crate touches XLA; everything above
-//! it (coordinator, compressors, benches) works with plain f32 slices.
+//! Two backends exist (see [`crate::backend`]):
+//!
+//! * the default pure-rust [`NativeBackend`] — zero dependencies, works
+//!   from a clean checkout with no artifacts on disk ([`Runtime::native`]
+//!   serves a built-in manifest and deterministic init blobs);
+//! * the `--features xla` PJRT path executing AOT-compiled HLO artifacts.
+//!
+//! This module is the *only* place the crate chooses a backend; everything
+//! above it (coordinator, compressors, benches) works with plain f32 slices.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
+use crate::backend::{Backend, NativeBackend};
 use crate::config::manifest::{ArtifactEntry, Manifest};
 use crate::error::{FedAeError, Result};
 use crate::tensor;
 
-/// A loaded PJRT CPU runtime with compiled executables.
+/// A loaded runtime: manifest + compute backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
+    backend: Box<dyn Backend>,
     manifest: Manifest,
-    /// Lazily compiled executables (compiling all 16 up front costs ~s).
-    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    artifacts_dir: PathBuf,
 }
 
 impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Runtime")
             .field("artifacts_dir", &self.artifacts_dir)
-            .field("platform", &self.client.platform_name())
+            .field("platform", &self.backend.platform_name())
             .finish()
     }
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client over the given artifacts directory.
+    /// Pure-rust runtime over the built-in manifest: no artifacts, no
+    /// external dependencies. Init blobs are synthesized deterministically.
+    pub fn native() -> Runtime {
+        let manifest = crate::backend::native::builtin_manifest();
+        let backend = NativeBackend::new(manifest.clone());
+        Runtime {
+            backend: Box::new(backend),
+            manifest,
+            artifacts_dir: PathBuf::from("native"),
+        }
+    }
+
+    /// Build a runtime over an explicit manifest + artifacts directory.
+    ///
+    /// With `--features xla` this compiles the HLO artifacts through PJRT;
+    /// by default the [`NativeBackend`] executes the same computations in
+    /// pure rust (reading init blobs from disk when present).
     pub fn load(manifest: &Manifest, artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        #[cfg(feature = "xla")]
+        let backend: Box<dyn Backend> = Box::new(crate::backend::XlaBackend::new(&dir)?);
+        #[cfg(not(feature = "xla"))]
+        let backend: Box<dyn Backend> = Box::new(NativeBackend::new(manifest.clone()));
         Ok(Runtime {
-            client,
-            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            backend,
             manifest: manifest.clone(),
-            executables: Mutex::new(HashMap::new()),
+            artifacts_dir: dir,
         })
     }
 
     /// Convenience: load manifest + runtime from an artifacts dir.
+    ///
+    /// On the default (native) build, a missing `manifest.json` at the
+    /// conventional `artifacts` location falls back to the built-in native
+    /// runtime so a clean checkout "just works". An explicit nonstandard
+    /// path without a manifest is treated as a misconfiguration (a typo'd
+    /// `--artifacts` must not silently swap in different geometry), and
+    /// with `--features xla` the caller asked for the compiled-HLO fast
+    /// path, so any missing manifest is a hard error rather than a silent
+    /// downgrade to pure-rust compute.
     pub fn from_dir(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = artifacts_dir.as_ref();
-        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            if !cfg!(feature = "xla") && dir == Path::new("artifacts") {
+                return Ok(Runtime::native());
+            }
+            return Err(FedAeError::Artifact(format!(
+                "no manifest at {} — generate artifacts with `python -m \
+                 compile.aot`, or use the default `artifacts` dir to run on \
+                 the built-in native runtime",
+                manifest_path.display()
+            )));
+        }
+        let manifest = Manifest::load(manifest_path)?;
         Runtime::load(&manifest, dir)
     }
 
@@ -61,40 +103,16 @@ impl Runtime {
     }
 
     pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) an executable by artifact name.
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.executables.lock().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
-        let entry = self.manifest.artifact(name)?;
-        let path = self.artifacts_dir.join(&entry.file);
-        if !path.exists() {
-            return Err(FedAeError::Artifact(format!(
-                "artifact file {} missing (run `make artifacts`)",
-                path.display()
-            )));
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| FedAeError::Artifact("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        self.executables
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
+        self.backend.platform_name()
     }
 
     /// Pre-compile a set of artifacts (used at coordinator startup so the
-    /// first round isn't billed the compile time).
+    /// first round isn't billed the compile time; a no-op on the native
+    /// backend).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for name in names {
-            self.executable(name)?;
+            let entry = self.manifest.artifact(name)?;
+            self.backend.warmup(entry)?;
         }
         Ok(())
     }
@@ -127,36 +145,9 @@ impl Runtime {
     /// Execute an artifact on flat f32 inputs; returns the flat f32 outputs
     /// (the exported computations all return tuples of f32 tensors).
     pub fn run(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        let entry = self.manifest.artifact(name)?.clone();
-        self.check_inputs(&entry, inputs)?;
-        let exe = self.executable(name)?;
-
-        let literals: Vec<xla::Literal> = entry
-            .inputs
-            .iter()
-            .zip(inputs)
-            .map(|(spec, arr)| {
-                let lit = xla::Literal::vec1(arr);
-                if spec.shape.len() == 1 {
-                    Ok(lit)
-                } else {
-                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-                    lit.reshape(&dims).map_err(FedAeError::from)
-                }
-            })
-            .collect::<Result<Vec<_>>>()?;
-
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let buffer = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| FedAeError::Xla("execute returned no buffers".into()))?;
-        let tuple = buffer.to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        let mut outputs = Vec::with_capacity(parts.len());
-        for part in parts {
-            outputs.push(part.to_vec::<f32>()?);
-        }
+        let entry = self.manifest.artifact(name)?;
+        self.check_inputs(entry, inputs)?;
+        let outputs = self.backend.execute(entry, inputs)?;
         if outputs.len() != entry.outputs.len() {
             return Err(FedAeError::Artifact(format!(
                 "artifact `{}` returned {} outputs, manifest says {}",
@@ -168,13 +159,30 @@ impl Runtime {
         Ok(outputs)
     }
 
-    /// Load an initial-parameter blob (`artifacts/init/<name>.bin`).
+    /// Load an initial-parameter blob. On-disk blobs
+    /// (`artifacts/init/<name>.bin`) take precedence; on the native build a
+    /// missing blob is synthesized deterministically from the manifest
+    /// geometry. With `--features xla` a missing blob is a hard error: the
+    /// AOT artifacts were compiled and validated against the JAX-generated
+    /// inits, so substituting synthetic ones would silently change the
+    /// experiment.
     pub fn load_init(&self, name: &str) -> Result<Vec<f32>> {
         let entry = self.manifest.init(name)?;
-        let v = tensor::load_f32_file(self.artifacts_dir.join(&entry.file))?;
+        let path = self.artifacts_dir.join(&entry.file);
+        let v = if path.exists() {
+            tensor::load_f32_file(&path)?
+        } else if cfg!(feature = "xla") {
+            return Err(FedAeError::Artifact(format!(
+                "init blob `{name}`: {} missing (the xla feature requires \
+                 the real artifact blobs; run `python -m compile.aot`)",
+                path.display()
+            )));
+        } else {
+            crate::backend::native::synth_init(&self.manifest, name)?
+        };
         if v.len() != entry.len {
             return Err(FedAeError::Artifact(format!(
-                "init blob `{name}`: expected {} f32s, file has {}",
+                "init blob `{name}`: expected {} f32s, got {}",
                 entry.len,
                 v.len()
             )));
@@ -281,7 +289,7 @@ impl AdamState {
 }
 
 /// The full AE pipeline for one manifest AE entry: training, encode,
-/// decode and roundtrip, all as compiled artifacts.
+/// decode and roundtrip.
 #[derive(Debug)]
 pub struct AePipeline<'rt> {
     rt: &'rt Runtime,
@@ -380,8 +388,8 @@ impl<'rt> AePipeline<'rt> {
 
 #[cfg(test)]
 mod tests {
-    //! Unit tests needing no artifacts; integration tests against the real
-    //! artifacts live in `rust/tests/runtime_integration.rs`.
+    //! Unit tests over the native runtime; full federated integration tests
+    //! live in `rust/tests/`.
     use super::*;
 
     #[test]
@@ -396,5 +404,104 @@ mod tests {
     fn scalar_helper() {
         assert_eq!(scalar(&[3.5], "x").unwrap(), 3.5);
         assert!(scalar(&[], "x").is_err());
+    }
+
+    #[test]
+    fn native_runtime_serves_builtin_manifest() {
+        let rt = Runtime::native();
+        rt.manifest().validate().unwrap();
+        assert!(rt.platform_name().contains("native"));
+        assert_eq!(rt.manifest().model("mnist").unwrap().n_params, 15_910);
+        // Init blobs synthesize with the right lengths and are reproducible.
+        let a = rt.load_init("mnist_params").unwrap();
+        assert_eq!(a.len(), 15_910);
+        assert_eq!(Runtime::native().load_init("mnist_params").unwrap(), a);
+        assert!(rt.load_init("nope").is_err());
+    }
+
+    #[test]
+    fn from_dir_default_falls_back_but_explicit_path_errors() {
+        // The conventional default location may fall back to the built-in
+        // native runtime (clean-checkout UX) ...
+        let rt = Runtime::from_dir("artifacts").unwrap();
+        assert!(rt.platform_name().contains("native"));
+        // ... but a typo'd explicit path must not silently swap geometry.
+        let err = Runtime::from_dir("definitely/not/a/real/artifacts/dir").unwrap_err();
+        assert!(err.to_string().contains("no manifest"));
+    }
+
+    #[test]
+    fn run_validates_shapes() {
+        let rt = Runtime::native();
+        // Too few inputs.
+        assert!(rt.run("mnist_eval", &[&[0.0]]).is_err());
+        // Wrong element count in one input.
+        let m = rt.manifest().model("mnist").unwrap().clone();
+        let bad = vec![0.0f32; 3];
+        let x = vec![0.0f32; m.eval_batch * m.input_dim];
+        let y = vec![0.0f32; m.eval_batch * m.classes];
+        assert!(rt.run("mnist_eval", &[&bad, &x, &y]).is_err());
+        // Unknown artifact.
+        assert!(rt.run("nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn toy_train_and_eval_through_typed_wrappers() {
+        let rt = Runtime::native();
+        let ts = TrainStep::new(&rt, "toy").unwrap();
+        let ev = EvalStep::new(&rt, "toy").unwrap();
+        let mut params = rt.load_init("toy_params").unwrap();
+        let x: Vec<f32> = (0..ts.batch * ts.input_dim)
+            .map(|i| (i % 7) as f32 / 7.0)
+            .collect();
+        let mut y = vec![0.0f32; ts.batch * ts.classes];
+        for b in 0..ts.batch {
+            y[b * ts.classes + b % ts.classes] = 1.0;
+        }
+        let (p2, loss) = ts.step(&params, &x, &y, 0.1).unwrap();
+        assert_eq!(p2.len(), params.len());
+        assert!(loss.is_finite() && loss > 0.0);
+        params = p2;
+        let xe: Vec<f32> = (0..ev.batch * ev.input_dim)
+            .map(|i| (i % 5) as f32 / 5.0)
+            .collect();
+        let mut ye = vec![0.0f32; ev.batch * ev.classes];
+        for b in 0..ev.batch {
+            ye[b * ev.classes + b % ev.classes] = 1.0;
+        }
+        let (el, ea) = ev.eval(&params, &xe, &ye).unwrap();
+        assert!(el.is_finite());
+        assert!((0.0..=1.0).contains(&ea));
+    }
+
+    #[test]
+    fn toy_ae_pipeline_split_encode_decode() {
+        let rt = Runtime::native();
+        let pipe = AePipeline::new(&rt, "toy").unwrap();
+        let ae_params = rt.load_init("ae_toy_init").unwrap();
+        let (enc, dec) = pipe.split(&ae_params).unwrap();
+        assert_eq!(enc.len(), pipe.encoder_params);
+        assert_eq!(dec.len(), pipe.decoder_params);
+        let w = rt.load_init("toy_params").unwrap();
+        let z = pipe.encode(&enc, &w).unwrap();
+        assert_eq!(z.len(), pipe.latent);
+        let recon = pipe.decode(&dec, &z).unwrap();
+        assert_eq!(recon.len(), pipe.input_dim);
+        // encode∘decode == roundtrip (same computation pieces).
+        let (recon2, mse, acc) = pipe.roundtrip(&ae_params, &w).unwrap();
+        for (a, b) in recon.iter().zip(&recon2) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        let rust_mse = tensor::mse(&w, &recon2) as f32;
+        assert!((mse - rust_mse).abs() < 1e-6 * (1.0 + mse.abs()));
+        assert!((0.0..=1.0).contains(&acc));
+        assert!(pipe.split(&ae_params[..10]).is_err());
+    }
+
+    #[test]
+    fn warmup_checks_artifact_names() {
+        let rt = Runtime::native();
+        rt.warmup(&["mnist_eval", "encode_mnist"]).unwrap();
+        assert!(rt.warmup(&["missing_artifact"]).is_err());
     }
 }

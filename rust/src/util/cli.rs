@@ -5,6 +5,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::error::{FedAeError, Result};
+
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -61,30 +63,30 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+            Some(v) => v.parse().map_err(|_| {
+                FedAeError::Config(format!("--{name} expects an integer, got `{v}`"))
+            }),
         }
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+            Some(v) => v.parse().map_err(|_| {
+                FedAeError::Config(format!("--{name} expects a number, got `{v}`"))
+            }),
         }
     }
 
-    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+            Some(v) => v.parse().map_err(|_| {
+                FedAeError::Config(format!("--{name} expects an integer, got `{v}`"))
+            }),
         }
     }
 }

@@ -7,7 +7,7 @@ use fedae::aggregation::{self, Aggregator, WeightedUpdate};
 use fedae::compression::{self, CompressedUpdate, UpdateCompressor};
 use fedae::config::{AggregationConfig, CompressionConfig};
 use fedae::coordinator::RoundState;
-use fedae::network::{Direction, SimulatedNetwork, TrafficKind, Link};
+use fedae::network::{Direction, Link, SimulatedNetwork, TrafficKind};
 use fedae::savings::SavingsModel;
 use fedae::testing::prop;
 use fedae::transport::Message;

@@ -1,31 +1,22 @@
-//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! Integration tests over the runtime and its typed wrappers.
 //!
-//! Gated on `artifacts/manifest.json` existing (run `make artifacts`); in a
-//! fresh checkout each test skips with a message instead of failing.
+//! These run against whatever backend `Runtime::from_dir("artifacts")`
+//! resolves: the pure-rust native backend in a clean checkout (built-in
+//! manifest, synthesized init blobs), or the PJRT path over real AOT
+//! artifacts when `artifacts/manifest.json` exists and `--features xla` is
+//! enabled. The assertions hold for both: the two backends implement the
+//! same semantics over the same manifest geometry.
 
 use fedae::runtime::{AdamState, AePipeline, EvalStep, Runtime, TrainStep};
 use fedae::tensor;
 
-fn runtime() -> Option<Runtime> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping: artifacts not built");
-        return None;
-    }
-    Some(Runtime::from_dir("artifacts").expect("runtime loads"))
-}
-
-macro_rules! rt_or_skip {
-    () => {
-        match runtime() {
-            Some(rt) => rt,
-            None => return,
-        }
-    };
+fn runtime() -> Runtime {
+    Runtime::from_dir("artifacts").expect("runtime loads")
 }
 
 #[test]
 fn manifest_matches_paper_constants() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     let m = rt.manifest();
     // Paper §4.1 / §5.1 exact numbers.
     assert_eq!(m.model("mnist").unwrap().n_params, 15_910);
@@ -39,7 +30,7 @@ fn manifest_matches_paper_constants() {
 
 #[test]
 fn init_blobs_load_and_are_finite() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     for name in [
         "mnist_params",
         "cifar_params",
@@ -56,7 +47,7 @@ fn init_blobs_load_and_are_finite() {
 
 #[test]
 fn train_step_reduces_loss_over_steps() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     let ts = TrainStep::new(&rt, "mnist").unwrap();
     let mut params = rt.load_init("mnist_params").unwrap();
     // Deterministic toy batch: one-hot-ish patterns per class.
@@ -88,7 +79,7 @@ fn train_step_reduces_loss_over_steps() {
 
 #[test]
 fn eval_matches_train_loss_shape() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     let ev = EvalStep::new(&rt, "mnist").unwrap();
     let params = rt.load_init("mnist_params").unwrap();
     let x = vec![0.1f32; ev.batch * ev.input_dim];
@@ -103,7 +94,7 @@ fn eval_matches_train_loss_shape() {
 
 #[test]
 fn runtime_rejects_wrong_shapes() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     // Too few inputs.
     assert!(rt.run("mnist_eval", &[&[0.0]]).is_err());
     // Wrong element count.
@@ -118,7 +109,7 @@ fn runtime_rejects_wrong_shapes() {
 
 #[test]
 fn encode_decode_split_consistency() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     let pipe = AePipeline::new(&rt, "mnist").unwrap();
     let ae_params = rt.load_init("ae_mnist_init").unwrap();
     let (enc, dec) = pipe.split(&ae_params).unwrap();
@@ -148,7 +139,7 @@ fn encode_decode_split_consistency() {
 
 #[test]
 fn ae_train_step_learns_constant_batch() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     let pipe = AePipeline::new(&rt, "mnist").unwrap();
     let mut ae = rt.load_init("ae_mnist_init").unwrap();
     let mut adam = AdamState::zeros(ae.len());
@@ -176,7 +167,7 @@ fn ae_train_step_learns_constant_batch() {
 
 #[test]
 fn deep_ae_variant_works() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     let pipe = AePipeline::new(&rt, "mnist_deep").unwrap();
     let ae = rt.load_init("ae_mnist_deep_init").unwrap();
     let w = rt.load_init("mnist_params").unwrap();
@@ -188,14 +179,14 @@ fn deep_ae_variant_works() {
 
 #[test]
 fn warmup_compiles_artifacts() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     rt.warmup(&["mnist_eval", "encode_mnist"]).unwrap();
     assert!(rt.warmup(&["missing_artifact"]).is_err());
 }
 
 #[test]
 fn cifar_pipeline_end_to_end() {
-    let rt = rt_or_skip!();
+    let rt = runtime();
     let ts = TrainStep::new(&rt, "cifar").unwrap();
     let params = rt.load_init("cifar_params").unwrap();
     let x = vec![0.2f32; ts.batch * ts.input_dim];
