@@ -5,6 +5,16 @@
 //! [`Median`], [`TrimmedMean`] and [`FedAvgM`] are included so the benches
 //! can show the AE scheme is aggregation-agnostic (it is "orthogonal",
 //! paper §4.2).
+//!
+//! For large-collaborator simulations, [`ShardedAggregator`] wraps any of
+//! the above and aggregates the parameter vector in coordinate shards so
+//! the server never materializes every collaborator's full reconstruction
+//! at once (see [`sharded`] for the memory model and equivalence
+//! guarantees).
+
+pub mod sharded;
+
+pub use sharded::ShardedAggregator;
 
 use crate::config::AggregationConfig;
 use crate::error::{FedAeError, Result};
@@ -14,17 +24,36 @@ use crate::error::{FedAeError, Result};
 pub struct WeightedUpdate {
     /// Aggregation weight (e.g. local sample count).
     pub weight: f64,
+    /// The (reconstructed) update vector.
     pub values: Vec<f32>,
 }
 
 /// An aggregation algorithm combining per-collaborator vectors into the
 /// next global vector.
 pub trait Aggregator {
+    /// Short name for logs/benches.
     fn name(&self) -> &str;
 
     /// Combine updates (all same length, validated by the caller via
     /// [`validate_updates`]).
     fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>>;
+
+    /// Combine one coordinate *shard* of a round's updates: `updates`
+    /// holds only the coordinates of shard `shard`, and the return value
+    /// is that shard of the next global vector.
+    ///
+    /// This is the seam the memory-bounded server path streams through.
+    /// Callers must use a fixed (shard index -> coordinate range)
+    /// partition for the lifetime of the aggregator. The default ignores
+    /// `shard` and delegates to [`Aggregator::aggregate`], which is
+    /// correct for stateless coordinate-wise aggregators (every built-in
+    /// except [`FedAvgM`], whose momentum spans rounds) —
+    /// [`ShardedAggregator`] therefore routes each shard to its own inner
+    /// aggregator instance instead of sharing one across shards.
+    fn aggregate_shard(&mut self, shard: usize, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let _ = shard;
+        self.aggregate(updates)
+    }
 }
 
 /// Shared validation: non-empty, equal lengths, finite weights.
@@ -132,10 +161,12 @@ impl Aggregator for Median {
 /// Trimmed mean: drop the `trim` fraction of extremes at each end.
 #[derive(Debug)]
 pub struct TrimmedMean {
+    /// Fraction trimmed at each extreme, in [0, 0.5).
     pub trim: f64,
 }
 
 impl TrimmedMean {
+    /// A trimmed mean dropping `trim` of the updates at each end.
     pub fn new(trim: f64) -> Result<TrimmedMean> {
         if !(0.0..0.5).contains(&trim) {
             return Err(FedAeError::Config(format!(
@@ -177,6 +208,7 @@ impl Aggregator for TrimmedMean {
 /// FedAvg with server-side momentum.
 #[derive(Debug)]
 pub struct FedAvgM {
+    /// Server momentum coefficient, in [0, 1).
     pub beta: f64,
     momentum: Vec<f32>,
     prev_global: Vec<f32>,
@@ -184,6 +216,7 @@ pub struct FedAvgM {
 }
 
 impl FedAvgM {
+    /// FedAvg with server momentum `beta`.
     pub fn new(beta: f64) -> Result<FedAvgM> {
         if !(0.0..1.0).contains(&beta) {
             return Err(FedAeError::Config(format!("beta {beta} not in [0,1)")));

@@ -1,0 +1,269 @@
+//! Shard-aware aggregation: bound server memory at large `n_params`.
+//!
+//! At paper scale (§4: a 352.9M-parameter autoencoder compressing a
+//! 550,570-parameter classifier) an unsharded server must hold every
+//! participant's reconstructed update simultaneously —
+//! `participants x n_params` f32s — before aggregating. With hundreds of
+//! simulated collaborators that dominates peak memory. [`ShardedAggregator`]
+//! splits the coordinate space into fixed shards of
+//! [`crate::config::EngineConfig::shard_size`] coordinates and aggregates
+//! shard-by-shard; combined with
+//! [`crate::compression::UpdateCompressor::decompress_range`] the
+//! coordinator's peak is `participants x shard_size` floats plus one
+//! transient full reconstruction, instead of `participants x n_params`.
+//!
+//! The memory bound trades compute for schemes without random-access
+//! layouts: identity and quantize decode exactly the requested range, but
+//! compressors using the default `decompress_range` (the AE's dense
+//! decoder, sketch, top-k) re-run a full decode per shard, i.e.
+//! `shard_count` decodes per update per round. Pick `shard_size` with
+//! that in mind (larger shards = fewer re-decodes, more memory), or keep
+//! aggregation unsharded when updates are cheap to hold.
+//!
+//! ## Equivalence
+//!
+//! Every built-in aggregator is coordinate-wise: the value of output
+//! coordinate `i` depends only on the updates' values at coordinate `i`
+//! (plus, for [`crate::aggregation::FedAvg`] /
+//! [`crate::aggregation::FedAvgM`], the scalar weights, and for FedAvgM
+//! the per-coordinate momentum). Partitioning the coordinates therefore
+//! changes *nothing* about the arithmetic performed per coordinate — not
+//! even the operand order — so sharded aggregation is bitwise identical
+//! to unsharded aggregation. The stateful FedAvgM keeps its
+//! momentum/previous-global state correct across rounds because each
+//! shard index is routed to its own persistent inner aggregator
+//! instance. `sharded_matches_unsharded_*` tests below pin this for all
+//! five algorithms.
+
+use std::ops::Range;
+
+use super::{from_config, validate_updates, Aggregator, WeightedUpdate};
+use crate::config::AggregationConfig;
+use crate::error::{FedAeError, Result};
+
+/// Iterate the fixed shard partition of an `n`-coordinate vector:
+/// `shard_size`-sized ranges, the last one possibly shorter.
+pub fn shard_ranges(n: usize, shard_size: usize) -> impl Iterator<Item = Range<usize>> {
+    assert!(shard_size > 0, "shard_size must be > 0");
+    (0..n)
+        .step_by(shard_size)
+        .map(move |start| start..(start + shard_size).min(n))
+}
+
+/// Number of shards in the partition of an `n`-coordinate vector.
+pub fn shard_count(n: usize, shard_size: usize) -> usize {
+    assert!(shard_size > 0, "shard_size must be > 0");
+    (n + shard_size - 1) / shard_size
+}
+
+/// An [`Aggregator`] adapter that aggregates in coordinate shards.
+///
+/// Each shard index gets its own inner aggregator built from the wrapped
+/// [`AggregationConfig`] (lazily, on first use), so stateful algorithms
+/// keep per-shard state that lines up with the fixed coordinate partition
+/// across rounds. Use it either as a drop-in [`Aggregator`] (materialized
+/// updates are sliced internally) or drive
+/// [`ShardedAggregator::aggregate_shard`] directly with streamed shard
+/// slices, as the coordinator's memory-bounded path does.
+pub struct ShardedAggregator {
+    cfg: AggregationConfig,
+    shard_size: usize,
+    shards: Vec<Box<dyn Aggregator>>,
+    name: String,
+}
+
+impl std::fmt::Debug for ShardedAggregator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedAggregator")
+            .field("cfg", &self.cfg)
+            .field("shard_size", &self.shard_size)
+            .field("shards", &self.shards.len())
+            .finish()
+    }
+}
+
+impl ShardedAggregator {
+    /// Build a sharded adapter over `cfg` with `shard_size`-coordinate
+    /// shards. The inner config is validated eagerly (a bad `trim`/`beta`
+    /// fails here, not mid-round).
+    pub fn new(cfg: AggregationConfig, shard_size: usize) -> Result<ShardedAggregator> {
+        if shard_size == 0 {
+            return Err(FedAeError::Config(
+                "sharded aggregation requires shard_size > 0".into(),
+            ));
+        }
+        let probe = from_config(&cfg)?;
+        let name = format!("sharded({}, {shard_size})", probe.name());
+        Ok(ShardedAggregator {
+            cfg,
+            shard_size,
+            shards: Vec::new(),
+            name,
+        })
+    }
+
+    /// The configured shard width in coordinates.
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    /// The inner aggregator for `shard`, growing the per-shard set on
+    /// first use (the driver learns `n_params` only when updates arrive).
+    fn inner(&mut self, shard: usize) -> Result<&mut Box<dyn Aggregator>> {
+        while self.shards.len() <= shard {
+            self.shards.push(from_config(&self.cfg)?);
+        }
+        Ok(&mut self.shards[shard])
+    }
+}
+
+impl Aggregator for ShardedAggregator {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Slice materialized updates into the fixed shard partition and
+    /// aggregate each shard independently. Provided for drop-in use and
+    /// equivalence testing; the coordinator's streaming path calls
+    /// [`Aggregator::aggregate_shard`] per shard instead and never
+    /// materializes `updates` at all.
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let n = validate_updates(updates)?;
+        let mut out = vec![0.0f32; n];
+        for (shard, range) in shard_ranges(n, self.shard_size).enumerate() {
+            let shard_updates: Vec<WeightedUpdate> = updates
+                .iter()
+                .map(|u| WeightedUpdate {
+                    weight: u.weight,
+                    values: u.values[range.clone()].to_vec(),
+                })
+                .collect();
+            let piece = self.aggregate_shard(shard, &shard_updates)?;
+            if piece.len() != range.len() {
+                return Err(FedAeError::Coordination(format!(
+                    "shard {shard} aggregated to {} values, expected {}",
+                    piece.len(),
+                    range.len()
+                )));
+            }
+            out[range].copy_from_slice(&piece);
+        }
+        Ok(out)
+    }
+
+    /// Route one shard's updates to that shard's persistent inner
+    /// aggregator.
+    fn aggregate_shard(&mut self, shard: usize, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        self.inner(shard)?.aggregate(updates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn upd(weight: f64, values: Vec<f32>) -> WeightedUpdate {
+        WeightedUpdate { weight, values }
+    }
+
+    /// A deterministic, slightly adversarial batch of updates: uneven
+    /// weights, sign flips, magnitudes spanning several orders.
+    fn updates(round: u64, count: usize, n: usize) -> Vec<WeightedUpdate> {
+        let mut rng = crate::util::rng::Rng::new(41 + round);
+        (0..count)
+            .map(|c| {
+                let values = (0..n)
+                    .map(|_| rng.uniform_in(-3.0, 3.0) * 10f32.powi((c % 3) as i32 - 1))
+                    .collect();
+                upd(1.0 + (c % 5) as f64, values)
+            })
+            .collect()
+    }
+
+    fn all_configs() -> Vec<AggregationConfig> {
+        vec![
+            AggregationConfig::Mean,
+            AggregationConfig::FedAvg,
+            AggregationConfig::Median,
+            AggregationConfig::TrimmedMean { trim: 0.2 },
+            AggregationConfig::FedAvgM { beta: 0.9 },
+        ]
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_all_aggregators() {
+        // Multi-round so FedAvgM's cross-round momentum state is exercised;
+        // shard sizes that divide n, don't divide n, and exceed n.
+        let n = 37;
+        for cfg in all_configs() {
+            for shard_size in [1, 5, 16, 37, 64] {
+                let mut plain = from_config(&cfg).unwrap();
+                let mut sharded = ShardedAggregator::new(cfg.clone(), shard_size).unwrap();
+                for round in 0..4 {
+                    let ups = updates(round, 7, n);
+                    let a = plain.aggregate(&ups).unwrap();
+                    let b = sharded.aggregate(&ups).unwrap();
+                    assert_eq!(
+                        a, b,
+                        "{} shard_size={shard_size} round={round} diverged",
+                        sharded.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_shards_match_whole_vector_aggregation() {
+        // Driving aggregate_shard directly (the coordinator's streaming
+        // path) equals the drop-in Aggregator::aggregate result.
+        let n = 23;
+        let shard_size = 4;
+        for cfg in all_configs() {
+            let mut plain = from_config(&cfg).unwrap();
+            let mut sharded = ShardedAggregator::new(cfg.clone(), shard_size).unwrap();
+            for round in 0..3 {
+                let ups = updates(round, 5, n);
+                let want = plain.aggregate(&ups).unwrap();
+                let mut got = vec![0.0f32; n];
+                for (s, range) in shard_ranges(n, shard_size).enumerate() {
+                    let shard_ups: Vec<WeightedUpdate> = ups
+                        .iter()
+                        .map(|u| upd(u.weight, u.values[range.clone()].to_vec()))
+                        .collect();
+                    let piece = sharded.aggregate_shard(s, &shard_ups).unwrap();
+                    got[range].copy_from_slice(&piece);
+                }
+                assert_eq!(want, got, "{} round={round}", sharded.name());
+            }
+        }
+    }
+
+    #[test]
+    fn shard_partition_helpers() {
+        let ranges: Vec<_> = shard_ranges(10, 4).collect();
+        assert_eq!(ranges, vec![0..4, 4..8, 8..10]);
+        assert_eq!(shard_count(10, 4), 3);
+        assert_eq!(shard_count(8, 4), 2);
+        assert_eq!(shard_count(3, 4), 1);
+        assert_eq!(shard_ranges(0, 4).count(), 0);
+        assert_eq!(shard_count(0, 4), 0);
+    }
+
+    #[test]
+    fn rejects_bad_construction() {
+        assert!(ShardedAggregator::new(AggregationConfig::Mean, 0).is_err());
+        assert!(
+            ShardedAggregator::new(AggregationConfig::TrimmedMean { trim: 0.9 }, 8).is_err()
+        );
+    }
+
+    #[test]
+    fn validation_still_applies() {
+        let mut s = ShardedAggregator::new(AggregationConfig::Mean, 4).unwrap();
+        assert!(s.aggregate(&[]).is_err());
+        assert!(s
+            .aggregate(&[upd(1.0, vec![1.0]), upd(1.0, vec![1.0, 2.0])])
+            .is_err());
+    }
+}

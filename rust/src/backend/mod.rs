@@ -21,7 +21,9 @@
 //! `jax.value_and_grad` — see `python/tests`), so everything above the
 //! trait is backend-agnostic.
 
+/// Pure-rust default backend.
 pub mod native;
+/// PJRT/XLA compiled-HLO backend (feature-gated).
 #[cfg(feature = "xla")]
 pub mod xla;
 
@@ -34,7 +36,14 @@ use crate::error::Result;
 
 /// A compute backend executing manifest-described computations on flat
 /// `f32` tensors.
-pub trait Backend {
+///
+/// Backends are required to be `Send + Sync`: the parallel round engine
+/// ([`crate::coordinator::ParallelRoundEngine`]) drives per-collaborator
+/// train/encode steps from `std::thread::scope` workers that all share one
+/// [`crate::runtime::Runtime`]. Implementations must therefore take `&self`
+/// and be safe under concurrent `execute` calls — [`NativeBackend`] is
+/// stateless, and the XLA path guards its executable cache with a `Mutex`.
+pub trait Backend: Send + Sync {
     /// Human-readable platform identifier (for logs / `fedae inspect`).
     fn platform_name(&self) -> String;
 

@@ -62,6 +62,7 @@ impl std::fmt::Debug for NativeBackend {
 }
 
 impl NativeBackend {
+    /// A native backend serving the given manifest's computations.
     pub fn new(manifest: Manifest) -> NativeBackend {
         NativeBackend { manifest }
     }

@@ -10,6 +10,11 @@
 //! `cargo check --features xla` stays green everywhere; to actually run the
 //! PJRT path, point the `xla` dependency in `rust/Cargo.toml` at a real
 //! xla-rs checkout (see README §XLA backend).
+//!
+//! [`Backend`] requires `Send + Sync` (the parallel round engine shares
+//! one runtime across workers): this type satisfies it with the
+//! mutex-guarded executable cache, and the swapped-in bindings' client /
+//! executable handles must themselves be thread-safe (PJRT's C API is).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

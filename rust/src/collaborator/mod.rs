@@ -16,6 +16,7 @@ use crate::runtime::{AdamState, AePipeline, EvalStep, Runtime, TrainStep};
 
 /// A single federated collaborator.
 pub struct Collaborator<'rt> {
+    /// This collaborator's id (also its index in the driver).
     pub id: usize,
     shard: Dataset,
     params: Vec<f32>,
@@ -35,6 +36,8 @@ impl<'rt> std::fmt::Debug for Collaborator<'rt> {
 }
 
 impl<'rt> Collaborator<'rt> {
+    /// Build a collaborator over its data shard, initial global model and
+    /// update compressor.
     pub fn new(
         rt: &'rt Runtime,
         family: &str,
@@ -65,14 +68,17 @@ impl<'rt> Collaborator<'rt> {
         })
     }
 
+    /// Local sample count (the FedAvg aggregation weight).
     pub fn n_samples(&self) -> usize {
         self.shard.len()
     }
 
+    /// Current local model parameters.
     pub fn params(&self) -> &[f32] {
         &self.params
     }
 
+    /// Name of the attached update compressor.
     pub fn compressor_name(&self) -> &str {
         self.compressor.name()
     }
@@ -126,6 +132,7 @@ pub struct PrepassResult {
     /// The logged weight snapshots (row-major [n_snapshots, n_params]) —
     /// kept for the validation model (Fig 5/7).
     pub snapshots: Vec<f32>,
+    /// Number of rows in `snapshots`.
     pub n_snapshots: usize,
     /// Classifier training loss per epoch during the data-collection pass.
     pub train_losses: Vec<f32>,
@@ -232,15 +239,22 @@ pub fn run_prepass(
 /// Similar series ⟺ the AE "successfully learned the encoding".
 #[derive(Debug, Clone)]
 pub struct ValidationPoint {
+    /// Snapshot index in the pre-pass weights dataset.
     pub snapshot: usize,
+    /// Eval loss with the original weights.
     pub orig_loss: f32,
+    /// Eval accuracy with the original weights.
     pub orig_acc: f32,
+    /// Eval loss with the AE-reconstructed weights.
     pub recon_loss: f32,
+    /// Eval accuracy with the AE-reconstructed weights.
     pub recon_acc: f32,
     /// Reconstruction MSE in weight space.
     pub weight_mse: f32,
 }
 
+/// Replay the logged snapshots through eval with original vs
+/// AE-reconstructed weights (the paper's §5.1 validation model).
 pub fn validation_model(
     rt: &Runtime,
     family: &str,

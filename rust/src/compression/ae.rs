@@ -91,6 +91,7 @@ impl<'rt> AeCompressor<'rt> {
         })
     }
 
+    /// The AE's latent width (the on-wire floats per update).
     pub fn latent(&self) -> usize {
         self.pipeline.latent
     }

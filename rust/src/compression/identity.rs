@@ -8,6 +8,7 @@ use crate::error::Result;
 pub struct IdentityCompressor;
 
 impl IdentityCompressor {
+    /// A new (stateless) identity compressor.
     pub fn new() -> IdentityCompressor {
         IdentityCompressor
     }
@@ -27,6 +28,24 @@ impl UpdateCompressor for IdentityCompressor {
     fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>> {
         match update {
             CompressedUpdate::Raw { values } => Ok(values.clone()),
+            other => Err(crate::error::FedAeError::Compression(format!(
+                "identity got {other:?}"
+            ))),
+        }
+    }
+
+    /// Raw updates allow random access: slice the requested coordinates
+    /// directly instead of cloning the full vector first.
+    fn decompress_range(
+        &mut self,
+        update: &CompressedUpdate,
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Raw { values } => {
+                super::check_decompress_range(&range, values.len())?;
+                Ok(values[range].to_vec())
+            }
             other => Err(crate::error::FedAeError::Compression(format!(
                 "identity got {other:?}"
             ))),
@@ -56,5 +75,17 @@ mod tests {
         let mut c = IdentityCompressor::new();
         let u = CompressedUpdate::Latent { z: vec![], n: 0 };
         assert!(c.decompress(&u).is_err());
+        assert!(c.decompress_range(&u, 0..0).is_err());
+    }
+
+    #[test]
+    fn range_decompression_matches_slice() {
+        let mut c = IdentityCompressor::new();
+        let w = vec![1.0, -2.5, 3.75, 0.5];
+        let u = c.compress(0, &w).unwrap();
+        assert_eq!(c.decompress_range(&u, 1..3).unwrap(), vec![-2.5, 3.75]);
+        assert_eq!(c.decompress_range(&u, 0..4).unwrap(), w);
+        assert_eq!(c.decompress_range(&u, 4..4).unwrap(), Vec::<f32>::new());
+        assert!(c.decompress_range(&u, 3..5).is_err());
     }
 }

@@ -16,11 +16,17 @@
 //! Every plugin implements [`UpdateCompressor`]; the coordinator treats
 //! them uniformly and the ledger meters their real serialized bytes.
 
+/// The paper's autoencoder compression scheme.
 pub mod ae;
+/// Identity (no-compression) baseline.
 pub mod identity;
+/// Uniform quantization baseline (FedPAQ/QSGD-style).
 pub mod quantize;
+/// Count-sketch baseline (FetchSGD-style).
 pub mod sketch;
+/// Random-mask subsampling baseline.
 pub mod subsample;
+/// Top-k sparsification with residual accumulation (DGC-style).
 pub mod topk;
 
 use crate::error::{FedAeError, Result};
@@ -30,30 +36,50 @@ use crate::tensor::{bytes_to_f32s, f32s_to_bytes};
 #[derive(Debug, Clone, PartialEq)]
 pub enum CompressedUpdate {
     /// Raw f32 update (identity).
-    Raw { values: Vec<f32> },
+    Raw {
+        /// The uncompressed update values.
+        values: Vec<f32>,
+    },
     /// AE latent code (the paper's scheme).
-    Latent { z: Vec<f32>, n: u32 },
+    Latent {
+        /// The latent code (the AE bottleneck activations).
+        z: Vec<f32>,
+        /// Logical dimensionality of the encoded update.
+        n: u32,
+    },
     /// Sparse (index, value) pairs.
     Sparse {
+        /// Coordinates of the kept values.
         indices: Vec<u32>,
+        /// Kept values, parallel to `indices`.
         values: Vec<f32>,
+        /// Logical dimensionality of the full update.
         n: u32,
     },
     /// Uniformly quantized values.
     Quantized {
+        /// Bits per value (1..=16).
         bits: u8,
+        /// Dequantization offset.
         min: f32,
+        /// Dequantization step size.
         scale: f32,
         /// Bit-packed codes, `n` logical values.
         packed: Vec<u8>,
+        /// Logical dimensionality of the full update.
         n: u32,
     },
     /// Count-sketch table.
     Sketch {
+        /// Sketch rows (independent hash functions).
         rows: u32,
+        /// Sketch columns (buckets per row).
         cols: u32,
+        /// The `rows x cols` sketch, row-major.
         table: Vec<f32>,
+        /// Hash seed shared between compressor and decompressor.
         seed: u64,
+        /// Logical dimensionality of the full update.
         n: u32,
     },
 }
@@ -206,6 +232,18 @@ impl CompressedUpdate {
     }
 }
 
+/// Shared bounds check for [`UpdateCompressor::decompress_range`]
+/// implementations: `range` must lie within an `n`-dim update.
+pub(crate) fn check_decompress_range(range: &std::ops::Range<usize>, n: usize) -> Result<()> {
+    if range.start > range.end || range.end > n {
+        return Err(FedAeError::Compression(format!(
+            "decompress_range {}..{} out of bounds for {n}-dim update",
+            range.start, range.end
+        )));
+    }
+    Ok(())
+}
+
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -249,9 +287,12 @@ impl<'a> Cur<'a> {
 ///
 /// Compressors may be stateful (residual accumulation in top-k, the AE's
 /// encoder/decoder halves), so compress/decompress take `&mut self`.
-/// (Not `Send`: the AE compressor borrows the PJRT runtime; the TCP
-/// deployment mode constructs one compressor per worker thread instead.)
-pub trait UpdateCompressor {
+///
+/// The trait requires `Send` so the parallel round engine can move each
+/// collaborator (and its compressor) onto a `std::thread::scope` worker.
+/// Every built-in compressor is plain data; the AE compressor shares the
+/// runtime immutably (`Backend` is `Send + Sync`), so this holds crate-wide.
+pub trait UpdateCompressor: Send {
     /// Short name for logs/benches.
     fn name(&self) -> &str;
 
@@ -261,6 +302,26 @@ pub trait UpdateCompressor {
 
     /// Reconstruct a full vector from the compressed form (server side).
     fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>>;
+
+    /// Reconstruct only the coordinates in `range` of the full vector —
+    /// the seam the sharded aggregation path streams through
+    /// ([`crate::aggregation::ShardedAggregator`]): the server never has
+    /// to hold every collaborator's full reconstruction at once, only one
+    /// transient full decode plus `participants x shard_size` floats.
+    ///
+    /// The default decompresses fully and slices, which is correct for
+    /// every scheme; compressors whose layout allows cheap random access
+    /// (e.g. [`identity::IdentityCompressor`]) override it to skip the
+    /// full materialization.
+    fn decompress_range(
+        &mut self,
+        update: &CompressedUpdate,
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<f32>> {
+        let full = self.decompress(update)?;
+        check_decompress_range(&range, full.len())?;
+        Ok(full[range].to_vec())
+    }
 
     /// The analytic compression ratio (logical f32 bytes / wire bytes)
     /// for an `n`-dim update, if fixed by construction. The ledger always

@@ -17,6 +17,8 @@ pub struct QuantizeCompressor {
 }
 
 impl QuantizeCompressor {
+    /// Quantizer to `bits` bits per value (1..=16), optionally with
+    /// seeded stochastic rounding.
     pub fn new(bits: u8, stochastic: bool, seed: u64) -> Result<QuantizeCompressor> {
         if !(1..=16).contains(&bits) {
             return Err(FedAeError::Compression(format!(
@@ -57,6 +59,40 @@ fn pack_bits(codes: &[u32], bits: u8) -> Vec<u8> {
         out.push((acc & 0xFF) as u8);
     }
     out
+}
+
+/// Random access into the fixed-width bitstream: unpack `len` codes
+/// starting at logical index `start`. The fixed width is what makes the
+/// quantized format seekable — the sharded aggregation path decodes only
+/// the coordinates of one shard instead of the whole update.
+fn unpack_bits_range(packed: &[u8], bits: u8, start: usize, len: usize) -> Result<Vec<u32>> {
+    let end_bit = (start + len) * bits as usize;
+    let needed = (end_bit + 7) / 8;
+    if packed.len() < needed {
+        return Err(FedAeError::Compression(format!(
+            "packed stream too short: {} < {needed}",
+            packed.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(len);
+    let mask = (1u64 << bits) - 1;
+    let mut bitpos = start * bits as usize;
+    for _ in 0..len {
+        // A code spans at most 3 bytes (bits <= 16, shift <= 7 => 23 bits).
+        let byte = bitpos / 8;
+        let shift = bitpos % 8;
+        let mut acc = (packed[byte] as u64) >> shift;
+        let mut have = 8 - shift;
+        let mut next = byte + 1;
+        while have < bits as usize {
+            acc |= (packed[next] as u64) << have;
+            have += 8;
+            next += 1;
+        }
+        out.push((acc & mask) as u32);
+        bitpos += bits as usize;
+    }
+    Ok(out)
 }
 
 /// Inverse of [`pack_bits`].
@@ -160,6 +196,33 @@ impl UpdateCompressor for QuantizeCompressor {
         }
     }
 
+    /// Fixed-width codes allow seeking: unpack only `range`'s codes
+    /// instead of materializing the full reconstruction first.
+    fn decompress_range(
+        &mut self,
+        update: &CompressedUpdate,
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Quantized {
+                bits,
+                min,
+                scale,
+                packed,
+                n,
+            } => {
+                super::check_decompress_range(&range, *n as usize)?;
+                let len = range.len();
+                let codes = unpack_bits_range(packed, *bits, range.start, len)?;
+                Ok(codes
+                    .into_iter()
+                    .map(|c| min + c as f32 * scale)
+                    .collect())
+            }
+            other => Err(FedAeError::Compression(format!("quantize got {other:?}"))),
+        }
+    }
+
     fn nominal_ratio(&self, _n: usize) -> Option<f64> {
         Some(32.0 / self.bits as f64)
     }
@@ -177,6 +240,35 @@ mod tests {
             let packed = pack_bits(&codes, bits);
             assert_eq!(unpack_bits(&packed, bits, codes.len()).unwrap(), codes);
         }
+    }
+
+    #[test]
+    fn random_access_unpack_matches_sequential() {
+        for bits in [1u8, 3, 4, 7, 8, 11, 16] {
+            let mask = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..97).map(|i| (i * 2654435761u64 as usize) as u32 & mask).collect();
+            let packed = pack_bits(&codes, bits);
+            for (start, len) in [(0, 97), (0, 1), (1, 5), (13, 29), (96, 1), (50, 0)] {
+                assert_eq!(
+                    unpack_bits_range(&packed, bits, start, len).unwrap(),
+                    codes[start..start + len],
+                    "bits={bits} start={start} len={len}"
+                );
+            }
+            assert!(unpack_bits_range(&packed, bits, 90, 20).is_err());
+        }
+    }
+
+    #[test]
+    fn decompress_range_matches_full_decode() {
+        let mut c = QuantizeCompressor::new(5, false, 0).unwrap();
+        let w: Vec<f32> = (0..333).map(|i| (i as f32 * 0.31).cos()).collect();
+        let u = c.compress(0, &w).unwrap();
+        let full = c.decompress(&u).unwrap();
+        for range in [0..333, 0..1, 7..19, 100..333, 333..333] {
+            assert_eq!(c.decompress_range(&u, range.clone()).unwrap(), full[range]);
+        }
+        assert!(c.decompress_range(&u, 300..334).is_err());
     }
 
     #[test]

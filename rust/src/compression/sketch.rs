@@ -21,6 +21,7 @@ pub struct SketchCompressor {
 }
 
 impl SketchCompressor {
+    /// A `rows x cols` count-sketch keeping `topk` heavy hitters.
     pub fn new(rows: usize, cols: usize, topk: usize, seed: u64) -> Result<SketchCompressor> {
         if rows == 0 || cols == 0 || topk == 0 {
             return Err(FedAeError::Compression(

@@ -17,6 +17,7 @@ pub struct SubsampleCompressor {
 }
 
 impl SubsampleCompressor {
+    /// Subsampler keeping `fraction` of `n` coordinates (seeded mask).
     pub fn new(n: usize, fraction: f64, seed: u64) -> Result<SubsampleCompressor> {
         if !(0.0 < fraction && fraction <= 1.0) {
             return Err(FedAeError::Compression(format!(

@@ -18,6 +18,7 @@ pub struct TopKCompressor {
 }
 
 impl TopKCompressor {
+    /// Top-k compressor keeping `fraction` of `n` coordinates per round.
     pub fn new(n: usize, fraction: f64) -> Result<TopKCompressor> {
         if !(0.0 < fraction && fraction <= 1.0) {
             return Err(FedAeError::Compression(format!(
@@ -34,6 +35,7 @@ impl TopKCompressor {
         })
     }
 
+    /// Number of coordinates kept per update.
     pub fn k(&self) -> usize {
         self.k
     }

@@ -15,21 +15,29 @@ use crate::util::json::Json;
 /// One exported HLO artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Artifact name (e.g. `mnist_train_step`, `encode_mnist`).
     pub name: String,
+    /// HLO text file, relative to the artifacts directory.
     pub file: String,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor names, in return order.
     pub outputs: Vec<String>,
+    /// Content hash of the artifact file.
     pub sha256: String,
 }
 
 /// Named input tensor spec.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter name in the exported computation.
     pub name: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count of the shape.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -38,40 +46,60 @@ impl TensorSpec {
 /// Classifier model description.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Flattened parameter count.
     pub n_params: usize,
+    /// Input feature dimension.
     pub input_dim: usize,
+    /// Output classes.
     pub classes: usize,
+    /// Batch size the train-step artifact was compiled for.
     pub train_batch: usize,
+    /// Batch size the eval artifact was compiled for.
     pub eval_batch: usize,
 }
 
 /// Autoencoder description.
 #[derive(Debug, Clone)]
 pub struct AeEntry {
+    /// Layer widths input -> ... -> latent -> ... -> output.
     pub dims: Vec<usize>,
+    /// Total AE parameter count.
     pub n_params: usize,
+    /// Bottleneck (latent) width — the compression target.
     pub latent: usize,
+    /// Parameters in the encoder half (stays on the collaborator).
     pub encoder_params: usize,
+    /// Parameters in the decoder half (ships to the aggregator).
     pub decoder_params: usize,
+    /// Nominal input_dim / latent ratio.
     pub compression_ratio: f64,
+    /// Batch size the AE train-step artifact was compiled for.
     pub train_batch: usize,
 }
 
 /// Initial-parameter blob description.
 #[derive(Debug, Clone)]
 pub struct InitEntry {
+    /// Blob file, relative to the artifacts directory.
     pub file: String,
+    /// Number of f32 values in the blob.
     pub len: usize,
+    /// Content hash of the blob file.
     pub sha256: String,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Seed the python layer used to generate the init blobs.
     pub seed: u64,
+    /// Classifier families by name.
     pub models: BTreeMap<String, ModelEntry>,
+    /// Autoencoder variants by tag.
     pub autoencoders: BTreeMap<String, AeEntry>,
+    /// Exported computations by name.
     pub artifacts: BTreeMap<String, ArtifactEntry>,
+    /// Initial-parameter blobs by name.
     pub inits: BTreeMap<String, InitEntry>,
 }
 
@@ -90,6 +118,7 @@ impl Manifest {
         Ok(manifest)
     }
 
+    /// Parse a manifest from its JSON document (no validation).
     pub fn from_json(json: &Json) -> Result<Manifest> {
         let seed = json.req_usize("seed")? as u64;
 
@@ -264,24 +293,28 @@ impl Manifest {
         Ok(())
     }
 
+    /// Look up a classifier family by name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .get(name)
             .ok_or_else(|| FedAeError::Config(format!("unknown model `{name}`")))
     }
 
+    /// Look up an AE variant by tag.
     pub fn ae(&self, name: &str) -> Result<&AeEntry> {
         self.autoencoders
             .get(name)
             .ok_or_else(|| FedAeError::Config(format!("unknown autoencoder `{name}`")))
     }
 
+    /// Look up an exported computation by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
         self.artifacts
             .get(name)
             .ok_or_else(|| FedAeError::Artifact(format!("unknown artifact `{name}`")))
     }
 
+    /// Look up an init blob by name.
     pub fn init(&self, name: &str) -> Result<&InitEntry> {
         self.inits
             .get(name)
@@ -289,6 +322,8 @@ impl Manifest {
     }
 }
 
+/// Unit tests + the shared [`tests::test_manifest_json`] fixture reused
+/// by `config` tests.
 #[cfg(test)]
 pub mod tests {
     use super::*;

@@ -5,6 +5,7 @@
 //! configs only state what they change; [`ExperimentConfig::validate`]
 //! cross-checks against the artifact [`manifest::Manifest`] at startup.
 
+/// The artifact manifest: model/AE geometry and artifact descriptors.
 pub mod manifest;
 
 use crate::error::{FedAeError, Result};
@@ -17,18 +18,40 @@ pub enum CompressionConfig {
     /// No compression: raw f32 updates (the FL baseline).
     Identity,
     /// The paper's autoencoder compression. `ae` names a manifest AE entry.
-    Ae { ae: String },
+    Ae {
+        /// Manifest AE tag ("mnist" | "cifar" | "mnist_deep").
+        ae: String,
+    },
     /// Top-k magnitude sparsification with residual accumulation (DGC-like).
-    TopK { fraction: f64 },
+    TopK {
+        /// Fraction of coordinates kept per round, in (0, 1].
+        fraction: f64,
+    },
     /// Uniform quantization to `bits` bits (optionally stochastic rounding).
-    Quantize { bits: u8, stochastic: bool },
+    Quantize {
+        /// Bits per value (1..=16).
+        bits: u8,
+        /// Stochastic (unbiased) instead of nearest rounding.
+        stochastic: bool,
+    },
     /// Random-mask subsampling; mask is re-derived from a shared seed.
-    Subsample { fraction: f64 },
+    Subsample {
+        /// Fraction of coordinates kept, in (0, 1].
+        fraction: f64,
+    },
     /// Count-sketch compression (FetchSGD-like).
-    Sketch { rows: usize, cols: usize, topk: usize },
+    Sketch {
+        /// Sketch rows (independent hash functions).
+        rows: usize,
+        /// Sketch columns (buckets per row).
+        cols: usize,
+        /// Heavy hitters recovered server-side.
+        topk: usize,
+    },
 }
 
 impl CompressionConfig {
+    /// The config-file `kind` string of this scheme.
     pub fn kind_name(&self) -> &'static str {
         match self {
             CompressionConfig::Identity => "identity",
@@ -81,9 +104,15 @@ pub enum AggregationConfig {
     /// Coordinate-wise median (byzantine-robust baseline).
     Median,
     /// Trimmed mean discarding `trim` fraction at each end.
-    TrimmedMean { trim: f64 },
+    TrimmedMean {
+        /// Fraction trimmed at each extreme, in [0, 0.5).
+        trim: f64,
+    },
     /// FedAvg with server momentum `beta`.
-    FedAvgM { beta: f64 },
+    FedAvgM {
+        /// Server momentum coefficient, in [0, 1).
+        beta: f64,
+    },
 }
 
 impl AggregationConfig {
@@ -110,8 +139,11 @@ impl AggregationConfig {
 /// FL topology + schedule.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlConfig {
+    /// Number of simulated collaborators.
     pub collaborators: usize,
+    /// Communication rounds to run.
     pub rounds: usize,
+    /// Local epochs per collaborator per round.
     pub local_epochs: usize,
     /// Fraction of collaborators sampled per round (client selection).
     pub participation: f64,
@@ -132,16 +164,22 @@ impl Default for FlConfig {
 /// Synthetic-data shape + sharding strategy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataConfig {
+    /// Training samples per collaborator shard.
     pub per_collab: usize,
+    /// Shared test-set size.
     pub test_size: usize,
+    /// How data is split across collaborators.
     pub sharding: Sharding,
     /// Dirichlet alpha for `label_skew` sharding.
     pub alpha: f64,
 }
 
+/// How the synthetic dataset is partitioned across collaborators.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Sharding {
+    /// Independent, identically distributed shards.
     Iid,
+    /// Dirichlet label skew (non-IID; see [`DataConfig::alpha`]).
     LabelSkew,
     /// Paper §5.2's colour-imbalance: odd collaborators see grayscale data.
     ColorImbalance,
@@ -161,6 +199,7 @@ impl Default for DataConfig {
 /// Local-training hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
+    /// SGD learning rate for local classifier training.
     pub lr: f32,
 }
 
@@ -194,7 +233,9 @@ impl Default for PrepassConfig {
 /// Simulated network parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkConfig {
+    /// Link bandwidth in megabits per second.
     pub bandwidth_mbps: f64,
+    /// One-way link latency in milliseconds.
     pub latency_ms: f64,
 }
 
@@ -207,20 +248,62 @@ impl Default for NetworkConfig {
     }
 }
 
+/// Round-engine execution knobs (see ARCHITECTURE.md §Round engine).
+///
+/// Both knobs change *how* a round executes, never *what* it computes:
+/// any (`parallelism`, `shard_size`) combination produces bitwise-identical
+/// round outcomes for a fixed seed (pinned by
+/// `rust/tests/parallel_round.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Worker threads for per-collaborator round work
+    /// ([`crate::coordinator::ParallelRoundEngine`]): `1` = sequential
+    /// (the default), `0` = one worker per available core, `k` = exactly
+    /// `k` workers.
+    pub parallelism: usize,
+    /// Coordinate-shard width for server-side aggregation: `0` =
+    /// unsharded (the default; all reconstructions materialized at once),
+    /// `k` = aggregate in `k`-coordinate shards via
+    /// [`crate::aggregation::ShardedAggregator`], bounding peak server
+    /// memory at `participants x k` floats plus one transient full
+    /// reconstruction.
+    pub shard_size: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            parallelism: 1,
+            shard_size: 0,
+        }
+    }
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// Experiment name (used in logs and report files).
     pub name: String,
+    /// Master seed; every stream (sharding, init, selection) derives from it.
     pub seed: u64,
     /// Manifest model family ("mnist" | "cifar").
     pub model: String,
+    /// Collaborator-side update compression scheme.
     pub compression: CompressionConfig,
+    /// Server-side aggregation algorithm.
     pub aggregation: AggregationConfig,
+    /// Federation topology and schedule.
     pub fl: FlConfig,
+    /// Synthetic-data shape and sharding.
     pub data: DataConfig,
+    /// Local-training hyperparameters.
     pub train: TrainConfig,
+    /// Pre-pass round schedule (AE scheme only).
     pub prepass: PrepassConfig,
+    /// Simulated network parameters.
     pub network: NetworkConfig,
+    /// Round-engine execution knobs (parallelism, aggregation sharding).
+    pub engine: EngineConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -236,6 +319,7 @@ impl Default for ExperimentConfig {
             train: TrainConfig::default(),
             prepass: PrepassConfig::default(),
             network: NetworkConfig::default(),
+            engine: EngineConfig::default(),
         }
     }
 }
@@ -320,6 +404,14 @@ impl ExperimentConfig {
                 cfg.network.latency_ms = v;
             }
         }
+        if let Some(e) = j.get("engine") {
+            if let Some(v) = e.get("parallelism").and_then(|v| v.as_usize()) {
+                cfg.engine.parallelism = v;
+            }
+            if let Some(v) = e.get("shard_size").and_then(|v| v.as_usize()) {
+                cfg.engine.shard_size = v;
+            }
+        }
         Ok(cfg)
     }
 
@@ -388,7 +480,8 @@ mod tests {
             r#"{"name": "exp1", "model": "cifar",
                 "compression": {"kind": "topk", "fraction": 0.05},
                 "fl": {"rounds": 10},
-                "data": {"sharding": "color_imbalance"}}"#,
+                "data": {"sharding": "color_imbalance"},
+                "engine": {"parallelism": 8, "shard_size": 4096}}"#,
         )
         .unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
@@ -401,6 +494,16 @@ mod tests {
         assert_eq!(cfg.fl.rounds, 10);
         assert_eq!(cfg.fl.local_epochs, 5); // default preserved
         assert_eq!(cfg.data.sharding, Sharding::ColorImbalance);
+        assert_eq!(cfg.engine.parallelism, 8);
+        assert_eq!(cfg.engine.shard_size, 4096);
+    }
+
+    #[test]
+    fn engine_defaults_are_sequential_unsharded() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.engine, EngineConfig::default());
+        assert_eq!(cfg.engine.parallelism, 1);
+        assert_eq!(cfg.engine.shard_size, 0);
     }
 
     #[test]

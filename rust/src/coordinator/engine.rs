@@ -1,0 +1,162 @@
+//! Parallel round engine: fans per-collaborator work across scoped threads.
+//!
+//! The paper's headline result (§5: 500x–1720x compression) only matters
+//! "in large scale federated learning", which means simulations need to
+//! reach hundreds to thousands of collaborators. Collaborator work inside
+//! a round — local training, AE encoding, the simulated upload — is
+//! embarrassingly parallel: every collaborator owns its shard, its model
+//! copy, its compressor and its RNG stream, and only shares the immutable
+//! [`crate::runtime::Runtime`]. [`ParallelRoundEngine`] exploits exactly
+//! that: it splits the participant list into contiguous chunks and runs
+//! one `std::thread::scope` worker per chunk.
+//!
+//! ## Determinism
+//!
+//! Parallel execution is bitwise-identical to sequential execution:
+//!
+//! * each collaborator's computation depends only on its own state (seeded
+//!   per-collaborator RNG, own parameters) — thread interleaving cannot
+//!   touch it;
+//! * [`ParallelRoundEngine::map`] returns results in input order, so the
+//!   coordinator consumes train losses, updates and ledger records in
+//!   collaborator-id order no matter which worker finished first;
+//! * aggregation therefore sees the exact same operand order as the
+//!   sequential driver, so even non-associative f32 reductions match.
+//!
+//! `rust/tests/parallel_round.rs` pins this property, and
+//! `benches/bench_parallel_round.rs` measures the wall-clock speedup.
+
+/// A scoped-thread fan-out pool with a fixed worker count.
+///
+/// Construct once per driver ([`crate::config::EngineConfig::parallelism`]
+/// chooses the width: `1` = run inline on the caller's thread, `0` = use
+/// [`std::thread::available_parallelism`]) and call [`ParallelRoundEngine::map`]
+/// once per round phase.
+#[derive(Debug, Clone)]
+pub struct ParallelRoundEngine {
+    workers: usize,
+}
+
+impl ParallelRoundEngine {
+    /// Build an engine with `workers` threads; `0` selects the machine's
+    /// available parallelism (falling back to 1 if it cannot be queried).
+    pub fn new(workers: usize) -> ParallelRoundEngine {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
+        } else {
+            workers
+        };
+        ParallelRoundEngine { workers }
+    }
+
+    /// The resolved worker count (never 0).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f` to every item, preserving input order in the returned
+    /// vector regardless of worker scheduling.
+    ///
+    /// Items are split into at most `workers` contiguous chunks, one
+    /// scoped thread per chunk; with one worker (or one item) everything
+    /// runs inline on the caller's thread with no spawn overhead. Worker
+    /// panics propagate to the caller.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = self.workers.min(n);
+        if workers <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        // Contiguous chunks keep result order == input order and give each
+        // worker a cache-friendly run of collaborators.
+        let chunk_len = (n + workers - 1) / workers;
+        let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
+        let mut it = items.into_iter();
+        loop {
+            let chunk: Vec<T> = it.by_ref().take(chunk_len).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            chunks.push(chunk);
+        }
+        let f = &f;
+        let per_chunk: Vec<Vec<R>> = std::thread::scope(|s| {
+            let handles: Vec<_> = chunks
+                .into_iter()
+                .map(|chunk| s.spawn(move || chunk.into_iter().map(f).collect::<Vec<R>>()))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    // Re-raise worker panics with their original payload.
+                    h.join()
+                        .unwrap_or_else(|payload| std::panic::resume_unwind(payload))
+                })
+                .collect()
+        });
+        per_chunk.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_workers_resolves_to_available_parallelism() {
+        assert!(ParallelRoundEngine::new(0).workers() >= 1);
+        assert_eq!(ParallelRoundEngine::new(3).workers(), 3);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        for workers in [1, 2, 3, 8, 64] {
+            let engine = ParallelRoundEngine::new(workers);
+            let items: Vec<usize> = (0..37).collect();
+            let out = engine.map(items, |i| i * 2);
+            assert_eq!(out, (0..37).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let engine = ParallelRoundEngine::new(4);
+        assert_eq!(engine.map(Vec::<usize>::new(), |i| i), Vec::<usize>::new());
+        assert_eq!(engine.map(vec![9usize], |i| i + 1), vec![10]);
+    }
+
+    #[test]
+    fn map_runs_on_multiple_threads() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let engine = ParallelRoundEngine::new(4);
+        let seen = Mutex::new(HashSet::new());
+        engine.map((0..16).collect::<Vec<usize>>(), |_| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+        });
+        // 16 items over 4 workers must use more than one thread.
+        assert!(seen.lock().unwrap().len() > 1);
+    }
+
+    #[test]
+    fn map_with_mutable_borrows() {
+        // The coordinator hands the engine `&mut Collaborator` items;
+        // model that shape: disjoint mutable borrows fanned across workers.
+        let engine = ParallelRoundEngine::new(3);
+        let mut values = vec![0u64; 10];
+        let tasks: Vec<(usize, &mut u64)> = values.iter_mut().enumerate().collect();
+        let out = engine.map(tasks, |(i, v)| {
+            *v = i as u64 + 1;
+            *v
+        });
+        assert_eq!(out, (1..=10).collect::<Vec<u64>>());
+        assert_eq!(values, (1..=10).collect::<Vec<u64>>());
+    }
+}

@@ -4,21 +4,36 @@
 //!   duplicate / stale / unknown-collaborator protection.
 //! * [`DecoderRegistry`] — decoders shipped at the end of the pre-pass
 //!   round, keyed by collaborator (paper §5.3 case (b)) or shared
-//!   (case (a)).
+//!   (case (a)); thread-safe so parallel pre-pass workers can register
+//!   directly.
+//! * [`ParallelRoundEngine`] (in [`engine`]) — the scoped-thread fan-out
+//!   that runs per-collaborator round work (local train → AE encode →
+//!   simulated send) concurrently, deterministically.
 //! * [`FlDriver`] — the in-process experiment driver: wires collaborators,
 //!   compressors, aggregation, the simulated network and metrics into the
 //!   paper's federated loop (Fig 3), including the pre-pass round (Fig 2).
+//!   Two execution knobs ([`crate::config::EngineConfig`]) scale it to
+//!   large federations: `parallelism` fans collaborator work across
+//!   workers, and `shard_size` streams server-side aggregation through
+//!   [`ShardedAggregator`] in coordinate shards so reconstructions are
+//!   never all materialized at once. Neither knob changes results: see
+//!   ARCHITECTURE.md §Round engine and `rust/tests/parallel_round.rs`.
+
+pub mod engine;
+
+pub use engine::ParallelRoundEngine;
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, RwLock};
 
-use crate::aggregation::{Aggregator, WeightedUpdate};
+use crate::aggregation::{sharded::shard_ranges, Aggregator, ShardedAggregator, WeightedUpdate};
 use crate::collaborator::{run_prepass, Collaborator, PrepassResult};
 use crate::compression::{ae::AeCompressor, CompressedUpdate, UpdateCompressor};
 use crate::config::{CompressionConfig, ExperimentConfig, Sharding};
 use crate::data::{make_shards, Dataset, SynthKind};
 use crate::error::{FedAeError, Result};
 use crate::metrics::{ExperimentLog, RoundRecord};
-use crate::network::{Direction, SimulatedNetwork, TrafficKind};
+use crate::network::{Direction, SimulatedNetwork, TrafficKind, TrafficLedger, Transfer};
 use crate::runtime::{AePipeline, EvalStep, Runtime};
 use crate::tensor;
 use crate::transport::Message;
@@ -26,12 +41,14 @@ use crate::transport::Message;
 /// Per-round server state machine.
 #[derive(Debug)]
 pub struct RoundState {
+    /// The round this state machine accepts updates for.
     pub round: usize,
     expected: BTreeSet<usize>,
     received: BTreeMap<usize, (u32, CompressedUpdate)>,
 }
 
 impl RoundState {
+    /// A fresh round expecting updates from `expected` collaborators.
     pub fn new(round: usize, expected: impl IntoIterator<Item = usize>) -> RoundState {
         RoundState {
             round,
@@ -68,14 +85,17 @@ impl RoundState {
         Ok(())
     }
 
+    /// True when every expected update has arrived.
     pub fn is_complete(&self) -> bool {
         self.received.len() == self.expected.len()
     }
 
+    /// Number of updates received so far.
     pub fn received_count(&self) -> usize {
         self.received.len()
     }
 
+    /// Expected collaborators that have not reported yet.
     pub fn missing(&self) -> Vec<usize> {
         self.expected
             .iter()
@@ -94,26 +114,38 @@ impl RoundState {
 }
 
 /// Decoders shipped to the server at the end of the pre-pass round.
+///
+/// Registrations arrive from the parallel pre-pass workers, so the map
+/// lives behind a `RwLock` and both [`DecoderRegistry::register`] and
+/// [`DecoderRegistry::get`] take `&self`; decoder parameter vectors are
+/// handed out as cheap [`Arc`] clones. Registration order does not matter
+/// (the map is keyed by collaborator id), which is what makes concurrent
+/// pre-pass registration deterministic.
 #[derive(Debug, Default)]
 pub struct DecoderRegistry {
-    decoders: BTreeMap<usize, Vec<f32>>,
+    decoders: RwLock<BTreeMap<usize, Arc<Vec<f32>>>>,
 }
 
 impl DecoderRegistry {
-    pub fn register(&mut self, collab: usize, dec_params: Vec<f32>) -> Result<()> {
-        if self.decoders.contains_key(&collab) {
+    /// Register one collaborator's decoder half; rejects duplicates.
+    pub fn register(&self, collab: usize, dec_params: Vec<f32>) -> Result<()> {
+        let mut map = self.decoders.write().expect("decoder registry poisoned");
+        if map.contains_key(&collab) {
             return Err(FedAeError::Coordination(format!(
                 "decoder already registered for collaborator {collab}"
             )));
         }
-        self.decoders.insert(collab, dec_params);
+        map.insert(collab, Arc::new(dec_params));
         Ok(())
     }
 
-    pub fn get(&self, collab: usize) -> Result<&[f32]> {
+    /// Fetch a collaborator's decoder parameters.
+    pub fn get(&self, collab: usize) -> Result<Arc<Vec<f32>>> {
         self.decoders
+            .read()
+            .expect("decoder registry poisoned")
             .get(&collab)
-            .map(|v| v.as_slice())
+            .cloned()
             .ok_or_else(|| {
                 FedAeError::Coordination(format!(
                     "no decoder registered for collaborator {collab}"
@@ -121,28 +153,48 @@ impl DecoderRegistry {
             })
     }
 
+    /// Number of registered decoders.
     pub fn len(&self) -> usize {
-        self.decoders.len()
+        self.decoders.read().expect("decoder registry poisoned").len()
     }
 
+    /// True when no decoder has been registered yet.
     pub fn is_empty(&self) -> bool {
-        self.decoders.is_empty()
+        self.len() == 0
     }
 }
 
 /// Outcome of one communication round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RoundOutcome {
+    /// Which round this outcome describes.
     pub round: usize,
     /// (collaborator, local train loss).
     pub train_losses: Vec<(usize, f32)>,
     /// Post-aggregation global eval.
     pub eval_loss: f32,
+    /// Post-aggregation global eval accuracy.
     pub eval_acc: f32,
     /// Mean reconstruction MSE across updates (NaN for lossless).
     pub mean_recon_mse: f32,
+    /// Uplink bytes this round (updates).
     pub bytes_up: u64,
+    /// Downlink bytes this round (global-model broadcasts).
     pub bytes_down: u64,
+}
+
+/// Per-collaborator result of one round's fanned-out work (local train,
+/// local eval, compression, metered upload) — produced on an engine
+/// worker, consumed on the coordinator thread in collaborator-id order.
+struct CollabRoundResult {
+    cid: usize,
+    n_samples: u32,
+    train_loss: f32,
+    local_eval_loss: f32,
+    local_eval_acc: f32,
+    update: CompressedUpdate,
+    /// Worker-private traffic ledger, merged into the round network.
+    ledger: TrafficLedger,
 }
 
 /// The whole-experiment driver (single-process simulation).
@@ -152,11 +204,20 @@ pub struct FlDriver<'rt> {
     collaborators: Vec<Collaborator<'rt>>,
     /// Server-side decompressors, one per collaborator.
     server_decompressors: Vec<Box<dyn UpdateCompressor + 'rt>>,
+    /// The round aggregator. With `engine.shard_size > 0` this is a
+    /// [`ShardedAggregator`] and rounds drive it shard-by-shard via
+    /// [`Aggregator::aggregate_shard`]; otherwise it is the plain
+    /// configured aggregator and rounds call [`Aggregator::aggregate`]
+    /// once with all reconstructions materialized.
     aggregator: Box<dyn Aggregator>,
+    /// Fan-out pool for per-collaborator round work.
+    engine: ParallelRoundEngine,
+    /// The simulated network + byte-exact traffic ledger.
     pub network: SimulatedNetwork,
     eval: EvalStep<'rt>,
     test: Dataset,
     global: Vec<f32>,
+    /// Per-round records and experiment summaries.
     pub log: ExperimentLog,
     rng: crate::util::rng::Rng,
     /// Pre-pass results per collaborator (kept for figures/validation).
@@ -213,7 +274,17 @@ impl<'rt> FlDriver<'rt> {
         let global = rt.load_init(&format!("{}_params", cfg.model))?;
         let eval = EvalStep::new(rt, &cfg.model)?;
         let mut network = SimulatedNetwork::from_config(&cfg.network);
-        let aggregator = crate::aggregation::from_config(&cfg.aggregation)?;
+        // One live aggregator either way: the sharded adapter wraps the
+        // configured algorithm when coordinate sharding is requested.
+        let aggregator: Box<dyn Aggregator> = if cfg.engine.shard_size > 0 {
+            Box::new(ShardedAggregator::new(
+                cfg.aggregation.clone(),
+                cfg.engine.shard_size,
+            )?)
+        } else {
+            crate::aggregation::from_config(&cfg.aggregation)?
+        };
+        let engine = ParallelRoundEngine::new(cfg.engine.parallelism);
         let mut rng = crate::util::rng::Rng::new(cfg.seed);
         let mut log = ExperimentLog::new(cfg.name.clone());
 
@@ -234,20 +305,40 @@ impl<'rt> FlDriver<'rt> {
                     )));
                 }
                 let ae_init = rt.load_init(&format!("ae_{ae}_init"))?;
-                let mut registry = DecoderRegistry::default();
-                for (id, shard) in shards.into_iter().enumerate() {
-                    // Pre-pass (Fig 2): local training + AE training.
-                    let pp = run_prepass(
-                        rt,
-                        &cfg.model,
-                        pipeline,
-                        &shard,
-                        &cfg.prepass,
-                        &cfg.train,
-                        &global,
-                        &ae_init,
-                        cfg.seed.wrapping_add(id as u64),
-                    )?;
+                let registry = DecoderRegistry::default();
+                // Pre-pass (Fig 2) per collaborator, fanned across the
+                // engine workers: each task depends only on its own shard
+                // and seed, so parallel execution is deterministic. The
+                // metered decoder shipments and collaborator construction
+                // happen on this thread afterwards, in id order, so the
+                // traffic ledger and seeds match the sequential build
+                // exactly.
+                let tasks: Vec<(usize, Dataset)> = shards.into_iter().enumerate().collect();
+                let reg = &registry;
+                let model_family = cfg.model.as_str();
+                let prepass_cfg = &cfg.prepass;
+                let train_cfg = &cfg.train;
+                let global_init = &global;
+                let ae_init_ref = &ae_init;
+                let base_seed = cfg.seed;
+                let prepassed: Vec<Result<(usize, Dataset, PrepassResult)>> =
+                    engine.map(tasks, |(id, shard)| {
+                        let pp = run_prepass(
+                            rt,
+                            model_family,
+                            pipeline,
+                            &shard,
+                            prepass_cfg,
+                            train_cfg,
+                            global_init,
+                            ae_init_ref,
+                            base_seed.wrapping_add(id as u64),
+                        )?;
+                        reg.register(id, pp.dec_params.clone())?;
+                        Ok((id, shard, pp))
+                    });
+                for item in prepassed {
+                    let (id, shard, pp) = item?;
                     // Ship the decoder (metered, Eq. 5 cost).
                     let ship = Message::DecoderShipment {
                         collab_id: id as u32,
@@ -261,7 +352,6 @@ impl<'rt> FlDriver<'rt> {
                         TrafficKind::DecoderShipment,
                         ship.wire_bytes(),
                     );
-                    registry.register(id, pp.dec_params.clone())?;
                     server_decompressors
                         .push(Box::new(AeCompressor::server(pipeline, pp.dec_params.clone())?));
                     let comp =
@@ -281,6 +371,7 @@ impl<'rt> FlDriver<'rt> {
                     );
                     prepass_results.push(pp);
                 }
+                debug_assert_eq!(registry.len(), collaborators.len());
             }
             other => {
                 for (id, shard) in shards.into_iter().enumerate() {
@@ -308,6 +399,7 @@ impl<'rt> FlDriver<'rt> {
             collaborators,
             server_decompressors,
             aggregator,
+            engine,
             network,
             eval,
             test,
@@ -319,14 +411,17 @@ impl<'rt> FlDriver<'rt> {
         })
     }
 
+    /// The experiment configuration this driver was built from.
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
     }
 
+    /// The current global model parameters.
     pub fn global_params(&self) -> &[f32] {
         &self.global
     }
 
+    /// The compute runtime the driver executes on.
     pub fn runtime(&self) -> &'rt Runtime {
         self.rt
     }
@@ -357,6 +452,12 @@ impl<'rt> FlDriver<'rt> {
     }
 
     /// Run one communication round (paper Fig 3).
+    ///
+    /// Collaborator work (steps 2a–2c) fans out across the
+    /// [`ParallelRoundEngine`] workers; everything the server does
+    /// (broadcast metering, state machine, aggregation, eval) stays on
+    /// this thread. Results are folded back in collaborator-id order, so
+    /// the outcome is bitwise-identical for any `parallelism` setting.
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
         let round = self.round;
         let participants = self.select_round_participants();
@@ -364,7 +465,6 @@ impl<'rt> FlDriver<'rt> {
 
         let mut bytes_down = 0u64;
         let mut bytes_up = 0u64;
-        let mut train_losses = Vec::with_capacity(participants.len());
 
         // 1. Broadcast the global model.
         let broadcast = Message::GlobalModel {
@@ -383,37 +483,71 @@ impl<'rt> FlDriver<'rt> {
             self.collaborators[cid].set_global(&self.global);
         }
 
-        // 2. Local training + compressed upload.
-        let mut local_evals: Vec<(usize, f32, f32)> = Vec::with_capacity(participants.len());
-        for &cid in &participants {
-            let loss =
-                self.collaborators[cid].local_train(self.cfg.fl.local_epochs, &self.cfg.train)?;
-            train_losses.push((cid, loss));
-            // Per-collaborator post-training eval on the shared test set —
-            // the paper's Fig 8/9 per-collaborator series.
-            let (ll, la) = self.eval_params(self.collaborators[cid].params())?;
-            local_evals.push((cid, ll, la));
-            let update = self.collaborators[cid].compressed_update(round)?;
+        // 2. Local training + local eval + compressed upload, one task
+        //    per participant on the engine workers. Workers share the
+        //    runtime immutably, own their collaborator mutably, and meter
+        //    uploads on private ledgers costed via the shared link.
+        let selected: BTreeSet<usize> = participants.iter().copied().collect();
+        let link = self.network.link();
+        let eval = &self.eval;
+        let local_epochs = self.cfg.fl.local_epochs;
+        let train_cfg = &self.cfg.train;
+        // The shared test batch, gathered once per round instead of once
+        // per collaborator (identical values: the gather is deterministic).
+        let test_idx: Vec<usize> = (0..self.test.len()).collect();
+        let (test_x, test_y) = self.test.gather_batch(&test_idx, eval.batch);
+
+        let tasks: Vec<(usize, &mut Collaborator<'rt>)> = self
+            .collaborators
+            .iter_mut()
+            .enumerate()
+            .filter(|(cid, _)| selected.contains(cid))
+            .collect();
+        let results: Vec<Result<CollabRoundResult>> = self.engine.map(tasks, |(cid, collab)| {
+            let train_loss = collab.local_train(local_epochs, train_cfg)?;
+            // Per-collaborator post-training eval on the shared test
+            // set — the paper's Fig 8/9 per-collaborator series.
+            let (local_eval_loss, local_eval_acc) =
+                eval.eval(collab.params(), &test_x, &test_y)?;
+            let update = collab.compressed_update(round)?;
             let msg = Message::EncodedUpdate {
                 round: round as u32,
                 collab_id: cid as u32,
-                n_samples: self.collaborators[cid].n_samples() as u32,
+                n_samples: collab.n_samples() as u32,
                 payload: update.to_bytes(),
             };
-            bytes_up += msg.wire_bytes();
-            self.network.send(
+            let bytes = msg.wire_bytes();
+            let mut ledger = TrafficLedger::default();
+            ledger.record(Transfer {
                 round,
+                collaborator: cid,
+                direction: Direction::Up,
+                kind: TrafficKind::Update,
+                bytes,
+                sim_seconds: link.transfer_time(bytes),
+            });
+            Ok(CollabRoundResult {
                 cid,
-                Direction::Up,
-                TrafficKind::Update,
-                msg.wire_bytes(),
-            );
-            state.accept(
-                round,
-                cid,
-                self.collaborators[cid].n_samples() as u32,
+                n_samples: collab.n_samples() as u32,
+                train_loss,
+                local_eval_loss,
+                local_eval_acc,
                 update,
-            )?;
+                ledger,
+            })
+        });
+
+        // Fold worker results back in collaborator-id order (`map`
+        // preserves input order, and tasks were built in id order).
+        let mut train_losses = Vec::with_capacity(participants.len());
+        let mut local_evals: Vec<(usize, f32, f32)> = Vec::with_capacity(participants.len());
+        for result in results {
+            let r = result?;
+            bytes_up += r.ledger.total_bytes();
+            self.network.merge_ledger(r.ledger);
+            train_losses.push((r.cid, r.train_loss));
+            local_evals.push((r.cid, r.local_eval_loss, r.local_eval_acc));
+            state.accept(round, r.cid, r.n_samples, r.update)?;
         }
         if !state.is_complete() {
             return Err(FedAeError::Coordination(format!(
@@ -422,26 +556,86 @@ impl<'rt> FlDriver<'rt> {
             )));
         }
 
-        // 3. Server-side reconstruction + aggregation.
-        let mut weighted = Vec::with_capacity(participants.len());
-        let mut recon_mses = Vec::new();
-        for (cid, n_samples, update) in state.take_updates() {
-            let recon = self.server_decompressors[cid].decompress(&update)?;
-            if let Err(i) = tensor::check_finite(&recon) {
-                return Err(FedAeError::Coordination(format!(
-                    "non-finite reconstruction from collaborator {cid} at index {i}"
-                )));
+        // 3. Server-side reconstruction + aggregation: either the
+        //    materialized path (every reconstruction at once, then one
+        //    aggregate call) or, with `engine.shard_size > 0`, the
+        //    memory-bounded path streaming coordinate shards through the
+        //    ShardedAggregator.
+        let updates = state.take_updates();
+        let recon_mses: Vec<f32>;
+        let shard_size = self.cfg.engine.shard_size;
+        if shard_size > 0 {
+            let n = self.global.len();
+            let mut new_global = vec![0.0f32; n];
+            // Reconstruction error accumulators, one per update, built up
+            // shard-by-shard in the same coordinate order as the
+            // unsharded `tensor::mse` (f64 accumulation, so the final
+            // mean matches bitwise).
+            let mut sq_err = vec![0.0f64; updates.len()];
+            for (s, range) in shard_ranges(n, shard_size).enumerate() {
+                let mut shard_updates = Vec::with_capacity(updates.len());
+                for (i, (cid, n_samples, update)) in updates.iter().enumerate() {
+                    let piece =
+                        self.server_decompressors[*cid].decompress_range(update, range.clone())?;
+                    if piece.len() != range.len() {
+                        return Err(FedAeError::Coordination(format!(
+                            "collaborator {cid}: shard decode returned {} values for {}..{}",
+                            piece.len(),
+                            range.start,
+                            range.end
+                        )));
+                    }
+                    if let Err(j) = tensor::check_finite(&piece) {
+                        return Err(FedAeError::Coordination(format!(
+                            "non-finite reconstruction from collaborator {cid} at index {}",
+                            range.start + j
+                        )));
+                    }
+                    let local = self.collaborators[*cid].params();
+                    for (k, &v) in piece.iter().enumerate() {
+                        let d = (v - local[range.start + k]) as f64;
+                        sq_err[i] += d * d;
+                    }
+                    shard_updates.push(WeightedUpdate {
+                        weight: *n_samples as f64,
+                        values: piece,
+                    });
+                }
+                let piece = self.aggregator.aggregate_shard(s, &shard_updates)?;
+                if piece.len() != range.len() {
+                    return Err(FedAeError::Coordination(format!(
+                        "shard {s} aggregated to {} values, expected {}",
+                        piece.len(),
+                        range.len()
+                    )));
+                }
+                new_global[range].copy_from_slice(&piece);
             }
-            recon_mses.push(tensor::mse(&recon, self.collaborators[cid].params()) as f32);
-            weighted.push(WeightedUpdate {
-                weight: n_samples as f64,
-                values: recon,
-            });
+            self.global = new_global;
+            recon_mses = sq_err.iter().map(|&e| (e / n as f64) as f32).collect();
+        } else {
+            let mut weighted = Vec::with_capacity(updates.len());
+            let mut mses = Vec::with_capacity(updates.len());
+            for (cid, n_samples, update) in updates {
+                let recon = self.server_decompressors[cid].decompress(&update)?;
+                if let Err(i) = tensor::check_finite(&recon) {
+                    return Err(FedAeError::Coordination(format!(
+                        "non-finite reconstruction from collaborator {cid} at index {i}"
+                    )));
+                }
+                mses.push(tensor::mse(&recon, self.collaborators[cid].params()) as f32);
+                weighted.push(WeightedUpdate {
+                    weight: n_samples as f64,
+                    values: recon,
+                });
+            }
+            self.global = self.aggregator.aggregate(&weighted)?;
+            recon_mses = mses;
         }
-        self.global = self.aggregator.aggregate(&weighted)?;
 
-        // 4. Evaluate the new global model.
-        let (eval_loss, eval_acc) = self.eval_global()?;
+        // 4. Evaluate the new global model (on the batch already gathered
+        //    for the per-collaborator evals — identical values).
+        let (eval_loss, eval_acc) = self.eval.eval(&self.global, &test_x, &test_y)?;
 
         let mean_recon_mse = if recon_mses.is_empty() {
             f32::NAN
@@ -557,12 +751,31 @@ mod tests {
 
     #[test]
     fn decoder_registry_single_registration() {
-        let mut reg = DecoderRegistry::default();
+        let reg = DecoderRegistry::default();
         assert!(reg.is_empty());
         reg.register(0, vec![1.0]).unwrap();
         assert_eq!(reg.len(), 1);
-        assert_eq!(reg.get(0).unwrap(), &[1.0]);
+        assert_eq!(reg.get(0).unwrap().as_slice(), &[1.0]);
         assert!(reg.register(0, vec![2.0]).is_err());
         assert!(reg.get(1).is_err());
+    }
+
+    #[test]
+    fn decoder_registry_concurrent_registration() {
+        let reg = DecoderRegistry::default();
+        std::thread::scope(|s| {
+            for worker in 0..4 {
+                let reg = &reg;
+                s.spawn(move || {
+                    for id in (worker..16).step_by(4) {
+                        reg.register(id, vec![id as f32]).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(reg.len(), 16);
+        for id in 0..16 {
+            assert_eq!(reg.get(id).unwrap().as_slice(), &[id as f32]);
+        }
     }
 }

@@ -19,6 +19,7 @@ use crate::config::Sharding;
 use crate::error::{FedAeError, Result};
 use crate::util::rng::Rng;
 
+/// Every synthetic family is a 10-class problem (like MNIST/CIFAR-10).
 pub const NUM_CLASSES: usize = 10;
 
 /// Which synthetic family to generate.
@@ -31,6 +32,7 @@ pub enum SynthKind {
 }
 
 impl SynthKind {
+    /// Flattened input dimension of this family.
     pub fn input_dim(&self) -> usize {
         match self {
             SynthKind::Mnist => 28 * 28,
@@ -42,6 +44,7 @@ impl SynthKind {
 /// Generation spec.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SynthSpec {
+    /// Which synthetic family to generate.
     pub kind: SynthKind,
     /// Drop chroma (CIFAR only): every pixel's channels replaced by luma.
     pub grayscale: bool,
@@ -50,6 +53,7 @@ pub struct SynthSpec {
 }
 
 impl SynthSpec {
+    /// The MNIST-shaped family (784-dim inputs).
     pub fn mnist() -> SynthSpec {
         SynthSpec {
             kind: SynthKind::Mnist,
@@ -58,6 +62,7 @@ impl SynthSpec {
         }
     }
 
+    /// The CIFAR-shaped family (3072-dim inputs).
     pub fn cifar() -> SynthSpec {
         SynthSpec {
             kind: SynthKind::Cifar,
@@ -66,6 +71,7 @@ impl SynthSpec {
         }
     }
 
+    /// CIFAR-shaped but grayscale (paper §5.2 colour-imbalance shards).
     pub fn cifar_grayscale() -> SynthSpec {
         SynthSpec {
             grayscale: true,
@@ -77,20 +83,26 @@ impl SynthSpec {
 /// An in-memory labelled dataset, row-major `[n, input_dim]`.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Row-major features, `len x input_dim`.
     pub x: Vec<f32>,
+    /// Class labels, one per row.
     pub y: Vec<u32>,
+    /// Feature dimension of each row.
     pub input_dim: usize,
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.y.len()
     }
 
+    /// True when the dataset has no samples.
     pub fn is_empty(&self) -> bool {
         self.y.is_empty()
     }
 
+    /// The `i`-th feature row.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.x[i * self.input_dim..(i + 1) * self.input_dim]
     }
@@ -358,6 +370,7 @@ pub struct BatchIter {
 }
 
 impl BatchIter {
+    /// A shuffled batch iterator over `n` samples.
     pub fn new(n: usize, batch: usize, seed: u64) -> BatchIter {
         assert!(n > 0 && batch > 0);
         let mut rng = Rng::new(seed);

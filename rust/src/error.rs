@@ -23,7 +23,12 @@ pub enum FedAeError {
     Config(String),
 
     /// Malformed JSON.
-    Json { offset: usize, msg: String },
+    Json {
+        /// Byte offset of the parse failure.
+        offset: usize,
+        /// What the parser expected/found.
+        msg: String,
+    },
 
     /// Wire-protocol violation (bad frame, unknown message kind,
     /// out-of-order round, unexpected payload length).

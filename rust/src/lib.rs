@@ -45,34 +45,54 @@
 #![allow(unknown_lints)]
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::manual_div_ceil)]
+// Every public item carries rustdoc; CI enforces this via
+// `cargo doc --no-deps` with RUSTDOCFLAGS=-D warnings.
+#![warn(missing_docs)]
 
+/// Server-side aggregation algorithms (+ the sharded adapter).
 pub mod aggregation;
+/// Compute backends: pure-rust native (default) and PJRT/XLA (`--features xla`).
 pub mod backend;
+/// Collaborator runtime: local training, the pre-pass round, update compression.
 pub mod collaborator;
+/// Update compression plugins: the paper's AE scheme and related-work baselines.
 pub mod compression;
+/// Typed experiment configuration and the artifact manifest.
 pub mod config;
+/// Aggregator/coordinator: round state machine, parallel round engine, driver.
 pub mod coordinator;
+/// Synthetic datasets, sharding strategies and batch iteration.
 pub mod data;
+/// Crate-wide error type.
 pub mod error;
+/// Experiment logging: per-round records, summaries, CSV/JSON export, plots.
 pub mod metrics;
+/// Model/AE family enums bridging config names to manifest entries.
 pub mod models;
+/// Simulated network substrate with exact byte accounting.
 pub mod network;
+/// Manifest-described computations over a pluggable backend.
 pub mod runtime;
+/// The paper's Eq. 4/5 savings-ratio analytical model.
 pub mod savings;
+/// Flat-vector tensor substrate (the native backend's compute primitives).
 pub mod tensor;
+/// Deterministic property-testing harness.
 pub mod testing;
+/// Wire protocol: framed messages, in-process and TCP transports.
 pub mod transport;
+/// Small utilities: CLI parsing, JSON, RNG, timing.
 pub mod util;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
-    pub use crate::aggregation::{Aggregator, FedAvg};
+    pub use crate::aggregation::{Aggregator, FedAvg, ShardedAggregator};
     pub use crate::backend::{Backend, NativeBackend};
     pub use crate::collaborator::Collaborator;
     pub use crate::compression::{CompressedUpdate, UpdateCompressor};
     pub use crate::config::manifest::Manifest;
-    pub use crate::config::ExperimentConfig;
-    pub use crate::coordinator::{FlDriver, RoundOutcome};
+    pub use crate::config::{EngineConfig, ExperimentConfig};
+    pub use crate::coordinator::{FlDriver, ParallelRoundEngine, RoundOutcome};
     pub use crate::data::{Dataset, SynthSpec};
     pub use crate::error::FedAeError;
     pub use crate::metrics::ExperimentLog;

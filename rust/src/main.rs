@@ -41,6 +41,7 @@ fn main() -> Result<()> {
                  \n\
                  train    --config <file.json> | [--model mnist|cifar] [--compression ae|identity|topk|quantize|subsample|sketch]\n\
                  \u{20}        [--rounds N] [--collabs N] [--local-epochs N] [--seed N] [--out metrics.json]\n\
+                 \u{20}        [--parallelism N (0 = all cores)] [--shard-size N (0 = unsharded aggregation)]\n\
                  prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N]\n\
                  savings  [--rounds N] [--max-collabs N] [--mnist]\n\
                  inspect  [--artifacts DIR]\n\
@@ -103,6 +104,8 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.prepass.ae_epochs = args.get_usize("ae-epochs", cfg.prepass.ae_epochs)?;
     cfg.data.per_collab = args.get_usize("per-collab", cfg.data.per_collab)?;
     cfg.data.test_size = args.get_usize("test-size", cfg.data.test_size)?;
+    cfg.engine.parallelism = args.get_usize("parallelism", cfg.engine.parallelism)?;
+    cfg.engine.shard_size = args.get_usize("shard-size", cfg.engine.shard_size)?;
     Ok(cfg)
 }
 
@@ -110,12 +113,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::from_dir(artifacts_dir(args))?;
     let cfg = config_from_args(args)?;
     println!(
-        "experiment `{}`: model={} compression={} rounds={} collabs={}",
+        "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={}",
         cfg.name,
         cfg.model,
         cfg.compression.kind_name(),
         cfg.fl.rounds,
-        cfg.fl.collaborators
+        cfg.fl.collaborators,
+        cfg.engine.parallelism,
+        cfg.engine.shard_size
     );
     let pipeline;
     let pipe_ref = match &cfg.compression {

@@ -11,17 +11,21 @@ use crate::util::json::{obj, Json};
 /// One collaborator's metrics for one communication round.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoundRecord {
+    /// Communication round.
     pub round: usize,
+    /// Collaborator the record belongs to.
     pub collaborator: usize,
     /// Mean local training loss over the round's local epochs.
     pub train_loss: f32,
     /// Eval on the shared test set after aggregation.
     pub eval_loss: f32,
+    /// Accuracy on the shared test set after aggregation.
     pub eval_acc: f32,
     /// This collaborator's *local* model evaluated on the shared test set
     /// right after its local training (pre-aggregation) — the per-
     /// collaborator series the paper's Figs 8/9 plot.
     pub local_eval_loss: f32,
+    /// Local-model accuracy on the shared test set (pre-aggregation).
     pub local_eval_acc: f32,
     /// Bytes this collaborator sent uplink this round.
     pub bytes_up: u64,
@@ -35,13 +39,16 @@ pub struct RoundRecord {
 /// A whole experiment's log.
 #[derive(Debug, Default, Clone)]
 pub struct ExperimentLog {
+    /// Experiment name (from the config).
     pub name: String,
+    /// All per-collaborator round records, in push order.
     pub records: Vec<RoundRecord>,
     /// Free-form (key, value) summary entries printed at the end.
     pub summary: Vec<(String, String)>,
 }
 
 impl ExperimentLog {
+    /// An empty log for the named experiment.
     pub fn new(name: impl Into<String>) -> ExperimentLog {
         ExperimentLog {
             name: name.into(),
@@ -49,10 +56,12 @@ impl ExperimentLog {
         }
     }
 
+    /// Append one round record.
     pub fn push(&mut self, rec: RoundRecord) {
         self.records.push(rec);
     }
 
+    /// Append a (key, value) summary entry.
     pub fn add_summary(&mut self, key: impl Into<String>, value: impl ToString) {
         self.summary.push((key.into(), value.to_string()));
     }
@@ -96,6 +105,7 @@ impl ExperimentLog {
         Some(vals.iter().sum::<f64>() / vals.len() as f64)
     }
 
+    /// Sum of per-record uplink bytes.
     pub fn total_bytes_up(&self) -> u64 {
         self.records.iter().map(|r| r.bytes_up).sum()
     }
@@ -162,11 +172,13 @@ impl ExperimentLog {
         ])
     }
 
+    /// Write the per-round records as CSV.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path, self.to_csv())?;
         Ok(())
     }
 
+    /// Write the full log (records + summary) as JSON.
     pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())

@@ -19,6 +19,7 @@ pub enum ModelKind {
 }
 
 impl ModelKind {
+    /// Parse a config model name ("mnist" | "cifar").
     pub fn from_name(name: &str) -> Result<ModelKind> {
         match name {
             "mnist" => Ok(ModelKind::Mnist),
@@ -27,6 +28,7 @@ impl ModelKind {
         }
     }
 
+    /// The manifest/config name of this family.
     pub fn name(&self) -> &'static str {
         match self {
             ModelKind::Mnist => "mnist",
@@ -47,6 +49,7 @@ impl ModelKind {
         }
     }
 
+    /// This family's manifest entry (geometry, batch sizes).
     pub fn entry<'m>(&self, manifest: &'m Manifest) -> Result<&'m ModelEntry> {
         manifest.model(self.name())
     }
@@ -64,6 +67,7 @@ pub enum AeKind {
 }
 
 impl AeKind {
+    /// Parse a config AE tag ("mnist" | "cifar" | "mnist_deep").
     pub fn from_name(name: &str) -> Result<AeKind> {
         match name {
             "mnist" => Ok(AeKind::Mnist),
@@ -73,6 +77,7 @@ impl AeKind {
         }
     }
 
+    /// The manifest/config tag of this AE variant.
     pub fn name(&self) -> &'static str {
         match self {
             AeKind::Mnist => "mnist",
@@ -86,6 +91,7 @@ impl AeKind {
         format!("ae_{}_init", self.name())
     }
 
+    /// This AE's manifest entry (dims, latent size, param split).
     pub fn entry<'m>(&self, manifest: &'m Manifest) -> Result<&'m AeEntry> {
         manifest.ae(self.name())
     }

@@ -6,6 +6,18 @@
 //! not analytic formulas) and models transfer time over configurable
 //! bandwidth/latency links so experiments can also report wall-clock
 //! communication cost at deployment-like scales.
+//!
+//! ## Threading model
+//!
+//! [`TrafficLedger::record`] takes `&mut self` on purpose: contending every
+//! worker thread on one mutex-guarded log would serialize exactly the hot
+//! path the parallel round engine exists to parallelize. Instead each
+//! [`crate::coordinator::ParallelRoundEngine`] worker meters its transfers
+//! into a private `TrafficLedger` (costed via the shared, `Copy` [`Link`])
+//! and the coordinator folds the worker ledgers back into the round's
+//! [`SimulatedNetwork`] with [`SimulatedNetwork::merge_ledger`] in
+//! collaborator-id order, so the public [`SimulatedNetwork::ledger`] totals
+//! and transfer log are byte-for-byte identical to a sequential round.
 
 use std::collections::BTreeMap;
 
@@ -34,6 +46,7 @@ pub enum TrafficKind {
 }
 
 impl TrafficKind {
+    /// Every traffic category, for per-kind report iteration.
     pub const ALL: [TrafficKind; 4] = [
         TrafficKind::Update,
         TrafficKind::GlobalModel,
@@ -41,6 +54,7 @@ impl TrafficKind {
         TrafficKind::Control,
     ];
 
+    /// Stable lowercase name for reports/CSV columns.
     pub fn name(&self) -> &'static str {
         match self {
             TrafficKind::Update => "update",
@@ -54,10 +68,15 @@ impl TrafficKind {
 /// One recorded transfer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Transfer {
+    /// Communication round the transfer belongs to.
     pub round: usize,
+    /// Collaborator on the far end of the link.
     pub collaborator: usize,
+    /// Uplink or downlink (relative to the aggregator).
     pub direction: Direction,
+    /// Payload category.
     pub kind: TrafficKind,
+    /// Exact on-wire frame bytes.
     pub bytes: u64,
     /// Simulated wall-clock cost of this transfer in seconds.
     pub sim_seconds: f64,
@@ -66,11 +85,14 @@ pub struct Transfer {
 /// A bandwidth/latency link model.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Link {
+    /// Link bandwidth in bits per second.
     pub bandwidth_bps: f64,
+    /// One-way latency in seconds.
     pub latency_s: f64,
 }
 
 impl Link {
+    /// Convert config units (Mbps / ms) into bps / seconds.
     pub fn from_config(cfg: &NetworkConfig) -> Link {
         Link {
             bandwidth_bps: cfg.bandwidth_mbps * 1e6,
@@ -93,6 +115,7 @@ pub struct SimulatedNetwork {
 }
 
 impl SimulatedNetwork {
+    /// A network where every collaborator shares one uniform link.
     pub fn new(link: Link) -> SimulatedNetwork {
         SimulatedNetwork {
             link,
@@ -100,6 +123,7 @@ impl SimulatedNetwork {
         }
     }
 
+    /// Build from the experiment's network config.
     pub fn from_config(cfg: &NetworkConfig) -> SimulatedNetwork {
         SimulatedNetwork::new(Link::from_config(cfg))
     }
@@ -125,12 +149,22 @@ impl SimulatedNetwork {
         sim_seconds
     }
 
+    /// The byte-exact traffic ledger.
     pub fn ledger(&self) -> &TrafficLedger {
         &self.ledger
     }
 
+    /// The (shared, `Copy`) link model — workers cost their own
+    /// transfers with it.
     pub fn link(&self) -> Link {
         self.link
+    }
+
+    /// Fold a worker thread's private ledger into this network's ledger
+    /// (see the module docs' threading model). Totals, per-kind indices
+    /// and the raw transfer log all absorb the worker's records.
+    pub fn merge_ledger(&mut self, worker: TrafficLedger) {
+        self.ledger.merge(worker);
     }
 }
 
@@ -144,6 +178,8 @@ pub struct TrafficLedger {
 }
 
 impl TrafficLedger {
+    /// Record one transfer (see the module docs for why this is
+    /// `&mut self` rather than interior-mutable).
     pub fn record(&mut self, t: Transfer) {
         *self.by_kind.entry((t.direction, t.kind)).or_insert(0) += t.bytes;
         self.total_bytes += t.bytes;
@@ -151,18 +187,34 @@ impl TrafficLedger {
         self.transfers.push(t);
     }
 
+    /// Absorb another ledger's records (appended in `other`'s order).
+    /// Used to fold per-worker ledgers back into the round ledger; all
+    /// aggregate accessors see exactly the union of both logs.
+    pub fn merge(&mut self, other: TrafficLedger) {
+        for (key, bytes) in other.by_kind {
+            *self.by_kind.entry(key).or_insert(0) += bytes;
+        }
+        self.total_bytes += other.total_bytes;
+        self.total_sim_seconds += other.total_sim_seconds;
+        self.transfers.extend(other.transfers);
+    }
+
+    /// The raw transfer log, in record order.
     pub fn transfers(&self) -> &[Transfer] {
         &self.transfers
     }
 
+    /// Total bytes across all transfers.
     pub fn total_bytes(&self) -> u64 {
         self.total_bytes
     }
 
+    /// Total simulated transfer time across all transfers.
     pub fn total_sim_seconds(&self) -> f64 {
         self.total_sim_seconds
     }
 
+    /// Bytes for one (direction, kind) bucket.
     pub fn bytes_for(&self, direction: Direction, kind: TrafficKind) -> u64 {
         self.by_kind.get(&(direction, kind)).copied().unwrap_or(0)
     }
@@ -254,6 +306,42 @@ mod tests {
         assert!((r - 100.0).abs() < 1e-9);
         let empty = SimulatedNetwork::new(link());
         assert!(empty.ledger().measured_update_ratio(5000).is_none());
+    }
+
+    #[test]
+    fn merge_preserves_totals_and_conservation() {
+        let mut net = SimulatedNetwork::new(link());
+        net.send(0, 0, Direction::Down, TrafficKind::GlobalModel, 1000);
+        // Two workers meter their own uplinks on private ledgers.
+        let l = net.link();
+        let mut make_worker = |collab: usize, bytes: u64| {
+            let mut w = TrafficLedger::default();
+            w.record(Transfer {
+                round: 0,
+                collaborator: collab,
+                direction: Direction::Up,
+                kind: TrafficKind::Update,
+                bytes,
+                sim_seconds: l.transfer_time(bytes),
+            });
+            w
+        };
+        let w0 = make_worker(0, 100);
+        let w1 = make_worker(1, 150);
+        net.merge_ledger(w0);
+        net.merge_ledger(w1);
+        let ledger = net.ledger();
+        assert_eq!(ledger.total_bytes(), 1250);
+        assert_eq!(ledger.update_bytes_up(), 250);
+        assert_eq!(ledger.transfers().len(), 3);
+        assert!(ledger.check_conservation());
+        // Same sequence recorded sequentially gives identical totals.
+        let mut seq = SimulatedNetwork::new(link());
+        seq.send(0, 0, Direction::Down, TrafficKind::GlobalModel, 1000);
+        seq.send(0, 0, Direction::Up, TrafficKind::Update, 100);
+        seq.send(0, 1, Direction::Up, TrafficKind::Update, 150);
+        assert_eq!(seq.ledger().total_bytes(), ledger.total_bytes());
+        assert_eq!(seq.ledger().transfers(), ledger.transfers());
     }
 
     #[test]

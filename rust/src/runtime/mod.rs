@@ -15,6 +15,15 @@
 //!
 //! This module is the *only* place the crate chooses a backend; everything
 //! above it (coordinator, compressors, benches) works with plain f32 slices.
+//!
+//! The typed wrappers map 1:1 onto the paper's computations: [`TrainStep`]
+//! is the collaborator's local SGD (§5.2's 5-local-epoch schedule),
+//! [`AePipeline::train_step`] is the pre-pass autoencoder training of §3
+//! (Fig 2), and [`AePipeline::encode`]/[`AePipeline::decode`] are the
+//! per-round compression/reconstruction halves of Fig 3. [`Runtime`] is
+//! `Sync` (backends are `Send + Sync`), which is what lets the
+//! [`crate::coordinator::ParallelRoundEngine`] drive many collaborators'
+//! steps concurrently against one runtime — see ARCHITECTURE.md.
 
 use std::path::{Path, PathBuf};
 
@@ -98,10 +107,12 @@ impl Runtime {
         Runtime::load(&manifest, dir)
     }
 
+    /// The artifact manifest this runtime serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// The underlying backend's platform identifier.
     pub fn platform_name(&self) -> String {
         self.backend.platform_name()
     }
@@ -207,12 +218,16 @@ fn scalar(v: &[f32], what: &str) -> Result<f32> {
 pub struct TrainStep<'rt> {
     rt: &'rt Runtime,
     artifact: String,
+    /// Batch size the artifact is compiled for.
     pub batch: usize,
+    /// Input feature dimension.
     pub input_dim: usize,
+    /// Output classes.
     pub classes: usize,
 }
 
 impl<'rt> TrainStep<'rt> {
+    /// The train step for a manifest model family.
     pub fn new(rt: &'rt Runtime, family: &str) -> Result<Self> {
         let m = rt.manifest().model(family)?;
         Ok(TrainStep {
@@ -246,12 +261,16 @@ impl<'rt> TrainStep<'rt> {
 pub struct EvalStep<'rt> {
     rt: &'rt Runtime,
     artifact: String,
+    /// Batch size the artifact is compiled for.
     pub batch: usize,
+    /// Input feature dimension.
     pub input_dim: usize,
+    /// Output classes.
     pub classes: usize,
 }
 
 impl<'rt> EvalStep<'rt> {
+    /// The eval step for a manifest model family.
     pub fn new(rt: &'rt Runtime, family: &str) -> Result<Self> {
         let m = rt.manifest().model(family)?;
         Ok(EvalStep {
@@ -273,12 +292,16 @@ impl<'rt> EvalStep<'rt> {
 /// Adam state for AE training, kept as flat vectors.
 #[derive(Debug, Clone)]
 pub struct AdamState {
+    /// First-moment (mean) accumulator.
     pub m: Vec<f32>,
+    /// Second-moment (variance) accumulator.
     pub v: Vec<f32>,
+    /// Step count (f32: it feeds the bias-correction computation).
     pub step: f32,
 }
 
 impl AdamState {
+    /// Fresh all-zero state for `n` parameters.
     pub fn zeros(n: usize) -> AdamState {
         AdamState {
             m: vec![0.0; n],
@@ -293,16 +316,24 @@ impl AdamState {
 #[derive(Debug)]
 pub struct AePipeline<'rt> {
     rt: &'rt Runtime,
+    /// Manifest AE tag.
     pub tag: String,
+    /// Dimensionality of the vectors this AE compresses.
     pub input_dim: usize,
+    /// Bottleneck (latent) width.
     pub latent: usize,
+    /// Total AE parameter count.
     pub n_params: usize,
+    /// Parameters in the encoder half.
     pub encoder_params: usize,
+    /// Parameters in the decoder half.
     pub decoder_params: usize,
+    /// Batch size the AE train-step artifact is compiled for.
     pub train_batch: usize,
 }
 
 impl<'rt> AePipeline<'rt> {
+    /// The pipeline for a manifest AE tag.
     pub fn new(rt: &'rt Runtime, tag: &str) -> Result<Self> {
         let ae = rt.manifest().ae(tag)?;
         Ok(AePipeline {

@@ -80,10 +80,15 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
 /// Summary statistics of a parameter vector (logged per round).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct VecStats {
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Minimum element.
     pub min: f32,
+    /// Maximum element.
     pub max: f32,
+    /// L2 norm.
     pub l2: f64,
 }
 

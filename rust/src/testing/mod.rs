@@ -6,6 +6,7 @@
 //! over [`crate::util::rng::Rng`], composing naturally with the crate's
 //! deterministic RNG.
 
+/// The property-run loop and its configuration.
 pub mod prop {
     use crate::util::rng::Rng;
 

@@ -3,12 +3,23 @@
 //! Frame layout (little-endian): `[u32 payload_len][u16 kind][payload]`.
 //! The byte counts fed into the [`crate::network::TrafficLedger`] are real
 //! frame lengths from this module — the compression ratios reported in
-//! EXPERIMENTS.md are measured on-wire, not analytic.
+//! EXPERIMENTS.md (the paper's Eq. 4 savings ratio and the §5 headline
+//! 500x/1720x numbers) are measured on-wire, not analytic.
+//!
+//! The message set mirrors the paper's protocol: `GlobalModel` is the
+//! Fig 3 broadcast, `EncodedUpdate` carries the AE latent uplink, and
+//! `DecoderShipment` is the one-time Eq. 5 cost paid at the end of the
+//! pre-pass round (Fig 2).
 //!
 //! Two transports implement the same protocol:
 //! * [`InProcChannel`] — mpsc pairs for the single-process simulator.
 //! * [`TcpTransport`] — std::net TCP for the leader/worker deployment mode
 //!   (`fedae serve` / `fedae worker`).
+//!
+//! [`Message`] construction/serialization is pure and the types are
+//! `Send`, so parallel round workers build and meter their own frames;
+//! only the ledger merge happens on the coordinator thread (see
+//! [`crate::network`]'s threading model).
 
 use std::io::{Read, Write};
 use std::sync::mpsc;
@@ -23,28 +34,49 @@ pub const PROTOCOL_VERSION: u16 = 1;
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Collaborator -> server: join the federation.
-    Hello { collab_id: u32, version: u16 },
+    Hello {
+        /// Sender's collaborator id.
+        collab_id: u32,
+        /// Sender's [`PROTOCOL_VERSION`].
+        version: u16,
+    },
     /// Server -> collaborator: global model for a round.
-    GlobalModel { round: u32, params: Vec<f32> },
+    GlobalModel {
+        /// Round the broadcast opens.
+        round: u32,
+        /// The flattened global model parameters.
+        params: Vec<f32>,
+    },
     /// Collaborator -> server: one-time decoder shipment (pre-pass end).
     DecoderShipment {
+        /// Sender's collaborator id.
         collab_id: u32,
+        /// Manifest tag of the AE the decoder belongs to.
         ae_tag: String,
+        /// The decoder half's parameters.
         dec_params: Vec<f32>,
     },
     /// Collaborator -> server: compressed weight update for a round.
     /// `payload` is a serialized [`crate::compression::CompressedUpdate`].
     EncodedUpdate {
+        /// Round the update belongs to.
         round: u32,
+        /// Sender's collaborator id.
         collab_id: u32,
+        /// Local sample count (the FedAvg aggregation weight).
         n_samples: u32,
+        /// Serialized [`crate::compression::CompressedUpdate`].
         payload: Vec<u8>,
     },
     /// Collaborator -> server: local evaluation metrics.
     EvalReport {
+        /// Round the metrics belong to.
         round: u32,
+        /// Sender's collaborator id.
         collab_id: u32,
+        /// Local eval loss.
         loss: f32,
+        /// Local eval accuracy.
         acc: f32,
     },
     /// Server -> collaborator: end of experiment.
@@ -275,7 +307,9 @@ impl<'a> Cursor<'a> {
 /// Bidirectional in-process message channel (one endpoint).
 #[derive(Debug)]
 pub struct InProcChannel {
+    /// Outgoing messages to the peer endpoint.
     pub tx: mpsc::Sender<Message>,
+    /// Incoming messages from the peer endpoint.
     pub rx: mpsc::Receiver<Message>,
 }
 
@@ -290,18 +324,21 @@ impl InProcChannel {
         )
     }
 
+    /// Send one message to the peer.
     pub fn send(&self, msg: Message) -> Result<()> {
         self.tx
             .send(msg)
             .map_err(|_| FedAeError::Protocol("peer hung up".into()))
     }
 
+    /// Blocking receive of one message.
     pub fn recv(&self) -> Result<Message> {
         self.rx
             .recv()
             .map_err(|_| FedAeError::Protocol("peer hung up".into()))
     }
 
+    /// Non-blocking receive (`None` when no message is queued).
     pub fn try_recv(&self) -> Option<Message> {
         self.rx.try_recv().ok()
     }
@@ -314,11 +351,13 @@ pub struct TcpTransport {
 }
 
 impl TcpTransport {
+    /// Wrap an accepted/connected stream (enables TCP_NODELAY).
     pub fn new(stream: std::net::TcpStream) -> TcpTransport {
         stream.set_nodelay(true).ok();
         TcpTransport { stream }
     }
 
+    /// Connect to a listening leader at `addr`.
     pub fn connect(addr: &str) -> Result<TcpTransport> {
         Ok(TcpTransport::new(std::net::TcpStream::connect(addr)?))
     }

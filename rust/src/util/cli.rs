@@ -51,18 +51,22 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// True when `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name <value>` / `--name=<value>`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Like [`Args::get`] with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Typed getter: `--name` as usize (error on non-integer).
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -72,6 +76,7 @@ impl Args {
         }
     }
 
+    /// Typed getter: `--name` as f64 (error on non-number).
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -81,6 +86,7 @@ impl Args {
         }
     }
 
+    /// Typed getter: `--name` as u64 (error on non-integer).
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),

@@ -14,11 +14,17 @@ use crate::error::{FedAeError, Result};
 /// serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys ordered for deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -46,6 +52,7 @@ impl Json {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// Object field lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -64,6 +71,7 @@ impl Json {
         Ok(cur)
     }
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -71,10 +79,12 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|v| *v >= 0.0 && v.fract() == 0.0).map(|v| v as usize)
     }
 
+    /// This value as a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -82,6 +92,7 @@ impl Json {
         }
     }
 
+    /// This value as a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -89,6 +100,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -96,6 +108,7 @@ impl Json {
         }
     }
 
+    /// This value as an object map.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -110,12 +123,14 @@ impl Json {
             .ok_or_else(|| FedAeError::Config(format!("key `{key}` is not a non-negative integer")))
     }
 
+    /// Required number field with a descriptive error.
     pub fn req_f64(&self, key: &str) -> Result<f64> {
         self.at(&[key])?
             .as_f64()
             .ok_or_else(|| FedAeError::Config(format!("key `{key}` is not a number")))
     }
 
+    /// Required string field with a descriptive error.
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.at(&[key])?
             .as_str()

@@ -4,8 +4,11 @@
 //! no clap, no rand), so the crate carries its own minimal, well-tested
 //! implementations of the utilities it needs.
 
+/// Tiny CLI argument parser.
 pub mod cli;
+/// Minimal JSON parser + serializer.
 pub mod json;
+/// Deterministic PRNG (xoshiro256++).
 pub mod rng;
 
 /// Wall-clock stopwatch used by the bench harness and metrics.
@@ -13,14 +16,17 @@ pub mod rng;
 pub struct Stopwatch(std::time::Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(std::time::Instant::now())
     }
 
+    /// Seconds since [`Stopwatch::start`].
     pub fn elapsed_secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since [`Stopwatch::start`].
     pub fn elapsed_ms(&self) -> f64 {
         self.elapsed_secs() * 1e3
     }

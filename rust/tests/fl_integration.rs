@@ -284,6 +284,7 @@ fn shipped_config_presets_parse_and_validate() {
     for path in [
         "configs/fig8_9_two_collab.json",
         "configs/mnist_ae_10collab.json",
+        "configs/mnist_ae_256collab.json",
         "configs/baseline_topk.json",
     ] {
         let cfg = ExperimentConfig::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
@@ -296,4 +297,9 @@ fn shipped_config_presets_parse_and_validate() {
     assert_eq!(cfg.fl.local_epochs, 5);
     assert_eq!(cfg.fl.collaborators, 2);
     assert_eq!(cfg.data.sharding, Sharding::ColorImbalance);
+    // The large-collaborator preset engages both engine knobs.
+    let cfg = ExperimentConfig::load("configs/mnist_ae_256collab.json").unwrap();
+    assert_eq!(cfg.fl.collaborators, 256);
+    assert_eq!(cfg.engine.parallelism, 0); // one worker per core
+    assert_eq!(cfg.engine.shard_size, 8192);
 }
