@@ -1,0 +1,187 @@
+//! Bench — sync barrier vs deadline-driven async rounds at large
+//! federation sizes (ISSUE 3 acceptance: async rounds complete with a
+//! bounded deadline while reporting dropped/stale update counts at
+//! 64/256/1024 collaborators).
+//!
+//! Per federation size this runs the same fixed-seed experiment three
+//! ways over a heterogeneous (lognormal-slowdown + jitter + dropout)
+//! client population:
+//!
+//! * **sync** — the paper's full barrier (no straggler model; the
+//!   reference for host wall-clock and bytes),
+//! * **async / infinite deadline** — stragglers modelled, every arrival
+//!   admitted: the *simulated* round time is gated by the slowest client,
+//! * **async / bounded deadline** — rounds close at the deadline; late
+//!   updates buffer and fold in staleness-discounted next rounds.
+//!
+//! It asserts the degenerate async configuration matches sync bitwise,
+//! and that every bounded-deadline round's simulated duration is capped
+//! by the deadline, then reports host ms/round, simulated s/round, bytes
+//! on the wire, and admitted/late/dropped/stale counts.
+//!
+//! `cargo bench --bench bench_async_round`
+//! (set `FEDAE_BENCH_MAX_COLLABS=1024` for the largest tier; default 256.)
+
+use fedae::config::{CompressionConfig, EngineConfig, EngineMode, ExperimentConfig};
+use fedae::coordinator::{FlDriver, RoundOutcome, StragglerStats};
+use fedae::metrics::print_table;
+use fedae::runtime::Runtime;
+use fedae::util::Stopwatch;
+
+/// Bounded deadline in simulated ms: the raw mnist update takes ~25 ms
+/// on the default 100 Mbps / 20 ms link, so a 40 ms deadline admits the
+/// median client and cuts the lognormal tail.
+const DEADLINE_MS: f64 = 40.0;
+
+fn engine(mode: EngineMode, deadline_ms: f64) -> EngineConfig {
+    let straggler = mode == EngineMode::Async;
+    EngineConfig {
+        parallelism: 0,
+        shard_size: 0,
+        mode,
+        deadline_ms,
+        staleness_decay: 1.0,
+        dropout_rate: if straggler { 0.02 } else { 0.0 },
+        straggler_log_std: if straggler { 0.6 } else { 0.0 },
+        jitter_ms: if straggler { 10.0 } else { 0.0 },
+    }
+}
+
+fn cfg_for(collabs: usize, engine: EngineConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("bench_async_round_{collabs}");
+    cfg.model = "mnist".into();
+    // Identity compression: no pre-pass, so setup stays cheap at 1024
+    // collaborators and the timing isolates the round path.
+    cfg.compression = CompressionConfig::Identity;
+    cfg.fl.collaborators = collabs;
+    cfg.fl.rounds = 8; // driver cap; we time fewer below
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 64;
+    cfg.data.test_size = 128;
+    cfg.seed = 17;
+    cfg.engine = engine;
+    cfg
+}
+
+struct BenchRun {
+    per_round_ms: f64,
+    outcomes: Vec<RoundOutcome>,
+    global: Vec<f32>,
+    totals: StragglerStats,
+    pending: usize,
+    bytes_up: u64,
+}
+
+fn timed_rounds(
+    rt: &Runtime,
+    collabs: usize,
+    engine: EngineConfig,
+    rounds: usize,
+) -> fedae::error::Result<BenchRun> {
+    let mut driver = FlDriver::new(rt, cfg_for(collabs, engine), None)?;
+    let sw = Stopwatch::start();
+    let mut outcomes = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        outcomes.push(driver.run_round()?);
+    }
+    let per_round_ms = sw.elapsed_ms() / rounds as f64;
+    let totals = driver.async_totals().unwrap_or_else(|| {
+        // Sync mode: fold the per-round stats by hand for the report.
+        let mut t = StragglerStats::default();
+        for o in &outcomes {
+            t.admitted += o.stragglers.admitted;
+            t.sim_round_seconds += o.stragglers.sim_round_seconds;
+        }
+        t
+    });
+    Ok(BenchRun {
+        per_round_ms,
+        pending: driver.async_pending(),
+        bytes_up: driver.network.ledger().update_bytes_up(),
+        global: driver.global_params().to_vec(),
+        outcomes,
+        totals,
+    })
+}
+
+fn main() -> fedae::error::Result<()> {
+    let rt = Runtime::from_dir("artifacts")?;
+    let max_collabs: usize = std::env::var("FEDAE_BENCH_MAX_COLLABS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    println!("== sync barrier vs deadline-driven async rounds, synth-mnist ==");
+
+    // Degenerate-async sanity: with every straggler knob zero and an
+    // infinite deadline, async must reproduce sync bitwise.
+    {
+        let sync = timed_rounds(&rt, 16, engine(EngineMode::Sync, 0.0), 2)?;
+        let degenerate = timed_rounds(&rt, 16, engine(EngineMode::Async, 0.0), 2)?;
+        assert_eq!(sync.outcomes, degenerate.outcomes, "degenerate async diverged");
+        assert_eq!(sync.global, degenerate.global, "degenerate async params diverged");
+    }
+
+    let mut rows = Vec::new();
+    for collabs in [64, 256, 1024] {
+        if collabs > max_collabs {
+            println!("(skipping {collabs} collaborators; raise FEDAE_BENCH_MAX_COLLABS)");
+            continue;
+        }
+        let rounds = if collabs >= 1024 { 2 } else { 3 };
+        for (label, eng) in [
+            ("sync", engine(EngineMode::Sync, 0.0)),
+            ("async-inf", engine(EngineMode::Async, 0.0)),
+            ("async-deadline", engine(EngineMode::Async, DEADLINE_MS)),
+        ] {
+            let run = timed_rounds(&rt, collabs, eng, rounds)?;
+            // The acceptance property: a bounded deadline bounds every
+            // round's simulated duration.
+            if label == "async-deadline" {
+                for o in &run.outcomes {
+                    assert!(
+                        o.stragglers.sim_round_seconds <= DEADLINE_MS * 1e-3 + 1e-12,
+                        "round {} overran the deadline: {} s",
+                        o.round,
+                        o.stragglers.sim_round_seconds
+                    );
+                }
+            }
+            let t = run.totals;
+            rows.push(vec![
+                collabs.to_string(),
+                label.to_string(),
+                format!("{:.0}", run.per_round_ms),
+                format!("{:.4}", t.sim_round_seconds / rounds as f64),
+                t.admitted.to_string(),
+                t.late.to_string(),
+                t.dropped.to_string(),
+                format!("{}({})", t.stale_applied, run.pending),
+                run.bytes_up.to_string(),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        print_table(
+            &[
+                "collaborators",
+                "engine",
+                "host ms/round",
+                "sim s/round",
+                "admitted",
+                "late",
+                "dropped",
+                "stale(pend)",
+                "update bytes up"
+            ],
+            &rows
+        )
+    );
+    println!(
+        "(async-inf sim time is gated by the slowest modelled client; \
+         async-deadline rounds are capped at {DEADLINE_MS} ms simulated, \
+         trading admitted-update count for bounded round time)"
+    );
+    Ok(())
+}

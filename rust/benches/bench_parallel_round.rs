@@ -72,14 +72,17 @@ fn main() -> fedae::error::Result<()> {
         let sequential = EngineConfig {
             parallelism: 1,
             shard_size: 0,
+            ..EngineConfig::default()
         };
         let parallel = EngineConfig {
             parallelism: 0,
             shard_size: 0,
+            ..EngineConfig::default()
         };
         let parallel_sharded = EngineConfig {
             parallelism: 0,
             shard_size: 4096,
+            ..EngineConfig::default()
         };
         let (seq_ms, seq_out, seq_global) = timed_rounds(&rt, collabs, sequential, rounds)?;
         let (par_ms, par_out, par_global) = timed_rounds(&rt, collabs, parallel, rounds)?;

@@ -11,6 +11,23 @@
 //! the server never materializes every collaborator's full reconstruction
 //! at once (see [`sharded`] for the memory model and equivalence
 //! guarantees).
+//!
+//! ## Staleness-aware aggregation
+//!
+//! The paper's round model (Fig 3) is a full barrier: every collaborator's
+//! update belongs to the round it was computed in. Deadline-driven async
+//! rounds ([`crate::coordinator::AsyncRoundEngine`]) break that: a buffered
+//! late update is applied `s >= 1` rounds after the global model it was
+//! trained against was broadcast. [`Aggregator::aggregate_stale`] (and its
+//! shard-streaming twin [`Aggregator::aggregate_shard_stale`]) is the seam
+//! that folds such updates in: each update's weight is scaled by
+//! [`staleness_discount`] — the `α/(s+1)`-style polynomial decay of
+//! FedAsync (Xie et al. 2019) — before the regular aggregation runs, so
+//! stale information moves the global model less the older it is.
+//! [`FedBuff`] (Nguyen et al. 2022) is the buffered variant: the global
+//! model only steps once enough (discounted) updates have accumulated.
+//! Both compose with [`ShardedAggregator`] unchanged, because discounting
+//! touches only the scalar weights, never the coordinate partition.
 
 pub mod sharded;
 
@@ -54,6 +71,81 @@ pub trait Aggregator {
         let _ = shard;
         self.aggregate(updates)
     }
+
+    /// Combine updates of mixed age: `staleness[i]` is how many rounds
+    /// late update `i` is being applied (0 = fresh, computed against the
+    /// current round's broadcast). The default scales each update's
+    /// weight by [`staleness_discount`]`(decay, staleness[i])` and
+    /// delegates to [`Aggregator::aggregate`], which is the
+    /// staleness-discounted FedAvg/FedAvgM weighting of the async round
+    /// engine. With every update fresh and `decay = 1.0` the scaling is
+    /// exactly `x 1.0`, so this path is bitwise-identical to
+    /// [`Aggregator::aggregate`] — the degenerate-async equivalence the
+    /// tests pin relies on that.
+    ///
+    /// The discount acts *through the weights*: the weight-agnostic
+    /// aggregators ([`Mean`], [`Median`], [`TrimmedMean`]) ignore it
+    /// and apply stale updates at full influence
+    /// ([`crate::config::ExperimentConfig::validate`] rejects a
+    /// non-default `staleness_decay` with those for exactly that
+    /// reason). Use [`FedAvg`], [`FedAvgM`] or [`FedBuff`] when
+    /// staleness weighting matters.
+    ///
+    /// Takes the updates by value: the driver builds them fresh each
+    /// round, and scaling in place avoids cloning every reconstruction.
+    fn aggregate_stale(
+        &mut self,
+        mut updates: Vec<WeightedUpdate>,
+        staleness: &[usize],
+        decay: f64,
+    ) -> Result<Vec<f32>> {
+        apply_staleness(&mut updates, staleness, decay)?;
+        self.aggregate(&updates)
+    }
+
+    /// Shard-streaming twin of [`Aggregator::aggregate_stale`]: discount
+    /// one coordinate shard's updates by age, then delegate to
+    /// [`Aggregator::aggregate_shard`]. This is what lets the async
+    /// engine's buffered late updates flow through the
+    /// [`ShardedAggregator`] /
+    /// [`crate::compression::UpdateCompressor::decompress_range`]
+    /// memory-bounded path unchanged.
+    fn aggregate_shard_stale(
+        &mut self,
+        shard: usize,
+        mut updates: Vec<WeightedUpdate>,
+        staleness: &[usize],
+        decay: f64,
+    ) -> Result<Vec<f32>> {
+        apply_staleness(&mut updates, staleness, decay)?;
+        self.aggregate_shard(shard, &updates)
+    }
+}
+
+/// The async engine's staleness decay: an update applied `staleness`
+/// rounds late keeps `decay / (staleness + 1)` of its aggregation weight
+/// (FedAsync-style polynomial decay). `staleness = 0` with the default
+/// `decay = 1.0` yields exactly `1.0`, so fresh rounds are untouched;
+/// because weighted aggregators normalize by total weight, any uniform
+/// `decay` cancels among same-age updates and only the *relative* age
+/// matters.
+pub fn staleness_discount(decay: f64, staleness: usize) -> f64 {
+    decay / (staleness as f64 + 1.0)
+}
+
+/// Scale each update's weight by its staleness discount (in place).
+fn apply_staleness(updates: &mut [WeightedUpdate], staleness: &[usize], decay: f64) -> Result<()> {
+    if updates.len() != staleness.len() {
+        return Err(FedAeError::Coordination(format!(
+            "{} updates but {} staleness tags",
+            updates.len(),
+            staleness.len()
+        )));
+    }
+    for (u, &s) in updates.iter_mut().zip(staleness) {
+        u.weight *= staleness_discount(decay, s);
+    }
+    Ok(())
 }
 
 /// Shared validation: non-empty, equal lengths, finite weights.
@@ -259,6 +351,110 @@ impl Aggregator for FedAvgM {
     }
 }
 
+/// FedBuff-style buffered aggregation (Nguyen et al. 2022): admitted
+/// updates accumulate in a server-side buffer as weighted deltas against
+/// the current global model, and the global model only steps — by
+/// `lr x` the weighted mean buffered delta — once `goal` updates have
+/// been buffered. Until then [`FedBuff::aggregate`] returns the global
+/// model unchanged.
+///
+/// This is the natural server rule for deadline-driven async rounds,
+/// where the number of admitted updates fluctuates round to round:
+/// sparse rounds park their few updates in the buffer instead of taking
+/// a noisy step. Staleness discounting composes through the weights
+/// (see [`Aggregator::aggregate_stale`]), and coordinate sharding
+/// composes because the buffer is coordinate-wise and the buffered
+/// *count* advances identically in every shard
+/// ([`ShardedAggregator`] gives each shard its own instance).
+#[derive(Debug)]
+pub struct FedBuff {
+    /// Buffered updates required before the global model steps.
+    pub goal: usize,
+    /// Server learning rate on the buffered mean delta.
+    pub lr: f64,
+    prev_global: Vec<f32>,
+    buffer: Vec<f64>,
+    buffer_weight: f64,
+    buffered: usize,
+    inner: FedAvg,
+}
+
+impl FedBuff {
+    /// Buffered aggregation stepping every `goal` updates with server
+    /// learning rate `lr`.
+    pub fn new(goal: usize, lr: f64) -> Result<FedBuff> {
+        if goal == 0 {
+            return Err(FedAeError::Config("fedbuff goal must be > 0".into()));
+        }
+        if !(lr.is_finite() && lr > 0.0) {
+            return Err(FedAeError::Config(format!(
+                "fedbuff lr {lr} must be finite and > 0"
+            )));
+        }
+        Ok(FedBuff {
+            goal,
+            lr,
+            prev_global: Vec::new(),
+            buffer: Vec::new(),
+            buffer_weight: 0.0,
+            buffered: 0,
+            inner: FedAvg,
+        })
+    }
+
+    /// Updates currently parked in the buffer (resets to 0 on each step).
+    pub fn buffered(&self) -> usize {
+        self.buffered
+    }
+}
+
+impl Aggregator for FedBuff {
+    fn name(&self) -> &str {
+        "fedbuff"
+    }
+
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let n = validate_updates(updates)?;
+        if self.prev_global.is_empty() {
+            // First call bootstraps the global model like FedAvgM does.
+            let g = self.inner.aggregate(updates)?;
+            self.prev_global = g.clone();
+            self.buffer = vec![0.0f64; n];
+            return Ok(g);
+        }
+        if n != self.prev_global.len() {
+            return Err(FedAeError::Coordination(
+                "fedbuff: dimension changed between rounds".into(),
+            ));
+        }
+        for u in updates {
+            self.buffer_weight += u.weight;
+            for (b, (&v, &g)) in self.buffer.iter_mut().zip(u.values.iter().zip(&self.prev_global))
+            {
+                *b += u.weight * f64::from(v - g);
+            }
+            self.buffered += 1;
+        }
+        if self.buffered < self.goal {
+            return Ok(self.prev_global.clone());
+        }
+        if self.buffer_weight <= 0.0 {
+            return Err(FedAeError::Coordination(
+                "fedbuff: zero total buffered weight at step".into(),
+            ));
+        }
+        let mut out = Vec::with_capacity(n);
+        for (g, b) in self.prev_global.iter().zip(&self.buffer) {
+            out.push(g + (self.lr * b / self.buffer_weight) as f32);
+        }
+        self.prev_global = out.clone();
+        self.buffer.fill(0.0);
+        self.buffer_weight = 0.0;
+        self.buffered = 0;
+        Ok(out)
+    }
+}
+
 /// Build an aggregator from config.
 pub fn from_config(cfg: &AggregationConfig) -> Result<Box<dyn Aggregator>> {
     Ok(match cfg {
@@ -267,6 +463,7 @@ pub fn from_config(cfg: &AggregationConfig) -> Result<Box<dyn Aggregator>> {
         AggregationConfig::Median => Box::new(Median),
         AggregationConfig::TrimmedMean { trim } => Box::new(TrimmedMean::new(*trim)?),
         AggregationConfig::FedAvgM { beta } => Box::new(FedAvgM::new(*beta)?),
+        AggregationConfig::FedBuff { goal, lr } => Box::new(FedBuff::new(*goal, *lr)?),
     })
 }
 
@@ -371,10 +568,90 @@ mod tests {
             AggregationConfig::Median,
             AggregationConfig::TrimmedMean { trim: 0.1 },
             AggregationConfig::FedAvgM { beta: 0.9 },
+            AggregationConfig::FedBuff { goal: 4, lr: 0.5 },
         ] {
             assert!(from_config(&cfg).is_ok());
         }
         assert!(from_config(&AggregationConfig::TrimmedMean { trim: 0.9 }).is_err());
+        assert!(from_config(&AggregationConfig::FedBuff { goal: 0, lr: 0.5 }).is_err());
+        assert!(from_config(&AggregationConfig::FedBuff { goal: 4, lr: -1.0 }).is_err());
+    }
+
+    #[test]
+    fn staleness_discount_decays_polynomially() {
+        assert_eq!(staleness_discount(1.0, 0), 1.0);
+        assert_eq!(staleness_discount(1.0, 1), 0.5);
+        assert!((staleness_discount(1.0, 2) - 1.0 / 3.0).abs() < 1e-15);
+        assert_eq!(staleness_discount(0.5, 0), 0.5);
+        assert_eq!(staleness_discount(0.5, 1), 0.25);
+    }
+
+    #[test]
+    fn aggregate_stale_fresh_is_bitwise_aggregate() {
+        // All-fresh with decay 1.0 must be *identical* to aggregate —
+        // the degenerate-async equivalence rests on this.
+        let updates = vec![
+            upd(3.0, vec![0.1, -0.7, 2.5]),
+            upd(5.0, vec![1.3, 0.0, -0.25]),
+        ];
+        let want = FedAvg.aggregate(&updates).unwrap();
+        let got = FedAvg
+            .aggregate_stale(updates.clone(), &[0, 0], 1.0)
+            .unwrap();
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn aggregate_stale_discounts_old_updates() {
+        // A staleness-1 update at equal raw weight contributes half as
+        // much as a fresh one under FedAvg.
+        let updates = vec![upd(1.0, vec![0.0]), upd(1.0, vec![3.0])];
+        let out = FedAvg.aggregate_stale(updates, &[0, 1], 1.0).unwrap();
+        // weights 1.0 and 0.5 -> (0*1 + 3*0.5) / 1.5 = 1.0
+        assert!((out[0] - 1.0).abs() < 1e-6, "got {}", out[0]);
+        // Mismatched tag count is rejected.
+        assert!(FedAvg
+            .aggregate_stale(vec![upd(1.0, vec![0.0])], &[0, 1], 1.0)
+            .is_err());
+    }
+
+    #[test]
+    fn fedbuff_holds_until_goal_then_steps() {
+        let mut agg = FedBuff::new(3, 1.0).unwrap();
+        // Call 1 bootstraps the global model.
+        let g0 = agg.aggregate(&[upd(1.0, vec![0.0, 0.0])]).unwrap();
+        assert_eq!(g0, vec![0.0, 0.0]);
+        // Two buffered updates: below goal, global unchanged.
+        let g1 = agg.aggregate(&[upd(1.0, vec![3.0, -3.0])]).unwrap();
+        assert_eq!(g1, vec![0.0, 0.0]);
+        assert_eq!(agg.buffered(), 1);
+        let g2 = agg.aggregate(&[upd(1.0, vec![3.0, -3.0])]).unwrap();
+        assert_eq!(g2, vec![0.0, 0.0]);
+        assert_eq!(agg.buffered(), 2);
+        // Third buffered update reaches the goal: step by the mean delta.
+        let g3 = agg.aggregate(&[upd(1.0, vec![3.0, -3.0])]).unwrap();
+        assert_eq!(g3, vec![3.0, -3.0]);
+        assert_eq!(agg.buffered(), 0);
+        // The server lr scales the step.
+        let mut agg = FedBuff::new(1, 0.5).unwrap();
+        agg.aggregate(&[upd(1.0, vec![0.0])]).unwrap();
+        let g = agg.aggregate(&[upd(1.0, vec![2.0])]).unwrap();
+        assert_eq!(g, vec![1.0]);
+    }
+
+    #[test]
+    fn fedbuff_weights_the_buffered_mean() {
+        let mut agg = FedBuff::new(2, 1.0).unwrap();
+        agg.aggregate(&[upd(1.0, vec![0.0])]).unwrap();
+        // One heavy and one light update in the same buffer window.
+        let g = agg
+            .aggregate(&[upd(3.0, vec![4.0]), upd(1.0, vec![0.0])])
+            .unwrap();
+        // (3*4 + 1*0) / 4 = 3.0
+        assert_eq!(g, vec![3.0]);
+        // Construction rejects bad knobs.
+        assert!(FedBuff::new(0, 1.0).is_err());
+        assert!(FedBuff::new(2, f64::NAN).is_err());
     }
 
     #[test]

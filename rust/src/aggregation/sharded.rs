@@ -13,9 +13,17 @@
 //! transient full reconstruction, instead of `participants x n_params`.
 //!
 //! The memory bound trades compute for schemes without random-access
-//! layouts: identity and quantize decode exactly the requested range, but
-//! compressors using the default `decompress_range` (the AE's dense
-//! decoder, sketch, top-k) re-run a full decode per shard, i.e.
+//! layouts. Per scheme (verified against the `decompress_range` impls in
+//! [`crate::compression`]):
+//!
+//! | scheme | range decode | cost per shard |
+//! |---|---|---|
+//! | identity | random access (slice of the raw vector) | O(shard) |
+//! | quantize | random access (bit-unpacks only the range) | O(shard) |
+//! | top-k, subsample | random access (scan of the k sparse entries) | O(k) |
+//! | AE (dense decoder), sketch | default: full decode, then slice | O(n) |
+//!
+//! Schemes in the last row re-run a full decode per shard, i.e.
 //! `shard_count` decodes per update per round. Pick `shard_size` with
 //! that in mind (larger shards = fewer re-decodes, more memory), or keep
 //! aggregation unsharded when updates are cheap to hold.
@@ -29,11 +37,16 @@
 //! the per-coordinate momentum). Partitioning the coordinates therefore
 //! changes *nothing* about the arithmetic performed per coordinate — not
 //! even the operand order — so sharded aggregation is bitwise identical
-//! to unsharded aggregation. The stateful FedAvgM keeps its
-//! momentum/previous-global state correct across rounds because each
-//! shard index is routed to its own persistent inner aggregator
-//! instance. `sharded_matches_unsharded_*` tests below pin this for all
-//! five algorithms.
+//! to unsharded aggregation. The stateful aggregators (FedAvgM's
+//! momentum, [`crate::aggregation::FedBuff`]'s delta buffer) keep their
+//! cross-round state correct because each shard index is routed to its
+//! own persistent inner aggregator instance; FedBuff's buffered *count*
+//! stays in sync across shards because every shard sees the same update
+//! batches. Staleness discounting
+//! ([`crate::aggregation::Aggregator::aggregate_shard_stale`]) composes
+//! for free: it rescales only the scalar weights before the per-shard
+//! routing. `sharded_matches_unsharded_*` tests below pin the
+//! equivalence for all six algorithms.
 
 use std::ops::Range;
 
@@ -187,6 +200,10 @@ mod tests {
             AggregationConfig::Median,
             AggregationConfig::TrimmedMean { trim: 0.2 },
             AggregationConfig::FedAvgM { beta: 0.9 },
+            // goal 9 with 7 updates/round: rounds alternate between
+            // buffering (no step) and stepping, so the cross-shard count
+            // synchronization is genuinely exercised.
+            AggregationConfig::FedBuff { goal: 9, lr: 0.5 },
         ]
     }
 
@@ -232,6 +249,37 @@ mod tests {
                         .map(|u| upd(u.weight, u.values[range.clone()].to_vec()))
                         .collect();
                     let piece = sharded.aggregate_shard(s, &shard_ups).unwrap();
+                    got[range].copy_from_slice(&piece);
+                }
+                assert_eq!(want, got, "{} round={round}", sharded.name());
+            }
+        }
+    }
+
+    #[test]
+    fn stale_streaming_matches_plain_stale() {
+        // Staleness-discounted shard streaming (the async driver's path)
+        // equals the whole-vector aggregate_stale for every aggregator.
+        let n = 23;
+        let shard_size = 4;
+        for cfg in all_configs() {
+            let mut plain = from_config(&cfg).unwrap();
+            let mut sharded = ShardedAggregator::new(cfg.clone(), shard_size).unwrap();
+            for round in 0..3 {
+                let ups = updates(round, 5, n);
+                let staleness: Vec<usize> = (0..ups.len()).map(|i| i % 3).collect();
+                let want = plain
+                    .aggregate_stale(ups.clone(), &staleness, 0.9)
+                    .unwrap();
+                let mut got = vec![0.0f32; n];
+                for (s, range) in shard_ranges(n, shard_size).enumerate() {
+                    let shard_ups: Vec<WeightedUpdate> = ups
+                        .iter()
+                        .map(|u| upd(u.weight, u.values[range.clone()].to_vec()))
+                        .collect();
+                    let piece = sharded
+                        .aggregate_shard_stale(s, shard_ups, &staleness, 0.9)
+                        .unwrap();
                     got[range].copy_from_slice(&piece);
                 }
                 assert_eq!(want, got, "{} round={round}", sharded.name());

@@ -244,6 +244,39 @@ pub(crate) fn check_decompress_range(range: &std::ops::Range<usize>, n: usize) -
     Ok(())
 }
 
+/// Shared random-access range decode for [`CompressedUpdate::Sparse`]
+/// payloads (top-k and subsample): zeros except the sparse entries that
+/// fall inside `range`. One O(k) scan of the k kept coordinates — no
+/// assumption on index order — instead of materializing the full n-dim
+/// vector, which is what bounds the sharded-aggregation server peak for
+/// sparse schemes at `participants x shard_size` floats.
+pub(crate) fn sparse_decompress_range(
+    indices: &[u32],
+    values: &[f32],
+    n: u32,
+    range: std::ops::Range<usize>,
+) -> Result<Vec<f32>> {
+    if indices.len() != values.len() {
+        return Err(FedAeError::Compression(
+            "sparse index/value length mismatch".into(),
+        ));
+    }
+    check_decompress_range(&range, n as usize)?;
+    let mut out = vec![0.0f32; range.len()];
+    for (&i, &v) in indices.iter().zip(values) {
+        let i = i as usize;
+        if i >= n as usize {
+            return Err(FedAeError::Compression(format!(
+                "sparse index {i} out of bounds (n={n})"
+            )));
+        }
+        if range.contains(&i) {
+            out[i - range.start] = v;
+        }
+    }
+    Ok(out)
+}
+
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -311,8 +344,14 @@ pub trait UpdateCompressor: Send {
     ///
     /// The default decompresses fully and slices, which is correct for
     /// every scheme; compressors whose layout allows cheap random access
-    /// (e.g. [`identity::IdentityCompressor`]) override it to skip the
-    /// full materialization.
+    /// override it to skip the full materialization —
+    /// [`identity::IdentityCompressor`] (raw slice),
+    /// [`quantize::QuantizeCompressor`] (bit-unpacks only the range) and
+    /// the sparse schemes [`topk::TopKCompressor`] /
+    /// [`subsample::SubsampleCompressor`] (O(k) scan of the kept
+    /// entries). The AE's dense decoder and the count-sketch keep the
+    /// default full decode (see the scheme table in
+    /// [`crate::aggregation::sharded`]).
     fn decompress_range(
         &mut self,
         update: &CompressedUpdate,

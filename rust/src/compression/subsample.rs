@@ -91,6 +91,23 @@ impl UpdateCompressor for SubsampleCompressor {
         }
     }
 
+    /// Sparse payloads allow random access: scan the k sampled entries
+    /// for the ones inside `range` instead of materializing all n zeros.
+    fn decompress_range(
+        &mut self,
+        update: &CompressedUpdate,
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Sparse { indices, values, n } => {
+                super::sparse_decompress_range(indices, values, *n, range)
+            }
+            other => Err(FedAeError::Compression(format!(
+                "subsample got {other:?}"
+            ))),
+        }
+    }
+
     fn nominal_ratio(&self, n: usize) -> Option<f64> {
         Some(n as f64 / self.k as f64)
     }
@@ -130,6 +147,18 @@ mod tests {
         let m2: std::collections::HashSet<_> = c.mask(1).into_iter().collect();
         let overlap = m1.intersection(&m2).count();
         assert!(overlap < m1.len()); // not identical
+    }
+
+    #[test]
+    fn decompress_range_matches_full_decode() {
+        let mut c = SubsampleCompressor::new(40, 0.3, 11).unwrap();
+        let w: Vec<f32> = (0..40).map(|i| (i as f32) - 20.0).collect();
+        let u = c.compress(2, &w).unwrap();
+        let full = c.decompress(&u).unwrap();
+        for range in [0..40, 0..3, 17..29, 39..40, 8..8] {
+            assert_eq!(c.decompress_range(&u, range.clone()).unwrap(), full[range]);
+        }
+        assert!(c.decompress_range(&u, 30..41).is_err());
     }
 
     #[test]

@@ -112,6 +112,21 @@ impl UpdateCompressor for TopKCompressor {
         }
     }
 
+    /// Sparse payloads allow random access: scan the k kept entries for
+    /// the ones inside `range` instead of materializing all n zeros.
+    fn decompress_range(
+        &mut self,
+        update: &CompressedUpdate,
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<f32>> {
+        match update {
+            CompressedUpdate::Sparse { indices, values, n } => {
+                super::sparse_decompress_range(indices, values, *n, range)
+            }
+            other => Err(FedAeError::Compression(format!("top-k got {other:?}"))),
+        }
+    }
+
     fn nominal_ratio(&self, n: usize) -> Option<f64> {
         // Each kept coordinate costs 8 bytes (u32 idx + f32 val).
         let k = ((n as f64 * self.fraction).ceil()).max(1.0);
@@ -172,6 +187,25 @@ mod tests {
                 "coordinate {i} leaked"
             );
         }
+    }
+
+    #[test]
+    fn decompress_range_matches_full_decode() {
+        let mut c = TopKCompressor::new(24, 0.25).unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let w: Vec<f32> = (0..24).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let u = c.compress(0, &w).unwrap();
+        let full = c.decompress(&u).unwrap();
+        for range in [0..24, 0..1, 5..13, 23..24, 7..7] {
+            assert_eq!(c.decompress_range(&u, range.clone()).unwrap(), full[range]);
+        }
+        assert!(c.decompress_range(&u, 10..25).is_err());
+        let bad = CompressedUpdate::Sparse {
+            indices: vec![30],
+            values: vec![1.0],
+            n: 24,
+        };
+        assert!(c.decompress_range(&bad, 0..4).is_err());
     }
 
     #[test]

@@ -113,6 +113,16 @@ pub enum AggregationConfig {
         /// Server momentum coefficient, in [0, 1).
         beta: f64,
     },
+    /// FedBuff-style buffered aggregation (Nguyen et al. 2022): updates
+    /// accumulate in a server buffer and the global model only steps once
+    /// `goal` updates have been buffered — the natural server rule for
+    /// deadline-driven async rounds where admitted counts fluctuate.
+    FedBuff {
+        /// Buffered updates required before the global model steps.
+        goal: usize,
+        /// Server learning rate applied to the buffered mean delta.
+        lr: f64,
+    },
 }
 
 impl AggregationConfig {
@@ -126,6 +136,10 @@ impl AggregationConfig {
             },
             "fedavgm" => AggregationConfig::FedAvgM {
                 beta: j.get("beta").and_then(|v| v.as_f64()).unwrap_or(0.9),
+            },
+            "fedbuff" => AggregationConfig::FedBuff {
+                goal: j.get("goal").and_then(|v| v.as_usize()).unwrap_or(10),
+                lr: j.get("lr").and_then(|v| v.as_f64()).unwrap_or(1.0),
             },
             other => {
                 return Err(FedAeError::Config(format!(
@@ -248,12 +262,54 @@ impl Default for NetworkConfig {
     }
 }
 
-/// Round-engine execution knobs (see ARCHITECTURE.md §Round engine).
+/// How the driver closes a communication round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Full barrier (the default): every selected collaborator's update
+    /// must arrive before the round aggregates (paper Fig 3).
+    Sync,
+    /// Deadline-driven: the round admits only updates that land before
+    /// [`EngineConfig::deadline_ms`]; late arrivals buffer into a future
+    /// round and fold in staleness-discounted (see
+    /// [`crate::coordinator::AsyncRoundEngine`]).
+    Async,
+}
+
+impl EngineMode {
+    /// Stable lowercase name for logs and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineMode::Sync => "sync",
+            EngineMode::Async => "async",
+        }
+    }
+
+    /// Parse a mode string (the single source of truth for both the
+    /// JSON config and the CLI `--mode` flag).
+    pub fn parse(s: &str) -> Result<EngineMode> {
+        Ok(match s {
+            "sync" => EngineMode::Sync,
+            "async" => EngineMode::Async,
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "unknown engine mode `{other}` (expected sync|async)"
+                )))
+            }
+        })
+    }
+}
+
+/// Round-engine execution knobs (see ARCHITECTURE.md §Round engine and
+/// §Async rounds & staleness).
 ///
-/// Both knobs change *how* a round executes, never *what* it computes:
-/// any (`parallelism`, `shard_size`) combination produces bitwise-identical
-/// round outcomes for a fixed seed (pinned by
-/// `rust/tests/parallel_round.rs`).
+/// `parallelism` and `shard_size` change *how* a round executes, never
+/// *what* it computes: any combination produces bitwise-identical round
+/// outcomes for a fixed seed (pinned by `rust/tests/parallel_round.rs`).
+/// The async knobs (`mode` onward) *do* change results — they open the
+/// client-heterogeneity scenario axis — but stay fully deterministic for
+/// a fixed seed, and the degenerate async configuration (zero dropout,
+/// zero latency knobs, infinite deadline) reproduces sync results
+/// bitwise (`rust/tests/async_round.rs`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
     /// Worker threads for per-collaborator round work
@@ -268,6 +324,29 @@ pub struct EngineConfig {
     /// memory at `participants x k` floats plus one transient full
     /// reconstruction.
     pub shard_size: usize,
+    /// Round-closing discipline: full barrier ([`EngineMode::Sync`], the
+    /// default) or deadline-driven ([`EngineMode::Async`]).
+    pub mode: EngineMode,
+    /// Async round deadline in simulated milliseconds; `0` = infinite
+    /// (every non-dropped upload is admitted). Async mode only.
+    pub deadline_ms: f64,
+    /// Staleness decay coefficient `α` for buffered late updates: an
+    /// update applied `s` rounds late has its aggregation weight scaled
+    /// by `α / (s + 1)` ([`crate::aggregation::staleness_discount`]).
+    /// Default `1.0`. Acts through the aggregation weights, so it
+    /// requires a weighted aggregator (fedavg/fedavgm/fedbuff); the
+    /// weight-agnostic ones apply stale updates at full influence.
+    /// Async mode only.
+    pub staleness_decay: f64,
+    /// Per-(round, collaborator) probability that an upload never
+    /// arrives ([`crate::network::StragglerModel`]). Async mode only.
+    pub dropout_rate: f64,
+    /// Lognormal sigma of the persistent per-collaborator slowdown
+    /// factor (`0` = homogeneous population). Async mode only.
+    pub straggler_log_std: f64,
+    /// Per-upload uniform latency jitter bound in simulated
+    /// milliseconds. Async mode only.
+    pub jitter_ms: f64,
 }
 
 impl Default for EngineConfig {
@@ -275,6 +354,12 @@ impl Default for EngineConfig {
         EngineConfig {
             parallelism: 1,
             shard_size: 0,
+            mode: EngineMode::Sync,
+            deadline_ms: 0.0,
+            staleness_decay: 1.0,
+            dropout_rate: 0.0,
+            straggler_log_std: 0.0,
+            jitter_ms: 0.0,
         }
     }
 }
@@ -411,6 +496,24 @@ impl ExperimentConfig {
             if let Some(v) = e.get("shard_size").and_then(|v| v.as_usize()) {
                 cfg.engine.shard_size = v;
             }
+            if let Some(v) = e.get("mode").and_then(|v| v.as_str()) {
+                cfg.engine.mode = EngineMode::parse(v)?;
+            }
+            if let Some(v) = e.get("deadline_ms").and_then(|v| v.as_f64()) {
+                cfg.engine.deadline_ms = v;
+            }
+            if let Some(v) = e.get("staleness_decay").and_then(|v| v.as_f64()) {
+                cfg.engine.staleness_decay = v;
+            }
+            if let Some(v) = e.get("dropout_rate").and_then(|v| v.as_f64()) {
+                cfg.engine.dropout_rate = v;
+            }
+            if let Some(v) = e.get("straggler_log_std").and_then(|v| v.as_f64()) {
+                cfg.engine.straggler_log_std = v;
+            }
+            if let Some(v) = e.get("jitter_ms").and_then(|v| v.as_f64()) {
+                cfg.engine.jitter_ms = v;
+            }
         }
         Ok(cfg)
     }
@@ -456,6 +559,84 @@ impl ExperimentConfig {
                 return Err(FedAeError::Config(format!(
                     "quantize bits {bits} outside 1..=16"
                 )));
+            }
+        }
+        if let AggregationConfig::FedBuff { goal, lr } = &self.aggregation {
+            if *goal == 0 {
+                return Err(FedAeError::Config("fedbuff goal must be > 0".into()));
+            }
+            if !(lr.is_finite() && *lr > 0.0) {
+                return Err(FedAeError::Config(format!(
+                    "fedbuff lr {lr} must be finite and > 0"
+                )));
+            }
+        }
+        let e = &self.engine;
+        match e.mode {
+            EngineMode::Sync => {
+                // The straggler knobs only have meaning under the
+                // deadline-driven engine; reject rather than silently
+                // ignore them.
+                if e.deadline_ms != 0.0
+                    || e.dropout_rate != 0.0
+                    || e.straggler_log_std != 0.0
+                    || e.jitter_ms != 0.0
+                    || e.staleness_decay != 1.0
+                {
+                    return Err(FedAeError::Config(
+                        "deadline/straggler/staleness knobs require engine mode `async`"
+                            .into(),
+                    ));
+                }
+            }
+            EngineMode::Async => {
+                if !(e.deadline_ms.is_finite() && e.deadline_ms >= 0.0) {
+                    return Err(FedAeError::Config(format!(
+                        "deadline_ms {} must be finite and >= 0 (0 = infinite)",
+                        e.deadline_ms
+                    )));
+                }
+                if !(e.dropout_rate.is_finite() && (0.0..=1.0).contains(&e.dropout_rate)) {
+                    return Err(FedAeError::Config(format!(
+                        "dropout_rate {} not in [0, 1]",
+                        e.dropout_rate
+                    )));
+                }
+                if !(e.staleness_decay.is_finite() && e.staleness_decay > 0.0) {
+                    return Err(FedAeError::Config(format!(
+                        "staleness_decay {} must be finite and > 0",
+                        e.staleness_decay
+                    )));
+                }
+                // Staleness discounting acts through the aggregation
+                // weights; the weight-agnostic aggregators ignore it, so
+                // a non-default decay there would be a silently dead
+                // knob (stale updates land at full influence).
+                let weight_agnostic = matches!(
+                    self.aggregation,
+                    AggregationConfig::Mean
+                        | AggregationConfig::Median
+                        | AggregationConfig::TrimmedMean { .. }
+                );
+                if e.staleness_decay != 1.0 && weight_agnostic {
+                    return Err(FedAeError::Config(
+                        "staleness_decay has no effect on weight-agnostic aggregation \
+                         (mean/median/trimmed_mean); use fedavg, fedavgm or fedbuff"
+                            .into(),
+                    ));
+                }
+                if !(e.straggler_log_std.is_finite() && e.straggler_log_std >= 0.0) {
+                    return Err(FedAeError::Config(format!(
+                        "straggler_log_std {} must be finite and >= 0",
+                        e.straggler_log_std
+                    )));
+                }
+                if !(e.jitter_ms.is_finite() && e.jitter_ms >= 0.0) {
+                    return Err(FedAeError::Config(format!(
+                        "jitter_ms {} must be finite and >= 0",
+                        e.jitter_ms
+                    )));
+                }
             }
         }
         Ok(())
@@ -504,6 +685,83 @@ mod tests {
         assert_eq!(cfg.engine, EngineConfig::default());
         assert_eq!(cfg.engine.parallelism, 1);
         assert_eq!(cfg.engine.shard_size, 0);
+        assert_eq!(cfg.engine.mode, EngineMode::Sync);
+        assert_eq!(cfg.engine.deadline_ms, 0.0);
+        assert_eq!(cfg.engine.staleness_decay, 1.0);
+        assert_eq!(cfg.engine.dropout_rate, 0.0);
+    }
+
+    #[test]
+    fn parses_async_engine_knobs() {
+        let j = Json::parse(
+            r#"{"engine": {"mode": "async", "deadline_ms": 250.5,
+                "staleness_decay": 0.8, "dropout_rate": 0.1,
+                "straggler_log_std": 0.6, "jitter_ms": 25}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.engine.mode, EngineMode::Async);
+        assert_eq!(cfg.engine.mode.name(), "async");
+        assert_eq!(cfg.engine.deadline_ms, 250.5);
+        assert_eq!(cfg.engine.staleness_decay, 0.8);
+        assert_eq!(cfg.engine.dropout_rate, 0.1);
+        assert_eq!(cfg.engine.straggler_log_std, 0.6);
+        assert_eq!(cfg.engine.jitter_ms, 25.0);
+        // Unknown mode strings fail loudly.
+        let j = Json::parse(r#"{"engine": {"mode": "lazy"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn async_knob_validation() {
+        let mjson = Json::parse(&manifest::tests::test_manifest_json()).unwrap();
+        let m = manifest::Manifest::from_json(&mjson).unwrap();
+        let base = || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = "toy".into();
+            cfg.compression = CompressionConfig::Identity;
+            cfg
+        };
+        // Straggler knobs without async mode are rejected.
+        let mut cfg = base();
+        cfg.engine.dropout_rate = 0.1;
+        assert!(cfg.validate(&m).is_err());
+        let mut cfg = base();
+        cfg.engine.deadline_ms = 100.0;
+        assert!(cfg.validate(&m).is_err());
+        // A well-formed async config validates.
+        let mut cfg = base();
+        cfg.engine.mode = EngineMode::Async;
+        cfg.engine.deadline_ms = 100.0;
+        cfg.engine.dropout_rate = 0.2;
+        cfg.engine.straggler_log_std = 0.5;
+        cfg.engine.jitter_ms = 10.0;
+        cfg.validate(&m).unwrap();
+        // Out-of-range async knobs are rejected.
+        cfg.engine.dropout_rate = 1.5;
+        assert!(cfg.validate(&m).is_err());
+        cfg.engine.dropout_rate = 0.2;
+        cfg.engine.staleness_decay = 0.0;
+        assert!(cfg.validate(&m).is_err());
+        cfg.engine.staleness_decay = 1.0;
+        cfg.engine.deadline_ms = f64::NAN;
+        assert!(cfg.validate(&m).is_err());
+        // A non-default decay needs a weighted aggregator (the default
+        // Mean ignores weights, so the knob would be silently dead).
+        let mut cfg = base();
+        cfg.engine.mode = EngineMode::Async;
+        cfg.engine.staleness_decay = 0.5;
+        assert!(cfg.validate(&m).is_err());
+        cfg.aggregation = AggregationConfig::FedAvg;
+        cfg.validate(&m).unwrap();
+        // FedBuff knobs are validated too.
+        let mut cfg = base();
+        cfg.aggregation = AggregationConfig::FedBuff { goal: 0, lr: 1.0 };
+        assert!(cfg.validate(&m).is_err());
+        cfg.aggregation = AggregationConfig::FedBuff { goal: 4, lr: 0.0 };
+        assert!(cfg.validate(&m).is_err());
+        cfg.aggregation = AggregationConfig::FedBuff { goal: 4, lr: 0.5 };
+        cfg.validate(&m).unwrap();
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //! * [`ParallelRoundEngine`] (in [`engine`]) — the scoped-thread fan-out
 //!   that runs per-collaborator round work (local train → AE encode →
 //!   simulated send) concurrently, deterministically.
+//! * [`AsyncRoundEngine`] (in [`async_engine`]) — the deadline-driven
+//!   round discipline: seeded straggler/dropout modelling, deadline
+//!   admission, late-update buffering and staleness accounting.
 //! * [`FlDriver`] — the in-process experiment driver: wires collaborators,
 //!   compressors, aggregation, the simulated network and metrics into the
 //!   paper's federated loop (Fig 3), including the pre-pass round (Fig 2).
@@ -18,9 +21,15 @@
 //!   [`ShardedAggregator`] in coordinate shards so reconstructions are
 //!   never all materialized at once. Neither knob changes results: see
 //!   ARCHITECTURE.md §Round engine and `rust/tests/parallel_round.rs`.
+//!   A third knob family (`engine.mode = "async"` + deadline/straggler
+//!   knobs) swaps the round barrier for the deadline discipline — that
+//!   one *does* change results, deterministically (ARCHITECTURE.md
+//!   §Async rounds & staleness, `rust/tests/async_round.rs`).
 
+pub mod async_engine;
 pub mod engine;
 
+pub use async_engine::{AsyncRoundEngine, BufferedUpdate, StragglerStats};
 pub use engine::ParallelRoundEngine;
 
 use std::collections::{BTreeMap, BTreeSet};
@@ -33,7 +42,9 @@ use crate::config::{CompressionConfig, ExperimentConfig, Sharding};
 use crate::data::{make_shards, Dataset, SynthKind};
 use crate::error::{FedAeError, Result};
 use crate::metrics::{ExperimentLog, RoundRecord};
-use crate::network::{Direction, SimulatedNetwork, TrafficKind, TrafficLedger, Transfer};
+use crate::network::{
+    Direction, SimulatedNetwork, StragglerModel, TrafficKind, TrafficLedger, Transfer, UploadFate,
+};
 use crate::runtime::{AePipeline, EvalStep, Runtime};
 use crate::tensor;
 use crate::transport::Message;
@@ -165,7 +176,13 @@ impl DecoderRegistry {
 }
 
 /// Outcome of one communication round.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Compares with `==` field-by-field, except `mean_recon_mse` which is
+/// compared bitwise: `NaN` there marks "no fresh updates this round"
+/// (an async round where everything was late or dropped), and two
+/// bit-identical runs must still compare equal — the determinism tests
+/// rely on it.
+#[derive(Debug, Clone)]
 pub struct RoundOutcome {
     /// Which round this outcome describes.
     pub round: usize,
@@ -181,6 +198,21 @@ pub struct RoundOutcome {
     pub bytes_up: u64,
     /// Downlink bytes this round (global-model broadcasts).
     pub bytes_down: u64,
+    /// Deadline/straggler accounting (all-admitted in sync mode).
+    pub stragglers: StragglerStats,
+}
+
+impl PartialEq for RoundOutcome {
+    fn eq(&self, other: &RoundOutcome) -> bool {
+        self.round == other.round
+            && self.train_losses == other.train_losses
+            && self.eval_loss == other.eval_loss
+            && self.eval_acc == other.eval_acc
+            && self.mean_recon_mse.to_bits() == other.mean_recon_mse.to_bits()
+            && self.bytes_up == other.bytes_up
+            && self.bytes_down == other.bytes_down
+            && self.stragglers == other.stragglers
+    }
 }
 
 /// Per-collaborator result of one round's fanned-out work (local train,
@@ -195,6 +227,9 @@ struct CollabRoundResult {
     update: CompressedUpdate,
     /// Worker-private traffic ledger, merged into the round network.
     ledger: TrafficLedger,
+    /// Modelled upload fate: always on-time arrival in sync mode; the
+    /// seeded [`StragglerModel`] decides in async mode.
+    fate: UploadFate,
 }
 
 /// The whole-experiment driver (single-process simulation).
@@ -212,6 +247,9 @@ pub struct FlDriver<'rt> {
     aggregator: Box<dyn Aggregator>,
     /// Fan-out pool for per-collaborator round work.
     engine: ParallelRoundEngine,
+    /// Deadline-driven round discipline (`engine.mode = "async"` only):
+    /// straggler model, deadline admission and the late-update buffer.
+    async_engine: Option<AsyncRoundEngine>,
     /// The simulated network + byte-exact traffic ledger.
     pub network: SimulatedNetwork,
     eval: EvalStep<'rt>,
@@ -285,6 +323,7 @@ impl<'rt> FlDriver<'rt> {
             crate::aggregation::from_config(&cfg.aggregation)?
         };
         let engine = ParallelRoundEngine::new(cfg.engine.parallelism);
+        let async_engine = AsyncRoundEngine::from_config(&cfg.engine, cfg.seed);
         let mut rng = crate::util::rng::Rng::new(cfg.seed);
         let mut log = ExperimentLog::new(cfg.name.clone());
 
@@ -400,6 +439,7 @@ impl<'rt> FlDriver<'rt> {
             server_decompressors,
             aggregator,
             engine,
+            async_engine,
             network,
             eval,
             test,
@@ -458,6 +498,11 @@ impl<'rt> FlDriver<'rt> {
     /// (broadcast metering, state machine, aggregation, eval) stays on
     /// this thread. Results are folded back in collaborator-id order, so
     /// the outcome is bitwise-identical for any `parallelism` setting.
+    ///
+    /// In async mode (`engine.mode = "async"`) the fold additionally
+    /// applies the deadline discipline: each upload's seeded simulated
+    /// arrival admits it into this round, buffers it for a later round
+    /// (staleness-discounted), or drops it — see [`AsyncRoundEngine`].
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
         let round = self.round;
         let participants = self.select_round_participants();
@@ -489,6 +534,9 @@ impl<'rt> FlDriver<'rt> {
         //    uploads on private ledgers costed via the shared link.
         let selected: BTreeSet<usize> = participants.iter().copied().collect();
         let link = self.network.link();
+        // Async mode: workers evaluate the (Copy, seeded) straggler model
+        // themselves; the deadline comparison happens at fold time.
+        let straggler: Option<StragglerModel> = self.async_engine.as_ref().map(|e| e.model());
         let eval = &self.eval;
         let local_epochs = self.cfg.fl.local_epochs;
         let train_cfg = &self.cfg.train;
@@ -517,15 +565,24 @@ impl<'rt> FlDriver<'rt> {
                 payload: update.to_bytes(),
             };
             let bytes = msg.wire_bytes();
+            let base_s = link.transfer_time(bytes);
+            // Sync mode: every upload arrives at the uniform link time.
+            // Async mode: the seeded straggler model may slow or drop it.
+            let fate = match &straggler {
+                None => UploadFate::Arrived { arrival_s: base_s },
+                Some(model) => model.upload_fate(round, cid, base_s),
+            };
             let mut ledger = TrafficLedger::default();
-            ledger.record(Transfer {
-                round,
-                collaborator: cid,
-                direction: Direction::Up,
-                kind: TrafficKind::Update,
-                bytes,
-                sim_seconds: link.transfer_time(bytes),
-            });
+            if let UploadFate::Arrived { arrival_s } = fate {
+                ledger.record(Transfer {
+                    round,
+                    collaborator: cid,
+                    direction: Direction::Up,
+                    kind: TrafficKind::Update,
+                    bytes,
+                    sim_seconds: arrival_s,
+                });
+            }
             Ok(CollabRoundResult {
                 cid,
                 n_samples: collab.n_samples() as u32,
@@ -534,47 +591,119 @@ impl<'rt> FlDriver<'rt> {
                 local_eval_acc,
                 update,
                 ledger,
+                fate,
             })
         });
 
         // Fold worker results back in collaborator-id order (`map`
-        // preserves input order, and tasks were built in id order).
+        // preserves input order, and tasks were built in id order). In
+        // async mode this is where the deadline discipline bites: on-time
+        // arrivals are admitted, late ones buffered (bytes already
+        // spent), dropped ones discarded entirely. Metrics (train loss,
+        // local evals) are only recorded for admitted collaborators —
+        // a late or dropped client's eval report never reached the
+        // server either.
+        let deadline_s = self.async_engine.as_ref().map(|e| e.deadline_seconds());
+        let mut stats = StragglerStats::default();
         let mut train_losses = Vec::with_capacity(participants.len());
         let mut local_evals: Vec<(usize, f32, f32)> = Vec::with_capacity(participants.len());
         for result in results {
             let r = result?;
             bytes_up += r.ledger.total_bytes();
             self.network.merge_ledger(r.ledger);
-            train_losses.push((r.cid, r.train_loss));
-            local_evals.push((r.cid, r.local_eval_loss, r.local_eval_acc));
-            state.accept(round, r.cid, r.n_samples, r.update)?;
+            match r.fate {
+                UploadFate::Dropped => {
+                    stats.dropped += 1;
+                }
+                UploadFate::Arrived { arrival_s } => {
+                    stats.sim_round_seconds = stats.sim_round_seconds.max(arrival_s);
+                    match deadline_s {
+                        Some(d) if arrival_s > d => {
+                            stats.late += 1;
+                            self.async_engine
+                                .as_mut()
+                                .expect("deadline implies async engine")
+                                .buffer_late(round, r.cid, r.n_samples, r.update, arrival_s);
+                        }
+                        _ => {
+                            stats.admitted += 1;
+                            train_losses.push((r.cid, r.train_loss));
+                            local_evals.push((r.cid, r.local_eval_loss, r.local_eval_acc));
+                            state.accept(round, r.cid, r.n_samples, r.update)?;
+                        }
+                    }
+                }
+            }
         }
-        if !state.is_complete() {
-            return Err(FedAeError::Coordination(format!(
-                "round {round} incomplete: missing {:?}",
-                state.missing()
-            )));
+        match deadline_s {
+            // Sync mode keeps the paper's barrier invariant.
+            None => {
+                if !state.is_complete() {
+                    return Err(FedAeError::Coordination(format!(
+                        "round {round} incomplete: missing {:?}",
+                        state.missing()
+                    )));
+                }
+            }
+            // A deadline-paced round closes at the deadline whenever
+            // anything was late or dropped; otherwise at the last
+            // arrival.
+            Some(d) => {
+                if stats.late + stats.dropped > 0 && d.is_finite() {
+                    stats.sim_round_seconds = d;
+                }
+            }
         }
 
         // 3. Server-side reconstruction + aggregation: either the
         //    materialized path (every reconstruction at once, then one
         //    aggregate call) or, with `engine.shard_size > 0`, the
         //    memory-bounded path streaming coordinate shards through the
-        //    ShardedAggregator.
-        let updates = state.take_updates();
-        let recon_mses: Vec<f32>;
+        //    ShardedAggregator. Async mode appends the buffered late
+        //    updates due this round, tagged by staleness; both paths then
+        //    go through the staleness-discounted trait methods (a no-op
+        //    scaling when everything is fresh and decay is 1.0, which is
+        //    what keeps sync results bitwise-unchanged).
+        let decay = self
+            .async_engine
+            .as_ref()
+            .map(|e| e.staleness_decay())
+            .unwrap_or(1.0);
+        // (cid, n_samples, update, staleness): fresh admitted updates in
+        // collaborator-id order, then due buffered updates in buffering
+        // order — a deterministic operand order either way.
+        let mut updates: Vec<(usize, u32, CompressedUpdate, usize)> = state
+            .take_updates()
+            .into_iter()
+            .map(|(c, s, u)| (c, s, u, 0usize))
+            .collect();
+        if let Some(engine) = &mut self.async_engine {
+            for b in engine.drain_due(round) {
+                let staleness = round - b.origin_round;
+                stats.stale_applied += 1;
+                stats.max_staleness = stats.max_staleness.max(staleness);
+                updates.push((b.collaborator, b.n_samples, b.update, staleness));
+            }
+        }
         let shard_size = self.cfg.engine.shard_size;
-        if shard_size > 0 {
+        let recon_mses: Vec<f32> = if updates.is_empty() {
+            // Every upload was late or dropped (async only): the global
+            // model carries over unchanged this round.
+            Vec::new()
+        } else if shard_size > 0 {
             let n = self.global.len();
             let mut new_global = vec![0.0f32; n];
+            let staleness: Vec<usize> = updates.iter().map(|u| u.3).collect();
             // Reconstruction error accumulators, one per update, built up
             // shard-by-shard in the same coordinate order as the
             // unsharded `tensor::mse` (f64 accumulation, so the final
-            // mean matches bitwise).
+            // mean matches bitwise). Only fresh updates contribute: a
+            // stale update's sender has trained on since, so comparing
+            // against its *current* local params would be meaningless.
             let mut sq_err = vec![0.0f64; updates.len()];
             for (s, range) in shard_ranges(n, shard_size).enumerate() {
                 let mut shard_updates = Vec::with_capacity(updates.len());
-                for (i, (cid, n_samples, update)) in updates.iter().enumerate() {
+                for (i, (cid, n_samples, update, age)) in updates.iter().enumerate() {
                     let piece =
                         self.server_decompressors[*cid].decompress_range(update, range.clone())?;
                     if piece.len() != range.len() {
@@ -591,17 +720,21 @@ impl<'rt> FlDriver<'rt> {
                             range.start + j
                         )));
                     }
-                    let local = self.collaborators[*cid].params();
-                    for (k, &v) in piece.iter().enumerate() {
-                        let d = (v - local[range.start + k]) as f64;
-                        sq_err[i] += d * d;
+                    if *age == 0 {
+                        let local = self.collaborators[*cid].params();
+                        for (k, &v) in piece.iter().enumerate() {
+                            let d = (v - local[range.start + k]) as f64;
+                            sq_err[i] += d * d;
+                        }
                     }
                     shard_updates.push(WeightedUpdate {
                         weight: *n_samples as f64,
                         values: piece,
                     });
                 }
-                let piece = self.aggregator.aggregate_shard(s, &shard_updates)?;
+                let piece =
+                    self.aggregator
+                        .aggregate_shard_stale(s, shard_updates, &staleness, decay)?;
                 if piece.len() != range.len() {
                     return Err(FedAeError::Coordination(format!(
                         "shard {s} aggregated to {} values, expected {}",
@@ -612,26 +745,35 @@ impl<'rt> FlDriver<'rt> {
                 new_global[range].copy_from_slice(&piece);
             }
             self.global = new_global;
-            recon_mses = sq_err.iter().map(|&e| (e / n as f64) as f32).collect();
+            updates
+                .iter()
+                .zip(&sq_err)
+                .filter(|(u, _)| u.3 == 0)
+                .map(|(_, &e)| (e / n as f64) as f32)
+                .collect()
         } else {
             let mut weighted = Vec::with_capacity(updates.len());
+            let mut staleness = Vec::with_capacity(updates.len());
             let mut mses = Vec::with_capacity(updates.len());
-            for (cid, n_samples, update) in updates {
+            for (cid, n_samples, update, age) in updates {
                 let recon = self.server_decompressors[cid].decompress(&update)?;
                 if let Err(i) = tensor::check_finite(&recon) {
                     return Err(FedAeError::Coordination(format!(
                         "non-finite reconstruction from collaborator {cid} at index {i}"
                     )));
                 }
-                mses.push(tensor::mse(&recon, self.collaborators[cid].params()) as f32);
+                if age == 0 {
+                    mses.push(tensor::mse(&recon, self.collaborators[cid].params()) as f32);
+                }
+                staleness.push(age);
                 weighted.push(WeightedUpdate {
                     weight: n_samples as f64,
                     values: recon,
                 });
             }
-            self.global = self.aggregator.aggregate(&weighted)?;
-            recon_mses = mses;
-        }
+            self.global = self.aggregator.aggregate_stale(weighted, &staleness, decay)?;
+            mses
+        };
 
         // 4. Evaluate the new global model (on the batch already gathered
         //    for the per-collaborator evals — identical values).
@@ -661,6 +803,9 @@ impl<'rt> FlDriver<'rt> {
             });
         }
 
+        if let Some(engine) = &mut self.async_engine {
+            engine.record_round(&stats);
+        }
         self.round += 1;
         Ok(RoundOutcome {
             round,
@@ -670,7 +815,22 @@ impl<'rt> FlDriver<'rt> {
             mean_recon_mse,
             bytes_up,
             bytes_down,
+            stragglers: stats,
         })
+    }
+
+    /// Cumulative async-mode straggler accounting (`None` in sync mode).
+    pub fn async_totals(&self) -> Option<StragglerStats> {
+        self.async_engine.as_ref().map(|e| e.totals())
+    }
+
+    /// Late updates currently buffered and not yet applied (0 in sync
+    /// mode).
+    pub fn async_pending(&self) -> usize {
+        self.async_engine
+            .as_ref()
+            .map(|e| e.pending_len())
+            .unwrap_or(0)
     }
 
     /// Run the configured number of rounds; returns the final outcome.
@@ -697,6 +857,21 @@ impl<'rt> FlDriver<'rt> {
         );
         self.log
             .add_summary("final_eval_acc", format!("{:.4}", outcome.eval_acc));
+        if let Some(engine) = &self.async_engine {
+            let t = engine.totals();
+            self.log.add_summary("async_admitted_total", t.admitted);
+            self.log.add_summary("async_late_total", t.late);
+            self.log.add_summary("async_dropped_total", t.dropped);
+            self.log
+                .add_summary("async_stale_applied_total", t.stale_applied);
+            self.log.add_summary("async_max_staleness", t.max_staleness);
+            self.log
+                .add_summary("async_pending_end", engine.pending_len());
+            self.log.add_summary(
+                "async_sim_seconds_total",
+                format!("{:.3}", t.sim_round_seconds),
+            );
+        }
         Ok(outcome)
     }
 }

@@ -91,8 +91,10 @@ pub mod prelude {
     pub use crate::collaborator::Collaborator;
     pub use crate::compression::{CompressedUpdate, UpdateCompressor};
     pub use crate::config::manifest::Manifest;
-    pub use crate::config::{EngineConfig, ExperimentConfig};
-    pub use crate::coordinator::{FlDriver, ParallelRoundEngine, RoundOutcome};
+    pub use crate::config::{EngineConfig, EngineMode, ExperimentConfig};
+    pub use crate::coordinator::{
+        AsyncRoundEngine, FlDriver, ParallelRoundEngine, RoundOutcome, StragglerStats,
+    };
     pub use crate::data::{Dataset, SynthSpec};
     pub use crate::error::FedAeError;
     pub use crate::metrics::ExperimentLog;

@@ -15,7 +15,7 @@
 //! fedae worker --connect 127.0.0.1:7070 --id 0
 //! ```
 
-use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::config::{CompressionConfig, EngineMode, ExperimentConfig};
 use fedae::coordinator::FlDriver;
 use fedae::error::FedAeError;
 use fedae::metrics::{ascii_plot, print_table};
@@ -42,6 +42,8 @@ fn main() -> Result<()> {
                  train    --config <file.json> | [--model mnist|cifar] [--compression ae|identity|topk|quantize|subsample|sketch]\n\
                  \u{20}        [--rounds N] [--collabs N] [--local-epochs N] [--seed N] [--out metrics.json]\n\
                  \u{20}        [--parallelism N (0 = all cores)] [--shard-size N (0 = unsharded aggregation)]\n\
+                 \u{20}        [--mode sync|async] [--deadline-ms N (0 = infinite)] [--dropout-rate X]\n\
+                 \u{20}        [--staleness-decay A] [--straggler-log-std S] [--jitter-ms N]\n\
                  prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N]\n\
                  savings  [--rounds N] [--max-collabs N] [--mnist]\n\
                  inspect  [--artifacts DIR]\n\
@@ -106,6 +108,15 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.data.test_size = args.get_usize("test-size", cfg.data.test_size)?;
     cfg.engine.parallelism = args.get_usize("parallelism", cfg.engine.parallelism)?;
     cfg.engine.shard_size = args.get_usize("shard-size", cfg.engine.shard_size)?;
+    if let Some(m) = args.get("mode") {
+        cfg.engine.mode = EngineMode::parse(m)?;
+    }
+    cfg.engine.deadline_ms = args.get_f64("deadline-ms", cfg.engine.deadline_ms)?;
+    cfg.engine.staleness_decay = args.get_f64("staleness-decay", cfg.engine.staleness_decay)?;
+    cfg.engine.dropout_rate = args.get_f64("dropout-rate", cfg.engine.dropout_rate)?;
+    cfg.engine.straggler_log_std =
+        args.get_f64("straggler-log-std", cfg.engine.straggler_log_std)?;
+    cfg.engine.jitter_ms = args.get_f64("jitter-ms", cfg.engine.jitter_ms)?;
     Ok(cfg)
 }
 
@@ -113,15 +124,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::from_dir(artifacts_dir(args))?;
     let cfg = config_from_args(args)?;
     println!(
-        "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={}",
+        "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={} mode={}",
         cfg.name,
         cfg.model,
         cfg.compression.kind_name(),
         cfg.fl.rounds,
         cfg.fl.collaborators,
         cfg.engine.parallelism,
-        cfg.engine.shard_size
+        cfg.engine.shard_size,
+        cfg.engine.mode.name()
     );
+    let is_async = cfg.engine.mode == EngineMode::Async;
     let pipeline;
     let pipe_ref = match &cfg.compression {
         CompressionConfig::Ae { ae } => {
@@ -139,8 +152,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut driver = FlDriver::new(&rt, cfg, pipe_ref)?;
     for r in 0..driver.config().fl.rounds {
         let out = driver.run_round()?;
+        let s = out.stragglers;
+        let async_suffix = if is_async {
+            format!(
+                " admitted={} late={} dropped={} stale={} sim_s={:.3}",
+                s.admitted, s.late, s.dropped, s.stale_applied, s.sim_round_seconds
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "round {r:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e}",
+            "round {r:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e}{async_suffix}",
             out.eval_loss, out.eval_acc, out.bytes_up, out.bytes_down, out.mean_recon_mse
         );
     }
@@ -151,6 +173,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         ledger.total_bytes(),
         ledger.update_bytes_up()
     );
+    if let Some(t) = driver.async_totals() {
+        println!(
+            "async: admitted={} late={} dropped={} stale_applied={} pending={} sim_total_s={:.3}",
+            t.admitted,
+            t.late,
+            t.dropped,
+            t.stale_applied,
+            driver.async_pending(),
+            t.sim_round_seconds
+        );
+    }
     if let Some(out) = args.get("out") {
         driver.log.write_json(out)?;
         println!("metrics written to {out}");

@@ -18,10 +18,17 @@
 //! [`SimulatedNetwork`] with [`SimulatedNetwork::merge_ledger`] in
 //! collaborator-id order, so the public [`SimulatedNetwork::ledger`] totals
 //! and transfer log are byte-for-byte identical to a sequential round.
+//!
+//! For deadline-driven async rounds, [`StragglerModel`] layers a
+//! deterministic seeded heterogeneity model (per-collaborator slowdown,
+//! per-upload jitter, dropout) on top of the uniform [`Link`]; see
+//! [`crate::coordinator::AsyncRoundEngine`] for how arrival times turn
+//! into deadline admission and staleness.
 
 use std::collections::BTreeMap;
 
-use crate::config::NetworkConfig;
+use crate::config::{EngineConfig, NetworkConfig};
+use crate::util::rng::Rng;
 
 /// Direction of a transfer relative to the aggregator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -104,6 +111,133 @@ impl Link {
     pub fn transfer_time(&self, bytes: u64) -> f64 {
         assert!(self.bandwidth_bps > 0.0);
         self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// Fate of one modelled upload attempt under the [`StragglerModel`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UploadFate {
+    /// The upload never reaches the server (client dropout / crash
+    /// mid-round). No bytes are metered for the update.
+    Dropped,
+    /// The upload lands `arrival_s` simulated seconds after the round
+    /// opened. Whether that is before or after the round deadline is the
+    /// coordinator's call ([`crate::coordinator::AsyncRoundEngine`]).
+    Arrived {
+        /// Arrival time in simulated seconds after round open.
+        arrival_s: f64,
+    },
+}
+
+/// Deterministic, seeded client-heterogeneity model for async rounds.
+///
+/// At "millions of users" scale, rounds are gated by stragglers and
+/// dropped clients rather than by the median upload (Shahid et al. 2021
+/// name client heterogeneity and partial participation as the dominant
+/// cost next to update size). This model turns the uniform [`Link`] into
+/// a heterogeneous population:
+///
+/// * **Persistent speed factor** — each collaborator draws a lognormal
+///   slowdown `exp(straggler_log_std · z_c)` from its id alone, so client
+///   `c` is consistently fast or slow across rounds (device class).
+/// * **Per-upload jitter** — uniform extra latency in `[0, jitter_s)`
+///   drawn per `(round, collaborator)` (transient congestion).
+/// * **Dropout** — with probability `dropout_rate` per
+///   `(round, collaborator)` the upload never arrives.
+///
+/// Every draw is keyed on `(seed, round, collaborator)` through the
+/// crate's SplitMix-seeded [`Rng`], so a fixed experiment seed yields an
+/// identical arrival/dropout realization on every run and at any
+/// `engine.parallelism` setting (workers evaluate the model
+/// independently and agree). With all three knobs zero the model is the
+/// identity: [`StragglerModel::upload_fate`] returns the base transfer
+/// time bitwise-unchanged, which is what makes the degenerate async
+/// configuration reproduce sync results exactly
+/// (`rust/tests/async_round.rs`, `rust/tests/prop_invariants.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerModel {
+    dropout_rate: f64,
+    straggler_log_std: f64,
+    jitter_s: f64,
+    seed: u64,
+}
+
+impl StragglerModel {
+    /// Build a model from raw knobs (`jitter_s` in seconds).
+    pub fn new(
+        dropout_rate: f64,
+        straggler_log_std: f64,
+        jitter_s: f64,
+        seed: u64,
+    ) -> StragglerModel {
+        StragglerModel {
+            dropout_rate,
+            straggler_log_std,
+            jitter_s,
+            seed,
+        }
+    }
+
+    /// Build from the engine config's straggler knobs (`jitter_ms` is
+    /// converted to seconds). `seed` should be a stream derived from the
+    /// experiment master seed.
+    pub fn from_config(cfg: &EngineConfig, seed: u64) -> StragglerModel {
+        StragglerModel::new(
+            cfg.dropout_rate,
+            cfg.straggler_log_std,
+            cfg.jitter_ms * 1e-3,
+            seed,
+        )
+    }
+
+    /// True when every knob is zero: uploads arrive at exactly the base
+    /// link transfer time and nothing drops.
+    pub fn is_identity(&self) -> bool {
+        self.dropout_rate == 0.0 && self.straggler_log_std == 0.0 && self.jitter_s == 0.0
+    }
+
+    /// The collaborator's persistent lognormal slowdown factor (median 1;
+    /// exactly 1.0 when `straggler_log_std` is zero).
+    pub fn speed_factor(&self, collaborator: usize) -> f64 {
+        if self.straggler_log_std == 0.0 {
+            return 1.0;
+        }
+        // Distinct stream tag so the persistent factor never shares a
+        // seed with any per-round draw below.
+        let mut rng = Rng::new(
+            self.seed
+                ^ 0x5EED_FAC7_0000_0001
+                ^ (collaborator as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        (self.straggler_log_std * rng.normal()).exp()
+    }
+
+    /// Decide one upload's fate: dropped, or arrived at
+    /// `base_s x speed_factor + jitter` simulated seconds after round
+    /// open. `base_s` is the uniform-link transfer time
+    /// ([`Link::transfer_time`] of the metered compressed bytes).
+    ///
+    /// The dropout and jitter draws come from one RNG stream keyed on
+    /// `(seed, round, collaborator)`, and both are always consumed, so
+    /// changing `dropout_rate` does not perturb the latency realization
+    /// of surviving uploads.
+    pub fn upload_fate(&self, round: usize, collaborator: usize, base_s: f64) -> UploadFate {
+        if self.is_identity() {
+            return UploadFate::Arrived { arrival_s: base_s };
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (collaborator as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let drop_draw = rng.uniform();
+        let jitter_draw = rng.uniform();
+        if drop_draw < self.dropout_rate {
+            return UploadFate::Dropped;
+        }
+        UploadFate::Arrived {
+            arrival_s: base_s * self.speed_factor(collaborator) + jitter_draw * self.jitter_s,
+        }
     }
 }
 
@@ -351,6 +485,66 @@ mod tests {
         assert!(t1 > 1.0);
         let total = net.ledger().total_sim_seconds();
         assert!((total - t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_identity_returns_base_bitwise() {
+        let m = StragglerModel::new(0.0, 0.0, 0.0, 99);
+        assert!(m.is_identity());
+        for (round, collab, base) in [(0usize, 0usize, 0.123_456_789f64), (7, 3, 2.5)] {
+            assert_eq!(
+                m.upload_fate(round, collab, base),
+                UploadFate::Arrived { arrival_s: base }
+            );
+        }
+        assert_eq!(m.speed_factor(5), 1.0);
+    }
+
+    #[test]
+    fn straggler_fates_are_deterministic() {
+        let m = StragglerModel::new(0.3, 0.5, 0.05, 42);
+        for round in 0..5 {
+            for collab in 0..8 {
+                assert_eq!(
+                    m.upload_fate(round, collab, 0.1),
+                    m.upload_fate(round, collab, 0.1)
+                );
+            }
+        }
+        // A different seed gives a different realization somewhere.
+        let other = StragglerModel::new(0.3, 0.5, 0.05, 43);
+        let a: Vec<_> = (0..32).map(|c| m.upload_fate(0, c, 0.1)).collect();
+        let b: Vec<_> = (0..32).map(|c| other.upload_fate(0, c, 0.1)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn speed_factor_is_persistent_across_rounds() {
+        let m = StragglerModel::new(0.0, 0.8, 0.0, 7);
+        let f = m.speed_factor(2);
+        assert!(f > 0.0);
+        // Arrival scales by the same per-collaborator factor every round.
+        for round in 0..4 {
+            match m.upload_fate(round, 2, 1.0) {
+                UploadFate::Arrived { arrival_s } => assert!((arrival_s - f).abs() < 1e-12),
+                UploadFate::Dropped => panic!("dropout disabled"),
+            }
+        }
+        // Factors differ across collaborators (heterogeneous population).
+        assert_ne!(m.speed_factor(0), m.speed_factor(1));
+    }
+
+    #[test]
+    fn dropout_rate_is_roughly_respected() {
+        let m = StragglerModel::new(0.25, 0.0, 0.0, 11);
+        let dropped = (0..4000)
+            .filter(|&c| m.upload_fate(0, c, 0.1) == UploadFate::Dropped)
+            .count();
+        let frac = dropped as f64 / 4000.0;
+        assert!((frac - 0.25).abs() < 0.05, "dropout fraction {frac}");
+        // Dropout never fires at rate 0 even with other knobs on.
+        let none = StragglerModel::new(0.0, 0.5, 0.01, 11);
+        assert!((0..500).all(|c| none.upload_fate(0, c, 0.1) != UploadFate::Dropped));
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Determinism and equivalence tests for the deadline-driven async round
+//! engine (ISSUE 3 acceptance): a fixed seed yields an identical admitted
+//! set, traffic ledger and global parameters across repeat runs and across
+//! `parallelism`/`shard_size` settings, and the degenerate async
+//! configuration (no dropout, no latency knobs, infinite deadline) is
+//! bitwise-identical to the sequential sync engine.
+
+use fedae::config::{AggregationConfig, CompressionConfig, EngineMode, ExperimentConfig};
+use fedae::coordinator::{FlDriver, RoundOutcome};
+use fedae::network::{Direction, TrafficKind, Transfer};
+use fedae::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::from_dir("artifacts").expect("runtime loads")
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mnist".into();
+    cfg.compression = CompressionConfig::Identity;
+    cfg.fl.collaborators = 5;
+    cfg.fl.rounds = 3;
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 128;
+    cfg.data.test_size = 128;
+    cfg.seed = 31;
+    cfg
+}
+
+fn async_cfg() -> ExperimentConfig {
+    let mut cfg = base_cfg();
+    cfg.engine.mode = EngineMode::Async;
+    cfg
+}
+
+/// Everything that must be reproducible: per-round outcomes (including
+/// the straggler stats, i.e. the admitted set sizes), final global
+/// parameters (bitwise), the full transfer log, and unapplied-buffer
+/// depth.
+type RunArtifacts = (Vec<RoundOutcome>, Vec<f32>, Vec<Transfer>, usize);
+
+fn run_rounds(cfg: ExperimentConfig, rt: &Runtime) -> RunArtifacts {
+    let rounds = cfg.fl.rounds;
+    let mut driver = FlDriver::new(rt, cfg, None).unwrap();
+    let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
+    assert!(driver.network.ledger().check_conservation());
+    (
+        outcomes,
+        driver.global_params().to_vec(),
+        driver.network.ledger().transfers().to_vec(),
+        driver.async_pending(),
+    )
+}
+
+#[test]
+fn degenerate_async_is_bitwise_identical_to_sync() {
+    let rt = runtime();
+    // Zero dropout, zero latency knobs, infinite deadline (deadline_ms =
+    // 0), default staleness decay: the async engine must reproduce the
+    // sequential sync engine exactly — outcomes, params, ledger.
+    let sync = run_rounds(base_cfg(), &rt);
+    let asy = run_rounds(async_cfg(), &rt);
+    assert_eq!(sync.0, asy.0, "round outcomes diverged");
+    assert_eq!(sync.1, asy.1, "global params diverged");
+    assert_eq!(sync.2, asy.2, "traffic ledger diverged");
+    assert_eq!(asy.3, 0, "degenerate async buffered something");
+    // Every upload was admitted.
+    for out in &asy.0 {
+        assert_eq!(out.stragglers.admitted, 5);
+        assert_eq!(out.stragglers.late + out.stragglers.dropped, 0);
+    }
+}
+
+#[test]
+fn fixed_seed_async_runs_are_identical() {
+    let rt = runtime();
+    let mk = || {
+        let mut cfg = async_cfg();
+        cfg.engine.deadline_ms = 30.0;
+        cfg.engine.dropout_rate = 0.2;
+        cfg.engine.straggler_log_std = 0.7;
+        cfg.engine.jitter_ms = 10.0;
+        cfg.fl.rounds = 4;
+        cfg
+    };
+    let a = run_rounds(mk(), &rt);
+    let b = run_rounds(mk(), &rt);
+    assert_eq!(a.0, b.0, "outcomes (incl. admitted sets) diverged");
+    assert_eq!(a.1, b.1, "global params diverged");
+    assert_eq!(a.2, b.2, "ledger diverged");
+    assert_eq!(a.3, b.3, "pending buffer depth diverged");
+    // Per-round conservation: every participant is admitted, late or
+    // dropped.
+    for out in &a.0 {
+        let s = out.stragglers;
+        assert_eq!(s.admitted + s.late + s.dropped, 5, "round {}", out.round);
+    }
+    // A different seed gives a different realization.
+    let mut other = mk();
+    other.seed = 32;
+    let c = run_rounds(other, &rt);
+    assert_ne!(a.1, c.1);
+}
+
+#[test]
+fn async_composes_with_parallelism_and_sharding() {
+    let rt = runtime();
+    let mk = |parallelism: usize, shard_size: usize| {
+        let mut cfg = async_cfg();
+        cfg.engine.deadline_ms = 30.0;
+        cfg.engine.dropout_rate = 0.15;
+        cfg.engine.straggler_log_std = 0.5;
+        cfg.engine.parallelism = parallelism;
+        cfg.engine.shard_size = shard_size;
+        cfg
+    };
+    let seq = run_rounds(mk(1, 0), &rt);
+    for (parallelism, shard_size) in [(0, 0), (1, 4096), (0, 2048)] {
+        let got = run_rounds(mk(parallelism, shard_size), &rt);
+        assert_eq!(
+            seq.0, got.0,
+            "outcomes diverged at parallelism={parallelism} shard_size={shard_size}"
+        );
+        assert_eq!(seq.1, got.1, "global params diverged");
+        assert_eq!(seq.2, got.2, "ledger diverged");
+    }
+}
+
+#[test]
+fn tight_deadline_buffers_everything_one_round() {
+    let rt = runtime();
+    // Identity-model arrivals: base upload time = latency + bytes/bw
+    // = 20 ms + ~5 ms for the raw mnist update over the default 100 Mbps
+    // link, i.e. ~25 ms. A 20 ms deadline makes every upload land in
+    // (D, 2D]: late by exactly one round, every round.
+    let mut cfg = async_cfg();
+    cfg.engine.deadline_ms = 20.0;
+    cfg.fl.rounds = 3;
+    let rounds = cfg.fl.rounds;
+    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let initial = driver.global_params().to_vec();
+    let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
+
+    // Round 0: nothing admitted, everything buffered, global unchanged.
+    let s0 = outcomes[0].stragglers;
+    assert_eq!((s0.admitted, s0.late, s0.dropped), (0, 5, 0));
+    assert_eq!(s0.stale_applied, 0);
+    assert!(outcomes[0].train_losses.is_empty());
+    assert!((s0.sim_round_seconds - 0.020).abs() < 1e-12, "round closes at the deadline");
+    // Rounds 1+: the previous round's uploads apply with staleness 1
+    // while the fresh ones buffer again.
+    for out in &outcomes[1..] {
+        let s = out.stragglers;
+        assert_eq!((s.admitted, s.late), (0, 5), "round {}", out.round);
+        assert_eq!(s.stale_applied, 5, "round {}", out.round);
+        assert_eq!(s.max_staleness, 1, "round {}", out.round);
+    }
+    // The global model only moved once stale updates were applied.
+    assert_ne!(driver.global_params(), initial.as_slice());
+    // Late uploads still spent their bytes: one Update transfer per
+    // participant per round.
+    let n_updates = driver
+        .network
+        .ledger()
+        .transfers()
+        .iter()
+        .filter(|t| t.direction == Direction::Up && t.kind == TrafficKind::Update)
+        .count();
+    assert_eq!(n_updates, 5 * rounds);
+    // The last round's uploads are still in flight.
+    assert_eq!(driver.async_pending(), 5);
+}
+
+#[test]
+fn full_dropout_never_aggregates() {
+    let rt = runtime();
+    let mut cfg = async_cfg();
+    cfg.engine.dropout_rate = 1.0;
+    cfg.fl.rounds = 2;
+    let rounds = cfg.fl.rounds;
+    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let initial = driver.global_params().to_vec();
+    for _ in 0..rounds {
+        let out = driver.run_round().unwrap();
+        assert_eq!(out.stragglers.dropped, 5);
+        assert_eq!(out.stragglers.admitted + out.stragglers.late, 0);
+        assert!(out.train_losses.is_empty());
+        assert!(out.mean_recon_mse.is_nan());
+    }
+    // The global model never moved and no update bytes were spent.
+    assert_eq!(driver.global_params(), initial.as_slice());
+    assert_eq!(driver.network.ledger().update_bytes_up(), 0);
+    assert_eq!(driver.async_pending(), 0);
+}
+
+#[test]
+fn late_and_dropped_counts_are_conserved_with_fedbuff() {
+    // A realistic mixed run on the buffered aggregator: conservation of
+    // update fates plus the buffer-drain ledger across rounds.
+    let rt = runtime();
+    let mut cfg = async_cfg();
+    cfg.aggregation = AggregationConfig::FedBuff { goal: 3, lr: 0.8 };
+    cfg.engine.deadline_ms = 30.0;
+    cfg.engine.dropout_rate = 0.25;
+    cfg.engine.straggler_log_std = 0.8;
+    cfg.engine.jitter_ms = 15.0;
+    cfg.fl.rounds = 5;
+    let rounds = cfg.fl.rounds;
+    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let mut late_total = 0usize;
+    let mut stale_total = 0usize;
+    for _ in 0..rounds {
+        let out = driver.run_round().unwrap();
+        let s = out.stragglers;
+        assert_eq!(s.admitted + s.late + s.dropped, 5);
+        late_total += s.late;
+        stale_total += s.stale_applied;
+        assert!(out.eval_loss.is_finite());
+    }
+    // Every late update is either applied later or still pending.
+    assert_eq!(late_total, stale_total + driver.async_pending());
+    assert!(driver.network.ledger().check_conservation());
+}

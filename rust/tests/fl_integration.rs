@@ -285,6 +285,7 @@ fn shipped_config_presets_parse_and_validate() {
         "configs/fig8_9_two_collab.json",
         "configs/mnist_ae_10collab.json",
         "configs/mnist_ae_256collab.json",
+        "configs/mnist_ae_async_256collab.json",
         "configs/baseline_topk.json",
     ] {
         let cfg = ExperimentConfig::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
@@ -302,4 +303,10 @@ fn shipped_config_presets_parse_and_validate() {
     assert_eq!(cfg.fl.collaborators, 256);
     assert_eq!(cfg.engine.parallelism, 0); // one worker per core
     assert_eq!(cfg.engine.shard_size, 8192);
+    // The async preset engages the deadline/straggler knobs on top.
+    let cfg = ExperimentConfig::load("configs/mnist_ae_async_256collab.json").unwrap();
+    assert_eq!(cfg.engine.mode, fedae::config::EngineMode::Async);
+    assert!(cfg.engine.deadline_ms > 0.0);
+    assert!(cfg.engine.dropout_rate > 0.0);
+    assert!(cfg.engine.straggler_log_std > 0.0);
 }

@@ -5,9 +5,10 @@
 
 use fedae::aggregation::{self, Aggregator, WeightedUpdate};
 use fedae::compression::{self, CompressedUpdate, UpdateCompressor};
-use fedae::config::{AggregationConfig, CompressionConfig};
-use fedae::coordinator::RoundState;
+use fedae::config::{AggregationConfig, CompressionConfig, EngineMode, ExperimentConfig};
+use fedae::coordinator::{FlDriver, RoundState};
 use fedae::network::{Direction, Link, SimulatedNetwork, TrafficKind};
+use fedae::runtime::Runtime;
 use fedae::savings::SavingsModel;
 use fedae::testing::prop;
 use fedae::transport::Message;
@@ -384,6 +385,67 @@ fn prop_subsample_mask_shared_between_sides() {
             if *a != 0.0 && a != b {
                 return Err(format!("mismatch {a} vs {b}"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_degenerate_async_equals_sync_for_any_seed() {
+    // ISSUE 3 satellite: async mode with dropout_rate = 0, infinite
+    // deadline (deadline_ms = 0) and zero latency knobs is
+    // bitwise-identical to the sequential sync engine for any seed (and
+    // any aggregation / sharding combination). Full FL runs are costly,
+    // so this property uses fewer cases than the default 128.
+    let rt = Runtime::native();
+    let cfg = prop::PropConfig {
+        cases: 8,
+        ..Default::default()
+    };
+    prop::check_with(&cfg, "degenerate_async_equals_sync", |rng| {
+        let mut base = ExperimentConfig::default();
+        base.model = "mnist".into();
+        base.compression = CompressionConfig::Identity;
+        base.seed = rng.next_u64();
+        base.fl.collaborators = 2 + rng.below(3);
+        base.fl.rounds = 1 + rng.below(2);
+        base.fl.local_epochs = 1;
+        base.data.per_collab = 64;
+        base.data.test_size = 64;
+        base.aggregation = [
+            AggregationConfig::Mean,
+            AggregationConfig::FedAvg,
+            AggregationConfig::FedAvgM { beta: 0.9 },
+        ][rng.below(3)]
+        .clone();
+        base.engine.shard_size = [0usize, 4096][rng.below(2)];
+
+        let mut async_cfg = base.clone();
+        async_cfg.engine.mode = EngineMode::Async;
+
+        let run = |cfg: ExperimentConfig| -> Result<_, String> {
+            let rounds = cfg.fl.rounds;
+            let mut driver = FlDriver::new(&rt, cfg, None).map_err(|e| format!("{e}"))?;
+            let mut outcomes = Vec::with_capacity(rounds);
+            for _ in 0..rounds {
+                outcomes.push(driver.run_round().map_err(|e| format!("{e}"))?);
+            }
+            Ok((
+                outcomes,
+                driver.global_params().to_vec(),
+                driver.network.ledger().transfers().to_vec(),
+            ))
+        };
+        let sync = run(base)?;
+        let asy = run(async_cfg)?;
+        if sync.0 != asy.0 {
+            return Err("round outcomes diverged".into());
+        }
+        if sync.1 != asy.1 {
+            return Err("global params diverged".into());
+        }
+        if sync.2 != asy.2 {
+            return Err("traffic ledger diverged".into());
         }
         Ok(())
     });
