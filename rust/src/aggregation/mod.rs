@@ -28,10 +28,36 @@
 //! model only steps once enough (discounted) updates have accumulated.
 //! Both compose with [`ShardedAggregator`] unchanged, because discounting
 //! touches only the scalar weights, never the coordinate partition.
+//!
+//! ## Streaming accumulators
+//!
+//! [`Aggregator::aggregate`] is a *batch* surface: the caller materializes
+//! every update before the aggregator sees any of them, which at large
+//! participant counts means the server buffers `participants x n_params`
+//! reconstructed floats it never needed. The streaming surface —
+//! [`Aggregator::begin_stream`] opening an [`AggregatorStream`] that is
+//! fed one update at a time ([`AggregatorStream::ingest`]) and closed with
+//! [`AggregatorStream::finalize`] — inverts that: the linear aggregators
+//! ([`Mean`], [`FedAvg`], [`FedAvgM`]) fold each update into a running
+//! weighted sum, so server memory is O(width) regardless of how many
+//! collaborators report and each compressed update needs exactly one full
+//! decode. The order-sensitive aggregators ([`Median`], [`TrimmedMean`],
+//! [`FedBuff`]) go through the [`BufferingStream`] adapter, which
+//! re-materializes the batch and delegates to [`Aggregator::aggregate`].
+//!
+//! Streaming never changes results: the [`StreamPlan`] fixes the ingest
+//! order and every per-update weight (staleness discounts included) up
+//! front, and each native stream performs the batch path's exact
+//! per-coordinate operation sequence — the linear batch `aggregate`
+//! impls are themselves thin wrappers over their streams, so batch and
+//! streaming are bitwise-identical *by construction* (additionally pinned
+//! by `prop_invariants` and `rust/tests/streaming_agg.rs`).
 
 pub mod sharded;
 
 pub use sharded::ShardedAggregator;
+
+use std::sync::Arc;
 
 use crate::config::AggregationConfig;
 use crate::error::{FedAeError, Result};
@@ -47,7 +73,11 @@ pub struct WeightedUpdate {
 
 /// An aggregation algorithm combining per-collaborator vectors into the
 /// next global vector.
-pub trait Aggregator {
+///
+/// `Send` is a supertrait so aggregator state (and the shard streams
+/// borrowing it) can cross into the coordinator's `std::thread::scope`
+/// workers; every built-in aggregator is plain data.
+pub trait Aggregator: Send {
     /// Short name for logs/benches.
     fn name(&self) -> &str;
 
@@ -120,6 +150,345 @@ pub trait Aggregator {
         apply_staleness(&mut updates, staleness, decay)?;
         self.aggregate_shard(shard, &updates)
     }
+
+    /// True when [`Aggregator::begin_stream`] folds updates natively into
+    /// O(width) running state (the linear aggregators: [`Mean`],
+    /// [`FedAvg`], [`FedAvgM`]). Order-sensitive aggregators return the
+    /// default `false` — their streams buffer the whole batch — and the
+    /// coordinator then prefers the shard-major batch path when
+    /// memory-bounded aggregation was requested.
+    fn supports_streaming(&self) -> bool {
+        false
+    }
+
+    /// Open a streaming accumulator for one round (or one coordinate
+    /// shard) described by `plan`.
+    ///
+    /// Contract: ingesting the plan's updates in order and finalizing
+    /// must be bitwise-identical to
+    /// [`Aggregator::aggregate_stale`] on the same batch (and therefore
+    /// to [`Aggregator::aggregate`] when everything is fresh and
+    /// `decay = 1.0`). Cross-round state (FedAvgM momentum, FedBuff
+    /// buffers) is committed at finalize, exactly as the batch call
+    /// would.
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>>;
+}
+
+/// Everything the server knows about a round's updates *before* decoding
+/// any of them: per-update aggregation weights (sample counts),
+/// staleness-discounted and validated at construction.
+///
+/// A [`StreamPlan`] is the `begin` half of the streaming accumulator API:
+/// it fixes the ingest order, the coordinate width and every update's
+/// discounted weight up front, which is what lets the linear aggregators
+/// fold updates one at a time without buffering them — the weighted-mean
+/// normalizer ([`FedAvg`]'s total weight) is known before the first
+/// decode happens. The discounted weights live behind an `Arc`, so
+/// re-targeting the plan per shard ([`StreamPlan::for_width`]) and every
+/// per-shard stream share one m-entry array instead of cloning it
+/// `shard_count` times.
+#[derive(Debug, Clone)]
+pub struct StreamPlan {
+    /// Coordinate width of each ingested vector: the full parameter
+    /// count, or one shard's width when streaming through
+    /// [`ShardedAggregator`].
+    pub n: usize,
+    /// Discounted weight per update, in ingest order.
+    weights: Arc<[f64]>,
+}
+
+impl StreamPlan {
+    /// A plan for all-fresh updates (sync rounds): staleness 0, decay 1.0.
+    /// The discount is then exactly `x 1.0`, so streaming stays bitwise
+    /// identical to the undiscounted batch path.
+    pub fn fresh(n: usize, weights: Vec<f64>) -> Result<StreamPlan> {
+        let staleness = vec![0; weights.len()];
+        StreamPlan::stale(n, weights, &staleness, 1.0)
+    }
+
+    /// A plan carrying async-round staleness tags and decay. Validates
+    /// the raw weights and applies [`staleness_discount`] once — exactly
+    /// the `w * discount` of [`Aggregator::aggregate_stale`]'s in-place
+    /// scaling, so a stream and the batch path see bit-identical
+    /// weights.
+    pub fn stale(
+        n: usize,
+        weights: Vec<f64>,
+        staleness: &[usize],
+        decay: f64,
+    ) -> Result<StreamPlan> {
+        if weights.is_empty() {
+            return Err(FedAeError::Coordination(
+                "stream opened with no updates".into(),
+            ));
+        }
+        if weights.len() != staleness.len() {
+            return Err(FedAeError::Coordination(format!(
+                "{} weights but {} staleness tags",
+                weights.len(),
+                staleness.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(weights.len());
+        for (i, (&w, &s)) in weights.iter().zip(staleness).enumerate() {
+            if !w.is_finite() || w < 0.0 {
+                return Err(FedAeError::Coordination(format!(
+                    "update {i} has invalid weight {w}"
+                )));
+            }
+            out.push(w * staleness_discount(decay, s));
+        }
+        Ok(StreamPlan {
+            n,
+            weights: out.into(),
+        })
+    }
+
+    /// Number of updates the stream will ingest.
+    pub fn updates(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// The discounted per-update weights, in ingest order (shared —
+    /// cloning the handle is O(1)).
+    pub fn weights(&self) -> Arc<[f64]> {
+        self.weights.clone()
+    }
+
+    /// The same plan re-targeted at an `n`-coordinate shard (used by
+    /// [`ShardedAggregator::begin_shard_streams`]; the weight schedule
+    /// is shared, not copied).
+    pub fn for_width(&self, n: usize) -> StreamPlan {
+        StreamPlan {
+            n,
+            weights: self.weights.clone(),
+        }
+    }
+}
+
+/// A streaming accumulator for one round (or one coordinate shard) of
+/// aggregation: obtained from [`Aggregator::begin_stream`], fed one
+/// update at a time in the plan's order, and closed with
+/// [`AggregatorStream::finalize`].
+///
+/// `Send` is a supertrait so the coordinator can chunk shard streams
+/// across `std::thread::scope` workers (see the shard-parallel streaming
+/// path in `rust/src/coordinator/mod.rs`).
+pub trait AggregatorStream: Send {
+    /// Fold in the next update's values (ingest order is the plan
+    /// order). `values` must have the plan's coordinate width; ingesting
+    /// more updates than planned is an error.
+    fn ingest(&mut self, values: &[f32]) -> Result<()>;
+
+    /// Owned-vector twin of [`AggregatorStream::ingest`]: buffering
+    /// implementations take the vector without copying (the driver's
+    /// unsharded path hands over each reconstruction it just decoded);
+    /// folding implementations use this default, which folds from the
+    /// borrow and drops the vector.
+    fn ingest_owned(&mut self, values: Vec<f32>) -> Result<()> {
+        self.ingest(&values)
+    }
+
+    /// Close the stream and return the aggregated vector. Every planned
+    /// update must have been ingested; cross-round aggregator state is
+    /// committed here.
+    fn finalize(self: Box<Self>) -> Result<Vec<f32>>;
+}
+
+/// Shared ingest validation: the ingested slice has the plan's width.
+fn check_stream_width(got: usize, want: usize) -> Result<()> {
+    if got != want {
+        return Err(FedAeError::Coordination(format!(
+            "stream ingested {got} values, plan width is {want}"
+        )));
+    }
+    Ok(())
+}
+
+/// Shared ingest bookkeeping: `ingested` of `planned` so far.
+fn check_stream_budget(ingested: usize, planned: usize) -> Result<()> {
+    if ingested >= planned {
+        return Err(FedAeError::Coordination(format!(
+            "stream over-ingested: plan had {planned} updates"
+        )));
+    }
+    Ok(())
+}
+
+/// Shared finalize validation: every planned update arrived.
+fn check_stream_complete(ingested: usize, planned: usize) -> Result<()> {
+    if ingested != planned {
+        return Err(FedAeError::Coordination(format!(
+            "stream finalized after {ingested} of {planned} planned updates"
+        )));
+    }
+    Ok(())
+}
+
+/// The buffering [`AggregatorStream`] adapter for order-sensitive
+/// aggregators ([`Median`], [`TrimmedMean`], [`FedBuff`]): ingested
+/// updates are re-materialized with their discounted weights and handed
+/// to [`Aggregator::aggregate`] at finalize — bitwise-identical to the
+/// batch path, with the batch path's `updates x width` memory footprint
+/// (which is why the coordinator keeps the shard-major batch path for
+/// these when `shard_size > 0`).
+pub struct BufferingStream<'a, A: Aggregator + ?Sized> {
+    agg: &'a mut A,
+    weights: Arc<[f64]>,
+    n: usize,
+    buf: Vec<WeightedUpdate>,
+}
+
+impl<'a, A: Aggregator + ?Sized> BufferingStream<'a, A> {
+    /// Open a buffering stream over `agg` for `plan`.
+    pub fn new(agg: &'a mut A, plan: &StreamPlan) -> Result<Self> {
+        let weights = plan.weights();
+        Ok(BufferingStream {
+            agg,
+            n: plan.n,
+            buf: Vec::with_capacity(weights.len()),
+            weights,
+        })
+    }
+}
+
+impl<A: Aggregator + ?Sized> AggregatorStream for BufferingStream<'_, A> {
+    fn ingest(&mut self, values: &[f32]) -> Result<()> {
+        self.ingest_owned(values.to_vec())
+    }
+
+    /// Buffer the owned vector directly — no copy.
+    fn ingest_owned(&mut self, values: Vec<f32>) -> Result<()> {
+        check_stream_budget(self.buf.len(), self.weights.len())?;
+        check_stream_width(values.len(), self.n)?;
+        self.buf.push(WeightedUpdate {
+            weight: self.weights[self.buf.len()],
+            values,
+        });
+        Ok(())
+    }
+
+    fn finalize(self: Box<Self>) -> Result<Vec<f32>> {
+        let me = *self;
+        check_stream_complete(me.buf.len(), me.weights.len())?;
+        me.agg.aggregate(&me.buf)
+    }
+}
+
+/// Native streaming accumulator for [`Mean`]: a running f32 sum scaled by
+/// `1/updates` — per coordinate, the exact operation sequence of the
+/// batch path.
+struct MeanStream {
+    acc: Vec<f32>,
+    scale: f32,
+    planned: usize,
+    ingested: usize,
+}
+
+impl MeanStream {
+    fn new(plan: &StreamPlan) -> Result<MeanStream> {
+        // Mean ignores the weights; the plan validated them at
+        // construction, keeping error behavior aligned with
+        // `validate_updates`.
+        Ok(MeanStream {
+            acc: vec![0.0f32; plan.n],
+            scale: 1.0 / plan.updates() as f32,
+            planned: plan.updates(),
+            ingested: 0,
+        })
+    }
+}
+
+impl AggregatorStream for MeanStream {
+    fn ingest(&mut self, values: &[f32]) -> Result<()> {
+        check_stream_budget(self.ingested, self.planned)?;
+        check_stream_width(values.len(), self.acc.len())?;
+        for (o, &v) in self.acc.iter_mut().zip(values) {
+            *o += v * self.scale;
+        }
+        self.ingested += 1;
+        Ok(())
+    }
+
+    fn finalize(self: Box<Self>) -> Result<Vec<f32>> {
+        check_stream_complete(self.ingested, self.planned)?;
+        Ok(self.acc)
+    }
+}
+
+/// Native streaming accumulator for [`FedAvg`] (and the averaging half of
+/// [`FedAvgM`]): f64 running weighted sum, normalizer fixed by the plan.
+struct FedAvgStream {
+    acc: Vec<f64>,
+    /// Shared with the plan (and every sibling shard stream).
+    weights: Arc<[f64]>,
+    total: f64,
+    ingested: usize,
+}
+
+impl FedAvgStream {
+    fn new(plan: &StreamPlan) -> Result<FedAvgStream> {
+        let weights = plan.weights();
+        // Same left-to-right f64 sum as the batch path's
+        // `updates.iter().map(|u| u.weight).sum()`.
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return Err(FedAeError::Coordination(
+                "fedavg: total weight is zero".into(),
+            ));
+        }
+        Ok(FedAvgStream {
+            acc: vec![0.0f64; plan.n],
+            weights,
+            total,
+            ingested: 0,
+        })
+    }
+
+    fn fold(&mut self, values: &[f32]) -> Result<()> {
+        check_stream_budget(self.ingested, self.weights.len())?;
+        check_stream_width(values.len(), self.acc.len())?;
+        let w = self.weights[self.ingested] / self.total;
+        for (o, &v) in self.acc.iter_mut().zip(values) {
+            *o += v as f64 * w;
+        }
+        self.ingested += 1;
+        Ok(())
+    }
+
+    fn finish(self) -> Result<Vec<f32>> {
+        check_stream_complete(self.ingested, self.weights.len())?;
+        Ok(self.acc.into_iter().map(|v| v as f32).collect())
+    }
+}
+
+impl AggregatorStream for FedAvgStream {
+    fn ingest(&mut self, values: &[f32]) -> Result<()> {
+        self.fold(values)
+    }
+
+    fn finalize(self: Box<Self>) -> Result<Vec<f32>> {
+        (*self).finish()
+    }
+}
+
+/// Native streaming accumulator for [`FedAvgM`]: the FedAvg fold, with
+/// the server-momentum update committed at finalize.
+struct FedAvgMStream<'a> {
+    agg: &'a mut FedAvgM,
+    inner: FedAvgStream,
+}
+
+impl AggregatorStream for FedAvgMStream<'_> {
+    fn ingest(&mut self, values: &[f32]) -> Result<()> {
+        self.inner.fold(values)
+    }
+
+    fn finalize(self: Box<Self>) -> Result<Vec<f32>> {
+        let me = *self;
+        let avg = me.inner.finish()?;
+        me.agg.apply_momentum(avg)
+    }
 }
 
 /// The async engine's staleness decay: an update applied `staleness`
@@ -180,16 +549,26 @@ impl Aggregator for Mean {
         "mean"
     }
 
+    /// Batch aggregation is the stream, driven to completion: fold each
+    /// update into the running sum in input order. Keeping one
+    /// implementation is what makes batch and streaming bitwise-identical
+    /// by construction.
     fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
         let n = validate_updates(updates)?;
-        let mut out = vec![0.0f32; n];
-        let scale = 1.0 / updates.len() as f32;
+        let plan = StreamPlan::fresh(n, updates.iter().map(|u| u.weight).collect())?;
+        let mut stream = self.begin_stream(&plan)?;
         for u in updates {
-            for (o, &v) in out.iter_mut().zip(&u.values) {
-                *o += v * scale;
-            }
+            stream.ingest(&u.values)?;
         }
-        Ok(out)
+        stream.finalize()
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>> {
+        Ok(Box::new(MeanStream::new(plan)?))
     }
 }
 
@@ -202,22 +581,24 @@ impl Aggregator for FedAvg {
         "fedavg"
     }
 
+    /// Batch aggregation is the stream, driven to completion (the f64
+    /// fold and the up-front total are identical either way).
     fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
         let n = validate_updates(updates)?;
-        let total: f64 = updates.iter().map(|u| u.weight).sum();
-        if total <= 0.0 {
-            return Err(FedAeError::Coordination(
-                "fedavg: total weight is zero".into(),
-            ));
-        }
-        let mut out = vec![0.0f64; n];
+        let plan = StreamPlan::fresh(n, updates.iter().map(|u| u.weight).collect())?;
+        let mut stream = self.begin_stream(&plan)?;
         for u in updates {
-            let w = u.weight / total;
-            for (o, &v) in out.iter_mut().zip(&u.values) {
-                *o += v as f64 * w;
-            }
+            stream.ingest(&u.values)?;
         }
-        Ok(out.into_iter().map(|v| v as f32).collect())
+        stream.finalize()
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>> {
+        Ok(Box::new(FedAvgStream::new(plan)?))
     }
 }
 
@@ -247,6 +628,10 @@ impl Aggregator for Median {
             };
         }
         Ok(out)
+    }
+
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>> {
+        Ok(Box::new(BufferingStream::new(self, plan)?))
     }
 }
 
@@ -295,6 +680,10 @@ impl Aggregator for TrimmedMean {
         }
         Ok(out)
     }
+
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>> {
+        Ok(Box::new(BufferingStream::new(self, plan)?))
+    }
 }
 
 /// FedAvg with server-side momentum.
@@ -320,15 +709,11 @@ impl FedAvgM {
             inner: FedAvg,
         })
     }
-}
 
-impl Aggregator for FedAvgM {
-    fn name(&self) -> &str {
-        "fedavgm"
-    }
-
-    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
-        let avg = self.inner.aggregate(updates)?;
+    /// Server-momentum update on the round's weighted average — the one
+    /// implementation shared by the batch path and the streaming
+    /// finalize, so both commit identical cross-round state.
+    fn apply_momentum(&mut self, avg: Vec<f32>) -> Result<Vec<f32>> {
         if self.prev_global.is_empty() {
             self.prev_global = avg.clone();
             self.momentum = vec![0.0; avg.len()];
@@ -348,6 +733,28 @@ impl Aggregator for FedAvgM {
         }
         self.prev_global = out.clone();
         Ok(out)
+    }
+}
+
+impl Aggregator for FedAvgM {
+    fn name(&self) -> &str {
+        "fedavgm"
+    }
+
+    fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
+        let avg = self.inner.aggregate(updates)?;
+        self.apply_momentum(avg)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>> {
+        Ok(Box::new(FedAvgMStream {
+            inner: FedAvgStream::new(plan)?,
+            agg: self,
+        }))
     }
 }
 
@@ -452,6 +859,10 @@ impl Aggregator for FedBuff {
         self.buffer_weight = 0.0;
         self.buffered = 0;
         Ok(out)
+    }
+
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>> {
+        Ok(Box::new(BufferingStream::new(self, plan)?))
     }
 }
 
@@ -672,5 +1083,155 @@ mod tests {
                 assert!((a - b).abs() < 1e-6, "{} failed", agg.name());
             }
         }
+    }
+
+    fn all_aggregation_configs() -> Vec<AggregationConfig> {
+        vec![
+            AggregationConfig::Mean,
+            AggregationConfig::FedAvg,
+            AggregationConfig::Median,
+            AggregationConfig::TrimmedMean { trim: 0.2 },
+            AggregationConfig::FedAvgM { beta: 0.9 },
+            AggregationConfig::FedBuff { goal: 5, lr: 0.5 },
+        ]
+    }
+
+    /// Deterministic pseudo-random updates for the streaming tests.
+    fn stream_updates(round: u64, count: usize, n: usize) -> Vec<WeightedUpdate> {
+        let mut rng = crate::util::rng::Rng::new(97 + round);
+        (0..count)
+            .map(|c| {
+                let values = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+                upd(0.5 + c as f64, values)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn streaming_matches_batch_bitwise_all_aggregators() {
+        // Multi-round so FedAvgM momentum and FedBuff buffers evolve
+        // identically through both surfaces; mixed staleness so the
+        // ingest-time discounting is exercised.
+        let n = 13;
+        for cfg in all_aggregation_configs() {
+            let mut batch = from_config(&cfg).unwrap();
+            let mut streaming = from_config(&cfg).unwrap();
+            for round in 0..4 {
+                let ups = stream_updates(round, 6, n);
+                let staleness: Vec<usize> = (0..ups.len()).map(|i| i % 3).collect();
+                let decay = 0.8;
+                let want = batch
+                    .aggregate_stale(ups.clone(), &staleness, decay)
+                    .unwrap();
+                let plan = StreamPlan::stale(
+                    n,
+                    ups.iter().map(|u| u.weight).collect(),
+                    &staleness,
+                    decay,
+                )
+                .unwrap();
+                let mut stream = streaming.begin_stream(&plan).unwrap();
+                for u in &ups {
+                    stream.ingest(&u.values).unwrap();
+                }
+                let got = stream.finalize().unwrap();
+                assert_eq!(want, got, "{cfg:?} round={round} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_plan_discount_is_identity() {
+        let plan = StreamPlan::fresh(4, vec![3.0, 7.5]).unwrap();
+        assert_eq!(plan.updates(), 2);
+        assert_eq!(plan.weights().as_ref(), &[3.0, 7.5][..]);
+        let shard = plan.for_width(2);
+        assert_eq!(shard.n, 2);
+        // The weight schedule is shared, not copied.
+        assert!(Arc::ptr_eq(&shard.weights(), &plan.weights()));
+    }
+
+    #[test]
+    fn stale_plan_discounts_like_apply_staleness() {
+        let plan = StreamPlan::stale(1, vec![2.0, 2.0, 2.0], &[0, 1, 3], 0.5).unwrap();
+        let w = plan.weights();
+        assert_eq!(w[0], 2.0 * 0.5);
+        assert_eq!(w[1], 2.0 * 0.25);
+        assert_eq!(w[2], 2.0 * 0.125);
+    }
+
+    #[test]
+    fn stream_plan_validation() {
+        // No updates.
+        assert!(StreamPlan::fresh(4, vec![]).is_err());
+        // Mismatched staleness tags.
+        assert!(StreamPlan::stale(4, vec![1.0], &[0, 1], 1.0).is_err());
+        // Invalid weights.
+        assert!(StreamPlan::fresh(4, vec![f64::NAN]).is_err());
+        assert!(StreamPlan::fresh(4, vec![-1.0]).is_err());
+    }
+
+    #[test]
+    fn stream_rejects_wrong_width_and_count() {
+        for cfg in all_aggregation_configs() {
+            let mut agg = from_config(&cfg).unwrap();
+            // Wrong width at ingest.
+            let plan = StreamPlan::fresh(3, vec![1.0, 1.0]).unwrap();
+            let mut s = agg.begin_stream(&plan).unwrap();
+            assert!(s.ingest(&[1.0, 2.0]).is_err(), "{cfg:?} width");
+            drop(s);
+            // Over-ingest.
+            let mut s = agg.begin_stream(&plan).unwrap();
+            s.ingest(&[1.0, 2.0, 3.0]).unwrap();
+            s.ingest(&[1.0, 2.0, 3.0]).unwrap();
+            assert!(s.ingest(&[1.0, 2.0, 3.0]).is_err(), "{cfg:?} over-ingest");
+            drop(s);
+            // Under-ingest at finalize.
+            let mut s = agg.begin_stream(&plan).unwrap();
+            s.ingest(&[1.0, 2.0, 3.0]).unwrap();
+            assert!(s.finalize().is_err(), "{cfg:?} under-ingest");
+        }
+    }
+
+    #[test]
+    fn streaming_support_is_declared_by_the_linear_aggregators() {
+        for (cfg, streams) in [
+            (AggregationConfig::Mean, true),
+            (AggregationConfig::FedAvg, true),
+            (AggregationConfig::FedAvgM { beta: 0.9 }, true),
+            (AggregationConfig::Median, false),
+            (AggregationConfig::TrimmedMean { trim: 0.1 }, false),
+            (AggregationConfig::FedBuff { goal: 2, lr: 1.0 }, false),
+        ] {
+            assert_eq!(
+                from_config(&cfg).unwrap().supports_streaming(),
+                streams,
+                "{cfg:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fedavg_stream_rejects_zero_total_weight() {
+        let mut agg = FedAvg;
+        let plan = StreamPlan::fresh(2, vec![0.0, 0.0]).unwrap();
+        assert!(agg.begin_stream(&plan).is_err());
+    }
+
+    #[test]
+    fn buffering_stream_ingest_owned_matches_borrowed() {
+        // The zero-copy owned ingest and the borrowed ingest build the
+        // same batch.
+        let ups = stream_updates(0, 3, 5);
+        let plan = StreamPlan::fresh(5, ups.iter().map(|u| u.weight).collect()).unwrap();
+        let mut a = Median;
+        let mut b = Median;
+        let mut sa = a.begin_stream(&plan).unwrap();
+        let mut sb = b.begin_stream(&plan).unwrap();
+        for u in &ups {
+            sa.ingest(&u.values).unwrap();
+            sb.ingest_owned(u.values.clone()).unwrap();
+        }
+        assert_eq!(sa.finalize().unwrap(), sb.finalize().unwrap());
     }
 }

@@ -12,21 +12,51 @@
 //! coordinator's peak is `participants x shard_size` floats plus one
 //! transient full reconstruction, instead of `participants x n_params`.
 //!
-//! The memory bound trades compute for schemes without random-access
-//! layouts. Per scheme (verified against the `decompress_range` impls in
-//! [`crate::compression`]):
+//! ## Server cost model: decodes and peak memory per scheme x aggregator
 //!
-//! | scheme | range decode | cost per shard |
-//! |---|---|---|
-//! | identity | random access (slice of the raw vector) | O(shard) |
-//! | quantize | random access (bit-unpacks only the range) | O(shard) |
-//! | top-k, subsample | random access (scan of the k sparse entries) | O(k) |
-//! | AE (dense decoder), sketch | default: full decode, then slice | O(n) |
+//! Which server path runs — and what it costs — depends on the
+//! *aggregator class*, not just the scheme. The linear aggregators
+//! ([`crate::aggregation::Mean`], [`crate::aggregation::FedAvg`],
+//! [`crate::aggregation::FedAvgM`]) stream through the accumulator API
+//! ([`crate::aggregation::Aggregator::begin_stream`]): the coordinator
+//! decodes each update **once**, in full, folds it into the per-shard
+//! running sums, and drops the reconstruction — for *every* scheme. The
+//! order-sensitive aggregators ([`crate::aggregation::Median`],
+//! [`crate::aggregation::TrimmedMean`], [`crate::aggregation::FedBuff`])
+//! need all updates' values per coordinate, so with `shard_size > 0`
+//! they keep the shard-major batch path, which asks each compressed
+//! update for one coordinate range at a time via
+//! [`crate::compression::UpdateCompressor::decompress_range`].
 //!
-//! Schemes in the last row re-run a full decode per shard, i.e.
-//! `shard_count` decodes per update per round. Pick `shard_size` with
-//! that in mind (larger shards = fewer re-decodes, more memory), or keep
-//! aggregation unsharded when updates are cheap to hold.
+//! Per update per round, with `m` participants, `n` coordinates,
+//! `S = shard_size` and `C = shard_count` (verified against the
+//! `decompress_range` impls in [`crate::compression`] and metered by
+//! [`crate::compression::MeteredDecoder`]):
+//!
+//! | scheme | range decode | linear aggs (streaming) | order-sensitive aggs (shard-major batch) |
+//! |---|---|---|---|
+//! | identity | random access (slice of the raw vector) | 1 full decode | C range decodes, O(S) each |
+//! | quantize | random access (bit-unpacks only the range) | 1 full decode | C range decodes, O(S) each |
+//! | top-k, subsample | random access (scan of the k sparse entries) | 1 full decode | C range decodes, O(k) each |
+//! | AE (dense decoder), sketch | none: full decode, then slice | 1 full decode | **C full decodes**, O(n) each |
+//!
+//! Peak server memory (reconstruction buffers, compressed payloads
+//! excluded):
+//!
+//! * **streaming (linear aggs)** — O(n) accumulators + one transient
+//!   full reconstruction, independent of `m`; with
+//!   `engine.parallelism > 1` shard workers, a bounded handful (<= 3) of
+//!   reconstructions are in flight at once. The one-decode invariant is
+//!   what makes AE/sketch sharding free: at 256-1024 collaborators the
+//!   old path paid `C` 352.9M-parameter decoder passes per update.
+//! * **shard-major batch (order-sensitive aggs)** — `m x S` floats per
+//!   shard, plus one transient full reconstruction per range call for
+//!   the schemes without random access (AE, sketch). Pick `shard_size`
+//!   with the re-decode cost in mind: larger shards = fewer re-decodes,
+//!   more memory.
+//! * **unsharded batch / forced `agg_path = "stream"` with an
+//!   order-sensitive agg** — `m x n` floats (every reconstruction, or
+//!   every buffered ingest, held at once).
 //!
 //! ## Equivalence
 //!
@@ -50,9 +80,16 @@
 
 use std::ops::Range;
 
-use super::{from_config, validate_updates, Aggregator, WeightedUpdate};
+use super::{
+    from_config, validate_updates, Aggregator, AggregatorStream, StreamPlan, WeightedUpdate,
+};
 use crate::config::AggregationConfig;
 use crate::error::{FedAeError, Result};
+
+/// One round's per-shard accumulator streams, paired with their
+/// coordinate ranges — the unit the coordinator chunks across
+/// `std::thread::scope` workers for shard-parallel aggregation.
+pub type ShardStreams<'a> = Vec<(Range<usize>, Box<dyn AggregatorStream + 'a>)>;
 
 /// Iterate the fixed shard partition of an `n`-coordinate vector:
 /// `shard_size`-sized ranges, the last one possibly shorter.
@@ -83,6 +120,9 @@ pub struct ShardedAggregator {
     shard_size: usize,
     shards: Vec<Box<dyn Aggregator>>,
     name: String,
+    /// Whether the wrapped algorithm streams natively (probed once at
+    /// construction; every shard instance is the same algorithm).
+    streaming: bool,
 }
 
 impl std::fmt::Debug for ShardedAggregator {
@@ -107,11 +147,13 @@ impl ShardedAggregator {
         }
         let probe = from_config(&cfg)?;
         let name = format!("sharded({}, {shard_size})", probe.name());
+        let streaming = probe.supports_streaming();
         Ok(ShardedAggregator {
             cfg,
             shard_size,
             shards: Vec::new(),
             name,
+            streaming,
         })
     }
 
@@ -128,6 +170,75 @@ impl ShardedAggregator {
         }
         Ok(&mut self.shards[shard])
     }
+
+    /// Open one accumulator stream per shard of a `plan.n`-coordinate
+    /// round, each backed by that shard's persistent inner aggregator and
+    /// handed the plan's shared discounted-weight schedule (one `Arc`'d
+    /// array for the whole round, so per-shard FedAvg normalizers match
+    /// the whole-vector ones bitwise at no per-shard memory cost).
+    ///
+    /// The streams are returned individually (rather than wrapped as one
+    /// [`AggregatorStream`]) so the coordinator can chunk independent
+    /// shards across `std::thread::scope` workers; ingest each stream
+    /// with its range's slice of every reconstruction, in plan order.
+    pub fn begin_shard_streams(&mut self, plan: &StreamPlan) -> Result<ShardStreams<'_>> {
+        let count = shard_count(plan.n, self.shard_size);
+        while self.shards.len() < count {
+            self.shards.push(from_config(&self.cfg)?);
+        }
+        let ranges = shard_ranges(plan.n, self.shard_size);
+        self.shards
+            .iter_mut()
+            .take(count)
+            .zip(ranges)
+            .map(|(agg, range)| {
+                let shard_plan = plan.for_width(range.len());
+                agg.begin_stream(&shard_plan).map(|s| (range, s))
+            })
+            .collect()
+    }
+}
+
+/// Drop-in [`AggregatorStream`] over a round's per-shard streams:
+/// ingests whole-vector reconstructions, slices them into the fixed
+/// shard partition, and reassembles the shard pieces at finalize.
+struct ShardedStream<'a> {
+    n: usize,
+    streams: ShardStreams<'a>,
+}
+
+impl AggregatorStream for ShardedStream<'_> {
+    fn ingest(&mut self, values: &[f32]) -> Result<()> {
+        if values.len() != self.n {
+            return Err(FedAeError::Coordination(format!(
+                "sharded stream ingested {} values, expected {}",
+                values.len(),
+                self.n
+            )));
+        }
+        for (range, stream) in self.streams.iter_mut() {
+            stream.ingest(&values[range.clone()])?;
+        }
+        Ok(())
+    }
+
+    fn finalize(self: Box<Self>) -> Result<Vec<f32>> {
+        let me = *self;
+        let mut out = vec![0.0f32; me.n];
+        for (range, stream) in me.streams {
+            let piece = stream.finalize()?;
+            if piece.len() != range.len() {
+                return Err(FedAeError::Coordination(format!(
+                    "shard {}..{} finalized to {} values",
+                    range.start,
+                    range.end,
+                    piece.len()
+                )));
+            }
+            out[range].copy_from_slice(&piece);
+        }
+        Ok(out)
+    }
 }
 
 impl Aggregator for ShardedAggregator {
@@ -137,9 +248,11 @@ impl Aggregator for ShardedAggregator {
 
     /// Slice materialized updates into the fixed shard partition and
     /// aggregate each shard independently. Provided for drop-in use and
-    /// equivalence testing; the coordinator's streaming path calls
-    /// [`Aggregator::aggregate_shard`] per shard instead and never
-    /// materializes `updates` at all.
+    /// equivalence testing; the coordinator's shard-major batch path
+    /// calls [`Aggregator::aggregate_shard`] per shard instead (never
+    /// materializing `updates` whole), and its streaming path folds
+    /// decoded updates into [`ShardedAggregator::begin_shard_streams`]
+    /// accumulators one at a time.
     fn aggregate(&mut self, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
         let n = validate_updates(updates)?;
         let mut out = vec![0.0f32; n];
@@ -168,6 +281,17 @@ impl Aggregator for ShardedAggregator {
     /// aggregator.
     fn aggregate_shard(&mut self, shard: usize, updates: &[WeightedUpdate]) -> Result<Vec<f32>> {
         self.inner(shard)?.aggregate(updates)
+    }
+
+    fn supports_streaming(&self) -> bool {
+        self.streaming
+    }
+
+    fn begin_stream(&mut self, plan: &StreamPlan) -> Result<Box<dyn AggregatorStream + '_>> {
+        Ok(Box::new(ShardedStream {
+            n: plan.n,
+            streams: self.begin_shard_streams(plan)?,
+        }))
     }
 }
 
@@ -285,6 +409,91 @@ mod tests {
                 assert_eq!(want, got, "{} round={round}", sharded.name());
             }
         }
+    }
+
+    #[test]
+    fn sharded_streaming_matches_sharded_batch() {
+        // Drop-in streaming (begin_stream -> ingest x m -> finalize) on
+        // the sharded adapter is bitwise-identical to its batch
+        // aggregate, for every algorithm, across rounds (stateful inner
+        // aggregators included) and staleness mixes.
+        let n = 29;
+        let shard_size = 8;
+        for cfg in all_configs() {
+            let mut batch = ShardedAggregator::new(cfg.clone(), shard_size).unwrap();
+            let mut streaming = ShardedAggregator::new(cfg.clone(), shard_size).unwrap();
+            for round in 0..3 {
+                let ups = updates(round, 7, n);
+                let staleness: Vec<usize> = (0..ups.len()).map(|i| i % 2).collect();
+                let want = batch
+                    .aggregate_stale(ups.clone(), &staleness, 0.9)
+                    .unwrap();
+                let plan = crate::aggregation::StreamPlan::stale(
+                    n,
+                    ups.iter().map(|u| u.weight).collect(),
+                    &staleness,
+                    0.9,
+                )
+                .unwrap();
+                let mut stream = streaming.begin_stream(&plan).unwrap();
+                for u in &ups {
+                    stream.ingest(&u.values).unwrap();
+                }
+                let got = stream.finalize().unwrap();
+                assert_eq!(want, got, "{cfg:?} round={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_streams_partition_matches_whole_vector_stream() {
+        // Driving the per-shard streams directly (the coordinator's
+        // shard-parallel path) equals the drop-in sharded stream.
+        let n = 23;
+        let shard_size = 4;
+        for cfg in all_configs() {
+            let mut whole = ShardedAggregator::new(cfg.clone(), shard_size).unwrap();
+            let mut parted = ShardedAggregator::new(cfg.clone(), shard_size).unwrap();
+            for round in 0..2 {
+                let ups = updates(round, 5, n);
+                let plan = crate::aggregation::StreamPlan::fresh(
+                    n,
+                    ups.iter().map(|u| u.weight).collect(),
+                )
+                .unwrap();
+                let mut stream = whole.begin_stream(&plan).unwrap();
+                for u in &ups {
+                    stream.ingest(&u.values).unwrap();
+                }
+                let want = stream.finalize().unwrap();
+
+                let shard_streams = parted.begin_shard_streams(&plan).unwrap();
+                assert_eq!(shard_streams.len(), shard_count(n, shard_size));
+                let mut got = vec![0.0f32; n];
+                let mut streams = shard_streams;
+                for u in &ups {
+                    for (range, s) in streams.iter_mut() {
+                        s.ingest(&u.values[range.clone()]).unwrap();
+                    }
+                }
+                for (range, s) in streams {
+                    got[range].copy_from_slice(&s.finalize().unwrap());
+                }
+                assert_eq!(want, got, "{cfg:?} round={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_streaming_support_mirrors_inner() {
+        assert!(ShardedAggregator::new(AggregationConfig::Mean, 4)
+            .unwrap()
+            .supports_streaming());
+        assert!(
+            !ShardedAggregator::new(AggregationConfig::Median, 4)
+                .unwrap()
+                .supports_streaming()
+        );
     }
 
     #[test]

@@ -8,6 +8,15 @@
 //! half ships once to the aggregator, which reconstructs the full vector
 //! every round. Encode/decode execute as AOT-compiled XLA artifacts whose
 //! inner loops are the Layer-1 Pallas fused-dense kernel.
+//!
+//! The decoder is dense: reconstructing *any* coordinate range runs the
+//! full decoder pass, so this scheme keeps the default
+//! [`UpdateCompressor::decompress_range`] (full decode, then slice) and
+//! the default [`UpdateCompressor::range_decode_is_full`] = `true` for
+//! the decode meter. That is exactly why the coordinator's streaming
+//! aggregation path matters for the AE: the linear aggregators decode
+//! each update once per round instead of once per coordinate shard
+//! (scheme table in [`crate::aggregation::sharded`]).
 
 use super::{CompressedUpdate, UpdateCompressor};
 use crate::error::{FedAeError, Result};

@@ -52,6 +52,12 @@ impl UpdateCompressor for IdentityCompressor {
         }
     }
 
+    /// Raw slices are random access: a range decode touches only the
+    /// requested coordinates (decode-meter classification).
+    fn range_decode_is_full(&self) -> bool {
+        false
+    }
+
     fn nominal_ratio(&self, _n: usize) -> Option<f64> {
         Some(1.0)
     }

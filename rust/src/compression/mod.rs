@@ -362,12 +362,147 @@ pub trait UpdateCompressor: Send {
         Ok(full[range].to_vec())
     }
 
+    /// Whether [`UpdateCompressor::decompress_range`] materializes the
+    /// full vector internally (the default implementation's behavior)
+    /// rather than random-accessing just the requested coordinates.
+    ///
+    /// Schemes with random-access layouts override this to `false`
+    /// alongside their `decompress_range` override (identity, quantize,
+    /// top-k, subsample); the AE's dense decoder and the count-sketch
+    /// keep `true`. [`MeteredDecoder`] uses it to classify range calls
+    /// as full vs. range decodes, and the coordinator uses it to model
+    /// peak aggregation memory (see the scheme table in
+    /// [`crate::aggregation::sharded`]).
+    fn range_decode_is_full(&self) -> bool {
+        true
+    }
+
     /// The analytic compression ratio (logical f32 bytes / wire bytes)
     /// for an `n`-dim update, if fixed by construction. The ledger always
     /// reports the *measured* ratio too.
     fn nominal_ratio(&self, n: usize) -> Option<f64> {
         let _ = n;
         None
+    }
+}
+
+/// Cumulative server-side decode-cost meter: how many full-vector and
+/// range reconstructions a decompressor has run, and how many floats
+/// they materialized.
+///
+/// The coordinator wraps every server decompressor in a
+/// [`MeteredDecoder`] and drains the meter once per round, which is how
+/// the streaming aggregation path's one-full-decode-per-update invariant
+/// is *asserted* rather than assumed (`rust/tests/streaming_agg.rs`),
+/// and how `agg_decodes` reaches `RoundOutcome` / the bench JSON.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Full-vector reconstructions — direct [`UpdateCompressor::decompress`]
+    /// calls, plus range calls on schemes whose range decode runs a full
+    /// decode internally ([`UpdateCompressor::range_decode_is_full`]).
+    pub full_decodes: u64,
+    /// Random-access range reconstructions.
+    pub range_decodes: u64,
+    /// Total floats reconstructed (full decodes count their logical
+    /// dimensionality, range decodes their range length).
+    pub decoded_floats: u64,
+}
+
+impl DecodeStats {
+    /// Total bytes reconstructed (`decoded_floats` f32s).
+    pub fn decoded_bytes(&self) -> u64 {
+        self.decoded_floats * 4
+    }
+
+    /// Fold another meter's counts into this one.
+    pub fn merge(&mut self, other: DecodeStats) {
+        self.full_decodes += other.full_decodes;
+        self.range_decodes += other.range_decodes;
+        self.decoded_floats += other.decoded_floats;
+    }
+}
+
+/// Metering wrapper around a server-side decompressor: forwards every
+/// [`UpdateCompressor`] call and counts decode work in a [`DecodeStats`].
+///
+/// A range call is billed as a *full* decode when the wrapped scheme
+/// reports [`UpdateCompressor::range_decode_is_full`] — the AE decoder
+/// and the count-sketch reconstruct all `n` coordinates no matter how
+/// small the requested range is, and hiding that cost is exactly what
+/// the meter exists to prevent.
+pub struct MeteredDecoder<'a> {
+    inner: Box<dyn UpdateCompressor + 'a>,
+    stats: DecodeStats,
+}
+
+impl<'a> MeteredDecoder<'a> {
+    /// Wrap a decompressor in a fresh meter.
+    pub fn new(inner: Box<dyn UpdateCompressor + 'a>) -> MeteredDecoder<'a> {
+        MeteredDecoder {
+            inner,
+            stats: DecodeStats::default(),
+        }
+    }
+
+    /// Counts since construction or the last [`MeteredDecoder::take_stats`].
+    pub fn stats(&self) -> DecodeStats {
+        self.stats
+    }
+
+    /// Read and reset the meter (the coordinator drains it per round).
+    pub fn take_stats(&mut self) -> DecodeStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+impl std::fmt::Debug for MeteredDecoder<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MeteredDecoder")
+            .field("inner", &self.inner.name())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+impl UpdateCompressor for MeteredDecoder<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn compress(&mut self, round: usize, w: &[f32]) -> Result<CompressedUpdate> {
+        self.inner.compress(round, w)
+    }
+
+    fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>> {
+        let out = self.inner.decompress(update)?;
+        self.stats.full_decodes += 1;
+        self.stats.decoded_floats += out.len() as u64;
+        Ok(out)
+    }
+
+    fn decompress_range(
+        &mut self,
+        update: &CompressedUpdate,
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<f32>> {
+        let full_cost = self.inner.range_decode_is_full();
+        let out = self.inner.decompress_range(update, range)?;
+        if full_cost {
+            self.stats.full_decodes += 1;
+            self.stats.decoded_floats += update.logical_n() as u64;
+        } else {
+            self.stats.range_decodes += 1;
+            self.stats.decoded_floats += out.len() as u64;
+        }
+        Ok(out)
+    }
+
+    fn range_decode_is_full(&self) -> bool {
+        self.inner.range_decode_is_full()
+    }
+
+    fn nominal_ratio(&self, n: usize) -> Option<f64> {
+        self.inner.nominal_ratio(n)
     }
 }
 
@@ -471,6 +606,96 @@ mod tests {
         let ratio = (15910.0 * 4.0) / u.wire_bytes() as f64;
         assert!(ratio > 450.0, "ratio {ratio}");
         assert_eq!(u.logical_n(), 15910);
+    }
+
+    #[test]
+    fn metered_decoder_counts_full_and_range_decodes() {
+        // Identity: random-access ranges, so range calls are billed as
+        // range decodes with just the range's floats.
+        let mut d = MeteredDecoder::new(Box::new(identity::IdentityCompressor::new()));
+        let u = CompressedUpdate::Raw {
+            values: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert!(!d.range_decode_is_full());
+        assert_eq!(d.decompress(&u).unwrap().len(), 4);
+        assert_eq!(d.decompress_range(&u, 1..3).unwrap(), vec![2.0, 3.0]);
+        let s = d.take_stats();
+        assert_eq!(s.full_decodes, 1);
+        assert_eq!(s.range_decodes, 1);
+        assert_eq!(s.decoded_floats, 4 + 2);
+        assert_eq!(s.decoded_bytes(), (4 + 2) * 4);
+        // take_stats resets.
+        assert_eq!(d.stats(), DecodeStats::default());
+
+        // Sketch: no random access, so a range call is a full decode of
+        // all n logical coordinates.
+        let mut sk = sketch::SketchCompressor::new(3, 16, 4, 9).unwrap();
+        let w: Vec<f32> = (0..32).map(|i| i as f32 * 0.25 - 4.0).collect();
+        let u = sk.compress(0, &w).unwrap();
+        let mut d = MeteredDecoder::new(Box::new(sk));
+        assert!(d.range_decode_is_full());
+        assert_eq!(d.decompress_range(&u, 5..9).unwrap().len(), 4);
+        let s = d.stats();
+        assert_eq!(s.full_decodes, 1);
+        assert_eq!(s.range_decodes, 0);
+        assert_eq!(s.decoded_floats, 32, "full decode billed at logical n");
+    }
+
+    #[test]
+    fn metered_decoder_is_transparent() {
+        // Wrapping changes no results, only accounting.
+        let mut plain = identity::IdentityCompressor::new();
+        let mut metered = MeteredDecoder::new(Box::new(identity::IdentityCompressor::new()));
+        let w = vec![0.5f32, -1.5, 2.0];
+        let u = plain.compress(0, &w).unwrap();
+        assert_eq!(metered.compress(0, &w).unwrap(), u);
+        assert_eq!(
+            plain.decompress(&u).unwrap(),
+            metered.decompress(&u).unwrap()
+        );
+        assert_eq!(
+            plain.decompress_range(&u, 0..2).unwrap(),
+            metered.decompress_range(&u, 0..2).unwrap()
+        );
+        assert_eq!(metered.name(), plain.name());
+        assert_eq!(metered.nominal_ratio(100), plain.nominal_ratio(100));
+        // Errors pass through unmetered as full/range work never happened.
+        let bad = CompressedUpdate::Latent { z: vec![], n: 0 };
+        let before = metered.stats();
+        assert!(metered.decompress(&bad).is_err());
+        assert_eq!(metered.stats(), before);
+    }
+
+    #[test]
+    fn range_decode_classification_per_scheme() {
+        // Random-access schemes declare it; dense ones keep the default.
+        assert!(!identity::IdentityCompressor::new().range_decode_is_full());
+        assert!(!quantize::QuantizeCompressor::new(8, false, 1)
+            .unwrap()
+            .range_decode_is_full());
+        assert!(!topk::TopKCompressor::new(64, 0.1)
+            .unwrap()
+            .range_decode_is_full());
+        assert!(!subsample::SubsampleCompressor::new(64, 0.1, 1)
+            .unwrap()
+            .range_decode_is_full());
+        assert!(sketch::SketchCompressor::new(3, 16, 4, 1)
+            .unwrap()
+            .range_decode_is_full());
+        let mut merged = DecodeStats::default();
+        merged.merge(DecodeStats {
+            full_decodes: 2,
+            range_decodes: 3,
+            decoded_floats: 10,
+        });
+        merged.merge(DecodeStats {
+            full_decodes: 1,
+            range_decodes: 0,
+            decoded_floats: 5,
+        });
+        assert_eq!(merged.full_decodes, 3);
+        assert_eq!(merged.range_decodes, 3);
+        assert_eq!(merged.decoded_floats, 15);
     }
 
     #[test]

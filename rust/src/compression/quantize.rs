@@ -223,6 +223,12 @@ impl UpdateCompressor for QuantizeCompressor {
         }
     }
 
+    /// Fixed-width codes are random access: a range decode unpacks only
+    /// the requested coordinates (decode-meter classification).
+    fn range_decode_is_full(&self) -> bool {
+        false
+    }
+
     fn nominal_ratio(&self, _n: usize) -> Option<f64> {
         Some(32.0 / self.bits as f64)
     }

@@ -6,6 +6,15 @@
 //! with per-row hash + sign functions. Decompress: median-of-rows
 //! estimate per coordinate, keeping only the top-k largest recovered
 //! magnitudes (FetchSGD's heavy-hitter recovery).
+//!
+//! Heavy-hitter recovery is global (the top-k selection ranks *all* n
+//! estimates), so a range decode cannot be answered from the range
+//! alone: this scheme keeps the default
+//! [`UpdateCompressor::decompress_range`] (full decode, then slice) and
+//! `range_decode_is_full` = `true` for the decode meter — under
+//! shard-major batch aggregation it pays `shard_count` full decodes per
+//! update, while the streaming accumulator path pays exactly one
+//! (scheme table in [`crate::aggregation::sharded`]).
 
 use super::{CompressedUpdate, UpdateCompressor};
 use crate::error::{FedAeError, Result};

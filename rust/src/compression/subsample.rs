@@ -108,6 +108,12 @@ impl UpdateCompressor for SubsampleCompressor {
         }
     }
 
+    /// Sparse payloads are random access: a range decode is one O(k)
+    /// scan of the sampled entries (decode-meter classification).
+    fn range_decode_is_full(&self) -> bool {
+        false
+    }
+
     fn nominal_ratio(&self, n: usize) -> Option<f64> {
         Some(n as f64 / self.k as f64)
     }

@@ -127,6 +127,12 @@ impl UpdateCompressor for TopKCompressor {
         }
     }
 
+    /// Sparse payloads are random access: a range decode is one O(k)
+    /// scan of the kept entries (decode-meter classification).
+    fn range_decode_is_full(&self) -> bool {
+        false
+    }
+
     fn nominal_ratio(&self, n: usize) -> Option<f64> {
         // Each kept coordinate costs 8 bytes (u32 idx + f32 val).
         let k = ((n as f64 * self.fraction).ceil()).max(1.0);

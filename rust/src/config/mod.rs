@@ -299,6 +299,58 @@ impl EngineMode {
     }
 }
 
+/// Which server-side aggregation execution path the driver uses.
+///
+/// Like `parallelism`/`shard_size` this changes *how* aggregation runs —
+/// decode counts, peak memory, wall-clock — never *what* it computes:
+/// all three settings produce bitwise-identical results for a fixed seed
+/// (`rust/tests/streaming_agg.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggPath {
+    /// Pick per aggregator (the default): the streaming accumulator path
+    /// for everything, except order-sensitive aggregators
+    /// (median/trimmed_mean/fedbuff) under coordinate sharding, which
+    /// keep the shard-major batch path so their memory stays bounded at
+    /// `participants x shard_size`.
+    #[default]
+    Auto,
+    /// Always the batch path (materialized, or shard-major when
+    /// `shard_size > 0`) — the pre-streaming behavior, kept for A/B
+    /// benchmarking and equivalence tests.
+    Batch,
+    /// Always the streaming accumulator path (one full decode per
+    /// update). With an order-sensitive aggregator this buffers the
+    /// whole round — `participants x n_params` floats — like unsharded
+    /// batch aggregation does.
+    Stream,
+}
+
+impl AggPath {
+    /// Stable lowercase name for logs and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggPath::Auto => "auto",
+            AggPath::Batch => "batch",
+            AggPath::Stream => "stream",
+        }
+    }
+
+    /// Parse a path string (shared by the JSON config and the CLI
+    /// `--agg-path` flag).
+    pub fn parse(s: &str) -> Result<AggPath> {
+        Ok(match s {
+            "auto" => AggPath::Auto,
+            "batch" => AggPath::Batch,
+            "stream" => AggPath::Stream,
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "unknown agg_path `{other}` (expected auto|batch|stream)"
+                )))
+            }
+        })
+    }
+}
+
 /// Round-engine execution knobs (see ARCHITECTURE.md §Round engine and
 /// §Async rounds & staleness).
 ///
@@ -347,6 +399,10 @@ pub struct EngineConfig {
     /// Per-upload uniform latency jitter bound in simulated
     /// milliseconds. Async mode only.
     pub jitter_ms: f64,
+    /// Server aggregation execution path: `auto` (default), `batch`, or
+    /// `stream` (see [`AggPath`]). Changes decode counts / memory /
+    /// wall-clock only, never results.
+    pub agg_path: AggPath,
 }
 
 impl Default for EngineConfig {
@@ -360,6 +416,7 @@ impl Default for EngineConfig {
             dropout_rate: 0.0,
             straggler_log_std: 0.0,
             jitter_ms: 0.0,
+            agg_path: AggPath::Auto,
         }
     }
 }
@@ -513,6 +570,9 @@ impl ExperimentConfig {
             }
             if let Some(v) = e.get("jitter_ms").and_then(|v| v.as_f64()) {
                 cfg.engine.jitter_ms = v;
+            }
+            if let Some(v) = e.get("agg_path").and_then(|v| v.as_str()) {
+                cfg.engine.agg_path = AggPath::parse(v)?;
             }
         }
         Ok(cfg)
@@ -689,6 +749,22 @@ mod tests {
         assert_eq!(cfg.engine.deadline_ms, 0.0);
         assert_eq!(cfg.engine.staleness_decay, 1.0);
         assert_eq!(cfg.engine.dropout_rate, 0.0);
+        assert_eq!(cfg.engine.agg_path, AggPath::Auto);
+    }
+
+    #[test]
+    fn parses_agg_path() {
+        for (doc, want) in [
+            (r#"{"engine": {"agg_path": "auto"}}"#, AggPath::Auto),
+            (r#"{"engine": {"agg_path": "batch"}}"#, AggPath::Batch),
+            (r#"{"engine": {"agg_path": "stream"}}"#, AggPath::Stream),
+        ] {
+            let cfg = ExperimentConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
+            assert_eq!(cfg.engine.agg_path, want);
+            assert_eq!(AggPath::parse(want.name()).unwrap(), want);
+        }
+        let j = Json::parse(r#"{"engine": {"agg_path": "magic"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -27,10 +27,14 @@
 //!    are **admitted** into the round's aggregation. Later arrivals are
 //!    **buffered** — their bytes were spent, but the information lands
 //!    `ceil(t/deadline) - 1` rounds later and is folded in
-//!    staleness-discounted through
+//!    staleness-discounted: the batch server paths scale weights through
 //!    [`crate::aggregation::Aggregator::aggregate_stale`] /
-//!    [`crate::aggregation::Aggregator::aggregate_shard_stale`].
-//!    Dropped uploads never arrive and meter nothing.
+//!    [`crate::aggregation::Aggregator::aggregate_shard_stale`], and the
+//!    streaming accumulator path bakes the same per-update staleness
+//!    tags into its [`crate::aggregation::StreamPlan`] weights, applying
+//!    the identical `α/(s+1)` discount arithmetic — so the async
+//!    engine composes with every `agg_path`/`shard_size`/`parallelism`
+//!    setting unchanged. Dropped uploads never arrive and meter nothing.
 //!
 //! Everything is deterministic for a fixed experiment seed — admitted
 //! set, buffer contents, ledger, global parameters — at any

@@ -56,26 +56,19 @@ impl ParallelRoundEngine {
         self.workers
     }
 
-    /// Apply `f` to every item, preserving input order in the returned
-    /// vector regardless of worker scheduling.
-    ///
-    /// Items are split into at most `workers` contiguous chunks, one
-    /// scoped thread per chunk; with one worker (or one item) everything
-    /// runs inline on the caller's thread with no spawn overhead. Worker
-    /// panics propagate to the caller.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
-    where
-        T: Send,
-        R: Send,
-        F: Fn(T) -> R + Sync,
-    {
+    /// Split `items` into at most [`ParallelRoundEngine::workers`]
+    /// contiguous, non-empty chunks, preserving input order across the
+    /// concatenation. This is the fan-out unit of
+    /// [`ParallelRoundEngine::map`], and the coordinator reuses it to
+    /// chunk per-shard aggregation streams across workers (streaming
+    /// server path): contiguity keeps result order deterministic and
+    /// gives each worker a cache-friendly run of items.
+    pub fn chunk<T>(&self, items: Vec<T>) -> Vec<Vec<T>> {
         let n = items.len();
-        let workers = self.workers.min(n);
-        if workers <= 1 {
-            return items.into_iter().map(f).collect();
+        if n == 0 {
+            return Vec::new();
         }
-        // Contiguous chunks keep result order == input order and give each
-        // worker a cache-friendly run of collaborators.
+        let workers = self.workers.min(n);
         let chunk_len = (n + workers - 1) / workers;
         let mut chunks: Vec<Vec<T>> = Vec::with_capacity(workers);
         let mut it = items.into_iter();
@@ -86,6 +79,27 @@ impl ParallelRoundEngine {
             }
             chunks.push(chunk);
         }
+        chunks
+    }
+
+    /// Apply `f` to every item, preserving input order in the returned
+    /// vector regardless of worker scheduling.
+    ///
+    /// Items are split into at most `workers` contiguous chunks
+    /// ([`ParallelRoundEngine::chunk`]), one scoped thread per chunk;
+    /// with one worker (or one item) everything runs inline on the
+    /// caller's thread with no spawn overhead. Worker panics propagate
+    /// to the caller.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        if self.workers.min(items.len()) <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let chunks = self.chunk(items);
         let f = &f;
         let per_chunk: Vec<Vec<R>> = std::thread::scope(|s| {
             let handles: Vec<_> = chunks
@@ -122,6 +136,20 @@ mod tests {
             let items: Vec<usize> = (0..37).collect();
             let out = engine.map(items, |i| i * 2);
             assert_eq!(out, (0..37).map(|i| i * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn chunk_is_contiguous_order_preserving_and_bounded() {
+        for workers in [1, 2, 3, 8, 64] {
+            let engine = ParallelRoundEngine::new(workers);
+            for n in [0usize, 1, 5, 37] {
+                let chunks = engine.chunk((0..n).collect::<Vec<usize>>());
+                assert!(chunks.len() <= workers.max(1), "n={n} workers={workers}");
+                assert!(chunks.iter().all(|c| !c.is_empty()));
+                let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+                assert_eq!(flat, (0..n).collect::<Vec<_>>());
+            }
         }
     }
 

@@ -15,13 +15,17 @@
 //! * [`FlDriver`] — the in-process experiment driver: wires collaborators,
 //!   compressors, aggregation, the simulated network and metrics into the
 //!   paper's federated loop (Fig 3), including the pre-pass round (Fig 2).
-//!   Two execution knobs ([`crate::config::EngineConfig`]) scale it to
-//!   large federations: `parallelism` fans collaborator work across
-//!   workers, and `shard_size` streams server-side aggregation through
-//!   [`ShardedAggregator`] in coordinate shards so reconstructions are
-//!   never all materialized at once. Neither knob changes results: see
-//!   ARCHITECTURE.md §Round engine and `rust/tests/parallel_round.rs`.
-//!   A third knob family (`engine.mode = "async"` + deadline/straggler
+//!   Three execution knobs ([`crate::config::EngineConfig`]) scale it to
+//!   large federations: `parallelism` fans collaborator work (and, on the
+//!   streaming server path, independent aggregation shards) across
+//!   workers; `shard_size` partitions server aggregation into coordinate
+//!   shards; and `agg_path` selects between the batch server path and
+//!   the streaming accumulator path (one full decode per update, O(n)
+//!   server memory for the linear aggregators — see
+//!   [`FlDriver::run_round`] step 5 and ARCHITECTURE.md §Server cost
+//!   model). None of the three changes results: see
+//!   `rust/tests/parallel_round.rs` and `rust/tests/streaming_agg.rs`.
+//!   A fourth knob family (`engine.mode = "async"` + deadline/straggler
 //!   knobs) swaps the round barrier for the deadline discipline — that
 //!   one *does* change results, deterministically (ARCHITECTURE.md
 //!   §Async rounds & staleness, `rust/tests/async_round.rs`).
@@ -33,12 +37,14 @@ pub use async_engine::{AsyncRoundEngine, BufferedUpdate, StragglerStats};
 pub use engine::ParallelRoundEngine;
 
 use std::collections::{BTreeMap, BTreeSet};
-use std::sync::{Arc, RwLock};
+use std::sync::{mpsc, Arc, RwLock};
 
-use crate::aggregation::{sharded::shard_ranges, Aggregator, ShardedAggregator, WeightedUpdate};
+use crate::aggregation::{
+    sharded::shard_ranges, Aggregator, ShardedAggregator, StreamPlan, WeightedUpdate,
+};
 use crate::collaborator::{run_prepass, Collaborator, PrepassResult};
-use crate::compression::{ae::AeCompressor, CompressedUpdate, UpdateCompressor};
-use crate::config::{CompressionConfig, ExperimentConfig, Sharding};
+use crate::compression::{ae::AeCompressor, CompressedUpdate, MeteredDecoder, UpdateCompressor};
+use crate::config::{AggPath, CompressionConfig, ExperimentConfig, Sharding};
 use crate::data::{make_shards, Dataset, SynthKind};
 use crate::error::{FedAeError, Result};
 use crate::metrics::{ExperimentLog, RoundRecord};
@@ -48,6 +54,7 @@ use crate::network::{
 use crate::runtime::{AePipeline, EvalStep, Runtime};
 use crate::tensor;
 use crate::transport::Message;
+use crate::util::Stopwatch;
 
 /// Per-round server state machine.
 #[derive(Debug)]
@@ -175,13 +182,60 @@ impl DecoderRegistry {
     }
 }
 
+/// Server aggregation cost accounting for one round: the decode meter
+/// readings ([`crate::compression::DecodeStats`] drained from every
+/// [`MeteredDecoder`]), the aggregation path's modelled peak memory, and
+/// its wall-clock time.
+///
+/// This is *execution* metadata, not a result: two bitwise-identical
+/// runs legitimately differ here (wall time always; decode shape
+/// whenever `agg_path`/`shard_size` differ), so [`RoundOutcome`]'s
+/// `PartialEq` ignores it entirely. It is surfaced per round in the CLI
+/// log (`agg_decodes`/`agg_peak_floats`/`agg_ms`) and summed into the
+/// experiment-log summaries, sharing one source of truth with the bench
+/// JSON (`rust/benches/bench_streaming_agg.rs`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AggRoundStats {
+    /// Full-vector decodes performed during aggregation. On the
+    /// streaming path this is exactly one per update — asserted by
+    /// `rust/tests/streaming_agg.rs`, not assumed.
+    pub full_decodes: u64,
+    /// Random-access range decodes performed during aggregation (the
+    /// shard-major batch path over random-access schemes).
+    pub range_decodes: u64,
+    /// Total floats the decode meter saw reconstructed.
+    pub decoded_floats: u64,
+    /// Peak floats the aggregation path buffers at once — accumulators
+    /// plus reconstruction buffers, by the deterministic cost model in
+    /// ARCHITECTURE.md §Server cost model (scheme-internal transients of
+    /// full-decode range calls are counted by `decoded_floats`, not
+    /// here).
+    pub peak_floats: u64,
+    /// Wall-clock milliseconds spent reconstructing + aggregating.
+    pub ms: f64,
+}
+
+impl AggRoundStats {
+    /// Fold one round's accounting into a running experiment total
+    /// (counts and wall time sum; `peak_floats` takes the max).
+    pub fn accumulate(&mut self, round: &AggRoundStats) {
+        self.full_decodes += round.full_decodes;
+        self.range_decodes += round.range_decodes;
+        self.decoded_floats += round.decoded_floats;
+        self.peak_floats = self.peak_floats.max(round.peak_floats);
+        self.ms += round.ms;
+    }
+}
+
 /// Outcome of one communication round.
 ///
 /// Compares with `==` field-by-field, except `mean_recon_mse` which is
-/// compared bitwise: `NaN` there marks "no fresh updates this round"
+/// compared bitwise — `NaN` there marks "no fresh updates this round"
 /// (an async round where everything was late or dropped), and two
-/// bit-identical runs must still compare equal — the determinism tests
-/// rely on it.
+/// bit-identical runs must still compare equal — and `agg`, which is
+/// execution metadata (wall-clock, decode/memory accounting) and is
+/// excluded so runs that differ only in `parallelism`/`shard_size`/
+/// `agg_path` still compare equal. The determinism tests rely on both.
 #[derive(Debug, Clone)]
 pub struct RoundOutcome {
     /// Which round this outcome describes.
@@ -200,6 +254,8 @@ pub struct RoundOutcome {
     pub bytes_down: u64,
     /// Deadline/straggler accounting (all-admitted in sync mode).
     pub stragglers: StragglerStats,
+    /// Server aggregation cost accounting (excluded from `==`).
+    pub agg: AggRoundStats,
 }
 
 impl PartialEq for RoundOutcome {
@@ -232,19 +288,52 @@ struct CollabRoundResult {
     fate: UploadFate,
 }
 
+/// The driver's server-side aggregator: the plain configured algorithm,
+/// or the [`ShardedAggregator`] adapter when `engine.shard_size > 0`.
+/// Kept as an enum (not a `Box<dyn Aggregator>`) so the streaming path
+/// can open the adapter's per-shard accumulator streams and fan them
+/// across workers.
+enum ServerAggregator {
+    /// Unsharded: one whole-vector aggregator.
+    Plain(Box<dyn Aggregator>),
+    /// Coordinate-sharded: per-shard inner aggregator instances.
+    Sharded(ShardedAggregator),
+}
+
+impl ServerAggregator {
+    /// The uniform [`Aggregator`] view (batch paths).
+    fn as_aggregator(&mut self) -> &mut dyn Aggregator {
+        match self {
+            ServerAggregator::Plain(a) => a.as_mut(),
+            ServerAggregator::Sharded(s) => s,
+        }
+    }
+
+    /// Whether the configured algorithm streams natively (linear
+    /// aggregators fold in O(width) state).
+    fn supports_streaming(&self) -> bool {
+        match self {
+            ServerAggregator::Plain(a) => a.supports_streaming(),
+            ServerAggregator::Sharded(s) => s.supports_streaming(),
+        }
+    }
+}
+
 /// The whole-experiment driver (single-process simulation).
 pub struct FlDriver<'rt> {
     cfg: ExperimentConfig,
     rt: &'rt Runtime,
     collaborators: Vec<Collaborator<'rt>>,
-    /// Server-side decompressors, one per collaborator.
-    server_decompressors: Vec<Box<dyn UpdateCompressor + 'rt>>,
-    /// The round aggregator. With `engine.shard_size > 0` this is a
-    /// [`ShardedAggregator`] and rounds drive it shard-by-shard via
-    /// [`Aggregator::aggregate_shard`]; otherwise it is the plain
-    /// configured aggregator and rounds call [`Aggregator::aggregate`]
-    /// once with all reconstructions materialized.
-    aggregator: Box<dyn Aggregator>,
+    /// Server-side decompressors, one per collaborator, each wrapped in
+    /// the decode meter so every reconstruction during aggregation is
+    /// counted ([`crate::compression::DecodeStats`]).
+    server_decompressors: Vec<MeteredDecoder<'rt>>,
+    /// The round aggregator. The streaming path
+    /// ([`crate::config::AggPath`]) folds one reconstruction at a time
+    /// into accumulator streams (per shard when sharded); the batch path
+    /// drives [`Aggregator::aggregate_stale`] /
+    /// [`Aggregator::aggregate_shard_stale`] exactly as before.
+    server_agg: ServerAggregator,
     /// Fan-out pool for per-collaborator round work.
     engine: ParallelRoundEngine,
     /// Deadline-driven round discipline (`engine.mode = "async"` only):
@@ -314,13 +403,13 @@ impl<'rt> FlDriver<'rt> {
         let mut network = SimulatedNetwork::from_config(&cfg.network);
         // One live aggregator either way: the sharded adapter wraps the
         // configured algorithm when coordinate sharding is requested.
-        let aggregator: Box<dyn Aggregator> = if cfg.engine.shard_size > 0 {
-            Box::new(ShardedAggregator::new(
+        let server_agg = if cfg.engine.shard_size > 0 {
+            ServerAggregator::Sharded(ShardedAggregator::new(
                 cfg.aggregation.clone(),
                 cfg.engine.shard_size,
             )?)
         } else {
-            crate::aggregation::from_config(&cfg.aggregation)?
+            ServerAggregator::Plain(crate::aggregation::from_config(&cfg.aggregation)?)
         };
         let engine = ParallelRoundEngine::new(cfg.engine.parallelism);
         let async_engine = AsyncRoundEngine::from_config(&cfg.engine, cfg.seed);
@@ -329,7 +418,7 @@ impl<'rt> FlDriver<'rt> {
 
         // Build compressors (+ pre-pass when using the AE scheme).
         let mut collaborators = Vec::with_capacity(cfg.fl.collaborators);
-        let mut server_decompressors: Vec<Box<dyn UpdateCompressor + 'rt>> = Vec::new();
+        let mut server_decompressors: Vec<MeteredDecoder<'rt>> = Vec::new();
         let mut prepass_results = Vec::new();
 
         match &cfg.compression {
@@ -391,8 +480,9 @@ impl<'rt> FlDriver<'rt> {
                         TrafficKind::DecoderShipment,
                         ship.wire_bytes(),
                     );
-                    server_decompressors
-                        .push(Box::new(AeCompressor::server(pipeline, pp.dec_params.clone())?));
+                    server_decompressors.push(MeteredDecoder::new(Box::new(
+                        AeCompressor::server(pipeline, pp.dec_params.clone())?,
+                    )));
                     let comp =
                         Box::new(AeCompressor::collaborator(pipeline, pp.enc_params.clone())?);
                     collaborators.push(Collaborator::new(
@@ -417,7 +507,7 @@ impl<'rt> FlDriver<'rt> {
                     let seed = cfg.seed.wrapping_mul(31).wrapping_add(id as u64);
                     let comp = crate::compression::from_config(other, model.n_params, seed)?;
                     let decomp = crate::compression::from_config(other, model.n_params, seed)?;
-                    server_decompressors.push(decomp);
+                    server_decompressors.push(MeteredDecoder::new(decomp));
                     collaborators.push(Collaborator::new(
                         rt,
                         &cfg.model,
@@ -437,7 +527,7 @@ impl<'rt> FlDriver<'rt> {
             rt,
             collaborators,
             server_decompressors,
-            aggregator,
+            server_agg,
             engine,
             async_engine,
             network,
@@ -489,6 +579,216 @@ impl<'rt> FlDriver<'rt> {
             sel.sort_unstable();
             sel
         }
+    }
+
+    /// Whether this round's aggregation runs through the streaming
+    /// accumulator path (one full decode per update) or a batch path —
+    /// see [`crate::config::AggPath`] for the `auto` policy.
+    fn use_streaming_path(&self) -> bool {
+        match self.cfg.engine.agg_path {
+            AggPath::Batch => false,
+            AggPath::Stream => true,
+            AggPath::Auto => {
+                self.cfg.engine.shard_size == 0 || self.server_agg.supports_streaming()
+            }
+        }
+    }
+
+    /// The streaming-accumulator aggregation path: decode each update
+    /// fully **exactly once** (the decode meter asserts this), fold it
+    /// into the aggregator's accumulator streams, and drop the
+    /// reconstruction before the next decode.
+    ///
+    /// Unsharded — or sharded with one worker — everything runs on the
+    /// coordinator thread: peak memory is the accumulators plus a single
+    /// transient reconstruction, independent of the participant count.
+    /// Sharded with `engine.parallelism > 1`, the per-shard streams are
+    /// chunked contiguously across `std::thread::scope` workers, each
+    /// fed every reconstruction through a bounded (capacity-1) channel:
+    /// the coordinator still decodes each update once, in update order,
+    /// and every shard stream still ingests in that order, so results
+    /// are bitwise-identical at any worker count while at most a handful
+    /// of reconstructions are in flight.
+    ///
+    /// Stores the new global model and returns the fresh updates'
+    /// reconstruction MSEs (same order and arithmetic as the batch
+    /// paths).
+    fn aggregate_streaming(
+        &mut self,
+        updates: &[(usize, u32, CompressedUpdate, usize)],
+        decay: f64,
+        agg_stats: &mut AggRoundStats,
+    ) -> Result<Vec<f32>> {
+        let n = self.global.len();
+        let m = updates.len();
+        let staleness: Vec<usize> = updates.iter().map(|u| u.3).collect();
+        let plan = StreamPlan::stale(
+            n,
+            updates.iter().map(|u| u.1 as f64).collect(),
+            &staleness,
+            decay,
+        )?;
+        // Peak model: native streams hold O(n) accumulator state across
+        // all shards; buffering adapters (order-sensitive aggregators
+        // forced onto this path) hold the whole batch.
+        let accum_floats = if self.server_agg.supports_streaming() {
+            n
+        } else {
+            m * n
+        };
+
+        // Split the disjoint field borrows once: the accumulator streams
+        // borrow `server_agg`, decoding borrows the decompressors, the
+        // MSE bookkeeping borrows the collaborators.
+        let decomps = &mut self.server_decompressors;
+        let collaborators = &self.collaborators;
+        let mut mses: Vec<f32> = Vec::with_capacity(m);
+        let mut decode_one = |idx: usize, mses: &mut Vec<f32>| -> Result<Vec<f32>> {
+            let (cid, _, update, age) = &updates[idx];
+            let recon = decomps[*cid].decompress(update)?;
+            if recon.len() != n {
+                return Err(FedAeError::Coordination(format!(
+                    "collaborator {cid}: decode returned {} values, expected {n}",
+                    recon.len()
+                )));
+            }
+            if let Err(i) = tensor::check_finite(&recon) {
+                return Err(FedAeError::Coordination(format!(
+                    "non-finite reconstruction from collaborator {cid} at index {i}"
+                )));
+            }
+            if *age == 0 {
+                mses.push(tensor::mse(&recon, collaborators[*cid].params()) as f32);
+            }
+            Ok(recon)
+        };
+
+        match &mut self.server_agg {
+            ServerAggregator::Plain(agg) => {
+                agg_stats.peak_floats = (accum_floats + n) as u64;
+                let mut stream = agg.begin_stream(&plan)?;
+                for i in 0..m {
+                    let recon = decode_one(i, &mut mses)?;
+                    // Hand the reconstruction over: buffering streams
+                    // keep it without a copy, folding streams drop it.
+                    stream.ingest_owned(recon)?;
+                }
+                self.global = stream.finalize()?;
+            }
+            ServerAggregator::Sharded(sharded) => {
+                let mut shard_streams = sharded.begin_shard_streams(&plan)?;
+                let workers = self.engine.workers().min(shard_streams.len());
+                if workers <= 1 {
+                    agg_stats.peak_floats = (accum_floats + n) as u64;
+                    let mut new_global = vec![0.0f32; n];
+                    for i in 0..m {
+                        let recon = decode_one(i, &mut mses)?;
+                        for (range, stream) in shard_streams.iter_mut() {
+                            stream.ingest(&recon[range.clone()])?;
+                        }
+                    }
+                    for (range, stream) in shard_streams {
+                        let piece = stream.finalize()?;
+                        if piece.len() != range.len() {
+                            return Err(FedAeError::Coordination(format!(
+                                "shard {}..{} aggregated to {} values",
+                                range.start,
+                                range.end,
+                                piece.len()
+                            )));
+                        }
+                        new_global[range].copy_from_slice(&piece);
+                    }
+                    self.global = new_global;
+                } else {
+                    // Bounded channels keep at most ~3 reconstructions
+                    // (the one being distributed plus one queued / one
+                    // being ingested, all shared as one Arc) alive at
+                    // once, regardless of worker count.
+                    agg_stats.peak_floats = (accum_floats + 3 * n) as u64;
+                    let chunks = self.engine.chunk(shard_streams);
+                    let new_global = std::thread::scope(|scope| -> Result<Vec<f32>> {
+                        let mut txs = Vec::with_capacity(chunks.len());
+                        let mut handles = Vec::with_capacity(chunks.len());
+                        for mut chunk in chunks {
+                            let (tx, rx) = mpsc::sync_channel::<Arc<Vec<f32>>>(1);
+                            txs.push(tx);
+                            handles.push(scope.spawn(
+                                move || -> Result<Vec<(std::ops::Range<usize>, Vec<f32>)>> {
+                                    for recon in rx.iter() {
+                                        for (range, stream) in chunk.iter_mut() {
+                                            stream.ingest(&recon[range.clone()])?;
+                                        }
+                                    }
+                                    chunk
+                                        .into_iter()
+                                        .map(|(range, stream)| {
+                                            stream.finalize().map(|piece| (range, piece))
+                                        })
+                                        .collect()
+                                },
+                            ));
+                        }
+                        // Feed: decode each update once, share the Arc
+                        // with every worker. A send only fails when that
+                        // worker already bailed with an error, which the
+                        // join below surfaces; a decode error aborts the
+                        // feed and outranks the workers' resulting
+                        // under-ingest errors.
+                        let mut feed_err = None;
+                        for i in 0..m {
+                            match decode_one(i, &mut mses) {
+                                Ok(recon) => {
+                                    let recon = Arc::new(recon);
+                                    for tx in &txs {
+                                        let _ = tx.send(recon.clone());
+                                    }
+                                }
+                                Err(e) => {
+                                    feed_err = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        drop(txs);
+                        let mut new_global = vec![0.0f32; n];
+                        let mut worker_err = None;
+                        for handle in handles {
+                            let joined = handle
+                                .join()
+                                .unwrap_or_else(|payload| std::panic::resume_unwind(payload));
+                            match joined {
+                                Ok(pieces) => {
+                                    for (range, piece) in pieces {
+                                        if piece.len() != range.len() {
+                                            return Err(FedAeError::Coordination(format!(
+                                                "shard {}..{} aggregated to {} values",
+                                                range.start,
+                                                range.end,
+                                                piece.len()
+                                            )));
+                                        }
+                                        new_global[range].copy_from_slice(&piece);
+                                    }
+                                }
+                                Err(e) => {
+                                    worker_err.get_or_insert(e);
+                                }
+                            }
+                        }
+                        if let Some(e) = feed_err {
+                            return Err(e);
+                        }
+                        if let Some(e) = worker_err {
+                            return Err(e);
+                        }
+                        Ok(new_global)
+                    })?;
+                    self.global = new_global;
+                }
+            }
+        }
+        Ok(mses)
     }
 
     /// Run one communication round (paper Fig 3).
@@ -655,15 +955,26 @@ impl<'rt> FlDriver<'rt> {
             }
         }
 
-        // 3. Server-side reconstruction + aggregation: either the
-        //    materialized path (every reconstruction at once, then one
-        //    aggregate call) or, with `engine.shard_size > 0`, the
-        //    memory-bounded path streaming coordinate shards through the
-        //    ShardedAggregator. Async mode appends the buffered late
-        //    updates due this round, tagged by staleness; both paths then
-        //    go through the staleness-discounted trait methods (a no-op
-        //    scaling when everything is fresh and decay is 1.0, which is
-        //    what keeps sync results bitwise-unchanged).
+        // 3. Server-side reconstruction + aggregation. Three execution
+        //    paths, all bitwise-identical for a fixed seed
+        //    (rust/tests/streaming_agg.rs):
+        //    * streaming (default for unsharded rounds and for the
+        //      linear aggregators under sharding): each update is fully
+        //      decoded exactly ONCE and folded straight into the
+        //      aggregator's accumulator streams — per shard when
+        //      sharded, fanned across scoped-thread workers when
+        //      `parallelism > 1`;
+        //    * shard-major batch (order-sensitive aggregators under
+        //      sharding): coordinate ranges stream through
+        //      `decompress_range`, bounding peak memory at
+        //      participants x shard_size;
+        //    * materialized batch (`agg_path = "batch"`, unsharded):
+        //      every reconstruction at once, then one aggregate call.
+        //    Async mode appends the buffered late updates due this
+        //    round, tagged by staleness; every path applies the same
+        //    `α/(s+1)` weight discount (a x1.0 no-op when everything is
+        //    fresh and decay is 1.0, which is what keeps sync results
+        //    bitwise-unchanged).
         let decay = self
             .async_engine
             .as_ref()
@@ -686,12 +997,25 @@ impl<'rt> FlDriver<'rt> {
             }
         }
         let shard_size = self.cfg.engine.shard_size;
+        let agg_sw = Stopwatch::start();
+        let mut agg_stats = AggRoundStats::default();
         let recon_mses: Vec<f32> = if updates.is_empty() {
             // Every upload was late or dropped (async only): the global
             // model carries over unchanged this round.
             Vec::new()
+        } else if self.use_streaming_path() {
+            self.aggregate_streaming(&updates, decay, &mut agg_stats)?
         } else if shard_size > 0 {
             let n = self.global.len();
+            let m = updates.len();
+            // Peak model: every update's slice of the current shard,
+            // plus one transient full reconstruction per range call for
+            // schemes without random access (AE decoder, sketch).
+            let full_range = updates
+                .iter()
+                .any(|(cid, ..)| self.server_decompressors[*cid].range_decode_is_full());
+            agg_stats.peak_floats =
+                (m * shard_size.min(n) + if full_range { n } else { 0 }) as u64;
             let mut new_global = vec![0.0f32; n];
             let staleness: Vec<usize> = updates.iter().map(|u| u.3).collect();
             // Reconstruction error accumulators, one per update, built up
@@ -732,9 +1056,12 @@ impl<'rt> FlDriver<'rt> {
                         values: piece,
                     });
                 }
-                let piece =
-                    self.aggregator
-                        .aggregate_shard_stale(s, shard_updates, &staleness, decay)?;
+                let piece = self.server_agg.as_aggregator().aggregate_shard_stale(
+                    s,
+                    shard_updates,
+                    &staleness,
+                    decay,
+                )?;
                 if piece.len() != range.len() {
                     return Err(FedAeError::Coordination(format!(
                         "shard {s} aggregated to {} values, expected {}",
@@ -752,6 +1079,7 @@ impl<'rt> FlDriver<'rt> {
                 .map(|(_, &e)| (e / n as f64) as f32)
                 .collect()
         } else {
+            agg_stats.peak_floats = (updates.len() * self.global.len()) as u64;
             let mut weighted = Vec::with_capacity(updates.len());
             let mut staleness = Vec::with_capacity(updates.len());
             let mut mses = Vec::with_capacity(updates.len());
@@ -771,9 +1099,19 @@ impl<'rt> FlDriver<'rt> {
                     values: recon,
                 });
             }
-            self.global = self.aggregator.aggregate_stale(weighted, &staleness, decay)?;
+            self.global = self
+                .server_agg
+                .as_aggregator()
+                .aggregate_stale(weighted, &staleness, decay)?;
             mses
         };
+        for d in &mut self.server_decompressors {
+            let s = d.take_stats();
+            agg_stats.full_decodes += s.full_decodes;
+            agg_stats.range_decodes += s.range_decodes;
+            agg_stats.decoded_floats += s.decoded_floats;
+        }
+        agg_stats.ms = agg_sw.elapsed_ms();
 
         // 4. Evaluate the new global model (on the batch already gathered
         //    for the per-collaborator evals — identical values).
@@ -816,6 +1154,7 @@ impl<'rt> FlDriver<'rt> {
             bytes_up,
             bytes_down,
             stragglers: stats,
+            agg: agg_stats,
         })
     }
 
@@ -836,8 +1175,11 @@ impl<'rt> FlDriver<'rt> {
     /// Run the configured number of rounds; returns the final outcome.
     pub fn run(&mut self) -> Result<RoundOutcome> {
         let mut last = None;
+        let mut agg_totals = AggRoundStats::default();
         for _ in 0..self.cfg.fl.rounds {
-            last = Some(self.run_round()?);
+            let outcome = self.run_round()?;
+            agg_totals.accumulate(&outcome.agg);
+            last = Some(outcome);
         }
         let outcome = last.ok_or_else(|| FedAeError::Config("zero rounds".into()))?;
         let model = self.rt.manifest().model(&self.cfg.model)?;
@@ -857,6 +1199,18 @@ impl<'rt> FlDriver<'rt> {
         );
         self.log
             .add_summary("final_eval_acc", format!("{:.4}", outcome.eval_acc));
+        // Server aggregation cost accounting (one source of truth with
+        // the per-round `agg_*` log fields and the streaming-agg bench).
+        self.log
+            .add_summary("agg_full_decodes_total", agg_totals.full_decodes);
+        self.log
+            .add_summary("agg_range_decodes_total", agg_totals.range_decodes);
+        self.log
+            .add_summary("agg_decoded_floats_total", agg_totals.decoded_floats);
+        self.log
+            .add_summary("agg_peak_floats_max", agg_totals.peak_floats);
+        self.log
+            .add_summary("agg_ms_total", format!("{:.3}", agg_totals.ms));
         if let Some(engine) = &self.async_engine {
             let t = engine.totals();
             self.log.add_summary("async_admitted_total", t.admitted);

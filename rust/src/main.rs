@@ -15,7 +15,7 @@
 //! fedae worker --connect 127.0.0.1:7070 --id 0
 //! ```
 
-use fedae::config::{CompressionConfig, EngineMode, ExperimentConfig};
+use fedae::config::{AggPath, CompressionConfig, EngineMode, ExperimentConfig};
 use fedae::coordinator::FlDriver;
 use fedae::error::FedAeError;
 use fedae::metrics::{ascii_plot, print_table};
@@ -42,6 +42,7 @@ fn main() -> Result<()> {
                  train    --config <file.json> | [--model mnist|cifar] [--compression ae|identity|topk|quantize|subsample|sketch]\n\
                  \u{20}        [--rounds N] [--collabs N] [--local-epochs N] [--seed N] [--out metrics.json]\n\
                  \u{20}        [--parallelism N (0 = all cores)] [--shard-size N (0 = unsharded aggregation)]\n\
+                 \u{20}        [--agg-path auto|batch|stream (server aggregation execution path)]\n\
                  \u{20}        [--mode sync|async] [--deadline-ms N (0 = infinite)] [--dropout-rate X]\n\
                  \u{20}        [--staleness-decay A] [--straggler-log-std S] [--jitter-ms N]\n\
                  prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N]\n\
@@ -108,6 +109,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.data.test_size = args.get_usize("test-size", cfg.data.test_size)?;
     cfg.engine.parallelism = args.get_usize("parallelism", cfg.engine.parallelism)?;
     cfg.engine.shard_size = args.get_usize("shard-size", cfg.engine.shard_size)?;
+    if let Some(p) = args.get("agg-path") {
+        cfg.engine.agg_path = AggPath::parse(p)?;
+    }
     if let Some(m) = args.get("mode") {
         cfg.engine.mode = EngineMode::parse(m)?;
     }
@@ -124,7 +128,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::from_dir(artifacts_dir(args))?;
     let cfg = config_from_args(args)?;
     println!(
-        "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={} mode={}",
+        "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={} agg_path={} mode={}",
         cfg.name,
         cfg.model,
         cfg.compression.kind_name(),
@@ -132,6 +136,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.fl.collaborators,
         cfg.engine.parallelism,
         cfg.engine.shard_size,
+        cfg.engine.agg_path.name(),
         cfg.engine.mode.name()
     );
     let is_async = cfg.engine.mode == EngineMode::Async;
@@ -162,8 +167,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             String::new()
         };
         println!(
-            "round {r:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e}{async_suffix}",
-            out.eval_loss, out.eval_acc, out.bytes_up, out.bytes_down, out.mean_recon_mse
+            "round {r:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e} \
+             agg_decodes={} agg_peak_floats={} agg_ms={:.1}{async_suffix}",
+            out.eval_loss,
+            out.eval_acc,
+            out.bytes_up,
+            out.bytes_down,
+            out.mean_recon_mse,
+            out.agg.full_decodes,
+            out.agg.peak_floats,
+            out.agg.ms
         );
     }
     let acc = driver.log.final_accuracy().unwrap_or(0.0);

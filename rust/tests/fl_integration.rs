@@ -285,6 +285,7 @@ fn shipped_config_presets_parse_and_validate() {
         "configs/fig8_9_two_collab.json",
         "configs/mnist_ae_10collab.json",
         "configs/mnist_ae_256collab.json",
+        "configs/mnist_ae_1024collab.json",
         "configs/mnist_ae_async_256collab.json",
         "configs/baseline_topk.json",
     ] {
@@ -309,4 +310,13 @@ fn shipped_config_presets_parse_and_validate() {
     assert!(cfg.engine.deadline_ms > 0.0);
     assert!(cfg.engine.dropout_rate > 0.0);
     assert!(cfg.engine.straggler_log_std > 0.0);
+    // The 1024-collaborator preset engages every server scaling knob:
+    // all-cores fan-out (collaborator work AND aggregation shards),
+    // sharded aggregation, and the streaming accumulator path (one AE
+    // decode per update instead of one per shard).
+    let cfg = ExperimentConfig::load("configs/mnist_ae_1024collab.json").unwrap();
+    assert_eq!(cfg.fl.collaborators, 1024);
+    assert_eq!(cfg.engine.parallelism, 0);
+    assert_eq!(cfg.engine.shard_size, 4096);
+    assert_eq!(cfg.engine.agg_path, fedae::config::AggPath::Stream);
 }

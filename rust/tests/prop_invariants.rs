@@ -319,6 +319,77 @@ fn prop_fedavg_equal_weights_equals_mean() {
 }
 
 #[test]
+fn prop_streaming_accumulation_matches_batch_bitwise() {
+    // ISSUE 4 satellite: for every aggregator (sharded adapter included),
+    // random weights/staleness/decay, random shapes, and multiple rounds
+    // of evolving internal state, begin_stream -> ingest x m -> finalize
+    // is BITWISE identical to the batch aggregate_stale call.
+    use fedae::aggregation::{ShardedAggregator, StreamPlan};
+    prop::check("streaming_vs_batch", |rng| {
+        let n = prop::len_in(rng, 1, 48);
+        let m = prop::len_in(rng, 1, 7);
+        let decay = 0.2 + rng.uniform() * 0.8;
+        let cfgs = [
+            AggregationConfig::Mean,
+            AggregationConfig::FedAvg,
+            AggregationConfig::Median,
+            AggregationConfig::TrimmedMean { trim: 0.1 },
+            AggregationConfig::FedAvgM { beta: 0.9 },
+            AggregationConfig::FedBuff {
+                goal: 1 + rng.below(2 * m),
+                lr: 0.5,
+            },
+        ];
+        for cfg in cfgs {
+            let shard_size = 1 + rng.below(n + 2);
+            let mut pairs: Vec<(Box<dyn Aggregator>, Box<dyn Aggregator>)> = vec![
+                (
+                    aggregation::from_config(&cfg).unwrap(),
+                    aggregation::from_config(&cfg).unwrap(),
+                ),
+                (
+                    Box::new(ShardedAggregator::new(cfg.clone(), shard_size).unwrap()),
+                    Box::new(ShardedAggregator::new(cfg.clone(), shard_size).unwrap()),
+                ),
+            ];
+            for round in 0..3 {
+                let updates: Vec<WeightedUpdate> = (0..m)
+                    .map(|_| WeightedUpdate {
+                        weight: 0.25 + rng.uniform() * 8.0,
+                        values: prop::vec_f32(rng, n, 3.0),
+                    })
+                    .collect();
+                let staleness: Vec<usize> = (0..m).map(|_| rng.below(4)).collect();
+                for (batch, streaming) in pairs.iter_mut() {
+                    let want = batch
+                        .aggregate_stale(updates.clone(), &staleness, decay)
+                        .map_err(|e| format!("{e}"))?;
+                    let plan = StreamPlan::stale(
+                        n,
+                        updates.iter().map(|u| u.weight).collect(),
+                        &staleness,
+                        decay,
+                    )
+                    .map_err(|e| format!("{e}"))?;
+                    let mut stream = streaming.begin_stream(&plan).map_err(|e| format!("{e}"))?;
+                    for u in &updates {
+                        stream.ingest(&u.values).map_err(|e| format!("{e}"))?;
+                    }
+                    let got = stream.finalize().map_err(|e| format!("{e}"))?;
+                    if want.iter().map(|v| v.to_bits()).ne(got.iter().map(|v| v.to_bits())) {
+                        return Err(format!(
+                            "{cfg:?} round {round} (shard_size {shard_size}): \
+                             streaming diverged from batch"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_savings_ratio_monotone_and_bounded() {
     prop::check("savings_monotone", |rng| {
         let orig = 1_000.0 + rng.uniform() * 1e6;

@@ -1,0 +1,265 @@
+//! Driver-level equivalence + accounting tests for the streaming
+//! accumulator aggregation path (ISSUE 4 acceptance):
+//!
+//! * for a fixed seed, the streaming path (`engine.agg_path = "stream"`,
+//!   any `parallelism` x `shard_size`) produces bitwise-identical global
+//!   params, recon-MSE and traffic ledger to the batch path
+//!   (`"batch"`), across all aggregators and both round disciplines;
+//! * the decode meter proves the linear path runs exactly **one** full
+//!   decode per update (vs `shard_count` for the batch path on schemes
+//!   without random access);
+//! * peak buffered floats on the streaming path are independent of the
+//!   participant count.
+
+use fedae::config::{AggPath, AggregationConfig, CompressionConfig, EngineMode, ExperimentConfig};
+use fedae::coordinator::FlDriver;
+use fedae::runtime::Runtime;
+
+/// MNIST classifier parameter count (fixed by the manifest).
+const N: u64 = 15_910;
+
+fn runtime() -> Runtime {
+    Runtime::from_dir("artifacts").expect("runtime loads")
+}
+
+fn base_cfg(compression: CompressionConfig, aggregation: AggregationConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mnist".into();
+    cfg.compression = compression;
+    cfg.aggregation = aggregation;
+    cfg.fl.collaborators = 6;
+    cfg.fl.rounds = 2;
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 96;
+    cfg.data.test_size = 128;
+    cfg.seed = 29;
+    cfg
+}
+
+/// Everything that must be invariant across `agg_path` settings, plus
+/// the per-round aggregation accounting (which legitimately differs).
+type RunArtifacts = (
+    Vec<fedae::coordinator::RoundOutcome>,
+    Vec<f32>,
+    Vec<fedae::network::Transfer>,
+    Vec<fedae::coordinator::AggRoundStats>,
+);
+
+fn run_rounds(cfg: ExperimentConfig, rt: &Runtime) -> RunArtifacts {
+    let rounds = cfg.fl.rounds;
+    let mut driver = FlDriver::new(rt, cfg, None).unwrap();
+    let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
+    assert!(driver.network.ledger().check_conservation());
+    let agg: Vec<_> = outcomes.iter().map(|o| o.agg).collect();
+    (
+        outcomes,
+        driver.global_params().to_vec(),
+        driver.network.ledger().transfers().to_vec(),
+        agg,
+    )
+}
+
+fn all_aggregations() -> Vec<AggregationConfig> {
+    vec![
+        AggregationConfig::Mean,
+        AggregationConfig::FedAvg,
+        AggregationConfig::Median,
+        AggregationConfig::TrimmedMean { trim: 0.2 },
+        AggregationConfig::FedAvgM { beta: 0.7 },
+        // Goal 5 with 6 updates/round: round 0 bootstraps, round 1
+        // buffers past the goal and steps — both FedBuff phases run.
+        AggregationConfig::FedBuff { goal: 5, lr: 0.5 },
+    ]
+}
+
+#[test]
+fn streaming_matches_batch_for_all_aggregators() {
+    let rt = runtime();
+    for aggregation in all_aggregations() {
+        for shard_size in [0usize, 4097] {
+            let mk = |path: AggPath| {
+                let mut cfg = base_cfg(CompressionConfig::Identity, aggregation.clone());
+                cfg.engine.shard_size = shard_size;
+                cfg.engine.agg_path = path;
+                cfg
+            };
+            let batch = run_rounds(mk(AggPath::Batch), &rt);
+            let stream = run_rounds(mk(AggPath::Stream), &rt);
+            let auto = run_rounds(mk(AggPath::Auto), &rt);
+            for (label, got) in [("stream", &stream), ("auto", &auto)] {
+                assert_eq!(
+                    batch.0, got.0,
+                    "{aggregation:?} shard_size={shard_size} {label}: outcomes diverged"
+                );
+                assert_eq!(
+                    batch.1, got.1,
+                    "{aggregation:?} shard_size={shard_size} {label}: global params diverged"
+                );
+                assert_eq!(
+                    batch.2, got.2,
+                    "{aggregation:?} shard_size={shard_size} {label}: ledger diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_parallel_shards_match_sequential_batch() {
+    // Shard-parallel streaming (shard streams fanned across workers) is
+    // bitwise-identical to the sequential batch path, including for the
+    // stateful per-shard FedAvgM momentum.
+    let rt = runtime();
+    for aggregation in [
+        AggregationConfig::Mean,
+        AggregationConfig::FedAvgM { beta: 0.7 },
+    ] {
+        let mut batch_cfg = base_cfg(CompressionConfig::Identity, aggregation.clone());
+        batch_cfg.engine.shard_size = 1000;
+        batch_cfg.engine.agg_path = AggPath::Batch;
+        let want = run_rounds(batch_cfg, &rt);
+        for parallelism in [2usize, 4, 0] {
+            let mut cfg = base_cfg(CompressionConfig::Identity, aggregation.clone());
+            cfg.engine.shard_size = 1000;
+            cfg.engine.agg_path = AggPath::Stream;
+            cfg.engine.parallelism = parallelism;
+            let got = run_rounds(cfg, &rt);
+            assert_eq!(
+                want.0, got.0,
+                "{aggregation:?} parallelism={parallelism}: outcomes diverged"
+            );
+            assert_eq!(
+                want.1, got.1,
+                "{aggregation:?} parallelism={parallelism}: global params diverged"
+            );
+            assert_eq!(want.2, got.2);
+        }
+    }
+}
+
+#[test]
+fn streaming_matches_batch_in_async_mode() {
+    // Deadline-driven rounds: late-update buffering and staleness
+    // discounting flow through the stream plan identically to the batch
+    // staleness scaling.
+    let rt = runtime();
+    for aggregation in [
+        AggregationConfig::FedAvg,
+        AggregationConfig::FedBuff { goal: 4, lr: 0.5 },
+    ] {
+        for shard_size in [0usize, 4097] {
+            let mk = |path: AggPath| {
+                let mut cfg = base_cfg(CompressionConfig::Identity, aggregation.clone());
+                cfg.fl.rounds = 4;
+                cfg.network.bandwidth_mbps = 10.0;
+                cfg.network.latency_ms = 50.0;
+                cfg.engine.mode = EngineMode::Async;
+                // Base arrival is ~101 ms (64 KB raw update over a 10
+                // Mbps / 50 ms link): a 110 ms deadline makes late
+                // arrivals near-certain across 24 uploads while typical
+                // rounds still admit most updates.
+                cfg.engine.deadline_ms = 110.0;
+                cfg.engine.dropout_rate = 0.1;
+                cfg.engine.straggler_log_std = 0.6;
+                cfg.engine.jitter_ms = 40.0;
+                cfg.engine.staleness_decay = 0.7;
+                cfg.engine.shard_size = shard_size;
+                cfg.engine.agg_path = path;
+                cfg
+            };
+            let batch = run_rounds(mk(AggPath::Batch), &rt);
+            let stream = run_rounds(mk(AggPath::Stream), &rt);
+            // The straggler realization must have exercised the buffer.
+            let stale_total: usize = batch.0.iter().map(|o| o.stragglers.stale_applied).sum();
+            assert!(stale_total > 0, "{aggregation:?}: no stale updates applied");
+            assert_eq!(batch.0, stream.0, "{aggregation:?} shard={shard_size}");
+            assert_eq!(batch.1, stream.1, "{aggregation:?} shard={shard_size}");
+            assert_eq!(batch.2, stream.2, "{aggregation:?} shard={shard_size}");
+        }
+    }
+}
+
+#[test]
+fn decode_meter_one_full_decode_per_update_on_linear_path() {
+    let rt = runtime();
+    let m = 6u64; // participants per round (full participation)
+
+    // Identity, sharded, streaming: exactly one full decode per update,
+    // zero range decodes, n floats decoded per update.
+    let mut cfg = base_cfg(CompressionConfig::Identity, AggregationConfig::Mean);
+    cfg.engine.shard_size = 3000;
+    cfg.engine.agg_path = AggPath::Stream;
+    let (_, _, _, agg) = run_rounds(cfg, &rt);
+    for (r, a) in agg.iter().enumerate() {
+        assert_eq!(a.full_decodes, m, "round {r}");
+        assert_eq!(a.range_decodes, 0, "round {r}");
+        assert_eq!(a.decoded_floats, m * N, "round {r}");
+    }
+
+    // Identity, sharded, batch: shard_count range decodes per update
+    // (random access — still no full decodes, same floats in total).
+    let shard_count = 15_910usize.div_ceil(3000) as u64; // 6 shards
+    let mut cfg = base_cfg(CompressionConfig::Identity, AggregationConfig::Mean);
+    cfg.engine.shard_size = 3000;
+    cfg.engine.agg_path = AggPath::Batch;
+    let (_, _, _, agg) = run_rounds(cfg, &rt);
+    for a in &agg {
+        assert_eq!(a.full_decodes, 0);
+        assert_eq!(a.range_decodes, m * shard_count);
+        assert_eq!(a.decoded_floats, m * N);
+    }
+
+    // Sketch has no random-access range decode: the batch path pays
+    // shard_count FULL decodes per update...
+    let sketch = CompressionConfig::Sketch {
+        rows: 2,
+        cols: 256,
+        topk: 256,
+    };
+    let mk = |path: AggPath| {
+        let mut cfg = base_cfg(sketch.clone(), AggregationConfig::Mean);
+        cfg.engine.shard_size = 8000; // 2 shards
+        cfg.engine.agg_path = path;
+        cfg
+    };
+    let batch = run_rounds(mk(AggPath::Batch), &rt);
+    for a in &batch.3 {
+        assert_eq!(a.full_decodes, m * 2);
+        assert_eq!(a.decoded_floats, m * 2 * N);
+    }
+    // ...while the streaming path decodes each update exactly once —
+    // with identical results.
+    let stream = run_rounds(mk(AggPath::Stream), &rt);
+    for a in &stream.3 {
+        assert_eq!(a.full_decodes, m);
+        assert_eq!(a.range_decodes, 0);
+        assert_eq!(a.decoded_floats, m * N);
+    }
+    assert_eq!(batch.0, stream.0);
+    assert_eq!(batch.1, stream.1);
+}
+
+#[test]
+fn streaming_peak_floats_independent_of_participants() {
+    let rt = runtime();
+    let peak_for = |collabs: usize, path: AggPath, shard_size: usize| {
+        let mut cfg = base_cfg(CompressionConfig::Identity, AggregationConfig::Mean);
+        cfg.fl.collaborators = collabs;
+        cfg.fl.rounds = 1;
+        cfg.engine.shard_size = shard_size;
+        cfg.engine.agg_path = path;
+        let (_, _, _, agg) = run_rounds(cfg, &rt);
+        agg[0].peak_floats
+    };
+    // Streaming: accumulators (n) + one transient reconstruction (n) —
+    // the same at 4 and 8 collaborators, sharded or not.
+    assert_eq!(peak_for(4, AggPath::Stream, 0), 2 * N);
+    assert_eq!(peak_for(8, AggPath::Stream, 0), 2 * N);
+    assert_eq!(peak_for(8, AggPath::Stream, 3000), 2 * N);
+    // Batch: every reconstruction at once — scales with participants.
+    assert_eq!(peak_for(4, AggPath::Batch, 0), 4 * N);
+    assert_eq!(peak_for(8, AggPath::Batch, 0), 8 * N);
+    // Shard-major batch: participants x shard_size (identity is random
+    // access, so no transient full reconstruction).
+    assert_eq!(peak_for(8, AggPath::Batch, 3000), 8 * 3000);
+}
