@@ -1,0 +1,999 @@
+//! Tiled compute kernels for the native backend's training hot path.
+//!
+//! Every simulated round spends nearly all of its wall-clock inside the
+//! dense/conv loops of [`super::NativeBackend`] (local classifier training,
+//! the paper's §3 pre-pass AE training, and the per-round encode/decode of
+//! Fig 3). This module provides the cache-blocked, register-tiled f32 GEMM
+//! that path needs, in the three variants dense training uses:
+//!
+//! * [`gemm_nn`] — `C = A·B` (layer forward: `x @ W`),
+//! * [`gemm_tn`] — `C = Aᵀ·B` (weight gradient: `xᵀ @ d`),
+//! * [`gemm_nt`] — `C = A·Bᵀ` (input gradient: `d @ Wᵀ`),
+//!
+//! plus the im2col/col2im bridge that turns the 3x3 SAME convolution into a
+//! GEMM, a fused bias+activation / activation-derivative [`Epilogue`]
+//! applied during tile writeback (no second pass over the output), and the
+//! chunked [`adam_step`] optimizer update shared by the AE and classifier
+//! train steps.
+//!
+//! # Tiling scheme
+//!
+//! ```text
+//!               NC columns of B/C per block
+//!             ┌────────┬────────┐            per (KC, NC) block, B is
+//!        KC   │ B pack │  ...   │            packed into NR-wide panels
+//!        rows │ (NR-   │        │            (zero-padded at ragged
+//!             │ panels)│        │            edges); per MR rows of A,
+//!             └────────┴────────┘            an MR x KC panel of A is
+//!   ┌────┐    ┌────────┬────────┐            packed, and an MR x NR
+//! MR│Apck│ -> │ micro- │        │            microkernel accumulates
+//!   └────┘    │ kernel │        │            acc[MR][NR] over the KC
+//!             └────────┴────────┘            depth in registers.
+//! ```
+//!
+//! The microkernel is plain chunked FMA over fixed-size slices — no
+//! platform intrinsics — written so LLVM autovectorizes the `NR`-wide inner
+//! loop; partial k-blocks accumulate into `C` and the epilogue fires on the
+//! final block only.
+//!
+//! # Determinism
+//!
+//! Every kernel uses a **fixed, data-independent accumulation order**: each
+//! output element is a sum over `k` in strictly ascending index order
+//! (sequentially within a k-block, blocks in ascending order), there are no
+//! threads inside any kernel, and no accumulation order depends on buffer
+//! reuse state. Two consequences the test suites pin:
+//!
+//! * a tiled computation is bitwise reproducible across runs, processes and
+//!   worker threads — so the sequential-vs-parallel bitwise parity suites
+//!   (`rust/tests/parallel_round.rs`, `streaming_agg.rs`, `async_round.rs`)
+//!   hold unchanged under `backend.kernel = tiled`;
+//! * tiled results differ from the naive reference loops only by float
+//!   reassociation at the tile boundary (different *rounding*, same math) —
+//!   `rust/tests/kernels.rs` pins a tight relative tolerance.
+//!
+//! The naive per-sample loops in [`super::native`] remain the reference
+//! oracle behind the `backend.kernel = naive` config knob (CLI `--kernel`),
+//! mirroring the `engine.agg_path` A/B pattern.
+//!
+//! # Scratch reuse
+//!
+//! All intermediates (pack panels, per-layer activations, delta ping-pong
+//! buffers, im2col columns, the flat gradient) live in a thread-local
+//! [`Workspace`] ([`with_ws`]). The dominant hot path — the AE train step,
+//! which runs the 1M+-param funnel every pre-pass epoch — is zero-alloc in
+//! steady state (only its returned outputs are allocated); classifier
+//! steps reuse the workspace for activations/deltas/packing/im2col but
+//! additionally allocate the gradient they hand back to SGD. Workspace
+//! contents are fully overwritten by each kernel invocation; results never
+//! depend on what a buffer held before.
+
+use crate::error::{FedAeError, Result};
+
+/// Rows of `A`/`C` per microkernel tile.
+pub const MR: usize = 4;
+/// Columns of `B`/`C` per microkernel tile (the autovectorized width).
+pub const NR: usize = 16;
+/// Depth (`k`) of a cache block: one packed `A` panel is `MR * KC` floats.
+const KC: usize = 256;
+/// Columns of `B` per cache block: one packed `B` block is `KC * NC` floats
+/// (~256 KiB), sized to stay cache-resident across the row sweep.
+const NC: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Kernel selection knob
+// ---------------------------------------------------------------------------
+
+/// Which compute-kernel implementation the native backend runs.
+///
+/// Like `engine.agg_path`, this changes *how* training executes — never
+/// *what* it simulates: both kernels implement the same math, agree within
+/// float-rounding tolerance (`rust/tests/kernels.rs`), and are individually
+/// bitwise deterministic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// The original per-sample reference loops — the correctness oracle.
+    Naive,
+    /// Cache-blocked, register-tiled GEMM + im2col kernels (the default).
+    #[default]
+    Tiled,
+}
+
+impl Kernel {
+    /// Stable lowercase name for logs and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Naive => "naive",
+            Kernel::Tiled => "tiled",
+        }
+    }
+
+    /// Parse a kernel string (shared by the JSON config `backend.kernel`
+    /// and the CLI `--kernel` flag).
+    pub fn parse(s: &str) -> Result<Kernel> {
+        Ok(match s {
+            "naive" => Kernel::Naive,
+            "tiled" => Kernel::Tiled,
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "unknown kernel `{other}` (expected naive|tiled)"
+                )))
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Activations and epilogues
+// ---------------------------------------------------------------------------
+
+/// Per-layer activation (shared by the naive and tiled paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// `max(0, x)` — classifier hidden layers.
+    Relu,
+    /// `tanh(x)` — AE hidden layers (paper Eq. 1–3).
+    Tanh,
+    /// Identity — every output layer.
+    Linear,
+}
+
+impl Act {
+    /// Apply the activation to a pre-activation value.
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Act::Relu => {
+                if v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            }
+            Act::Tanh => v.tanh(),
+            Act::Linear => v,
+        }
+    }
+
+    /// Multiply an incoming gradient `d` by the activation derivative,
+    /// evaluated from the **post-activation** value `h` (the form every
+    /// backward pass here uses: relu masks on `h <= 0`, tanh uses
+    /// `1 - h^2`).
+    #[inline]
+    pub fn deriv_mask(self, d: f32, h: f32) -> f32 {
+        match self {
+            Act::Relu => {
+                if h <= 0.0 {
+                    0.0
+                } else {
+                    d
+                }
+            }
+            Act::Tanh => d * (1.0 - h * h),
+            Act::Linear => d,
+        }
+    }
+}
+
+/// Fused tile-writeback epilogue: what happens to each output element on
+/// the final k-block, instead of a separate pass over `C`.
+#[derive(Debug, Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// `C = acc` — plain store.
+    Store,
+    /// `C[i, j] = act(acc + bias[j])` — dense-layer forward.
+    BiasAct {
+        /// Per-output-column bias (length `n`).
+        bias: &'a [f32],
+        /// Activation applied after the bias add.
+        act: Act,
+    },
+    /// `C[i, j] = acc * act'(h[i, j])` — input-gradient writeback fused
+    /// with the *previous* layer's activation derivative.
+    MaskDeriv {
+        /// Post-activation values of the layer whose derivative masks the
+        /// gradient (same shape as `C`).
+        h: &'a [f32],
+        /// Activation whose derivative is applied.
+        act: Act,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// Pack buffers + workspace
+// ---------------------------------------------------------------------------
+
+/// Reusable packing buffers for one GEMM call chain (A panels, B panels).
+#[derive(Debug, Default)]
+pub struct PackBufs {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+/// Thread-local scratch arena threaded through forward/backward/im2col so
+/// steady-state train steps stop allocating fresh buffers per layer per
+/// step. Every field is fully overwritten by the kernel that uses it.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// GEMM packing panels.
+    pub(crate) packs: PackBufs,
+    /// Per-layer post-activation buffers filled by [`mlp_forward_ws`].
+    pub(crate) layers: Vec<Vec<f32>>,
+    /// Delta ping-pong buffer A for [`mlp_backward_ws`].
+    pub(crate) d0: Vec<f32>,
+    /// Delta ping-pong buffer B for [`mlp_backward_ws`].
+    pub(crate) d1: Vec<f32>,
+    /// Loss-gradient seed buffer (`dLoss/d(output)`).
+    pub(crate) dlast: Vec<f32>,
+    /// Flat parameter-gradient buffer.
+    pub(crate) grad: Vec<f32>,
+    /// im2col columns of the first conv layer's input.
+    pub(crate) cols1: Vec<f32>,
+    /// im2col columns of the second conv layer's input.
+    pub(crate) cols2: Vec<f32>,
+    /// Column-gradient buffer for the im2col backward pass.
+    pub(crate) dcols: Vec<f32>,
+}
+
+impl Workspace {
+    /// Post-activation output of forward layer `i` (most recent
+    /// [`mlp_forward_ws`] call on this workspace).
+    pub fn layer(&self, i: usize) -> &[f32] {
+        &self.layers[i]
+    }
+}
+
+std::thread_local! {
+    static WS: std::cell::RefCell<Workspace> = std::cell::RefCell::new(Workspace::default());
+}
+
+/// Run `f` with this thread's kernel workspace. Buffers persist across
+/// calls (zero-alloc steady state); contents carry no information between
+/// calls. Not reentrant — kernels never call back into `with_ws`.
+pub fn with_ws<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    WS.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+// ---------------------------------------------------------------------------
+// The blocked GEMM core
+// ---------------------------------------------------------------------------
+
+/// Row/column stride of a (possibly transposed) matrix view: element
+/// `(i, j)` lives at `data[i * rs + j * cs]`.
+#[derive(Debug, Clone, Copy)]
+struct Stride {
+    rs: usize,
+    cs: usize,
+}
+
+/// `C[m, n] = A[m, k] · B[k, n]` with a fused epilogue (row-major slices).
+pub fn gemm_nn(
+    packs: &mut PackBufs,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: Epilogue<'_>,
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n);
+    gemm_strided(packs, m, k, n, a, Stride { rs: k, cs: 1 }, b, Stride { rs: n, cs: 1 }, c, ep);
+}
+
+/// `C[m, n] = Aᵀ · B` for row-major `A[k, m]`, `B[k, n]` — the
+/// weight-gradient shape (`gW = xᵀ · d`).
+pub fn gemm_tn(
+    packs: &mut PackBufs,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: Epilogue<'_>,
+) {
+    debug_assert!(a.len() >= k * m && b.len() >= k * n);
+    gemm_strided(packs, m, k, n, a, Stride { rs: 1, cs: m }, b, Stride { rs: n, cs: 1 }, c, ep);
+}
+
+/// `C[m, n] = A · Bᵀ` for row-major `A[m, k]`, `B[n, k]` — the
+/// input-gradient shape (`dx = d · Wᵀ`).
+pub fn gemm_nt(
+    packs: &mut PackBufs,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ep: Epilogue<'_>,
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= n * k);
+    gemm_strided(packs, m, k, n, a, Stride { rs: k, cs: 1 }, b, Stride { rs: 1, cs: k }, c, ep);
+}
+
+/// The shared blocked core. Deterministic: for every `C[i, j]` the `k`
+/// products accumulate in strictly ascending `k` order regardless of tile
+/// geometry, and nothing here spawns threads.
+fn gemm_strided(
+    packs: &mut PackBufs,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    sa: Stride,
+    b: &[f32],
+    sb: Stride,
+    c: &mut [f32],
+    ep: Epilogue<'_>,
+) {
+    assert!(k > 0, "gemm: k must be > 0");
+    assert_eq!(c.len(), m * n, "gemm: C must be m*n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    // Single-row fast path (the batch-1 encode/decode shape): a plain
+    // vectorized axpy sweep beats packing when there is no row reuse.
+    if m == 1 && sa.cs == 1 && sb.cs == 1 {
+        gemv_row(a, b, k, n, sb.rs, c, ep);
+        return;
+    }
+    for j0 in (0..n).step_by(NC) {
+        let nc = NC.min(n - j0);
+        let panels = nc.div_ceil(NR);
+        for p0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - p0);
+            let first = p0 == 0;
+            let last = p0 + kc == k;
+            pack_b(&mut packs.b, b, sb, p0, kc, j0, nc, panels);
+            for i0 in (0..m).step_by(MR) {
+                let mr = MR.min(m - i0);
+                pack_a(&mut packs.a, a, sa, i0, mr, p0, kc);
+                for (q, bpanel) in packs.b.chunks_exact(kc * NR).enumerate() {
+                    let jabs = j0 + q * NR;
+                    let nr_eff = NR.min(n - jabs);
+                    let acc = microkernel(&packs.a[..kc * MR], bpanel);
+                    writeback(c, n, i0, mr, jabs, nr_eff, &acc, first, last, &ep);
+                }
+            }
+        }
+    }
+}
+
+/// Pack an `MR x kc` panel of `A` rows `i0..i0+mr` (zero-padded to `MR`),
+/// laid out depth-major so the microkernel reads it sequentially.
+fn pack_a(dst: &mut Vec<f32>, a: &[f32], sa: Stride, i0: usize, mr: usize, p0: usize, kc: usize) {
+    dst.clear();
+    dst.resize(kc * MR, 0.0);
+    if sa.rs == 1 {
+        // Transposed view: one depth-step's rows are contiguous in `a`.
+        for (p, drow) in dst.chunks_exact_mut(MR).enumerate() {
+            let base = (p0 + p) * sa.cs + i0;
+            drow[..mr].copy_from_slice(&a[base..base + mr]);
+        }
+    } else {
+        for (p, drow) in dst.chunks_exact_mut(MR).enumerate() {
+            for (r, dv) in drow.iter_mut().enumerate().take(mr) {
+                *dv = a[(i0 + r) * sa.rs + (p0 + p) * sa.cs];
+            }
+        }
+    }
+}
+
+/// Pack a `kc x nc` block of `B` into `NR`-wide panels (zero-padded at the
+/// ragged right edge), panel-major then depth-major.
+fn pack_b(
+    dst: &mut Vec<f32>,
+    b: &[f32],
+    sb: Stride,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    panels: usize,
+) {
+    dst.clear();
+    dst.resize(panels * kc * NR, 0.0);
+    for (q, panel) in dst.chunks_exact_mut(kc * NR).enumerate() {
+        let jbase = j0 + q * NR;
+        let ncq = NR.min(nc - q * NR);
+        if sb.cs == 1 {
+            for (p, prow) in panel.chunks_exact_mut(NR).enumerate() {
+                let base = (p0 + p) * sb.rs + jbase;
+                prow[..ncq].copy_from_slice(&b[base..base + ncq]);
+            }
+        } else {
+            for (p, prow) in panel.chunks_exact_mut(NR).enumerate() {
+                for (j, pv) in prow.iter_mut().enumerate().take(ncq) {
+                    *pv = b[(p0 + p) * sb.rs + (jbase + j) * sb.cs];
+                }
+            }
+        }
+    }
+}
+
+/// The `MR x NR` register tile: `acc += apanel ⊗ bpanel` over the packed
+/// depth. Fixed trip counts and contiguous panels let LLVM turn the inner
+/// loop into chunked FMA lanes; each `acc[r][j]` sums its `k` products in
+/// ascending order (the determinism contract).
+#[inline]
+fn microkernel(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (arow, brow) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (r, &av) in arow.iter().enumerate() {
+            let accr = &mut acc[r];
+            for (av_acc, &bv) in accr.iter_mut().zip(brow) {
+                *av_acc += av * bv;
+            }
+        }
+    }
+    acc
+}
+
+/// Write an accumulated tile into `C`, accumulating across k-blocks and
+/// applying the epilogue on the last block only.
+fn writeback(
+    c: &mut [f32],
+    ldc: usize,
+    i0: usize,
+    mr: usize,
+    jabs: usize,
+    nr_eff: usize,
+    acc: &[[f32; NR]; MR],
+    first: bool,
+    last: bool,
+    ep: &Epilogue<'_>,
+) {
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        let base = (i0 + r) * ldc + jabs;
+        let crow = &mut c[base..base + nr_eff];
+        if !last {
+            if first {
+                crow.copy_from_slice(&accr[..nr_eff]);
+            } else {
+                for (cv, &av) in crow.iter_mut().zip(accr) {
+                    *cv += av;
+                }
+            }
+            continue;
+        }
+        match *ep {
+            Epilogue::Store => {
+                if first {
+                    crow.copy_from_slice(&accr[..nr_eff]);
+                } else {
+                    for (cv, &av) in crow.iter_mut().zip(accr) {
+                        *cv += av;
+                    }
+                }
+            }
+            Epilogue::BiasAct { bias, act } => {
+                let brow = &bias[jabs..jabs + nr_eff];
+                for ((cv, &av), &bv) in crow.iter_mut().zip(accr).zip(brow) {
+                    let v = if first { av } else { *cv + av };
+                    *cv = act.apply(v + bv);
+                }
+            }
+            Epilogue::MaskDeriv { h, act } => {
+                let hrow = &h[base..base + nr_eff];
+                for ((cv, &av), &hv) in crow.iter_mut().zip(accr).zip(hrow) {
+                    let v = if first { av } else { *cv + av };
+                    *cv = act.deriv_mask(v, hv);
+                }
+            }
+        }
+    }
+}
+
+/// Single-row GEMM (`m == 1`, contiguous operands): vectorized axpy over
+/// the rows of `B`, epilogue applied in place. Accumulation over `k` stays
+/// in ascending order.
+fn gemv_row(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    b_rs: usize,
+    c: &mut [f32],
+    ep: Epilogue<'_>,
+) {
+    let c = &mut c[..n];
+    c.fill(0.0);
+    for (p, &av) in a[..k].iter().enumerate() {
+        if av == 0.0 {
+            continue;
+        }
+        let brow = &b[p * b_rs..p * b_rs + n];
+        for (cv, &bv) in c.iter_mut().zip(brow) {
+            *cv += av * bv;
+        }
+    }
+    match ep {
+        Epilogue::Store => {}
+        Epilogue::BiasAct { bias, act } => {
+            for (cv, &bv) in c.iter_mut().zip(&bias[..n]) {
+                *cv = act.apply(*cv + bv);
+            }
+        }
+        Epilogue::MaskDeriv { h, act } => {
+            for (cv, &hv) in c.iter_mut().zip(&h[..n]) {
+                *cv = act.deriv_mask(*cv, hv);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workspace-backed MLP forward / backward
+// ---------------------------------------------------------------------------
+
+/// Forward pass of a dense MLP into the workspace layer buffers: layer `i`'s
+/// post-activation output lands in [`Workspace::layer`]`(i)` (shape
+/// `[batch, dims[i + 1]]`). Bias add + activation are fused into the GEMM
+/// epilogue.
+pub fn mlp_forward_ws(
+    ws: &mut Workspace,
+    params: &[f32],
+    dims: &[usize],
+    acts: &[Act],
+    x: &[f32],
+    batch: usize,
+) {
+    let Workspace { packs, layers, .. } = ws;
+    let n_layers = dims.len() - 1;
+    while layers.len() < n_layers {
+        layers.push(Vec::new());
+    }
+    let mut off = 0usize;
+    for (layer, &act) in acts.iter().enumerate() {
+        let (fi, fo) = (dims[layer], dims[layer + 1]);
+        let w = &params[off..off + fi * fo];
+        let bias = &params[off + fi * fo..off + fi * fo + fo];
+        off += fi * fo + fo;
+        let (done, rest) = layers.split_at_mut(layer);
+        let input: &[f32] = if layer == 0 { x } else { &done[layer - 1] };
+        let out = &mut rest[0];
+        out.clear();
+        out.resize(batch * fo, 0.0);
+        gemm_nn(packs, batch, fi, fo, input, w, out, Epilogue::BiasAct { bias, act });
+    }
+}
+
+/// Backward pass of a dense MLP over the activations a prior
+/// [`mlp_forward_ws`] call left in the workspace. `dlast` is
+/// `dLoss/d(final layer output)`; the flat parameter gradient (same layout
+/// as `params`) is written into `grad`. When `dx` is given, `dLoss/dx` is
+/// written there (the CNN head needs it; the AE skips the work).
+///
+/// Weight gradients are [`gemm_tn`] calls, input gradients are [`gemm_nt`]
+/// calls with the previous layer's activation derivative fused into the
+/// writeback epilogue.
+pub fn mlp_backward_ws(
+    ws: &mut Workspace,
+    params: &[f32],
+    dims: &[usize],
+    acts: &[Act],
+    x: &[f32],
+    batch: usize,
+    dlast: &[f32],
+    grad: &mut Vec<f32>,
+    mut dx: Option<&mut Vec<f32>>,
+) {
+    let Workspace { packs, layers, d0, d1, .. } = ws;
+    let n_layers = dims.len() - 1;
+    let total: usize = (0..n_layers).map(|l| dims[l] * dims[l + 1] + dims[l + 1]).sum();
+    grad.clear();
+    grad.resize(total, 0.0);
+
+    let (mut dcur, mut dnext) = (d0, d1);
+    dcur.clear();
+    dcur.extend_from_slice(dlast);
+    // Final layer's activation derivative (a no-op for the linear output
+    // layers every model here ends in, but kept for generality).
+    mask_in_place(dcur, &layers[n_layers - 1], acts[n_layers - 1]);
+
+    let mut off_end = total;
+    for layer in (0..n_layers).rev() {
+        let (fi, fo) = (dims[layer], dims[layer + 1]);
+        let off = off_end - (fi * fo + fo);
+        let w = &params[off..off + fi * fo];
+        let (gw, gb) = grad[off..off_end].split_at_mut(fi * fo);
+        // Bias gradient: column sums of d, rows in ascending batch order.
+        col_sums(dcur, fo, gb);
+        let input: &[f32] = if layer == 0 { x } else { &layers[layer - 1] };
+        // gW[fi, fo] = inputᵀ · d.
+        gemm_tn(packs, fi, batch, fo, input, dcur, gw, Epilogue::Store);
+        if layer > 0 {
+            // dprev[batch, fi] = d · Wᵀ, fused with act'(h_{layer-1}).
+            dnext.clear();
+            dnext.resize(batch * fi, 0.0);
+            gemm_nt(
+                packs,
+                batch,
+                fo,
+                fi,
+                dcur,
+                w,
+                dnext,
+                Epilogue::MaskDeriv {
+                    h: layers[layer - 1].as_slice(),
+                    act: acts[layer - 1],
+                },
+            );
+            std::mem::swap(&mut dcur, &mut dnext);
+        } else if let Some(dxv) = dx.take() {
+            dxv.clear();
+            dxv.resize(batch * fi, 0.0);
+            gemm_nt(packs, batch, fo, fi, dcur, w, dxv, Epilogue::Store);
+        }
+        off_end = off;
+    }
+}
+
+/// `d *= act'(h)` elementwise (post-activation form).
+fn mask_in_place(d: &mut [f32], h: &[f32], act: Act) {
+    if act == Act::Linear {
+        return;
+    }
+    for (dv, &hv) in d.iter_mut().zip(h) {
+        *dv = act.deriv_mask(*dv, hv);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col / col2im (3x3 SAME convolution as GEMM)
+// ---------------------------------------------------------------------------
+
+/// Unfold an NHWC image into convolution columns for a 3x3 SAME kernel:
+/// `cols[(b, y, x), (kh * 3 + kw) * ci + c] = img[b, y + kh - 1, x + kw - 1, c]`
+/// (zero where the tap falls outside the image). The column layout matches
+/// the `(kh, kw, ci)`-major conv weight rows, so
+/// `out = cols · W[9 * ci, co]` **is** the convolution.
+pub fn im2col3x3(img: &[f32], batch: usize, h: usize, w: usize, ci: usize, cols: &mut Vec<f32>) {
+    let row_len = 9 * ci;
+    cols.clear();
+    cols.resize(batch * h * w * row_len, 0.0);
+    for b in 0..batch {
+        for y in 0..h {
+            for x in 0..w {
+                let dst_base = ((b * h + y) * w + x) * row_len;
+                for kh in 0..3 {
+                    let sy = (y + kh).wrapping_sub(1);
+                    if sy >= h {
+                        continue;
+                    }
+                    for kw in 0..3 {
+                        let sx = (x + kw).wrapping_sub(1);
+                        if sx >= w {
+                            continue;
+                        }
+                        let src = ((b * h + sy) * w + sx) * ci;
+                        let dst = dst_base + (kh * 3 + kw) * ci;
+                        cols[dst..dst + ci].copy_from_slice(&img[src..src + ci]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fold column gradients back onto the image (the transpose of
+/// [`im2col3x3`]): scatter-adds in a fixed `(b, y, x, kh, kw)` order.
+/// `dimg` must be zeroed by the caller.
+pub fn col2im3x3(dcols: &[f32], batch: usize, h: usize, w: usize, ci: usize, dimg: &mut [f32]) {
+    let row_len = 9 * ci;
+    for b in 0..batch {
+        for y in 0..h {
+            for x in 0..w {
+                let src_base = ((b * h + y) * w + x) * row_len;
+                for kh in 0..3 {
+                    let sy = (y + kh).wrapping_sub(1);
+                    if sy >= h {
+                        continue;
+                    }
+                    for kw in 0..3 {
+                        let sx = (x + kw).wrapping_sub(1);
+                        if sx >= w {
+                            continue;
+                        }
+                        let dst = ((b * h + sy) * w + sx) * ci;
+                        let src = src_base + (kh * 3 + kw) * ci;
+                        let drow = &mut dimg[dst..dst + ci];
+                        for (dv, &sv) in drow.iter_mut().zip(&dcols[src..src + ci]) {
+                            *dv += sv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Column sums of a row-major `[rows, cols]` matrix accumulated into `out`
+/// (the bias gradient of a conv/dense layer), rows in ascending order.
+pub fn col_sums(d: &[f32], cols: usize, out: &mut [f32]) {
+    for drow in d.chunks_exact(cols) {
+        for (o, &dv) in out.iter_mut().zip(drow) {
+            *o += dv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunked Adam
+// ---------------------------------------------------------------------------
+
+/// One Adam update over flat state, chunked so the autovectorizer sees
+/// fixed-width bodies. Per-element arithmetic (and therefore the result)
+/// is bit-identical to the scalar reference loop this replaced: elements
+/// are independent, only the loop structure changed.
+///
+/// `t` is the 1-based step count; `p`, `m`, `v` update in place.
+pub fn adam_step(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    t: f32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    // Hard check (not debug-only): the chunked zips below would otherwise
+    // silently truncate to the shortest slice, leaving the tail of a
+    // mismatched state un-updated instead of failing loudly.
+    assert!(
+        p.len() == m.len() && m.len() == v.len() && v.len() == g.len(),
+        "adam_step: state length mismatch (p {}, m {}, v {}, g {})",
+        p.len(),
+        m.len(),
+        v.len(),
+        g.len()
+    );
+    let bc1 = 1.0 - b1.powf(t);
+    let bc2 = 1.0 - b2.powf(t);
+    const W: usize = 8;
+    let mut pc = p.chunks_exact_mut(W);
+    let mut mc = m.chunks_exact_mut(W);
+    let mut vc = v.chunks_exact_mut(W);
+    let mut gc = g.chunks_exact(W);
+    for (((pw, mw), vw), gw) in (&mut pc).zip(&mut mc).zip(&mut vc).zip(&mut gc) {
+        for i in 0..W {
+            adam_elem(&mut pw[i], &mut mw[i], &mut vw[i], gw[i], bc1, bc2, lr, b1, b2, eps);
+        }
+    }
+    for (((pv, mv), vv), &gv) in pc
+        .into_remainder()
+        .iter_mut()
+        .zip(mc.into_remainder())
+        .zip(vc.into_remainder())
+        .zip(gc.remainder())
+    {
+        adam_elem(pv, mv, vv, gv, bc1, bc2, lr, b1, b2, eps);
+    }
+}
+
+/// The per-element Adam update (python `adam_update` semantics).
+#[inline]
+fn adam_elem(
+    p: &mut f32,
+    m: &mut f32,
+    v: &mut f32,
+    g: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    *m = b1 * *m + (1.0 - b1) * g;
+    *v = b2 * *v + (1.0 - b2) * g * g;
+    let mhat = *m / bc1;
+    let vhat = *v / bc2;
+    *p -= lr * mhat / (vhat.sqrt() + eps);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference triple-loop matmul over strided views.
+    fn naive_mm(
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[f32],
+        a_at: impl Fn(usize, usize) -> usize,
+        b: &[f32],
+        b_at: impl Fn(usize, usize) -> usize,
+    ) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a[a_at(i, p)] as f64 * b[b_at(p, j)] as f64;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn assert_rel_close(got: &[f32], want: &[f64], tol: f64, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            let diff = (*g as f64 - w).abs();
+            assert!(
+                diff <= tol * (1.0 + w.abs()),
+                "{what}: element {i}: {g} vs {w} (diff {diff})"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_variants_match_reference_on_ragged_shapes() {
+        let mut packs = PackBufs::default();
+        let mut rng = Rng::new(9);
+        // Shapes straddling MR/NR/KC/NC boundaries, including ragged ones.
+        for &(m, k, n) in &[
+            (1usize, 7usize, 5usize),
+            (3, 300, 17),
+            (4, 16, 16),
+            (5, 257, 33),
+            (8, 512, 16),
+            (13, 9, 270),
+        ] {
+            let a = crate::testing::prop::vec_f32(&mut rng, m * k, 1.0);
+            let b = crate::testing::prop::vec_f32(&mut rng, k * n, 1.0);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(&mut packs, m, k, n, &a, &b, &mut c, Epilogue::Store);
+            let want = naive_mm(m, k, n, &a, |i, p| i * k + p, &b, |p, j| p * n + j);
+            assert_rel_close(&c, &want, 1e-4, "nn");
+
+            // tn: A stored [k, m].
+            let at = crate::testing::prop::vec_f32(&mut rng, k * m, 1.0);
+            let mut c = vec![0.0f32; m * n];
+            gemm_tn(&mut packs, m, k, n, &at, &b, &mut c, Epilogue::Store);
+            let want = naive_mm(m, k, n, &at, |i, p| p * m + i, &b, |p, j| p * n + j);
+            assert_rel_close(&c, &want, 1e-4, "tn");
+
+            // nt: B stored [n, k].
+            let bt = crate::testing::prop::vec_f32(&mut rng, n * k, 1.0);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nt(&mut packs, m, k, n, &a, &bt, &mut c, Epilogue::Store);
+            let want = naive_mm(m, k, n, &a, |i, p| i * k + p, &bt, |p, j| j * k + p);
+            assert_rel_close(&c, &want, 1e-4, "nt");
+        }
+    }
+
+    #[test]
+    fn gemm_is_bitwise_deterministic_across_calls_and_buffer_state() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (6, 700, 19);
+        let a = crate::testing::prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = crate::testing::prop::vec_f32(&mut rng, k * n, 1.0);
+        let bias = crate::testing::prop::vec_f32(&mut rng, n, 1.0);
+        let run = |packs: &mut PackBufs| {
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(
+                packs,
+                m,
+                k,
+                n,
+                &a,
+                &b,
+                &mut c,
+                Epilogue::BiasAct {
+                    bias: &bias,
+                    act: Act::Tanh,
+                },
+            );
+            c
+        };
+        // Fresh buffers vs reused (dirty) buffers vs another instance.
+        let mut p1 = PackBufs::default();
+        let first = run(&mut p1);
+        let again = run(&mut p1);
+        let mut p2 = PackBufs::default();
+        let other = run(&mut p2);
+        assert_eq!(first, again);
+        assert_eq!(first, other);
+    }
+
+    #[test]
+    fn fused_epilogues_match_separate_passes() {
+        let mut packs = PackBufs::default();
+        let mut rng = Rng::new(21);
+        let (m, k, n) = (5, 40, 23);
+        let a = crate::testing::prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = crate::testing::prop::vec_f32(&mut rng, k * n, 1.0);
+        let bias = crate::testing::prop::vec_f32(&mut rng, n, 1.0);
+        let h = crate::testing::prop::vec_f32(&mut rng, m * n, 1.0);
+
+        let mut plain = vec![0.0f32; m * n];
+        gemm_nn(&mut packs, m, k, n, &a, &b, &mut plain, Epilogue::Store);
+
+        for act in [Act::Relu, Act::Tanh, Act::Linear] {
+            let mut fused = vec![0.0f32; m * n];
+            gemm_nn(
+                &mut packs,
+                m,
+                k,
+                n,
+                &a,
+                &b,
+                &mut fused,
+                Epilogue::BiasAct { bias: &bias, act },
+            );
+            for (j, (f, p)) in fused.iter().zip(&plain).enumerate() {
+                assert_eq!(*f, act.apply(p + bias[j % n]), "bias+{act:?} at {j}");
+            }
+
+            let mut masked = vec![0.0f32; m * n];
+            gemm_nn(&mut packs, m, k, n, &a, &b, &mut masked, Epilogue::MaskDeriv { h: &h, act });
+            for (j, (f, p)) in masked.iter().zip(&plain).enumerate() {
+                assert_eq!(*f, act.deriv_mask(*p, h[j]), "mask+{act:?} at {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_col2im_are_transposes() {
+        // <dcols, im2col(img)> == <col2im(dcols), img> — the defining
+        // adjoint property, which also pins index arithmetic.
+        let (batch, h, w, ci) = (2usize, 5usize, 4usize, 3usize);
+        let mut rng = Rng::new(33);
+        let img = crate::testing::prop::vec_f32(&mut rng, batch * h * w * ci, 1.0);
+        let mut cols = Vec::new();
+        im2col3x3(&img, batch, h, w, ci, &mut cols);
+        assert_eq!(cols.len(), batch * h * w * 9 * ci);
+        let dcols = crate::testing::prop::vec_f32(&mut rng, cols.len(), 1.0);
+        let mut dimg = vec![0.0f32; img.len()];
+        col2im3x3(&dcols, batch, h, w, ci, &mut dimg);
+        let lhs: f64 = dcols.iter().zip(&cols).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = dimg.iter().zip(&img).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn adam_step_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(77);
+        let n = 103; // not a multiple of the chunk width
+        let mut p = crate::testing::prop::vec_f32(&mut rng, n, 1.0);
+        let mut m = crate::testing::prop::vec_f32(&mut rng, n, 0.1);
+        let mut v: Vec<f32> = (0..n).map(|_| rng.uniform_in(0.0, 0.1)).collect();
+        let g = crate::testing::prop::vec_f32(&mut rng, n, 1.0);
+        let (mut pr, mut mr, mut vr) = (p.clone(), m.clone(), v.clone());
+        let (lr, b1, b2, eps, t) = (1e-3f32, 0.9f32, 0.999f32, 1e-8f32, 3.0f32);
+        adam_step(&mut p, &mut m, &mut v, &g, t, lr, b1, b2, eps);
+        // The scalar loop the chunked helper replaced.
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        for i in 0..n {
+            mr[i] = b1 * mr[i] + (1.0 - b1) * g[i];
+            vr[i] = b2 * vr[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = mr[i] / bc1;
+            let vhat = vr[i] / bc2;
+            pr[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        assert_eq!(p, pr);
+        assert_eq!(m, mr);
+        assert_eq!(v, vr);
+    }
+
+    #[test]
+    fn kernel_knob_parses_and_names() {
+        assert_eq!(Kernel::parse("naive").unwrap(), Kernel::Naive);
+        assert_eq!(Kernel::parse("tiled").unwrap(), Kernel::Tiled);
+        assert_eq!(Kernel::default(), Kernel::Tiled);
+        for k in [Kernel::Naive, Kernel::Tiled] {
+            assert_eq!(Kernel::parse(k.name()).unwrap(), k);
+        }
+        assert!(Kernel::parse("simd").is_err());
+    }
+}

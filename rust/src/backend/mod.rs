@@ -9,7 +9,10 @@
 //!   computation the manifest describes: classifier SGD train/eval steps,
 //!   and the paper's funnel-autoencoder train/encode/decode/roundtrip with
 //!   Adam, all over the [`crate::tensor`] flat-vector substrate. Builds and
-//!   runs everywhere with zero non-std dependencies.
+//!   runs everywhere with zero non-std dependencies. Its training hot path
+//!   runs on the cache-blocked tiled GEMM layer in [`kernels`] by default,
+//!   with the naive reference loops selectable via `backend.kernel =
+//!   naive` ([`Kernel`]).
 //! * `XlaBackend` (`--features xla`) — the compiled-HLO fast path: loads
 //!   the AOT artifacts emitted by `python -m compile.aot` and executes them
 //!   through the PJRT C API, with the Pallas fused-dense kernel on the AE's
@@ -21,12 +24,15 @@
 //! `jax.value_and_grad` — see `python/tests`), so everything above the
 //! trait is backend-agnostic.
 
+/// Tiled GEMM / im2col / fused-epilogue compute kernels (native backend).
+pub mod kernels;
 /// Pure-rust default backend.
 pub mod native;
 /// PJRT/XLA compiled-HLO backend (feature-gated).
 #[cfg(feature = "xla")]
 pub mod xla;
 
+pub use self::kernels::Kernel;
 pub use self::native::NativeBackend;
 #[cfg(feature = "xla")]
 pub use self::xla::XlaBackend;

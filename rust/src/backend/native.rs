@@ -14,6 +14,13 @@
 //! by the bias, layers concatenated in forward order. Classifiers use ReLU
 //! hidden activations; autoencoders use tanh on every hidden layer and a
 //! linear reconstruction (paper Eq. 1–3).
+//!
+//! Compute runs on one of two kernel implementations selected by
+//! [`Kernel`] (`backend.kernel` config knob / `--kernel` CLI flag): the
+//! cache-blocked tiled GEMM + im2col layer in [`super::kernels`] (the
+//! default), or the naive per-sample loops kept in this module as the
+//! reference oracle. Both are deterministic; `rust/tests/kernels.rs` pins
+//! their agreement.
 
 use std::collections::BTreeMap;
 
@@ -24,6 +31,7 @@ use crate::error::{FedAeError, Result};
 use crate::tensor;
 use crate::util::rng::Rng;
 
+use super::kernels::{self, Act, Epilogue, Kernel};
 use super::Backend;
 
 // --- optimizer / metric constants (mirror python/compile/model.py) ---------
@@ -50,6 +58,7 @@ const CNN_PARAMS: usize = 51_082;
 /// The pure-rust backend.
 pub struct NativeBackend {
     manifest: Manifest,
+    kernel: Kernel,
 }
 
 impl std::fmt::Debug for NativeBackend {
@@ -57,20 +66,33 @@ impl std::fmt::Debug for NativeBackend {
         f.debug_struct("NativeBackend")
             .field("models", &self.manifest.models.len())
             .field("autoencoders", &self.manifest.autoencoders.len())
+            .field("kernel", &self.kernel)
             .finish()
     }
 }
 
 impl NativeBackend {
-    /// A native backend serving the given manifest's computations.
+    /// A native backend serving the given manifest's computations on the
+    /// default (tiled) kernels.
     pub fn new(manifest: Manifest) -> NativeBackend {
-        NativeBackend { manifest }
+        NativeBackend::with_kernel(manifest, Kernel::default())
+    }
+
+    /// A native backend pinned to an explicit kernel implementation
+    /// (`backend.kernel` config knob; `naive` is the reference oracle).
+    pub fn with_kernel(manifest: Manifest, kernel: Kernel) -> NativeBackend {
+        NativeBackend { manifest, kernel }
+    }
+
+    /// Which kernel implementation this backend runs.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 }
 
 impl Backend for NativeBackend {
     fn platform_name(&self) -> String {
-        "native-cpu (pure rust)".to_string()
+        format!("native-cpu (pure rust, {} kernels)", self.kernel.name())
     }
 
     fn execute(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
@@ -105,15 +127,12 @@ impl Backend for NativeBackend {
 
 // ---------------------------------------------------------------------------
 // Shared dense-MLP machinery
+//
+// The free functions below are the NAIVE per-sample reference loops — the
+// correctness oracle behind `backend.kernel = naive`. The tiled
+// implementations live in `super::kernels`; dispatch happens in the
+// `NativeBackend` methods and the `classifier_*` helpers.
 // ---------------------------------------------------------------------------
-
-/// Per-layer activation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Act {
-    Relu,
-    Tanh,
-    Linear,
-}
 
 /// Total parameter count of an MLP with layer sizes `dims`.
 fn dense_param_count(dims: &[usize]) -> usize {
@@ -260,6 +279,11 @@ fn mlp_backward(
 
 /// Softmax cross-entropy over one-hot targets: (mean loss, accuracy,
 /// dLoss/dlogits). The gradient already includes the 1/batch factor.
+///
+/// Single-pass structure per row: the max scan also yields the prediction
+/// argmax, and the `exp(z - zmax)` values are computed once (staged in the
+/// gradient buffer) and reused for both the normalizer and the gradient
+/// instead of re-exponentiating `logp` — same math, one pass fewer.
 fn softmax_xent(
     logits: &[f32],
     y_onehot: &[f32],
@@ -272,23 +296,31 @@ fn softmax_xent(
     for b in 0..batch {
         let z = &logits[b * classes..(b + 1) * classes];
         let y = &y_onehot[b * classes..(b + 1) * classes];
-        let zmax = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let d = &mut dlogits[b * classes..(b + 1) * classes];
+        // One scan: the row max doubles as the prediction argmax.
+        let mut zmax = f32::NEG_INFINITY;
+        let mut pred = 0usize;
+        for (i, &v) in z.iter().enumerate() {
+            if v > zmax {
+                zmax = v;
+                pred = i;
+            }
+        }
+        // exps staged into the gradient buffer, reused below.
         let mut sumexp = 0.0f32;
-        for &v in z {
-            sumexp += (v - zmax).exp();
+        for (dv, &v) in d.iter_mut().zip(z) {
+            let e = (v - zmax).exp();
+            *dv = e;
+            sumexp += e;
         }
         let log_sumexp = sumexp.ln();
         let mut row_loss = 0.0f32;
-        let d = &mut dlogits[b * classes..(b + 1) * classes];
-        for c in 0..classes {
-            let logp = z[c] - zmax - log_sumexp;
-            row_loss -= y[c] * logp;
-            d[c] = (logp.exp() - y[c]) / batch as f32;
+        for ((dv, &zv), &yv) in d.iter_mut().zip(z).zip(y) {
+            row_loss -= yv * (zv - zmax - log_sumexp);
+            *dv = (*dv / sumexp - yv) / batch as f32;
         }
         loss += row_loss;
-        let pred = argmax(z);
-        let label = argmax(y);
-        if pred == label {
+        if pred == argmax(y) {
             hits += 1;
         }
     }
@@ -344,7 +376,7 @@ impl NativeBackend {
         let batch = m.train_batch;
         let lr = lr.first().copied().unwrap_or(0.0);
         let spec = classifier_spec(family, m)?;
-        let (loss, _acc, grad) = classifier_loss_grad(&spec, params, x, y, batch)?;
+        let (loss, _acc, grad) = classifier_loss_grad(&spec, self.kernel, params, x, y, batch)?;
         let mut new_params = params.to_vec();
         tensor::axpy(&mut new_params, -lr, &grad);
         Ok(vec![new_params, vec![loss]])
@@ -355,7 +387,7 @@ impl NativeBackend {
         let m = self.manifest.model(family)?;
         let batch = m.eval_batch;
         let spec = classifier_spec(family, m)?;
-        let logits = classifier_logits(&spec, params, x, batch)?;
+        let logits = classifier_logits(&spec, self.kernel, params, x, batch)?;
         let (loss, acc, _) = softmax_xent(&logits, y, batch, m.classes);
         Ok(vec![vec![loss], vec![acc]])
     }
@@ -363,21 +395,22 @@ impl NativeBackend {
 
 fn classifier_logits(
     spec: &ClassifierSpec,
+    kernel: Kernel,
     params: &[f32],
     x: &[f32],
     batch: usize,
 ) -> Result<Vec<f32>> {
     match spec {
         ClassifierSpec::Mlp { dims } => {
-            let outs = mlp_forward(params, dims, &[Act::Relu, Act::Linear], x, batch);
-            Ok(outs.into_iter().next_back().unwrap())
+            Ok(mlp_last_output(kernel, params, dims, &[Act::Relu, Act::Linear], x, batch))
         }
-        ClassifierSpec::CifarCnn => Ok(cnn_forward(params, x, batch).logits),
+        ClassifierSpec::CifarCnn => Ok(cnn_forward(kernel, params, x, batch).logits),
     }
 }
 
 fn classifier_loss_grad(
     spec: &ClassifierSpec,
+    kernel: Kernel,
     params: &[f32],
     x: &[f32],
     y: &[f32],
@@ -386,15 +419,53 @@ fn classifier_loss_grad(
     match spec {
         ClassifierSpec::Mlp { dims } => {
             let acts = [Act::Relu, Act::Linear];
-            let outs = mlp_forward(params, dims, &acts, x, batch);
-            let (loss, acc, dlogits) = softmax_xent(outs.last().unwrap(), y, batch, dims[2]);
-            let (grad, _) = mlp_backward(params, dims, &acts, x, batch, &outs, dlogits);
-            Ok((loss, acc, grad))
+            match kernel {
+                Kernel::Naive => {
+                    let outs = mlp_forward(params, dims, &acts, x, batch);
+                    let (loss, acc, dlogits) =
+                        softmax_xent(outs.last().unwrap(), y, batch, dims[2]);
+                    let (grad, _) = mlp_backward(params, dims, &acts, x, batch, &outs, dlogits);
+                    Ok((loss, acc, grad))
+                }
+                Kernel::Tiled => kernels::with_ws(|ws| {
+                    kernels::mlp_forward_ws(ws, params, dims, &acts, x, batch);
+                    let (loss, acc, dlogits) =
+                        softmax_xent(ws.layer(acts.len() - 1), y, batch, dims[2]);
+                    let mut grad = Vec::new();
+                    kernels::mlp_backward_ws(
+                        ws, params, dims, &acts, x, batch, &dlogits, &mut grad, None,
+                    );
+                    Ok((loss, acc, grad))
+                }),
+            }
         }
         ClassifierSpec::CifarCnn => {
-            let (loss, acc, grad) = cnn_loss_grad(params, x, y, batch);
+            let (loss, acc, grad) = cnn_loss_grad(kernel, params, x, y, batch);
             Ok((loss, acc, grad))
         }
+    }
+}
+
+/// Final-layer output of a dense MLP on the selected kernel (the shape the
+/// encode/decode/eval paths need; intermediate activations stay in the
+/// tiled workspace instead of being materialized).
+fn mlp_last_output(
+    kernel: Kernel,
+    params: &[f32],
+    dims: &[usize],
+    acts: &[Act],
+    x: &[f32],
+    batch: usize,
+) -> Vec<f32> {
+    match kernel {
+        Kernel::Naive => mlp_forward(params, dims, acts, x, batch)
+            .into_iter()
+            .next_back()
+            .unwrap(),
+        Kernel::Tiled => kernels::with_ws(|ws| {
+            kernels::mlp_forward_ws(ws, params, dims, acts, x, batch);
+            ws.layer(acts.len() - 1).to_vec()
+        }),
     }
 }
 
@@ -561,7 +632,30 @@ fn maxpool2(act: &[f32], batch: usize, h: usize, w: usize, c: usize) -> (Vec<f32
     (out, arg)
 }
 
-fn cnn_forward(params: &[f32], x: &[f32], batch: usize) -> CnnCache {
+/// Un-pool a 2x2-maxpool gradient back through the recorded argmax routes,
+/// then apply the ReLU mask of the pre-pool activations (shared by the
+/// naive and tiled backward passes; fixed scatter order).
+fn unpool_masked(arg: &[u32], dsmall: &[f32], act_post: &[f32]) -> Vec<f32> {
+    let mut d = vec![0.0f32; act_post.len()];
+    for (o, &src) in arg.iter().enumerate() {
+        d[src as usize] += dsmall[o];
+    }
+    for (dv, &hv) in d.iter_mut().zip(act_post) {
+        if hv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+    d
+}
+
+fn cnn_forward(kernel: Kernel, params: &[f32], x: &[f32], batch: usize) -> CnnCache {
+    match kernel {
+        Kernel::Naive => cnn_forward_naive(params, x, batch),
+        Kernel::Tiled => kernels::with_ws(|ws| cnn_forward_tiled(ws, params, x, batch)),
+    }
+}
+
+fn cnn_forward_naive(params: &[f32], x: &[f32], batch: usize) -> CnnCache {
     let mut pre1 = conv3x3_fwd(x, batch, 32, 32, 3, 8, &params[C1W..C1B], &params[C1B..C2W]);
     apply_act(&mut pre1, Act::Relu);
     let act1 = pre1;
@@ -584,8 +678,83 @@ fn cnn_forward(params: &[f32], x: &[f32], batch: usize) -> CnnCache {
     }
 }
 
-fn cnn_loss_grad(params: &[f32], x: &[f32], y: &[f32], batch: usize) -> (f32, f32, Vec<f32>) {
-    let cache = cnn_forward(params, x, batch);
+/// Tiled CNN forward: both convolutions run as im2col + GEMM with the
+/// bias+ReLU epilogue fused into the tile writeback; the FC head runs on
+/// the workspace MLP path (its activations stay in `ws.layers` for the
+/// backward pass, so `fc_outs` is left empty).
+fn cnn_forward_tiled(
+    ws: &mut kernels::Workspace,
+    params: &[f32],
+    x: &[f32],
+    batch: usize,
+) -> CnnCache {
+    let mut act1 = vec![0.0f32; batch * 32 * 32 * 8];
+    {
+        let kernels::Workspace { packs, cols1, .. } = ws;
+        kernels::im2col3x3(x, batch, 32, 32, 3, cols1);
+        kernels::gemm_nn(
+            packs,
+            batch * 32 * 32,
+            27,
+            8,
+            cols1,
+            &params[C1W..C1B],
+            &mut act1,
+            Epilogue::BiasAct {
+                bias: &params[C1B..C2W],
+                act: Act::Relu,
+            },
+        );
+    }
+    let (pool1, arg1) = maxpool2(&act1, batch, 32, 32, 8);
+    let mut act2 = vec![0.0f32; batch * 16 * 16 * 16];
+    {
+        let kernels::Workspace { packs, cols2, .. } = ws;
+        kernels::im2col3x3(&pool1, batch, 16, 16, 8, cols2);
+        kernels::gemm_nn(
+            packs,
+            batch * 16 * 16,
+            72,
+            16,
+            cols2,
+            &params[C2W..C2B],
+            &mut act2,
+            Epilogue::BiasAct {
+                bias: &params[C2B..FC],
+                act: Act::Relu,
+            },
+        );
+    }
+    let (h0, arg2) = maxpool2(&act2, batch, 16, 16, 16);
+    kernels::mlp_forward_ws(ws, &params[FC..], &FC_DIMS, &FC_ACTS, &h0, batch);
+    let logits = ws.layer(FC_ACTS.len() - 1).to_vec();
+    CnnCache {
+        act1,
+        pool1,
+        arg1,
+        act2,
+        arg2,
+        h0,
+        fc_outs: Vec::new(),
+        logits,
+    }
+}
+
+fn cnn_loss_grad(
+    kernel: Kernel,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+) -> (f32, f32, Vec<f32>) {
+    match kernel {
+        Kernel::Naive => cnn_loss_grad_naive(params, x, y, batch),
+        Kernel::Tiled => kernels::with_ws(|ws| cnn_loss_grad_tiled(ws, params, x, y, batch)),
+    }
+}
+
+fn cnn_loss_grad_naive(params: &[f32], x: &[f32], y: &[f32], batch: usize) -> (f32, f32, Vec<f32>) {
+    let cache = cnn_forward_naive(params, x, batch);
     let (loss, acc, dlogits) = softmax_xent(&cache.logits, y, batch, CNN_CLASSES);
     let mut grad = vec![0.0f32; CNN_PARAMS];
 
@@ -603,16 +772,7 @@ fn cnn_loss_grad(params: &[f32], x: &[f32], y: &[f32], batch: usize) -> (f32, f3
     );
     grad[FC..].copy_from_slice(&fc_grad);
 
-    // Un-pool dh0 into dact2, apply ReLU mask.
-    let mut dact2 = vec![0.0f32; cache.act2.len()];
-    for (o, &src) in cache.arg2.iter().enumerate() {
-        dact2[src as usize] += dh0[o];
-    }
-    for (dv, &hv) in dact2.iter_mut().zip(&cache.act2) {
-        if hv <= 0.0 {
-            *dv = 0.0;
-        }
-    }
+    let dact2 = unpool_masked(&cache.arg2, &dh0, &cache.act2);
 
     // conv2 backward.
     let mut dpool1 = vec![0.0f32; cache.pool1.len()];
@@ -633,21 +793,70 @@ fn cnn_loss_grad(params: &[f32], x: &[f32], y: &[f32], batch: usize) -> (f32, f3
         );
     }
 
-    // Un-pool into dact1, ReLU mask, conv1 backward (input grad not needed).
-    let mut dact1 = vec![0.0f32; cache.act1.len()];
-    for (o, &src) in cache.arg1.iter().enumerate() {
-        dact1[src as usize] += dpool1[o];
-    }
-    for (dv, &hv) in dact1.iter_mut().zip(&cache.act1) {
-        if hv <= 0.0 {
-            *dv = 0.0;
-        }
-    }
+    // Un-pool, ReLU-mask, conv1 backward (input grad not needed).
+    let dact1 = unpool_masked(&cache.arg1, &dpool1, &cache.act1);
     {
         let (gw_slice, rest) = grad[C1W..C2W].split_at_mut(C1B - C1W);
         conv3x3_bwd(
             x, &dact1, batch, 32, 32, 3, 8, &params[C1W..C1B], gw_slice, rest, None,
         );
+    }
+
+    (loss, acc, grad)
+}
+
+/// Tiled CNN backward: conv weight gradients are [`kernels::gemm_tn`] over
+/// the im2col columns cached by the forward pass, conv input gradients go
+/// through [`kernels::gemm_nt`] + [`kernels::col2im3x3`], and the FC head
+/// reuses the workspace MLP backward.
+fn cnn_loss_grad_tiled(
+    ws: &mut kernels::Workspace,
+    params: &[f32],
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+) -> (f32, f32, Vec<f32>) {
+    let cache = cnn_forward_tiled(ws, params, x, batch);
+    let (loss, acc, dlogits) = softmax_xent(&cache.logits, y, batch, CNN_CLASSES);
+    let mut grad = vec![0.0f32; CNN_PARAMS];
+
+    // FC backward over the activations the tiled forward left in `ws`.
+    let mut fc_grad = Vec::new();
+    let mut dh0 = Vec::new();
+    kernels::mlp_backward_ws(
+        ws,
+        &params[FC..],
+        &FC_DIMS,
+        &FC_ACTS,
+        &cache.h0,
+        batch,
+        &dlogits,
+        &mut fc_grad,
+        Some(&mut dh0),
+    );
+    grad[FC..].copy_from_slice(&fc_grad);
+
+    let dact2 = unpool_masked(&cache.arg2, &dh0, &cache.act2);
+    let mut dpool1 = vec![0.0f32; cache.pool1.len()];
+    {
+        let kernels::Workspace { packs, cols2, dcols, .. } = ws;
+        let (gw, gb) = grad[C2W..FC].split_at_mut(C2B - C2W);
+        kernels::col_sums(&dact2, 16, gb);
+        kernels::gemm_tn(packs, 72, batch * 256, 16, cols2, &dact2, gw, Epilogue::Store);
+        dcols.clear();
+        dcols.resize(batch * 256 * 72, 0.0);
+        kernels::gemm_nt(
+            packs, batch * 256, 16, 72, &dact2, &params[C2W..C2B], dcols, Epilogue::Store,
+        );
+        kernels::col2im3x3(dcols, batch, 16, 16, 8, &mut dpool1);
+    }
+
+    let dact1 = unpool_masked(&cache.arg1, &dpool1, &cache.act1);
+    {
+        let kernels::Workspace { packs, cols1, .. } = ws;
+        let (gw, gb) = grad[C1W..C2W].split_at_mut(C1B - C1W);
+        kernels::col_sums(&dact1, 8, gb);
+        kernels::gemm_tn(packs, 27, batch * 1024, 8, cols1, &dact1, gw, Epilogue::Store);
     }
 
     (loss, acc, grad)
@@ -718,39 +927,58 @@ impl NativeBackend {
 
     /// One Adam step on a batch of weight vectors. Inputs:
     /// `[ae_params, batch, m, v, step]` -> `[ae_params', m', v', mse, acc]`.
+    ///
+    /// On the tiled kernel all intermediates (activations, deltas, the flat
+    /// gradient, GEMM pack panels) live in the thread-local
+    /// [`kernels::Workspace`]; steady-state steps allocate only the
+    /// returned outputs.
     fn ae_train_step(&self, tag: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let [params, batch_x, m_in, v_in, step] = expect_inputs::<5>(tag, inputs)?;
         let spec = self.ae_spec(tag)?;
         let entry = self.manifest.ae(tag)?;
         let batch = entry.train_batch;
         let acts = spec.acts();
-        let outs = mlp_forward(params, &spec.dims, &acts, batch_x, batch);
-        let recon = outs.last().unwrap();
-        let mse = tensor::mse(recon, batch_x) as f32;
-        let acc = tensor::within_tol_fraction(recon, batch_x, AE_ACC_TOL) as f32;
-        let scale = 2.0 / recon.len() as f32;
-        let dlast: Vec<f32> = recon
-            .iter()
-            .zip(batch_x)
-            .map(|(r, x)| (r - x) * scale)
-            .collect();
-        let (grad, _) = mlp_backward(params, &spec.dims, &acts, batch_x, batch, &outs, dlast);
-
-        // Adam (python `adam_update`): flat state, 1-based step.
         let t = step.first().copied().unwrap_or(1.0).max(1.0);
-        let bc1 = 1.0 - ADAM_B1.powf(t);
-        let bc2 = 1.0 - ADAM_B2.powf(t);
-        let mut new_p = params.to_vec();
-        let mut new_m = m_in.to_vec();
-        let mut new_v = v_in.to_vec();
-        for i in 0..grad.len() {
-            let g = grad[i];
-            new_m[i] = ADAM_B1 * new_m[i] + (1.0 - ADAM_B1) * g;
-            new_v[i] = ADAM_B2 * new_v[i] + (1.0 - ADAM_B2) * g * g;
-            let mhat = new_m[i] / bc1;
-            let vhat = new_v[i] / bc2;
-            new_p[i] -= ADAM_LR * mhat / (vhat.sqrt() + ADAM_EPS);
-        }
+
+        let (mse, acc, new_p, new_m, new_v) = match self.kernel {
+            Kernel::Naive => {
+                let outs = mlp_forward(params, &spec.dims, &acts, batch_x, batch);
+                let recon = outs.last().unwrap();
+                let mse = tensor::mse(recon, batch_x) as f32;
+                let acc = tensor::within_tol_fraction(recon, batch_x, AE_ACC_TOL) as f32;
+                let scale = 2.0 / recon.len() as f32;
+                let dlast: Vec<f32> = recon
+                    .iter()
+                    .zip(batch_x)
+                    .map(|(r, x)| (r - x) * scale)
+                    .collect();
+                let (grad, _) =
+                    mlp_backward(params, &spec.dims, &acts, batch_x, batch, &outs, dlast);
+                let (new_p, new_m, new_v) = adam_from(params, m_in, v_in, &grad, t);
+                (mse, acc, new_p, new_m, new_v)
+            }
+            Kernel::Tiled => kernels::with_ws(|ws| {
+                kernels::mlp_forward_ws(ws, params, &spec.dims, &acts, batch_x, batch);
+                let mut dlast = std::mem::take(&mut ws.dlast);
+                let (mse, acc);
+                {
+                    let recon = ws.layer(acts.len() - 1);
+                    mse = tensor::mse(recon, batch_x) as f32;
+                    acc = tensor::within_tol_fraction(recon, batch_x, AE_ACC_TOL) as f32;
+                    let scale = 2.0 / recon.len() as f32;
+                    dlast.clear();
+                    dlast.extend(recon.iter().zip(batch_x).map(|(r, x)| (r - x) * scale));
+                }
+                let mut grad = std::mem::take(&mut ws.grad);
+                kernels::mlp_backward_ws(
+                    ws, params, &spec.dims, &acts, batch_x, batch, &dlast, &mut grad, None,
+                );
+                let out = adam_from(params, m_in, v_in, &grad, t);
+                ws.dlast = dlast;
+                ws.grad = grad;
+                (mse, acc, out.0, out.1, out.2)
+            }),
+        };
         Ok(vec![new_p, new_m, new_v, vec![mse], vec![acc]])
     }
 
@@ -761,8 +989,7 @@ impl NativeBackend {
         let acts = spec.acts();
         let enc_dims = &spec.dims[..=spec.latent_index];
         let enc_acts = &acts[..spec.latent_index];
-        let outs = mlp_forward(enc_params, enc_dims, enc_acts, w, 1);
-        Ok(vec![outs.into_iter().next_back().unwrap()])
+        Ok(vec![mlp_last_output(self.kernel, enc_params, enc_dims, enc_acts, w, 1)])
     }
 
     /// Decoder half: `[dec_params, z] -> [w]`.
@@ -772,8 +999,7 @@ impl NativeBackend {
         let acts = spec.acts();
         let dec_dims = &spec.dims[spec.latent_index..];
         let dec_acts = &acts[spec.latent_index..];
-        let outs = mlp_forward(dec_params, dec_dims, dec_acts, z, 1);
-        Ok(vec![outs.into_iter().next_back().unwrap()])
+        Ok(vec![mlp_last_output(self.kernel, dec_params, dec_dims, dec_acts, z, 1)])
     }
 
     /// Whole-AE roundtrip: `[ae_params, w] -> [recon, mse, acc]`.
@@ -781,12 +1007,31 @@ impl NativeBackend {
         let [ae_params, w] = expect_inputs::<2>(tag, inputs)?;
         let spec = self.ae_spec(tag)?;
         let acts = spec.acts();
-        let outs = mlp_forward(ae_params, &spec.dims, &acts, w, 1);
-        let recon = outs.into_iter().next_back().unwrap();
+        let recon = mlp_last_output(self.kernel, ae_params, &spec.dims, &acts, w, 1);
         let mse = tensor::mse(&recon, w) as f32;
         let acc = tensor::within_tol_fraction(&recon, w, AE_ACC_TOL) as f32;
         Ok(vec![recon, vec![mse], vec![acc]])
     }
+}
+
+/// Allocate the next (params, m, v) from the current state and a gradient
+/// via one chunked Adam step ([`kernels::adam_step`], python `adam_update`
+/// semantics: flat state, 1-based step `t`). Shared by both kernel paths —
+/// the chunked helper is bit-identical to the scalar loop it replaced.
+fn adam_from(
+    params: &[f32],
+    m_in: &[f32],
+    v_in: &[f32],
+    grad: &[f32],
+    t: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut new_p = params.to_vec();
+    let mut new_m = m_in.to_vec();
+    let mut new_v = v_in.to_vec();
+    kernels::adam_step(
+        &mut new_p, &mut new_m, &mut new_v, grad, t, ADAM_LR, ADAM_B1, ADAM_B2, ADAM_EPS,
+    );
+    (new_p, new_m, new_v)
 }
 
 /// Destructure `inputs` into exactly `N` slices with a clear error.
@@ -1133,23 +1378,25 @@ mod tests {
             y[b * 10 + (b * 3) % 10] = 1.0;
         }
         let spec = ClassifierSpec::Mlp { dims };
-        let (_, _, grad) = classifier_loss_grad(&spec, &params, &x, &y, batch).unwrap();
-        let loss_at = |p: &[f32]| {
-            let logits = classifier_logits(&spec, p, &x, batch).unwrap();
-            softmax_xent(&logits, &y, batch, 10).0 as f64
-        };
-        let eps = 1e-3f32;
-        for idx in [0usize, 7, 50, 101, 171] {
-            let mut plus = params.clone();
-            plus[idx] += eps;
-            let mut minus = params.clone();
-            minus[idx] -= eps;
-            let num = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
-            assert!(
-                (num - grad[idx] as f64).abs() < 5e-3,
-                "param {idx}: analytic {} vs numeric {num}",
-                grad[idx]
-            );
+        for kernel in [Kernel::Naive, Kernel::Tiled] {
+            let (_, _, grad) = classifier_loss_grad(&spec, kernel, &params, &x, &y, batch).unwrap();
+            let loss_at = |p: &[f32]| {
+                let logits = classifier_logits(&spec, kernel, p, &x, batch).unwrap();
+                softmax_xent(&logits, &y, batch, 10).0 as f64
+            };
+            let eps = 1e-3f32;
+            for idx in [0usize, 7, 50, 101, 171] {
+                let mut plus = params.clone();
+                plus[idx] += eps;
+                let mut minus = params.clone();
+                minus[idx] -= eps;
+                let num = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
+                assert!(
+                    (num - grad[idx] as f64).abs() < 5e-3,
+                    "{kernel:?} param {idx}: analytic {} vs numeric {num}",
+                    grad[idx]
+                );
+            }
         }
     }
 
@@ -1204,24 +1451,27 @@ mod tests {
             .collect();
         let mut y = vec![0.0f32; batch * 10];
         y[3] = 1.0;
-        let (_, _, grad) = cnn_loss_grad(&params, &x, &y, batch);
-        let loss_at = |p: &[f32]| {
-            let c = cnn_forward(p, &x, batch);
-            softmax_xent(&c.logits, &y, batch, 10).0 as f64
-        };
-        let eps = 3e-3f32;
-        // One index per parameter block: conv1 w/b, conv2 w/b, fc1 w/b, fc2 w/b.
-        for idx in [5usize, 216, 300, 1380, 2000, 50_550, 50_600, 51_080] {
-            let mut plus = params.clone();
-            plus[idx] += eps;
-            let mut minus = params.clone();
-            minus[idx] -= eps;
-            let num = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
-            assert!(
-                (num - grad[idx] as f64).abs() < 2e-2 * (1.0 + num.abs()),
-                "param {idx}: analytic {} vs numeric {num}",
-                grad[idx]
-            );
+        for kernel in [Kernel::Naive, Kernel::Tiled] {
+            let (_, _, grad) = cnn_loss_grad(kernel, &params, &x, &y, batch);
+            let loss_at = |p: &[f32]| {
+                let c = cnn_forward(kernel, p, &x, batch);
+                softmax_xent(&c.logits, &y, batch, 10).0 as f64
+            };
+            let eps = 3e-3f32;
+            // One index per parameter block: conv1 w/b, conv2 w/b, fc1 w/b,
+            // fc2 w/b.
+            for idx in [5usize, 216, 300, 1380, 2000, 50_550, 50_600, 51_080] {
+                let mut plus = params.clone();
+                plus[idx] += eps;
+                let mut minus = params.clone();
+                minus[idx] -= eps;
+                let num = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64);
+                assert!(
+                    (num - grad[idx] as f64).abs() < 2e-2 * (1.0 + num.abs()),
+                    "{kernel:?} param {idx}: analytic {} vs numeric {num}",
+                    grad[idx]
+                );
+            }
         }
     }
 

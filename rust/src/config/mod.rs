@@ -8,6 +8,7 @@
 /// The artifact manifest: model/AE geometry and artifact descriptors.
 pub mod manifest;
 
+use crate::backend::Kernel;
 use crate::error::{FedAeError, Result};
 use crate::util::json::Json;
 
@@ -421,6 +422,22 @@ impl Default for EngineConfig {
     }
 }
 
+/// Compute-backend selection knobs.
+///
+/// `kernel` picks the native backend's compute-kernel implementation
+/// ([`Kernel`]): the cache-blocked `tiled` GEMM layer (default) or the
+/// `naive` per-sample reference loops kept as the correctness oracle.
+/// Mirroring `engine.agg_path`, the knob changes *how* training executes —
+/// wall-clock only — never the experiment semantics; both kernels are
+/// deterministic and agree within float-rounding tolerance
+/// (`rust/tests/kernels.rs`). Ignored by the `--features xla` backend,
+/// which compiles its own kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BackendConfig {
+    /// Native compute-kernel implementation (`naive` | `tiled`).
+    pub kernel: Kernel,
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -446,6 +463,8 @@ pub struct ExperimentConfig {
     pub network: NetworkConfig,
     /// Round-engine execution knobs (parallelism, aggregation sharding).
     pub engine: EngineConfig,
+    /// Compute-backend knobs (native kernel selection).
+    pub backend: BackendConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -462,6 +481,7 @@ impl Default for ExperimentConfig {
             prepass: PrepassConfig::default(),
             network: NetworkConfig::default(),
             engine: EngineConfig::default(),
+            backend: BackendConfig::default(),
         }
     }
 }
@@ -573,6 +593,11 @@ impl ExperimentConfig {
             }
             if let Some(v) = e.get("agg_path").and_then(|v| v.as_str()) {
                 cfg.engine.agg_path = AggPath::parse(v)?;
+            }
+        }
+        if let Some(b) = j.get("backend") {
+            if let Some(v) = b.get("kernel").and_then(|v| v.as_str()) {
+                cfg.backend.kernel = Kernel::parse(v)?;
             }
         }
         Ok(cfg)
@@ -764,6 +789,22 @@ mod tests {
             assert_eq!(AggPath::parse(want.name()).unwrap(), want);
         }
         let j = Json::parse(r#"{"engine": {"agg_path": "magic"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn parses_backend_kernel() {
+        // Default is the tiled kernel layer.
+        assert_eq!(ExperimentConfig::default().backend.kernel, Kernel::Tiled);
+        for (doc, want) in [
+            (r#"{"backend": {"kernel": "naive"}}"#, Kernel::Naive),
+            (r#"{"backend": {"kernel": "tiled"}}"#, Kernel::Tiled),
+        ] {
+            let cfg = ExperimentConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
+            assert_eq!(cfg.backend.kernel, want);
+            assert_eq!(Kernel::parse(want.name()).unwrap(), want);
+        }
+        let j = Json::parse(r#"{"backend": {"kernel": "cuda"}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_err());
     }
 

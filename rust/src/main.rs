@@ -15,6 +15,7 @@
 //! fedae worker --connect 127.0.0.1:7070 --id 0
 //! ```
 
+use fedae::backend::Kernel;
 use fedae::config::{AggPath, CompressionConfig, EngineMode, ExperimentConfig};
 use fedae::coordinator::FlDriver;
 use fedae::error::FedAeError;
@@ -43,9 +44,10 @@ fn main() -> Result<()> {
                  \u{20}        [--rounds N] [--collabs N] [--local-epochs N] [--seed N] [--out metrics.json]\n\
                  \u{20}        [--parallelism N (0 = all cores)] [--shard-size N (0 = unsharded aggregation)]\n\
                  \u{20}        [--agg-path auto|batch|stream (server aggregation execution path)]\n\
+                 \u{20}        [--kernel naive|tiled (native compute kernels)]\n\
                  \u{20}        [--mode sync|async] [--deadline-ms N (0 = infinite)] [--dropout-rate X]\n\
                  \u{20}        [--staleness-decay A] [--straggler-log-std S] [--jitter-ms N]\n\
-                 prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N]\n\
+                 prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N] [--kernel naive|tiled]\n\
                  savings  [--rounds N] [--max-collabs N] [--mnist]\n\
                  inspect  [--artifacts DIR]\n\
                  serve    --port P --collabs N [--rounds N]\n\
@@ -58,6 +60,14 @@ fn main() -> Result<()> {
 
 fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts").to_string()
+}
+
+/// The `--kernel` flag (native compute-kernel selection; default tiled).
+fn kernel_from_args(args: &Args) -> Result<Kernel> {
+    match args.get("kernel") {
+        Some(k) => Ok(Kernel::parse(k)?),
+        None => Ok(Kernel::default()),
+    }
 }
 
 /// Build an ExperimentConfig from either --config or individual flags.
@@ -121,14 +131,17 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.engine.straggler_log_std =
         args.get_f64("straggler-log-std", cfg.engine.straggler_log_std)?;
     cfg.engine.jitter_ms = args.get_f64("jitter-ms", cfg.engine.jitter_ms)?;
+    if let Some(k) = args.get("kernel") {
+        cfg.backend.kernel = Kernel::parse(k)?;
+    }
     Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let rt = Runtime::from_dir(artifacts_dir(args))?;
     let cfg = config_from_args(args)?;
+    let rt = Runtime::from_dir_with_kernel(artifacts_dir(args), cfg.backend.kernel)?;
     println!(
-        "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={} agg_path={} mode={}",
+        "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={} agg_path={} mode={} kernel={}",
         cfg.name,
         cfg.model,
         cfg.compression.kind_name(),
@@ -137,7 +150,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.engine.parallelism,
         cfg.engine.shard_size,
         cfg.engine.agg_path.name(),
-        cfg.engine.mode.name()
+        cfg.engine.mode.name(),
+        cfg.backend.kernel.name()
     );
     let is_async = cfg.engine.mode == EngineMode::Async;
     let pipeline;
@@ -205,7 +219,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_prepass(args: &Args) -> Result<()> {
-    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let rt = Runtime::from_dir_with_kernel(artifacts_dir(args), kernel_from_args(args)?)?;
     let model = args.get_or("model", "mnist").to_string();
     let ae_tag = args.get_or("ae", &model).to_string();
     let pipeline = AePipeline::new(&rt, &ae_tag)?;

@@ -27,7 +27,7 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::backend::{Backend, NativeBackend};
+use crate::backend::{Backend, Kernel, NativeBackend};
 use crate::config::manifest::{ArtifactEntry, Manifest};
 use crate::error::{FedAeError, Result};
 use crate::tensor;
@@ -51,9 +51,17 @@ impl std::fmt::Debug for Runtime {
 impl Runtime {
     /// Pure-rust runtime over the built-in manifest: no artifacts, no
     /// external dependencies. Init blobs are synthesized deterministically.
+    /// Runs the default (tiled) compute kernels.
     pub fn native() -> Runtime {
+        Runtime::native_with_kernel(Kernel::default())
+    }
+
+    /// [`Runtime::native`] pinned to an explicit native compute kernel
+    /// (`backend.kernel` config knob: `tiled` is the fast default, `naive`
+    /// the reference oracle for A/B testing).
+    pub fn native_with_kernel(kernel: Kernel) -> Runtime {
         let manifest = crate::backend::native::builtin_manifest();
-        let backend = NativeBackend::new(manifest.clone());
+        let backend = NativeBackend::with_kernel(manifest.clone(), kernel);
         Runtime {
             backend: Box::new(backend),
             manifest,
@@ -67,11 +75,26 @@ impl Runtime {
     /// by default the [`NativeBackend`] executes the same computations in
     /// pure rust (reading init blobs from disk when present).
     pub fn load(manifest: &Manifest, artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Runtime::load_with_kernel(manifest, artifacts_dir, Kernel::default())
+    }
+
+    /// [`Runtime::load`] pinned to an explicit native compute kernel. The
+    /// XLA backend compiles its own kernels, so the knob only affects the
+    /// default (native) build.
+    pub fn load_with_kernel(
+        manifest: &Manifest,
+        artifacts_dir: impl AsRef<Path>,
+        kernel: Kernel,
+    ) -> Result<Runtime> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         #[cfg(feature = "xla")]
-        let backend: Box<dyn Backend> = Box::new(crate::backend::XlaBackend::new(&dir)?);
+        let backend: Box<dyn Backend> = {
+            let _ = kernel; // the compiled-HLO path has its own kernels
+            Box::new(crate::backend::XlaBackend::new(&dir)?)
+        };
         #[cfg(not(feature = "xla"))]
-        let backend: Box<dyn Backend> = Box::new(NativeBackend::new(manifest.clone()));
+        let backend: Box<dyn Backend> =
+            Box::new(NativeBackend::with_kernel(manifest.clone(), kernel));
         Ok(Runtime {
             backend,
             manifest: manifest.clone(),
@@ -90,11 +113,20 @@ impl Runtime {
     /// path, so any missing manifest is a hard error rather than a silent
     /// downgrade to pure-rust compute.
     pub fn from_dir(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Runtime::from_dir_with_kernel(artifacts_dir, Kernel::default())
+    }
+
+    /// [`Runtime::from_dir`] pinned to an explicit native compute kernel
+    /// (the CLI `--kernel` flag lands here).
+    pub fn from_dir_with_kernel(
+        artifacts_dir: impl AsRef<Path>,
+        kernel: Kernel,
+    ) -> Result<Runtime> {
         let dir = artifacts_dir.as_ref();
         let manifest_path = dir.join("manifest.json");
         if !manifest_path.exists() {
             if !cfg!(feature = "xla") && dir == Path::new("artifacts") {
-                return Ok(Runtime::native());
+                return Ok(Runtime::native_with_kernel(kernel));
             }
             return Err(FedAeError::Artifact(format!(
                 "no manifest at {} — generate artifacts with `python -m \
@@ -104,7 +136,7 @@ impl Runtime {
             )));
         }
         let manifest = Manifest::load(manifest_path)?;
-        Runtime::load(&manifest, dir)
+        Runtime::load_with_kernel(&manifest, dir, kernel)
     }
 
     /// The artifact manifest this runtime serves.
@@ -448,6 +480,16 @@ mod tests {
         assert_eq!(a.len(), 15_910);
         assert_eq!(Runtime::native().load_init("mnist_params").unwrap(), a);
         assert!(rt.load_init("nope").is_err());
+    }
+
+    #[test]
+    fn kernel_selection_reaches_the_backend() {
+        let tiled = Runtime::native();
+        assert!(tiled.platform_name().contains("tiled"));
+        let naive = Runtime::native_with_kernel(Kernel::Naive);
+        assert!(naive.platform_name().contains("naive"));
+        let rt = Runtime::from_dir_with_kernel("artifacts", Kernel::Naive).unwrap();
+        assert!(rt.platform_name().contains("naive"));
     }
 
     #[test]

@@ -319,4 +319,6 @@ fn shipped_config_presets_parse_and_validate() {
     assert_eq!(cfg.engine.parallelism, 0);
     assert_eq!(cfg.engine.shard_size, 4096);
     assert_eq!(cfg.engine.agg_path, fedae::config::AggPath::Stream);
+    // ... and pins the local-training hot path to the tiled kernel layer.
+    assert_eq!(cfg.backend.kernel, fedae::backend::Kernel::Tiled);
 }

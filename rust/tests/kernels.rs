@@ -1,0 +1,320 @@
+//! Tiled-kernel equivalence suite (ISSUE 5): the cache-blocked GEMM /
+//! im2col layer in `fedae::backend::kernels` against the naive reference
+//! loops, at three levels —
+//!
+//! 1. property tests: all three GEMM variants and the im2col convolution
+//!    vs. an f64 triple-loop reference over random shapes (including
+//!    ragged ones not divisible by the tile sizes), tight relative
+//!    tolerance;
+//! 2. train-step tests: `ae_train_step` / `classifier_train_step` on
+//!    `kernel=tiled` vs `kernel=naive` backends from identical state;
+//! 3. integration: a full AE-compressed federated round agrees across
+//!    kernels at `AE_ACC_TOL` level, and tiled execution is **bitwise**
+//!    identical between the sequential and parallel round engines (the
+//!    determinism contract the parallel_round/streaming_agg/async_round
+//!    suites rely on).
+
+use fedae::backend::kernels::{self, Act, Epilogue, PackBufs};
+use fedae::backend::native::AE_ACC_TOL;
+use fedae::backend::Kernel;
+use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::coordinator::{FlDriver, RoundOutcome};
+use fedae::runtime::{AdamState, AePipeline, Runtime, TrainStep};
+use fedae::tensor;
+use fedae::testing::prop;
+use fedae::util::rng::Rng;
+
+/// Relative agreement between a tiled f32 result and an f64 reference.
+fn assert_rel_close(got: &[f32], want: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let diff = (*g as f64 - w).abs();
+        if diff > tol * (1.0 + w.abs()) {
+            return Err(format!("{what}: element {i}: {g} vs {w} (diff {diff})"));
+        }
+    }
+    Ok(())
+}
+
+/// Fraction of elements within relative tolerance, plus the max absolute
+/// difference. Optimizer-stepped parameters can't be compared strictly
+/// per-element across kernels: a first-step Adam update is essentially
+/// `±lr * sign(g)`, so the handful of coordinates whose gradient sits in
+/// the float-noise band around zero may flip sign and legitimately differ
+/// by up to `2 * lr` per step.
+fn agreement(got: &[f32], want: &[f32], rel_tol: f32) -> (f64, f32) {
+    assert_eq!(got.len(), want.len());
+    let mut close = 0usize;
+    let mut max_abs = 0.0f32;
+    for (g, w) in got.iter().zip(want) {
+        let diff = (g - w).abs();
+        if diff <= rel_tol * (1.0 + w.abs()) {
+            close += 1;
+        }
+        max_abs = max_abs.max(diff);
+    }
+    (close as f64 / got.len().max(1) as f64, max_abs)
+}
+
+/// f64 triple-loop matmul over index closures (the test-local oracle).
+fn reference_mm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    a_at: impl Fn(usize, usize) -> usize,
+    b: &[f32],
+    b_at: impl Fn(usize, usize) -> usize,
+) -> Vec<f64> {
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a[a_at(i, p)] as f64 * b[b_at(p, j)] as f64;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[test]
+fn prop_gemm_variants_match_reference_over_random_shapes() {
+    let cfg = prop::PropConfig {
+        cases: 32,
+        ..Default::default()
+    };
+    let mut packs = PackBufs::default();
+    prop::check_with(&cfg, "gemm_vs_reference", |rng| {
+        // Ragged shapes on purpose: nothing forces multiples of MR/NR/KC.
+        let m = prop::len_in(rng, 1, 34);
+        let k = prop::len_in(rng, 1, 700);
+        let n = prop::len_in(rng, 1, 70);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+
+        let mut c = vec![0.0f32; m * n];
+        kernels::gemm_nn(&mut packs, m, k, n, &a, &b, &mut c, Epilogue::Store);
+        let want = reference_mm(m, k, n, &a, |i, p| i * k + p, &b, |p, j| p * n + j);
+        assert_rel_close(&c, &want, 1e-4, &format!("nn {m}x{k}x{n}"))?;
+
+        let at = prop::vec_f32(rng, k * m, 1.0);
+        let mut c = vec![0.0f32; m * n];
+        kernels::gemm_tn(&mut packs, m, k, n, &at, &b, &mut c, Epilogue::Store);
+        let want = reference_mm(m, k, n, &at, |i, p| p * m + i, &b, |p, j| p * n + j);
+        assert_rel_close(&c, &want, 1e-4, &format!("tn {m}x{k}x{n}"))?;
+
+        let bt = prop::vec_f32(rng, n * k, 1.0);
+        let mut c = vec![0.0f32; m * n];
+        kernels::gemm_nt(&mut packs, m, k, n, &a, &bt, &mut c, Epilogue::Store);
+        let want = reference_mm(m, k, n, &a, |i, p| i * k + p, &bt, |p, j| j * k + p);
+        assert_rel_close(&c, &want, 1e-4, &format!("nt {m}x{k}x{n}"))?;
+        Ok(())
+    });
+}
+
+/// f64 reference of the 3x3 SAME convolution + bias, NHWC, weights
+/// `(kh, kw, ci)`-major x `co` (the native backend's layout).
+fn reference_conv3x3(
+    img: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    ci: usize,
+    co: usize,
+    wk: &[f32],
+    bias: &[f32],
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; batch * h * w * co];
+    for b in 0..batch {
+        for y in 0..h {
+            for x in 0..w {
+                for o in 0..co {
+                    let mut acc = bias[o] as f64;
+                    for kh in 0..3 {
+                        for kw in 0..3 {
+                            let (sy, sx) = (y + kh, x + kw);
+                            if sy < 1 || sy > h || sx < 1 || sx > w {
+                                continue;
+                            }
+                            let (sy, sx) = (sy - 1, sx - 1);
+                            for c in 0..ci {
+                                acc += img[((b * h + sy) * w + sx) * ci + c] as f64
+                                    * wk[((kh * 3 + kw) * ci + c) * co + o] as f64;
+                            }
+                        }
+                    }
+                    out[((b * h + y) * w + x) * co + o] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_im2col_conv_matches_reference_conv() {
+    let cfg = prop::PropConfig {
+        cases: 32,
+        ..Default::default()
+    };
+    let mut packs = PackBufs::default();
+    prop::check_with(&cfg, "im2col_conv_vs_reference", |rng| {
+        let batch = prop::len_in(rng, 1, 3);
+        let h = prop::len_in(rng, 2, 9);
+        let w = prop::len_in(rng, 2, 9);
+        let ci = prop::len_in(rng, 1, 4);
+        let co = prop::len_in(rng, 1, 6);
+        let img = prop::vec_f32(rng, batch * h * w * ci, 1.0);
+        let wk = prop::vec_f32(rng, 9 * ci * co, 1.0);
+        let bias = prop::vec_f32(rng, co, 1.0);
+
+        let mut cols = Vec::new();
+        kernels::im2col3x3(&img, batch, h, w, ci, &mut cols);
+        let mut out = vec![0.0f32; batch * h * w * co];
+        kernels::gemm_nn(
+            &mut packs,
+            batch * h * w,
+            9 * ci,
+            co,
+            &cols,
+            &wk,
+            &mut out,
+            Epilogue::BiasAct {
+                bias: &bias,
+                act: Act::Linear,
+            },
+        );
+        let want = reference_conv3x3(&img, batch, h, w, ci, co, &wk, &bias);
+        assert_rel_close(&out, &want, 1e-4, &format!("conv {batch}x{h}x{w}x{ci}->{co}"))
+    });
+}
+
+#[test]
+fn ae_train_step_agrees_across_kernels() {
+    let tiled = Runtime::native_with_kernel(Kernel::Tiled);
+    let naive = Runtime::native_with_kernel(Kernel::Naive);
+    for tag in ["toy", "mnist"] {
+        let pt = AePipeline::new(&tiled, tag).unwrap();
+        let pn = AePipeline::new(&naive, tag).unwrap();
+        let init = tiled.load_init(&format!("ae_{tag}_init")).unwrap();
+        let mut rng = Rng::new(5);
+        let batch: Vec<f32> = (0..pt.train_batch * pt.input_dim)
+            .map(|_| rng.uniform_in(-0.2, 0.2))
+            .collect();
+        let (mut ae_t, mut ae_n) = (init.clone(), init.clone());
+        let mut adam_t = AdamState::zeros(init.len());
+        let mut adam_n = AdamState::zeros(init.len());
+        // A few steps so Adam state (m, v) equivalence is exercised too.
+        let (mut mse_t, mut mse_n) = (0.0f32, 0.0f32);
+        for _ in 0..3 {
+            mse_t = pt.train_step(&mut ae_t, &mut adam_t, &batch).unwrap().0;
+            mse_n = pn.train_step(&mut ae_n, &mut adam_n, &batch).unwrap().0;
+        }
+        // Nearly every coordinate agrees tightly; sign-flip coordinates
+        // (see `agreement`) are bounded by the per-step Adam magnitude.
+        let (frac, max_abs) = agreement(&ae_t, &ae_n, 1e-4);
+        assert!(frac >= 0.999, "{tag}: only {frac} of params within 1e-4");
+        assert!(max_abs <= 0.02, "{tag}: max param divergence {max_abs}");
+        let (frac_m, _) = agreement(&adam_t.m, &adam_n.m, 1e-3);
+        assert!(frac_m >= 0.999, "{tag}: only {frac_m} of adam.m within 1e-3");
+        assert!(
+            (mse_t - mse_n).abs() <= 1e-4 * (1.0 + mse_n.abs()),
+            "{tag}: mse {mse_t} vs {mse_n}"
+        );
+    }
+}
+
+#[test]
+fn classifier_train_step_agrees_across_kernels() {
+    let tiled = Runtime::native_with_kernel(Kernel::Tiled);
+    let naive = Runtime::native_with_kernel(Kernel::Naive);
+    for family in ["mnist", "cifar"] {
+        let tt = TrainStep::new(&tiled, family).unwrap();
+        let tn = TrainStep::new(&naive, family).unwrap();
+        let init = tiled.load_init(&format!("{family}_params")).unwrap();
+        let mut rng = Rng::new(6);
+        let x: Vec<f32> = (0..tt.batch * tt.input_dim)
+            .map(|_| rng.uniform_in(0.0, 1.0))
+            .collect();
+        let mut y = vec![0.0f32; tt.batch * tt.classes];
+        for b in 0..tt.batch {
+            y[b * tt.classes + b % tt.classes] = 1.0;
+        }
+        let (pt, loss_t) = tt.step(&init, &x, &y, 0.05).unwrap();
+        let (pn, loss_n) = tn.step(&init, &x, &y, 0.05).unwrap();
+        // SGD has no sign amplification, but a ReLU unit whose
+        // pre-activation sits at the float-noise boundary can route a
+        // gradient differently — fraction-based with a loose cap.
+        let (frac, max_abs) = agreement(&pt, &pn, 1e-4);
+        assert!(frac >= 0.999, "{family}: only {frac} of params within 1e-4");
+        assert!(max_abs <= 0.02, "{family}: max param divergence {max_abs}");
+        assert!(
+            (loss_t - loss_n).abs() <= 1e-4 * (1.0 + loss_n.abs()),
+            "{family}: loss {loss_t} vs {loss_n}"
+        );
+    }
+}
+
+/// Tiny AE-compressed federated schedule (prepass + 1 round) for the
+/// cross-kernel integration assertion.
+fn run_round(kernel: Kernel, parallelism: usize) -> (Vec<RoundOutcome>, Vec<f32>) {
+    let rt = Runtime::native_with_kernel(kernel);
+    let pipeline = AePipeline::new(&rt, "mnist").unwrap();
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mnist".into();
+    cfg.compression = CompressionConfig::Ae { ae: "mnist".into() };
+    cfg.backend.kernel = kernel;
+    cfg.fl.collaborators = 2;
+    cfg.fl.rounds = 1;
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 64;
+    cfg.data.test_size = 64;
+    cfg.prepass.epochs = 4;
+    cfg.prepass.ae_epochs = 2;
+    cfg.seed = 23;
+    cfg.engine.parallelism = parallelism;
+    let mut driver = FlDriver::new(&rt, cfg, Some(&pipeline)).unwrap();
+    let outcomes = vec![driver.run_round().unwrap()];
+    (outcomes, driver.global_params().to_vec())
+}
+
+#[test]
+fn full_round_tiled_vs_naive_agreement_and_bitwise_parallel_parity() {
+    // Tiled sequential == tiled parallel, BITWISE — the kernels are
+    // deterministic and thread-count-independent, so the parallel engine's
+    // parity guarantee survives the kernel swap.
+    let (out_seq, params_seq) = run_round(Kernel::Tiled, 1);
+    let (out_par, params_par) = run_round(Kernel::Tiled, 4);
+    assert_eq!(out_seq, out_par, "tiled seq vs parallel outcomes");
+    assert_eq!(params_seq, params_par, "tiled seq vs parallel params");
+
+    // Tiled vs naive: same math, different rounding — the full round
+    // (prepass AE training, local SGD, encode/decode, aggregation) stays
+    // in AE_ACC_TOL-level agreement.
+    let (out_naive, params_naive) = run_round(Kernel::Naive, 1);
+    let frac = tensor::within_tol_fraction(&params_seq, &params_naive, AE_ACC_TOL);
+    assert!(
+        frac >= 0.98,
+        "only {frac} of global params within {AE_ACC_TOL} across kernels"
+    );
+    let (t, n) = (&out_seq[0], &out_naive[0]);
+    assert!(
+        (t.eval_loss - n.eval_loss).abs() <= 0.1 * (1.0 + n.eval_loss.abs()),
+        "eval loss {} vs {}",
+        t.eval_loss,
+        n.eval_loss
+    );
+    assert!(
+        (t.eval_acc - n.eval_acc).abs() <= 0.05,
+        "eval acc {} vs {}",
+        t.eval_acc,
+        n.eval_acc
+    );
+    // Identical byte accounting: compression ratios are kernel-independent.
+    assert_eq!(t.bytes_up, n.bytes_up);
+    assert_eq!(t.bytes_down, n.bytes_down);
+}
