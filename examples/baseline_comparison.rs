@@ -62,7 +62,11 @@ fn main() -> Result<()> {
         cfg.seed = args.get_u64("seed", 3)?;
 
         let pipe_ref = matches!(cfg.compression, CompressionConfig::Ae { .. }).then_some(&pipeline);
-        let mut driver = FlDriver::new(&rt, cfg, pipe_ref)?;
+        let mut builder = FlDriver::builder(&rt, cfg);
+        if let Some(p) = pipe_ref {
+            builder = builder.pipeline(p);
+        }
+        let mut driver = builder.build()?;
         let out = driver.run()?;
         let ledger = driver.network.ledger();
         let ratio = ledger

@@ -51,7 +51,7 @@ fn main() -> Result<()> {
         pipeline.input_dim as f64 / pipeline.latent as f64
     );
     println!("pre-pass: training one AE per collaborator ...");
-    let mut driver = FlDriver::new(&rt, cfg, Some(&pipeline))?;
+    let mut driver = FlDriver::builder(&rt, cfg).pipeline(&pipeline).build()?;
 
     for _ in 0..driver.config().fl.rounds {
         let out = driver.run_round()?;

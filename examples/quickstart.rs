@@ -45,7 +45,7 @@ fn main() -> Result<()> {
         pipeline.latent,
         pipeline.input_dim as f64 / pipeline.latent as f64
     );
-    let mut driver = FlDriver::new(&rt, cfg, Some(&pipeline))?;
+    let mut driver = FlDriver::builder(&rt, cfg).pipeline(&pipeline).build()?;
 
     // 4. Federated rounds: encode -> send -> decode -> aggregate.
     for _ in 0..driver.config().fl.rounds {

@@ -79,7 +79,7 @@ fn timed_rounds(
     engine: EngineConfig,
     rounds: usize,
 ) -> fedae::error::Result<BenchRun> {
-    let mut driver = FlDriver::new(rt, cfg_for(collabs, engine), None)?;
+    let mut driver = FlDriver::builder(rt, cfg_for(collabs, engine)).build()?;
     let sw = Stopwatch::start();
     let mut outcomes = Vec::with_capacity(rounds);
     for _ in 0..rounds {

@@ -43,7 +43,11 @@ fn main() -> fedae::error::Result<()> {
             matches!(cfg.compression, CompressionConfig::Ae { .. }).then_some(&pipeline);
 
         let setup = Stopwatch::start();
-        let mut driver = FlDriver::new(&rt, cfg, pipe_ref)?;
+        let mut builder = FlDriver::builder(&rt, cfg);
+        if let Some(p) = pipe_ref {
+            builder = builder.pipeline(p);
+        }
+        let mut driver = builder.build()?;
         let setup_s = setup.elapsed_secs();
 
         driver.run_round()?; // warm the executable cache

@@ -103,8 +103,8 @@ fn main() -> fedae::error::Result<()> {
     );
 
     // --- AE train step (the pre-pass / per-round hot path) ----------------
-    let tiled_rt = Runtime::native_with_kernel(Kernel::Tiled);
-    let naive_rt = Runtime::native_with_kernel(Kernel::Naive);
+    let tiled_rt = Runtime::builder().kernel(Kernel::Tiled).build()?;
+    let naive_rt = Runtime::builder().kernel(Kernel::Naive).build()?;
     let mut rows = Vec::new();
     for tag in ["toy", "mnist", "cifar", "mnist_deep"] {
         if tag == "mnist_deep" && max_collabs < 1024 {

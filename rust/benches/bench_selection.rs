@@ -1,0 +1,123 @@
+//! Bench — million-client federations on the seeded-selection + lazy
+//! collaborator pool (ISSUE 6 acceptance: a 1,000,000-registered /
+//! 256-active round costs roughly what a 256-collaborator round costs,
+//! in both time and resident state).
+//!
+//! Per registered-population tier this runs the same fixed-seed sampled
+//! experiment (K = 256 uniform selection, resident pool capped at 512)
+//! and reports per-round wall time, activations and resident clients.
+//! Round time and resident state must stay ~flat in N: the asserts fail
+//! if the 1M-client tier costs more than 5x the 1k-client tier per round
+//! or the pool ever exceeds its bound.
+//!
+//! `cargo bench --bench bench_selection`
+//! (set `FEDAE_BENCH_MAX_CLIENTS=100000` to skip the 1M tier on small
+//! machines; default runs all three tiers.)
+
+use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::coordinator::FlDriver;
+use fedae::metrics::print_table;
+use fedae::runtime::Runtime;
+use fedae::util::Stopwatch;
+
+const ACTIVE: usize = 256;
+const MAX_RESIDENT: usize = 512;
+
+fn cfg_for(registered: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("bench_selection_{registered}");
+    cfg.model = "mnist".into();
+    // Identity compression: no pre-pass, so activation cost is dominated
+    // by shard synthesis + collaborator state, the thing the lazy pool
+    // must keep O(active).
+    cfg.compression = CompressionConfig::Identity;
+    cfg.fl.collaborators = registered;
+    cfg.fl.rounds = 4; // driver cap; we time fewer below
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 32;
+    cfg.data.test_size = 64;
+    cfg.seed = 53;
+    cfg.selection.count = ACTIVE.min(registered);
+    cfg.selection.max_resident = MAX_RESIDENT.min(registered);
+    cfg.engine.parallelism = 0;
+    cfg
+}
+
+struct Tier {
+    per_round_ms: f64,
+    activated: usize,
+    resident_peak: usize,
+}
+
+fn run_tier(rt: &Runtime, registered: usize, rounds: usize) -> fedae::error::Result<Tier> {
+    let mut driver = FlDriver::builder(rt, cfg_for(registered)).build()?;
+    let sw = Stopwatch::start();
+    let mut activated = 0;
+    let mut resident_peak = 0;
+    for _ in 0..rounds {
+        let out = driver.run_round()?;
+        activated += out.selection.newly_activated;
+        resident_peak = resident_peak.max(out.selection.resident);
+        assert_eq!(out.selection.sampled, ACTIVE.min(registered));
+    }
+    let per_round_ms = sw.elapsed_ms() / rounds as f64;
+    assert!(
+        driver.resident_clients() <= MAX_RESIDENT,
+        "{registered}: resident pool {} exceeds bound {MAX_RESIDENT}",
+        driver.resident_clients()
+    );
+    Ok(Tier {
+        per_round_ms,
+        activated,
+        resident_peak,
+    })
+}
+
+fn main() -> fedae::error::Result<()> {
+    let rt = Runtime::from_dir("artifacts")?;
+    let max_clients: usize = std::env::var("FEDAE_BENCH_MAX_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    println!("== seeded selection + lazy pool, K={ACTIVE} active, synth-mnist ==");
+
+    let mut rows = Vec::new();
+    let mut baseline_ms = None;
+    let mut top_tier_ms = None;
+    for registered in [1_000usize, 100_000, 1_000_000] {
+        if registered > max_clients {
+            println!("(skipping {registered} clients; raise FEDAE_BENCH_MAX_CLIENTS)");
+            continue;
+        }
+        let tier = run_tier(&rt, registered, 2)?;
+        if baseline_ms.is_none() {
+            baseline_ms = Some(tier.per_round_ms);
+        }
+        top_tier_ms = Some(tier.per_round_ms);
+        rows.push(vec![
+            registered.to_string(),
+            format!("{:.0}", tier.per_round_ms),
+            tier.activated.to_string(),
+            tier.resident_peak.to_string(),
+        ]);
+    }
+    println!(
+        "{}",
+        print_table(
+            &["registered", "ms/round", "activations", "peak resident"],
+            &rows
+        )
+    );
+
+    // The acceptance assert: per-round cost is a function of K (active),
+    // not N (registered). Selection is O(K) and state is O(resident), so
+    // the largest tier must land within noise of the smallest.
+    if let (Some(base), Some(top)) = (baseline_ms, top_tier_ms) {
+        assert!(
+            top < 5.0 * base.max(1.0),
+            "round time grew with registered population: {base:.0}ms -> {top:.0}ms"
+        );
+        println!("(round time ~flat in registered population: {base:.0}ms -> {top:.0}ms)");
+    }
+    Ok(())
+}

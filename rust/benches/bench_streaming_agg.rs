@@ -59,7 +59,7 @@ fn run(
     engine: EngineConfig,
     rounds: usize,
 ) -> fedae::error::Result<Run> {
-    let mut driver = FlDriver::new(rt, cfg_for(collabs, engine), None)?;
+    let mut driver = FlDriver::builder(rt, cfg_for(collabs, engine)).build()?;
     let mut outcomes = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         outcomes.push(driver.run_round()?);

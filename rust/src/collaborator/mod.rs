@@ -23,6 +23,10 @@ pub struct Collaborator<'rt> {
     train: TrainStep<'rt>,
     compressor: Box<dyn UpdateCompressor + 'rt>,
     batches: BatchIter,
+    /// Batches drawn from `batches` so far — the replay cursor the
+    /// driver's bounded resident pool uses to restore an evicted
+    /// collaborator's exact batch-stream position on re-activation.
+    batches_drawn: u64,
 }
 
 impl<'rt> std::fmt::Debug for Collaborator<'rt> {
@@ -65,6 +69,7 @@ impl<'rt> Collaborator<'rt> {
             train,
             compressor,
             batches,
+            batches_drawn: 0,
         })
     }
 
@@ -89,6 +94,26 @@ impl<'rt> Collaborator<'rt> {
         self.params.extend_from_slice(params);
     }
 
+    /// Number of training batches drawn so far (the batch-stream replay
+    /// cursor — see [`Collaborator::fast_forward`]).
+    pub fn batches_drawn(&self) -> u64 {
+        self.batches_drawn
+    }
+
+    /// Replay `batches` draws from the (seeded, deterministic) batch
+    /// iterator. A freshly constructed collaborator fast-forwarded by an
+    /// evicted one's [`Collaborator::batches_drawn`] count continues the
+    /// identical batch stream, which is what makes eviction from the
+    /// driver's bounded resident pool invisible to results: local params
+    /// are overwritten by the broadcast each selected round, so the
+    /// batch position is the only cross-round local state to restore.
+    pub fn fast_forward(&mut self, batches: u64) {
+        for _ in 0..batches {
+            let _ = self.batches.next_batch();
+        }
+        self.batches_drawn = batches;
+    }
+
     /// Run `epochs` local epochs of SGD; returns the mean training loss.
     pub fn local_train(&mut self, epochs: usize, train_cfg: &TrainConfig) -> Result<f32> {
         let mut total = 0.0f64;
@@ -97,6 +122,7 @@ impl<'rt> Collaborator<'rt> {
         for _ in 0..epochs {
             for _ in 0..per_epoch {
                 let idx = self.batches.next_batch();
+                self.batches_drawn += 1;
                 let (x, y) = self.shard.gather_batch(&idx, self.train.batch);
                 let (p, loss) = self.train.step(&self.params, &x, &y, train_cfg.lr)?;
                 self.params = p;

@@ -438,6 +438,123 @@ pub struct BackendConfig {
     pub kernel: Kernel,
 }
 
+/// Per-round client-selection policy (implemented by
+/// [`crate::coordinator::selection`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectionPolicy {
+    /// Uniform K-of-N via a sparse partial Fisher–Yates shuffle whose
+    /// cost is O(K) regardless of the registered population size.
+    #[default]
+    Uniform,
+    /// Weight-proportional sampling without replacement (weights are the
+    /// per-client sample counts).
+    Weighted,
+    /// Stratified sampling: clients interleave round-robin into
+    /// [`SelectionConfig::strata`] strata and K is apportioned across
+    /// them by largest remainder, then drawn uniformly within each.
+    Stratified,
+}
+
+impl SelectionPolicy {
+    /// Stable lowercase name for logs and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionPolicy::Uniform => "uniform",
+            SelectionPolicy::Weighted => "weighted",
+            SelectionPolicy::Stratified => "stratified",
+        }
+    }
+
+    /// Parse a policy string (the single source of truth for both the
+    /// JSON config and the CLI `--selection` flag).
+    pub fn parse(s: &str) -> Result<SelectionPolicy> {
+        Ok(match s {
+            "uniform" => SelectionPolicy::Uniform,
+            "weighted" => SelectionPolicy::Weighted,
+            "stratified" => SelectionPolicy::Stratified,
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "unknown selection policy `{other}` (expected uniform|weighted|stratified)"
+                )))
+            }
+        })
+    }
+}
+
+/// Client-selection knobs: which clients train each round, and how much
+/// collaborator state the driver keeps resident between rounds.
+///
+/// Selection is a pure function of (seed, round, policy) — like the
+/// straggler model, it never consumes the driver's other random streams,
+/// so any `parallelism`/`shard_size`/`agg_path` combination sees the
+/// same subset. The degenerate configuration (everyone selected) is
+/// bitwise-identical to an unsampled run (`rust/tests/selection.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectionConfig {
+    /// Selection policy (`uniform` | `weighted` | `stratified`).
+    pub policy: SelectionPolicy,
+    /// Fraction of registered clients selected per round, in (0, 1].
+    /// The default `1.0` selects everyone. Mutually exclusive with the
+    /// legacy `fl.participation` knob and with `count`.
+    pub fraction: f64,
+    /// Absolute per-round client count K; `0` (the default) defers to
+    /// `fraction`. Use this for "K active of N registered" presets where
+    /// K should not scale with the population.
+    pub count: usize,
+    /// Async-mode over-provisioning: sample `K + slack` clients per
+    /// round and admit only the first K arrivals before the deadline
+    /// (later on-time arrivals are discarded, not buffered). Requires
+    /// engine mode `async`.
+    pub slack: usize,
+    /// Bounded resident-state pool: `0` (the default) keeps every
+    /// activated client's state resident forever; `m` evicts the
+    /// least-recently-selected clients beyond `m`, making driver memory
+    /// O(active ∪ recently-active) instead of O(registered). Evicted
+    /// clients are rebuilt bit-identically on re-selection.
+    pub max_resident: usize,
+    /// Stratum count for the stratified policy; must be `0` for the
+    /// other policies.
+    pub strata: usize,
+}
+
+impl Default for SelectionConfig {
+    fn default() -> Self {
+        SelectionConfig {
+            policy: SelectionPolicy::Uniform,
+            fraction: 1.0,
+            count: 0,
+            slack: 0,
+            max_resident: 0,
+            strata: 0,
+        }
+    }
+}
+
+impl SelectionConfig {
+    /// Per-round admission target K for a population of `n` registered
+    /// clients. `participation` is the legacy `fl.participation`
+    /// fraction, which the fractional path falls back to so pre-existing
+    /// configs keep their exact behavior.
+    pub fn resolve_count(&self, n: usize, participation: f64) -> usize {
+        if self.count > 0 {
+            self.count.min(n)
+        } else {
+            let f = if self.fraction < 1.0 {
+                self.fraction
+            } else {
+                participation
+            };
+            ((n as f64 * f).round() as usize).clamp(1, n)
+        }
+    }
+
+    /// Number of clients actually drawn per round: K plus the async
+    /// over-provisioning slack, capped at the population size.
+    pub fn sample_size(&self, n: usize, participation: f64) -> usize {
+        (self.resolve_count(n, participation) + self.slack).min(n)
+    }
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -463,6 +580,8 @@ pub struct ExperimentConfig {
     pub network: NetworkConfig,
     /// Round-engine execution knobs (parallelism, aggregation sharding).
     pub engine: EngineConfig,
+    /// Per-round client selection and resident-state bounds.
+    pub selection: SelectionConfig,
     /// Compute-backend knobs (native kernel selection).
     pub backend: BackendConfig,
 }
@@ -481,6 +600,7 @@ impl Default for ExperimentConfig {
             prepass: PrepassConfig::default(),
             network: NetworkConfig::default(),
             engine: EngineConfig::default(),
+            selection: SelectionConfig::default(),
             backend: BackendConfig::default(),
         }
     }
@@ -593,6 +713,26 @@ impl ExperimentConfig {
             }
             if let Some(v) = e.get("agg_path").and_then(|v| v.as_str()) {
                 cfg.engine.agg_path = AggPath::parse(v)?;
+            }
+        }
+        if let Some(s) = j.get("selection") {
+            if let Some(v) = s.get("policy").and_then(|v| v.as_str()) {
+                cfg.selection.policy = SelectionPolicy::parse(v)?;
+            }
+            if let Some(v) = s.get("fraction").and_then(|v| v.as_f64()) {
+                cfg.selection.fraction = v;
+            }
+            if let Some(v) = s.get("count").and_then(|v| v.as_usize()) {
+                cfg.selection.count = v;
+            }
+            if let Some(v) = s.get("slack").and_then(|v| v.as_usize()) {
+                cfg.selection.slack = v;
+            }
+            if let Some(v) = s.get("max_resident").and_then(|v| v.as_usize()) {
+                cfg.selection.max_resident = v;
+            }
+            if let Some(v) = s.get("strata").and_then(|v| v.as_usize()) {
+                cfg.selection.strata = v;
             }
         }
         if let Some(b) = j.get("backend") {
@@ -722,6 +862,96 @@ impl ExperimentConfig {
                         e.jitter_ms
                     )));
                 }
+            }
+        }
+        let s = &self.selection;
+        let n = self.fl.collaborators;
+        if !(0.0 < s.fraction && s.fraction <= 1.0) {
+            return Err(FedAeError::Config(format!(
+                "selection.fraction {} not in (0, 1]",
+                s.fraction
+            )));
+        }
+        if s.count > 0 && s.fraction != 1.0 {
+            return Err(FedAeError::Config(
+                "selection.count and selection.fraction are mutually exclusive \
+                 (set one, leave the other at its default)"
+                    .into(),
+            ));
+        }
+        if s.count > n {
+            return Err(FedAeError::Config(format!(
+                "selection.count {} exceeds the {} registered collaborators",
+                s.count, n
+            )));
+        }
+        if self.fl.participation < 1.0 && (s.fraction < 1.0 || s.count > 0) {
+            return Err(FedAeError::Config(
+                "fl.participation and the selection section both subsample \
+                 clients; use selection.fraction/count and leave participation \
+                 at 1.0"
+                    .into(),
+            ));
+        }
+        match s.policy {
+            SelectionPolicy::Stratified => {
+                if s.strata == 0 {
+                    return Err(FedAeError::Config(
+                        "stratified selection requires selection.strata >= 1".into(),
+                    ));
+                }
+                if s.strata > n {
+                    return Err(FedAeError::Config(format!(
+                        "selection.strata {} exceeds the {} registered collaborators",
+                        s.strata, n
+                    )));
+                }
+            }
+            SelectionPolicy::Uniform | SelectionPolicy::Weighted => {
+                if s.strata > 0 {
+                    return Err(FedAeError::Config(format!(
+                        "selection.strata only applies to the stratified policy \
+                         (policy is `{}`)",
+                        s.policy.name()
+                    )));
+                }
+            }
+        }
+        if s.slack > 0 && e.mode != EngineMode::Async {
+            return Err(FedAeError::Config(
+                "selection.slack over-provisions deadline-driven rounds and \
+                 requires engine mode `async`"
+                    .into(),
+            ));
+        }
+        if s.max_resident > 0 {
+            let drawn = s.sample_size(n, self.fl.participation);
+            if s.max_resident < drawn {
+                return Err(FedAeError::Config(format!(
+                    "selection.max_resident {} is below the {} clients drawn \
+                     per round",
+                    s.max_resident, drawn
+                )));
+            }
+            // Eviction rebuilds a client's state from (seed, id) alone, so
+            // it is only sound for compressors without cross-round state.
+            // TopK carries an error-feedback residual and stochastic
+            // quantization an advancing rng; silently resetting either on
+            // re-selection would change results, so reject up front.
+            let stateful = matches!(
+                self.compression,
+                CompressionConfig::TopK { .. }
+                    | CompressionConfig::Quantize {
+                        stochastic: true,
+                        ..
+                    }
+            );
+            if stateful {
+                return Err(FedAeError::Config(format!(
+                    "selection.max_resident cannot bound `{}` compression: it \
+                     keeps cross-round state that eviction would discard",
+                    self.compression.kind_name()
+                )));
             }
         }
         Ok(())
@@ -878,6 +1108,133 @@ mod tests {
         cfg.aggregation = AggregationConfig::FedBuff { goal: 4, lr: 0.0 };
         assert!(cfg.validate(&m).is_err());
         cfg.aggregation = AggregationConfig::FedBuff { goal: 4, lr: 0.5 };
+        cfg.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn parses_selection_section() {
+        // Defaults: everyone participates, unbounded resident pool.
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.selection, SelectionConfig::default());
+        assert_eq!(cfg.selection.policy, SelectionPolicy::Uniform);
+        assert_eq!(cfg.selection.fraction, 1.0);
+        assert_eq!(cfg.selection.count, 0);
+        assert_eq!(cfg.selection.max_resident, 0);
+
+        let j = Json::parse(
+            r#"{"selection": {"policy": "stratified", "count": 256,
+                "slack": 32, "max_resident": 512, "strata": 4}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.selection.policy, SelectionPolicy::Stratified);
+        assert_eq!(cfg.selection.count, 256);
+        assert_eq!(cfg.selection.slack, 32);
+        assert_eq!(cfg.selection.max_resident, 512);
+        assert_eq!(cfg.selection.strata, 4);
+
+        for p in [
+            SelectionPolicy::Uniform,
+            SelectionPolicy::Weighted,
+            SelectionPolicy::Stratified,
+        ] {
+            assert_eq!(SelectionPolicy::parse(p.name()).unwrap(), p);
+        }
+        let j = Json::parse(r#"{"selection": {"policy": "psychic"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn selection_count_resolution() {
+        let mut s = SelectionConfig::default();
+        // Default: everyone.
+        assert_eq!(s.resolve_count(8, 1.0), 8);
+        // Legacy participation still drives the fractional path.
+        assert_eq!(s.resolve_count(4, 0.5), 2);
+        // Explicit fraction wins over participation.
+        s.fraction = 0.25;
+        assert_eq!(s.resolve_count(8, 1.0), 2);
+        // Absolute count wins over both and caps at the population.
+        s.fraction = 1.0;
+        s.count = 3;
+        assert_eq!(s.resolve_count(8, 1.0), 3);
+        assert_eq!(s.resolve_count(2, 1.0), 2);
+        // Slack over-provisions the draw, capped at the population.
+        s.slack = 2;
+        assert_eq!(s.sample_size(8, 1.0), 5);
+        assert_eq!(s.sample_size(4, 1.0), 4);
+    }
+
+    #[test]
+    fn selection_validation() {
+        let mjson = Json::parse(&manifest::tests::test_manifest_json()).unwrap();
+        let m = manifest::Manifest::from_json(&mjson).unwrap();
+        let base = || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = "toy".into();
+            cfg.compression = CompressionConfig::Identity;
+            cfg.fl.collaborators = 8;
+            cfg
+        };
+        // A well-formed sampled config validates.
+        let mut cfg = base();
+        cfg.selection.count = 2;
+        cfg.selection.max_resident = 4;
+        cfg.validate(&m).unwrap();
+        // fraction outside (0, 1].
+        let mut cfg = base();
+        cfg.selection.fraction = 0.0;
+        assert!(cfg.validate(&m).is_err());
+        // count and fraction are mutually exclusive.
+        let mut cfg = base();
+        cfg.selection.count = 2;
+        cfg.selection.fraction = 0.5;
+        assert!(cfg.validate(&m).is_err());
+        // count capped by the population.
+        let mut cfg = base();
+        cfg.selection.count = 9;
+        assert!(cfg.validate(&m).is_err());
+        // Legacy participation and the new knobs cannot both subsample.
+        let mut cfg = base();
+        cfg.fl.participation = 0.5;
+        cfg.selection.fraction = 0.5;
+        assert!(cfg.validate(&m).is_err());
+        // Stratified needs strata; other policies must leave it at 0.
+        let mut cfg = base();
+        cfg.selection.policy = SelectionPolicy::Stratified;
+        assert!(cfg.validate(&m).is_err());
+        cfg.selection.strata = 4;
+        cfg.validate(&m).unwrap();
+        let mut cfg = base();
+        cfg.selection.strata = 4;
+        assert!(cfg.validate(&m).is_err());
+        // Slack requires the async engine.
+        let mut cfg = base();
+        cfg.selection.count = 2;
+        cfg.selection.slack = 1;
+        assert!(cfg.validate(&m).is_err());
+        cfg.engine.mode = EngineMode::Async;
+        cfg.validate(&m).unwrap();
+        // max_resident below the per-round draw.
+        let mut cfg = base();
+        cfg.selection.count = 4;
+        cfg.selection.max_resident = 3;
+        assert!(cfg.validate(&m).is_err());
+        // Bounded pools reject compressors with cross-round state.
+        let mut cfg = base();
+        cfg.selection.count = 2;
+        cfg.selection.max_resident = 4;
+        cfg.compression = CompressionConfig::TopK { fraction: 0.1 };
+        assert!(cfg.validate(&m).is_err());
+        cfg.compression = CompressionConfig::Quantize {
+            bits: 8,
+            stochastic: true,
+        };
+        assert!(cfg.validate(&m).is_err());
+        cfg.compression = CompressionConfig::Quantize {
+            bits: 8,
+            stochastic: false,
+        };
         cfg.validate(&m).unwrap();
     }
 

@@ -199,6 +199,15 @@ impl AsyncRoundEngine {
         self.pending.len()
     }
 
+    /// Collaborator ids with at least one buffered update still in
+    /// flight. The driver pins these in its resident-client pool: a
+    /// buffered update needs its sender's server-side decompressor (and,
+    /// for fresh-MSE bookkeeping, collaborator state) alive through its
+    /// apply round, so eviction must skip them.
+    pub fn pending_collaborators(&self) -> impl Iterator<Item = usize> + '_ {
+        self.pending.iter().map(|b| b.collaborator)
+    }
+
     /// Fold one round's stats into the running totals
     /// (`sim_round_seconds` accumulates into total simulated experiment
     /// time).

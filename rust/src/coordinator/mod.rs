@@ -29,12 +29,25 @@
 //!   knobs) swaps the round barrier for the deadline discipline — that
 //!   one *does* change results, deterministically (ARCHITECTURE.md
 //!   §Async rounds & staleness, `rust/tests/async_round.rs`).
+//! * [`ClientSelector`] (in [`selection`]) — seeded per-round client
+//!   selection (uniform / weighted / stratified K-of-N), a pure function
+//!   of `(seed, round, policy)`. The driver pairs it with a lazy
+//!   resident-state pool: collaborator state (shard, local model,
+//!   compressor, server decoder) is built on first selection and, under
+//!   `selection.max_resident`, evicted least-recently-selected — so
+//!   driver memory is O(active ∪ recently-active), not O(registered),
+//!   and million-client populations are simulable (ARCHITECTURE.md
+//!   §Client selection & lazy state, `rust/tests/selection.rs`).
 
 pub mod async_engine;
 pub mod engine;
+pub mod selection;
 
 pub use async_engine::{AsyncRoundEngine, BufferedUpdate, StragglerStats};
 pub use engine::ParallelRoundEngine;
+pub use selection::{
+    ClientSelector, SelectionStats, StratifiedSelector, UniformSelector, WeightedSelector,
+};
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{mpsc, Arc, RwLock};
@@ -44,8 +57,8 @@ use crate::aggregation::{
 };
 use crate::collaborator::{run_prepass, Collaborator, PrepassResult};
 use crate::compression::{ae::AeCompressor, CompressedUpdate, MeteredDecoder, UpdateCompressor};
-use crate::config::{AggPath, CompressionConfig, ExperimentConfig, Sharding};
-use crate::data::{make_shards, Dataset, SynthKind};
+use crate::config::{AggPath, CompressionConfig, ExperimentConfig, SelectionPolicy, Sharding};
+use crate::data::{Dataset, ShardFactory, SynthKind};
 use crate::error::{FedAeError, Result};
 use crate::metrics::{ExperimentLog, RoundRecord};
 use crate::network::{
@@ -171,6 +184,21 @@ impl DecoderRegistry {
             })
     }
 
+    /// Remove a collaborator's decoder, if present. A no-op when absent.
+    ///
+    /// Used by the driver's resident-pool eviction: the registry models
+    /// what the simulated server holds in *memory*, not the wire
+    /// protocol — the decoder shipment itself is metered only once per
+    /// collaborator, and re-registration after re-selection restores the
+    /// bit-identical parameters (the pre-pass is a pure function of its
+    /// seed).
+    pub fn unregister(&self, collab: usize) {
+        self.decoders
+            .write()
+            .expect("decoder registry poisoned")
+            .remove(&collab);
+    }
+
     /// Number of registered decoders.
     pub fn len(&self) -> usize {
         self.decoders.read().expect("decoder registry poisoned").len()
@@ -232,10 +260,11 @@ impl AggRoundStats {
 /// Compares with `==` field-by-field, except `mean_recon_mse` which is
 /// compared bitwise — `NaN` there marks "no fresh updates this round"
 /// (an async round where everything was late or dropped), and two
-/// bit-identical runs must still compare equal — and `agg`, which is
-/// execution metadata (wall-clock, decode/memory accounting) and is
-/// excluded so runs that differ only in `parallelism`/`shard_size`/
-/// `agg_path` still compare equal. The determinism tests rely on both.
+/// bit-identical runs must still compare equal — and `agg` and
+/// `selection`, which are execution metadata (wall-clock, decode/memory
+/// accounting, resident-pool churn) and are excluded so runs that
+/// differ only in `parallelism`/`shard_size`/`agg_path`/`max_resident`
+/// still compare equal. The determinism tests rely on all three.
 #[derive(Debug, Clone)]
 pub struct RoundOutcome {
     /// Which round this outcome describes.
@@ -256,6 +285,9 @@ pub struct RoundOutcome {
     pub stragglers: StragglerStats,
     /// Server aggregation cost accounting (excluded from `==`).
     pub agg: AggRoundStats,
+    /// Client-selection and resident-pool accounting (excluded from
+    /// `==`).
+    pub selection: SelectionStats,
 }
 
 impl PartialEq for RoundOutcome {
@@ -319,15 +351,73 @@ impl ServerAggregator {
     }
 }
 
+/// One client's resident state: the collaborator (shard, local model,
+/// batch stream, compressor) plus the server-side metered decompressor
+/// for its updates. Built lazily on first selection
+/// ([`FlDriver`] activation) and — under `selection.max_resident` —
+/// evicted least-recently-selected, to be rebuilt bit-identically on
+/// re-selection.
+struct ClientState<'rt> {
+    collaborator: Collaborator<'rt>,
+    /// Server-side decompressor wrapped in the decode meter so every
+    /// reconstruction during aggregation is counted
+    /// ([`crate::compression::DecodeStats`]).
+    decoder: MeteredDecoder<'rt>,
+    /// Round this client was last selected (the LRU eviction key).
+    last_used: usize,
+}
+
+/// Tag XORed into the experiment seed to derive the client-selection
+/// stream, decorrelating it from the sharding / init / training streams
+/// (which derive from the raw seed).
+const SELECTION_SEED_TAG: u64 = 0x5E1E_C7ED_0C1A_55E5;
+
 /// The whole-experiment driver (single-process simulation).
+///
+/// Built via [`FlDriver::builder`]. Collaborator state is *not* built up
+/// front: each round the [`ClientSelector`] picks K of the N registered
+/// clients, and only picked clients are activated (shard synthesized,
+/// pre-pass run, compressors built) — everything an unpicked client
+/// would contribute is deferred, so construction and per-round cost
+/// scale with K, not N.
 pub struct FlDriver<'rt> {
     cfg: ExperimentConfig,
     rt: &'rt Runtime,
-    collaborators: Vec<Collaborator<'rt>>,
-    /// Server-side decompressors, one per collaborator, each wrapped in
-    /// the decode meter so every reconstruction during aggregation is
-    /// counted ([`crate::compression::DecodeStats`]).
-    server_decompressors: Vec<MeteredDecoder<'rt>>,
+    /// Resident client state, keyed by client id. Holds O(active ∪
+    /// recently-active) entries: clients activate on first selection and
+    /// are evicted least-recently-selected when `selection.max_resident`
+    /// bounds the pool.
+    clients: BTreeMap<usize, ClientState<'rt>>,
+    /// Registered population size (`fl.collaborators`) — the N that
+    /// selection draws from; never materialized as a collection.
+    n_clients: usize,
+    /// Per-round seeded selection policy.
+    selector: Box<dyn ClientSelector>,
+    /// Lazy shard synthesis: any client's dataset on demand.
+    factory: ShardFactory,
+    /// AE pipeline (required when `cfg.compression` is `ae`), kept for
+    /// lazy activation pre-passes.
+    pipeline: Option<&'rt AePipeline<'rt>>,
+    /// Model parameter count (non-AE compressor construction).
+    model_n_params: usize,
+    /// The frozen initial global model: activation always starts a
+    /// client from this (its locals are overwritten by the broadcast
+    /// anyway), so a re-activated client is bit-identical to one that
+    /// was never evicted.
+    init_params: Vec<f32>,
+    /// The frozen AE initialization used by every activation pre-pass.
+    ae_init: Option<Vec<f32>>,
+    /// Decoders currently registered server-side (AE scheme; mirrors
+    /// the resident pool).
+    registry: DecoderRegistry,
+    /// Clients whose decoder shipment was already metered: eviction
+    /// models server *memory*, so a re-activation re-registers the
+    /// decoder without re-paying the (identical) shipment bytes.
+    shipped: BTreeSet<usize>,
+    /// Batch-stream positions of evicted clients: re-activation
+    /// fast-forwards the rebuilt collaborator's batch iterator so its
+    /// draw sequence continues exactly where the evicted one stopped.
+    suspended: BTreeMap<usize, u64>,
     /// The round aggregator. The streaming path
     /// ([`crate::config::AggPath`]) folds one reconstruction at a time
     /// into accumulator streams (per shard when sharded); the batch path
@@ -346,8 +436,8 @@ pub struct FlDriver<'rt> {
     global: Vec<f32>,
     /// Per-round records and experiment summaries.
     pub log: ExperimentLog,
-    rng: crate::util::rng::Rng,
-    /// Pre-pass results per collaborator (kept for figures/validation).
+    /// Pre-pass results, one per *activated* AE collaborator in first-
+    /// activation order (kept for figures/validation).
     pub prepass_results: Vec<PrepassResult>,
     round: usize,
 }
@@ -356,19 +446,55 @@ impl<'rt> std::fmt::Debug for FlDriver<'rt> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("FlDriver")
             .field("experiment", &self.cfg.name)
-            .field("collaborators", &self.collaborators.len())
+            .field("registered", &self.n_clients)
+            .field("resident", &self.clients.len())
             .field("round", &self.round)
             .finish()
     }
 }
 
+/// Staged construction for [`FlDriver`]: the required wiring goes into
+/// [`FlDriver::builder`], optional parts land as named methods instead
+/// of a widening positional signature.
+///
+/// ```ignore
+/// let mut driver = FlDriver::builder(&rt, cfg).pipeline(&pipeline).build()?;
+/// ```
+pub struct DriverBuilder<'rt> {
+    rt: &'rt Runtime,
+    cfg: ExperimentConfig,
+    pipeline: Option<&'rt AePipeline<'rt>>,
+}
+
+impl<'rt> DriverBuilder<'rt> {
+    /// Attach the AE pipeline — required when `cfg.compression` is `ae`,
+    /// rejected-at-build otherwise unused.
+    pub fn pipeline(mut self, pipeline: &'rt AePipeline<'rt>) -> Self {
+        self.pipeline = Some(pipeline);
+        self
+    }
+
+    /// Validate the config and wire the experiment: shared test set,
+    /// aggregator, engines, network, selection policy. Per-client state
+    /// (shards, pre-passes, compressors) is created lazily when a client
+    /// is first selected, so building is O(1) in the registered
+    /// population.
+    pub fn build(self) -> Result<FlDriver<'rt>> {
+        FlDriver::from_parts(self.rt, self.cfg, self.pipeline)
+    }
+}
+
 impl<'rt> FlDriver<'rt> {
-    /// Build the full experiment from config: shards, collaborators,
-    /// compressors (running the pre-pass round when the AE scheme is
-    /// selected), aggregation and the simulated network.
-    ///
-    /// `pipeline` must be provided when `cfg.compression` is `Ae`.
-    pub fn new(
+    /// Start building a driver over a runtime and experiment config.
+    pub fn builder(rt: &'rt Runtime, cfg: ExperimentConfig) -> DriverBuilder<'rt> {
+        DriverBuilder {
+            rt,
+            cfg,
+            pipeline: None,
+        }
+    }
+
+    fn from_parts(
         rt: &'rt Runtime,
         cfg: ExperimentConfig,
         pipeline: Option<&'rt AePipeline<'rt>>,
@@ -389,18 +515,17 @@ impl<'rt> FlDriver<'rt> {
                 "color_imbalance sharding requires the cifar model".into(),
             ));
         }
-        let (shards, test) = make_shards(
+        let factory = ShardFactory::new(
             kind,
             cfg.data.sharding,
             cfg.data.alpha,
-            cfg.fl.collaborators,
             cfg.data.per_collab,
-            cfg.data.test_size,
             cfg.seed,
-        )?;
+        );
+        let test = factory.test_set(cfg.data.test_size)?;
         let global = rt.load_init(&format!("{}_params", cfg.model))?;
         let eval = EvalStep::new(rt, &cfg.model)?;
-        let mut network = SimulatedNetwork::from_config(&cfg.network);
+        let network = SimulatedNetwork::from_config(&cfg.network);
         // One live aggregator either way: the sharded adapter wraps the
         // configured algorithm when coordinate sharding is requested.
         let server_agg = if cfg.engine.shard_size > 0 {
@@ -413,15 +538,12 @@ impl<'rt> FlDriver<'rt> {
         };
         let engine = ParallelRoundEngine::new(cfg.engine.parallelism);
         let async_engine = AsyncRoundEngine::from_config(&cfg.engine, cfg.seed);
-        let mut rng = crate::util::rng::Rng::new(cfg.seed);
-        let mut log = ExperimentLog::new(cfg.name.clone());
+        let log = ExperimentLog::new(cfg.name.clone());
 
-        // Build compressors (+ pre-pass when using the AE scheme).
-        let mut collaborators = Vec::with_capacity(cfg.fl.collaborators);
-        let mut server_decompressors: Vec<MeteredDecoder<'rt>> = Vec::new();
-        let mut prepass_results = Vec::new();
-
-        match &cfg.compression {
+        // AE wiring is checked (and its init loaded) eagerly so a
+        // misconfigured experiment fails at build, not at round 0 — the
+        // per-client pre-passes themselves run lazily on activation.
+        let ae_init = match &cfg.compression {
             CompressionConfig::Ae { ae } => {
                 let pipeline = pipeline.ok_or_else(|| {
                     FedAeError::Config("AE compression requires an AePipeline".into())
@@ -432,101 +554,42 @@ impl<'rt> FlDriver<'rt> {
                         pipeline.tag
                     )));
                 }
-                let ae_init = rt.load_init(&format!("ae_{ae}_init"))?;
-                let registry = DecoderRegistry::default();
-                // Pre-pass (Fig 2) per collaborator, fanned across the
-                // engine workers: each task depends only on its own shard
-                // and seed, so parallel execution is deterministic. The
-                // metered decoder shipments and collaborator construction
-                // happen on this thread afterwards, in id order, so the
-                // traffic ledger and seeds match the sequential build
-                // exactly.
-                let tasks: Vec<(usize, Dataset)> = shards.into_iter().enumerate().collect();
-                let reg = &registry;
-                let model_family = cfg.model.as_str();
-                let prepass_cfg = &cfg.prepass;
-                let train_cfg = &cfg.train;
-                let global_init = &global;
-                let ae_init_ref = &ae_init;
-                let base_seed = cfg.seed;
-                let prepassed: Vec<Result<(usize, Dataset, PrepassResult)>> =
-                    engine.map(tasks, |(id, shard)| {
-                        let pp = run_prepass(
-                            rt,
-                            model_family,
-                            pipeline,
-                            &shard,
-                            prepass_cfg,
-                            train_cfg,
-                            global_init,
-                            ae_init_ref,
-                            base_seed.wrapping_add(id as u64),
-                        )?;
-                        reg.register(id, pp.dec_params.clone())?;
-                        Ok((id, shard, pp))
-                    });
-                for item in prepassed {
-                    let (id, shard, pp) = item?;
-                    // Ship the decoder (metered, Eq. 5 cost).
-                    let ship = Message::DecoderShipment {
-                        collab_id: id as u32,
-                        ae_tag: ae.clone(),
-                        dec_params: pp.dec_params.clone(),
-                    };
-                    network.send(
-                        0,
-                        id,
-                        Direction::Up,
-                        TrafficKind::DecoderShipment,
-                        ship.wire_bytes(),
-                    );
-                    server_decompressors.push(MeteredDecoder::new(Box::new(
-                        AeCompressor::server(pipeline, pp.dec_params.clone())?,
-                    )));
-                    let comp =
-                        Box::new(AeCompressor::collaborator(pipeline, pp.enc_params.clone())?);
-                    collaborators.push(Collaborator::new(
-                        rt,
-                        &cfg.model,
-                        id,
-                        shard,
-                        global.clone(),
-                        comp,
-                        cfg.seed.wrapping_add(1000 + id as u64),
-                    )?);
-                    log.add_summary(
-                        format!("prepass_c{id}_final_ae_acc"),
-                        pp.ae_history.last().map(|h| h.1).unwrap_or(0.0),
-                    );
-                    prepass_results.push(pp);
-                }
-                debug_assert_eq!(registry.len(), collaborators.len());
+                Some(rt.load_init(&format!("ae_{ae}_init"))?)
             }
-            other => {
-                for (id, shard) in shards.into_iter().enumerate() {
-                    let seed = cfg.seed.wrapping_mul(31).wrapping_add(id as u64);
-                    let comp = crate::compression::from_config(other, model.n_params, seed)?;
-                    let decomp = crate::compression::from_config(other, model.n_params, seed)?;
-                    server_decompressors.push(MeteredDecoder::new(decomp));
-                    collaborators.push(Collaborator::new(
-                        rt,
-                        &cfg.model,
-                        id,
-                        shard,
-                        global.clone(),
-                        comp,
-                        cfg.seed.wrapping_add(1000 + id as u64),
-                    )?);
-                }
-            }
-        }
+            _ => None,
+        };
 
-        let _ = rng.next_u64(); // decorrelate selection stream from sharding
+        let n_clients = cfg.fl.collaborators;
+        let sel_seed = cfg.seed ^ SELECTION_SEED_TAG;
+        let selector: Box<dyn ClientSelector> = match cfg.selection.policy {
+            SelectionPolicy::Uniform => Box::new(UniformSelector::new(sel_seed)),
+            // Every synthetic shard holds `per_collab` samples, so
+            // sample-count weights are currently uniform; the policy axis
+            // exists for heterogeneous shard sizes and draws from its own
+            // (exponential-key) stream either way.
+            SelectionPolicy::Weighted => Box::new(WeightedSelector::new(
+                sel_seed,
+                vec![cfg.data.per_collab as f64; n_clients],
+            )),
+            SelectionPolicy::Stratified => {
+                Box::new(StratifiedSelector::new(sel_seed, cfg.selection.strata))
+            }
+        };
+
         Ok(FlDriver {
             cfg,
             rt,
-            collaborators,
-            server_decompressors,
+            clients: BTreeMap::new(),
+            n_clients,
+            selector,
+            factory,
+            pipeline,
+            model_n_params: model.n_params,
+            init_params: global.clone(),
+            ae_init,
+            registry: DecoderRegistry::default(),
+            shipped: BTreeSet::new(),
+            suspended: BTreeMap::new(),
             server_agg,
             engine,
             async_engine,
@@ -535,8 +598,7 @@ impl<'rt> FlDriver<'rt> {
             test,
             global,
             log,
-            rng,
-            prepass_results,
+            prepass_results: Vec::new(),
             round: 0,
         })
     }
@@ -568,17 +630,195 @@ impl<'rt> FlDriver<'rt> {
         self.eval.eval(params, &x, &y)
     }
 
-    /// Client selection for a round (participation sampling).
-    fn select_round_participants(&mut self) -> Vec<usize> {
-        let n = self.collaborators.len();
-        let k = ((n as f64 * self.cfg.fl.participation).round() as usize).clamp(1, n);
-        if k == n {
-            (0..n).collect()
-        } else {
-            let mut sel = self.rng.sample_indices(n, k);
-            sel.sort_unstable();
-            sel
+    /// Clients currently resident in the lazy state pool.
+    pub fn resident_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Resolve this round's targets: `(admit_k, sampled)` where
+    /// `admit_k` is the admission target K and `sampled` is the sorted
+    /// id set actually drawn (K + slack ids in async over-provisioned
+    /// rounds). Pure function of `(seed, round, policy)` — no driver
+    /// stream advances.
+    fn select_round_participants(&self, round: usize) -> (usize, Vec<usize>) {
+        let n = self.n_clients;
+        let k = self.cfg.selection.resolve_count(n, self.cfg.fl.participation);
+        let sample = self.cfg.selection.sample_size(n, self.cfg.fl.participation);
+        (k, self.selector.select(round, n, sample))
+    }
+
+    /// Ensure every id in `participants` has resident state, building
+    /// what is missing: shard synthesis (and, for the AE scheme, the
+    /// pre-pass) fans out across the engine workers; compressor
+    /// construction, decoder registration and (first activation only)
+    /// the metered decoder shipment happen on this thread in id order.
+    /// Every piece is a pure function of `(seed, id)`, so a rebuilt
+    /// client is bit-identical to one that was never evicted; the batch
+    /// stream continues via the suspended draw count.
+    ///
+    /// Returns the number of clients newly activated.
+    fn activate(&mut self, round: usize, participants: &[usize]) -> Result<usize> {
+        let fresh: Vec<usize> = participants
+            .iter()
+            .copied()
+            .filter(|cid| !self.clients.contains_key(cid))
+            .collect();
+        if fresh.is_empty() {
+            return Ok(0);
         }
+        let newly = fresh.len();
+        let rt = self.rt;
+        let factory = &self.factory;
+        match &self.cfg.compression {
+            CompressionConfig::Ae { ae } => {
+                let pipeline = self.pipeline.expect("AE pipeline checked at build");
+                let ae_init = self.ae_init.as_ref().expect("AE init loaded at build");
+                // Pre-pass (Fig 2) per fresh client, fanned across the
+                // engine workers: each task depends only on its own
+                // (seed-derived) shard, so parallel execution is
+                // deterministic.
+                let model_family = self.cfg.model.as_str();
+                let prepass_cfg = &self.cfg.prepass;
+                let train_cfg = &self.cfg.train;
+                let init_params = &self.init_params;
+                let base_seed = self.cfg.seed;
+                let prepassed: Vec<Result<(usize, Dataset, PrepassResult)>> =
+                    self.engine.map(fresh, |id| {
+                        let shard = factory.shard(id)?;
+                        let pp = run_prepass(
+                            rt,
+                            model_family,
+                            pipeline,
+                            &shard,
+                            prepass_cfg,
+                            train_cfg,
+                            init_params,
+                            ae_init,
+                            base_seed.wrapping_add(id as u64),
+                        )?;
+                        Ok((id, shard, pp))
+                    });
+                for item in prepassed {
+                    let (id, shard, pp) = item?;
+                    self.registry.register(id, pp.dec_params.clone())?;
+                    if self.shipped.insert(id) {
+                        // First activation: ship the decoder (metered,
+                        // Eq. 5 cost) and record the pre-pass. Eviction
+                        // models server memory, not the protocol, so a
+                        // re-activation re-registers the bit-identical
+                        // decoder without re-paying the shipment.
+                        let ship = Message::DecoderShipment {
+                            collab_id: id as u32,
+                            ae_tag: ae.clone(),
+                            dec_params: pp.dec_params.clone(),
+                        };
+                        self.network.send(
+                            round,
+                            id,
+                            Direction::Up,
+                            TrafficKind::DecoderShipment,
+                            ship.wire_bytes(),
+                        );
+                        self.log.add_summary(
+                            format!("prepass_c{id}_final_ae_acc"),
+                            pp.ae_history.last().map(|h| h.1).unwrap_or(0.0),
+                        );
+                        self.prepass_results.push(pp.clone());
+                    }
+                    let decoder = MeteredDecoder::new(Box::new(AeCompressor::server(
+                        pipeline,
+                        pp.dec_params.clone(),
+                    )?));
+                    let comp =
+                        Box::new(AeCompressor::collaborator(pipeline, pp.enc_params)?);
+                    let mut collaborator = Collaborator::new(
+                        rt,
+                        &self.cfg.model,
+                        id,
+                        shard,
+                        self.init_params.clone(),
+                        comp,
+                        self.cfg.seed.wrapping_add(1000 + id as u64),
+                    )?;
+                    if let Some(drawn) = self.suspended.remove(&id) {
+                        collaborator.fast_forward(drawn);
+                    }
+                    self.clients.insert(
+                        id,
+                        ClientState {
+                            collaborator,
+                            decoder,
+                            last_used: round,
+                        },
+                    );
+                }
+            }
+            other => {
+                let synthesized: Vec<Result<(usize, Dataset)>> =
+                    self.engine.map(fresh, |id| Ok((id, factory.shard(id)?)));
+                for item in synthesized {
+                    let (id, shard) = item?;
+                    let seed = self.cfg.seed.wrapping_mul(31).wrapping_add(id as u64);
+                    let comp =
+                        crate::compression::from_config(other, self.model_n_params, seed)?;
+                    let decomp =
+                        crate::compression::from_config(other, self.model_n_params, seed)?;
+                    let mut collaborator = Collaborator::new(
+                        rt,
+                        &self.cfg.model,
+                        id,
+                        shard,
+                        self.init_params.clone(),
+                        comp,
+                        self.cfg.seed.wrapping_add(1000 + id as u64),
+                    )?;
+                    if let Some(drawn) = self.suspended.remove(&id) {
+                        collaborator.fast_forward(drawn);
+                    }
+                    self.clients.insert(
+                        id,
+                        ClientState {
+                            collaborator,
+                            decoder: MeteredDecoder::new(decomp),
+                            last_used: round,
+                        },
+                    );
+                }
+            }
+        }
+        Ok(newly)
+    }
+
+    /// Evict least-recently-selected clients beyond
+    /// `selection.max_resident`, recording the evicted/resident counts.
+    /// Clients with buffered late updates still in flight are pinned:
+    /// their decoder must survive until the update's apply round.
+    /// Runs after the round's decode meters were drained, so no
+    /// accounting is lost.
+    fn evict_lru(&mut self, sel_stats: &mut SelectionStats) {
+        let max = self.cfg.selection.max_resident;
+        if max > 0 && self.clients.len() > max {
+            let pinned: BTreeSet<usize> = self
+                .async_engine
+                .as_ref()
+                .map(|e| e.pending_collaborators().collect())
+                .unwrap_or_default();
+            let mut victims: Vec<(usize, usize)> = self
+                .clients
+                .iter()
+                .filter(|(cid, _)| !pinned.contains(*cid))
+                .map(|(&cid, st)| (st.last_used, cid))
+                .collect();
+            victims.sort_unstable();
+            let excess = self.clients.len() - max;
+            for &(_, cid) in victims.iter().take(excess) {
+                let st = self.clients.remove(&cid).expect("victim is resident");
+                self.suspended.insert(cid, st.collaborator.batches_drawn());
+                self.registry.unregister(cid);
+                sel_stats.evicted += 1;
+            }
+        }
+        sel_stats.resident = self.clients.len();
     }
 
     /// Whether this round's aggregation runs through the streaming
@@ -638,14 +878,18 @@ impl<'rt> FlDriver<'rt> {
         };
 
         // Split the disjoint field borrows once: the accumulator streams
-        // borrow `server_agg`, decoding borrows the decompressors, the
-        // MSE bookkeeping borrows the collaborators.
-        let decomps = &mut self.server_decompressors;
-        let collaborators = &self.collaborators;
+        // borrow `server_agg`, decoding and the MSE bookkeeping borrow
+        // the resident client pool.
+        let clients = &mut self.clients;
         let mut mses: Vec<f32> = Vec::with_capacity(m);
         let mut decode_one = |idx: usize, mses: &mut Vec<f32>| -> Result<Vec<f32>> {
             let (cid, _, update, age) = &updates[idx];
-            let recon = decomps[*cid].decompress(update)?;
+            let st = clients.get_mut(cid).ok_or_else(|| {
+                FedAeError::Coordination(format!(
+                    "no resident state for collaborator {cid}"
+                ))
+            })?;
+            let recon = st.decoder.decompress(update)?;
             if recon.len() != n {
                 return Err(FedAeError::Coordination(format!(
                     "collaborator {cid}: decode returned {} values, expected {n}",
@@ -658,7 +902,7 @@ impl<'rt> FlDriver<'rt> {
                 )));
             }
             if *age == 0 {
-                mses.push(tensor::mse(&recon, collaborators[*cid].params()) as f32);
+                mses.push(tensor::mse(&recon, st.collaborator.params()) as f32);
             }
             Ok(recon)
         };
@@ -805,7 +1049,20 @@ impl<'rt> FlDriver<'rt> {
     /// (staleness-discounted), or drops it — see [`AsyncRoundEngine`].
     pub fn run_round(&mut self) -> Result<RoundOutcome> {
         let round = self.round;
-        let participants = self.select_round_participants();
+        // 0. Seeded client selection, then lazy activation of whatever
+        //    selected state is not yet resident.
+        let (admit_k, participants) = self.select_round_participants(round);
+        let mut sel_stats = SelectionStats {
+            sampled: participants.len(),
+            ..SelectionStats::default()
+        };
+        sel_stats.newly_activated = self.activate(round, &participants)?;
+        for &cid in &participants {
+            self.clients
+                .get_mut(&cid)
+                .expect("participant activated")
+                .last_used = round;
+        }
         let mut state = RoundState::new(round, participants.iter().copied());
 
         let mut bytes_down = 0u64;
@@ -825,7 +1082,11 @@ impl<'rt> FlDriver<'rt> {
                 broadcast.wire_bytes(),
             );
             bytes_down += broadcast.wire_bytes();
-            self.collaborators[cid].set_global(&self.global);
+            self.clients
+                .get_mut(&cid)
+                .expect("participant activated")
+                .collaborator
+                .set_global(&self.global);
         }
 
         // 2. Local training + local eval + compressed upload, one task
@@ -846,10 +1107,10 @@ impl<'rt> FlDriver<'rt> {
         let (test_x, test_y) = self.test.gather_batch(&test_idx, eval.batch);
 
         let tasks: Vec<(usize, &mut Collaborator<'rt>)> = self
-            .collaborators
+            .clients
             .iter_mut()
-            .enumerate()
-            .filter(|(cid, _)| selected.contains(cid))
+            .filter(|(cid, _)| selected.contains(*cid))
+            .map(|(&cid, st)| (cid, &mut st.collaborator))
             .collect();
         let results: Vec<Result<CollabRoundResult>> = self.engine.map(tasks, |(cid, collab)| {
             let train_loss = collab.local_train(local_epochs, train_cfg)?;
@@ -899,41 +1160,60 @@ impl<'rt> FlDriver<'rt> {
         // preserves input order, and tasks were built in id order). In
         // async mode this is where the deadline discipline bites: on-time
         // arrivals are admitted, late ones buffered (bytes already
-        // spent), dropped ones discarded entirely. Metrics (train loss,
-        // local evals) are only recorded for admitted collaborators —
-        // a late or dropped client's eval report never reached the
-        // server either.
+        // spent), dropped ones discarded entirely. Over-provisioned
+        // rounds (`selection.slack > 0`) additionally cap admission at
+        // the first K on-time arrivals. Metrics (train loss, local
+        // evals) are only recorded for admitted collaborators — a late,
+        // dropped or discarded client's eval report never reached the
+        // server in time.
         let deadline_s = self.async_engine.as_ref().map(|e| e.deadline_seconds());
         let mut stats = StragglerStats::default();
         let mut train_losses = Vec::with_capacity(participants.len());
         let mut local_evals: Vec<(usize, f32, f32)> = Vec::with_capacity(participants.len());
+        let mut on_time: Vec<(f64, CollabRoundResult)> =
+            Vec::with_capacity(participants.len());
         for result in results {
-            let r = result?;
+            let mut r = result?;
             bytes_up += r.ledger.total_bytes();
-            self.network.merge_ledger(r.ledger);
+            self.network.merge_ledger(std::mem::take(&mut r.ledger));
             match r.fate {
                 UploadFate::Dropped => {
                     stats.dropped += 1;
                 }
-                UploadFate::Arrived { arrival_s } => {
-                    stats.sim_round_seconds = stats.sim_round_seconds.max(arrival_s);
-                    match deadline_s {
-                        Some(d) if arrival_s > d => {
-                            stats.late += 1;
-                            self.async_engine
-                                .as_mut()
-                                .expect("deadline implies async engine")
-                                .buffer_late(round, r.cid, r.n_samples, r.update, arrival_s);
-                        }
-                        _ => {
-                            stats.admitted += 1;
-                            train_losses.push((r.cid, r.train_loss));
-                            local_evals.push((r.cid, r.local_eval_loss, r.local_eval_acc));
-                            state.accept(round, r.cid, r.n_samples, r.update)?;
-                        }
+                UploadFate::Arrived { arrival_s } => match deadline_s {
+                    Some(d) if arrival_s > d => {
+                        stats.late += 1;
+                        self.async_engine
+                            .as_mut()
+                            .expect("deadline implies async engine")
+                            .buffer_late(round, r.cid, r.n_samples, r.update, arrival_s);
                     }
-                }
+                    _ => on_time.push((arrival_s, r)),
+                },
             }
+        }
+        // Over-provisioned admission: the server stops listening after
+        // the K-th on-time arrival (ordered by arrival time, ties by
+        // id); later on-time uploads are discarded — their bytes were
+        // still spent. With `slack = 0` at most K clients were sampled,
+        // so the cap never binds and admission matches the plain fold
+        // exactly.
+        if on_time.len() > admit_k {
+            on_time.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cid.cmp(&b.1.cid))
+            });
+            sel_stats.discarded = on_time.len() - admit_k;
+            on_time.truncate(admit_k);
+            on_time.sort_by_key(|(_, r)| r.cid);
+        }
+        for (arrival_s, r) in on_time {
+            stats.admitted += 1;
+            stats.sim_round_seconds = stats.sim_round_seconds.max(arrival_s);
+            train_losses.push((r.cid, r.train_loss));
+            local_evals.push((r.cid, r.local_eval_loss, r.local_eval_acc));
+            state.accept(round, r.cid, r.n_samples, r.update)?;
         }
         match deadline_s {
             // Sync mode keeps the paper's barrier invariant.
@@ -946,10 +1226,12 @@ impl<'rt> FlDriver<'rt> {
                 }
             }
             // A deadline-paced round closes at the deadline whenever
-            // anything was late or dropped; otherwise at the last
-            // arrival.
+            // anything was late or dropped; when over-provisioned
+            // admission filled instead, it closes at the K-th arrival
+            // (already the running max over admitted); otherwise at the
+            // last arrival.
             Some(d) => {
-                if stats.late + stats.dropped > 0 && d.is_finite() {
+                if sel_stats.discarded == 0 && stats.late + stats.dropped > 0 && d.is_finite() {
                     stats.sim_round_seconds = d;
                 }
             }
@@ -1013,23 +1295,68 @@ impl<'rt> FlDriver<'rt> {
             // schemes without random access (AE decoder, sketch).
             let full_range = updates
                 .iter()
-                .any(|(cid, ..)| self.server_decompressors[*cid].range_decode_is_full());
+                .any(|(cid, ..)| self.clients[cid].decoder.range_decode_is_full());
             agg_stats.peak_floats =
                 (m * shard_size.min(n) + if full_range { n } else { 0 }) as u64;
             let mut new_global = vec![0.0f32; n];
             let staleness: Vec<usize> = updates.iter().map(|u| u.3).collect();
+            // Update indices grouped by sender: each sender's metered
+            // decoder is a disjoint `&mut` inside the client pool, so an
+            // engine worker can own one sender's decoder for a whole
+            // shard's decodes while other workers decode other senders'
+            // ranges concurrently.
+            let mut by_cid: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (i, (cid, ..)) in updates.iter().enumerate() {
+                by_cid.entry(*cid).or_default().push(i);
+            }
             // Reconstruction error accumulators, one per update, built up
             // shard-by-shard in the same coordinate order as the
             // unsharded `tensor::mse` (f64 accumulation, so the final
             // mean matches bitwise). Only fresh updates contribute: a
             // stale update's sender has trained on since, so comparing
             // against its *current* local params would be meaningless.
-            let mut sq_err = vec![0.0f64; updates.len()];
+            let mut sq_err = vec![0.0f64; m];
             for (s, range) in shard_ranges(n, shard_size).enumerate() {
-                let mut shard_updates = Vec::with_capacity(updates.len());
-                for (i, (cid, n_samples, update, age)) in updates.iter().enumerate() {
-                    let piece =
-                        self.server_decompressors[*cid].decompress_range(update, range.clone())?;
+                // Decode pass, fanned across the engine workers grouped
+                // by sender. Every range decode is a pure function of
+                // (decoder, update, range) — no decoder carries state
+                // across calls — so any fan-out order reproduces the
+                // sequential walk bitwise (rust/tests/streaming_agg.rs
+                // pins the equivalence, decode counts included).
+                let updates_ref = &updates;
+                let range_ref = &range;
+                let decode_tasks: Vec<(&Vec<usize>, &mut MeteredDecoder<'rt>)> = self
+                    .clients
+                    .iter_mut()
+                    .filter_map(|(cid, st)| by_cid.get(cid).map(|idxs| (idxs, &mut st.decoder)))
+                    .collect();
+                let decoded: Vec<Result<Vec<(usize, Vec<f32>)>>> =
+                    self.engine.map(decode_tasks, |(idxs, decoder)| {
+                        idxs.iter()
+                            .map(|&i| {
+                                let (_, _, update, _) = &updates_ref[i];
+                                let piece =
+                                    decoder.decompress_range(update, range_ref.clone())?;
+                                Ok((i, piece))
+                            })
+                            .collect()
+                    });
+                let mut pieces: Vec<Option<Vec<f32>>> = (0..m).map(|_| None).collect();
+                for group in decoded {
+                    for (i, piece) in group? {
+                        pieces[i] = Some(piece);
+                    }
+                }
+                // Check + MSE + aggregation pass, sequential in the
+                // original update order so operand order (and therefore
+                // every float) matches the pre-parallel path bitwise.
+                let mut shard_updates = Vec::with_capacity(m);
+                for (i, (cid, n_samples, _, age)) in updates.iter().enumerate() {
+                    let piece = pieces[i].take().ok_or_else(|| {
+                        FedAeError::Coordination(format!(
+                            "no resident state for collaborator {cid}"
+                        ))
+                    })?;
                     if piece.len() != range.len() {
                         return Err(FedAeError::Coordination(format!(
                             "collaborator {cid}: shard decode returned {} values for {}..{}",
@@ -1045,7 +1372,7 @@ impl<'rt> FlDriver<'rt> {
                         )));
                     }
                     if *age == 0 {
-                        let local = self.collaborators[*cid].params();
+                        let local = self.clients[cid].collaborator.params();
                         for (k, &v) in piece.iter().enumerate() {
                             let d = (v - local[range.start + k]) as f64;
                             sq_err[i] += d * d;
@@ -1084,14 +1411,19 @@ impl<'rt> FlDriver<'rt> {
             let mut staleness = Vec::with_capacity(updates.len());
             let mut mses = Vec::with_capacity(updates.len());
             for (cid, n_samples, update, age) in updates {
-                let recon = self.server_decompressors[cid].decompress(&update)?;
+                let st = self.clients.get_mut(&cid).ok_or_else(|| {
+                    FedAeError::Coordination(format!(
+                        "no resident state for collaborator {cid}"
+                    ))
+                })?;
+                let recon = st.decoder.decompress(&update)?;
                 if let Err(i) = tensor::check_finite(&recon) {
                     return Err(FedAeError::Coordination(format!(
                         "non-finite reconstruction from collaborator {cid} at index {i}"
                     )));
                 }
                 if age == 0 {
-                    mses.push(tensor::mse(&recon, self.collaborators[cid].params()) as f32);
+                    mses.push(tensor::mse(&recon, st.collaborator.params()) as f32);
                 }
                 staleness.push(age);
                 weighted.push(WeightedUpdate {
@@ -1105,8 +1437,8 @@ impl<'rt> FlDriver<'rt> {
                 .aggregate_stale(weighted, &staleness, decay)?;
             mses
         };
-        for d in &mut self.server_decompressors {
-            let s = d.take_stats();
+        for st in self.clients.values_mut() {
+            let s = st.decoder.take_stats();
             agg_stats.full_decodes += s.full_decodes;
             agg_stats.range_decodes += s.range_decodes;
             agg_stats.decoded_floats += s.decoded_floats;
@@ -1141,6 +1473,11 @@ impl<'rt> FlDriver<'rt> {
             });
         }
 
+        // 5. Evict resident state beyond `selection.max_resident` —
+        //    after the decode meters were drained, and pinning clients
+        //    whose buffered late updates are still in flight.
+        self.evict_lru(&mut sel_stats);
+
         if let Some(engine) = &mut self.async_engine {
             engine.record_round(&stats);
         }
@@ -1155,6 +1492,7 @@ impl<'rt> FlDriver<'rt> {
             bytes_down,
             stragglers: stats,
             agg: agg_stats,
+            selection: sel_stats,
         })
     }
 
@@ -1176,9 +1514,15 @@ impl<'rt> FlDriver<'rt> {
     pub fn run(&mut self) -> Result<RoundOutcome> {
         let mut last = None;
         let mut agg_totals = AggRoundStats::default();
+        let mut sel_activated = 0usize;
+        let mut sel_evicted = 0usize;
+        let mut sel_discarded = 0usize;
         for _ in 0..self.cfg.fl.rounds {
             let outcome = self.run_round()?;
             agg_totals.accumulate(&outcome.agg);
+            sel_activated += outcome.selection.newly_activated;
+            sel_evicted += outcome.selection.evicted;
+            sel_discarded += outcome.selection.discarded;
             last = Some(outcome);
         }
         let outcome = last.ok_or_else(|| FedAeError::Config("zero rounds".into()))?;
@@ -1211,6 +1555,16 @@ impl<'rt> FlDriver<'rt> {
             .add_summary("agg_peak_floats_max", agg_totals.peak_floats);
         self.log
             .add_summary("agg_ms_total", format!("{:.3}", agg_totals.ms));
+        // Client-selection / resident-pool accounting.
+        self.log
+            .add_summary("selection_policy", self.selector.name());
+        self.log
+            .add_summary("selection_activated_total", sel_activated);
+        self.log.add_summary("selection_evicted_total", sel_evicted);
+        self.log
+            .add_summary("selection_discarded_total", sel_discarded);
+        self.log
+            .add_summary("resident_clients_end", self.clients.len());
         if let Some(engine) = &self.async_engine {
             let t = engine.totals();
             self.log.add_summary("async_admitted_total", t.admitted);

@@ -1,0 +1,409 @@
+//! Seeded per-round client selection for large registered populations.
+//!
+//! The paper's experiments run every configured collaborator every round,
+//! which is fine at 2–1024 clients but not at the "millions of users" its
+//! title gestures at: the standard lever alongside update compression is
+//! *client subsampling* — pick K of the N registered clients per round —
+//! and the communication-efficiency surveys in PAPERS.md treat the two as
+//! composable reductions. This module supplies that layer.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Pure function of `(seed, round, policy)`.** Like
+//!    [`crate::network::StragglerModel`], a selector owns no advancing
+//!    RNG: every round derives a fresh stream from
+//!    `seed ^ round * PHI64`. Replaying round `r` — on another thread
+//!    count, another shard size, another aggregation path, or after a
+//!    crash — yields the identical participant set.
+//! 2. **O(K) work and memory for the uniform policy.** Sampling K of
+//!    1,000,000 must not allocate a million-entry permutation.
+//!    [`sample_indices_sparse`] runs the same partial Fisher–Yates walk
+//!    as [`Rng::sample_indices`] but keeps only the O(K) displaced
+//!    entries in a hash map, so it is bitwise-identical to the dense
+//!    version on the same RNG stream while never touching O(N) memory.
+//! 3. **K = N degenerates to everyone.** Every selector returns
+//!    `0..n` without drawing a single random number when `k >= n`, so a
+//!    full-participation config is bitwise-identical to a driver with no
+//!    selection layer at all.
+//!
+//! Three policies are provided: [`UniformSelector`] (each client equally
+//! likely), [`WeightedSelector`] (inclusion probability proportional to a
+//! per-client weight, e.g. local sample count, via the
+//! Efraimidis–Spirakis exponential-keys method), and
+//! [`StratifiedSelector`] (clients partitioned into strata by
+//! `id % strata`; the per-round quota is split across strata by largest
+//! remainder and sampled uniformly within each). The driver consumes
+//! them behind the [`ClientSelector`] trait and reports per-round
+//! [`SelectionStats`] on [`crate::coordinator::RoundOutcome`].
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+/// Golden-ratio odd constant used across the crate to decorrelate
+/// per-round streams (`Rng::new(seed ^ round * PHI64)`).
+const PHI64: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Second odd constant mixing the stratum index into the per-round
+/// stream so strata draw from unrelated sequences.
+const STRATUM_MIX: u64 = 0xD1B5_4A32_D192_ED03;
+
+/// Per-round selection and resident-pool accounting, carried on
+/// [`crate::coordinator::RoundOutcome`]. Like the `agg` stats, this is
+/// *accounting*, not *results*: it is excluded from `RoundOutcome`
+/// equality so bitwise-parity suites compare outcomes across resident
+/// bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SelectionStats {
+    /// Clients sampled for this round (K, or K + slack in async mode).
+    pub sampled: usize,
+    /// Sampled clients that had no resident state and were activated
+    /// (shard synthesized, compressor built, decoder registered).
+    pub newly_activated: usize,
+    /// Resident clients evicted after this round to satisfy
+    /// `selection.max_resident`.
+    pub evicted: usize,
+    /// Clients resident after this round's eviction pass.
+    pub resident: usize,
+    /// On-time arrivals beyond the K admission target that were
+    /// discarded (async over-provisioned sampling only).
+    pub discarded: usize,
+}
+
+/// A per-round client-selection policy. `select` must return a sorted,
+/// duplicate-free subset of `0..n`, must be a pure function of
+/// `(self, round, n, k)`, and must return `0..n` (drawing nothing) when
+/// `k >= n`.
+pub trait ClientSelector: Send + Sync {
+    /// Short policy name for logs and summaries.
+    fn name(&self) -> &'static str;
+
+    /// Choose `k` distinct client ids out of `0..n` for `round`.
+    fn select(&self, round: usize, n: usize, k: usize) -> Vec<usize>;
+}
+
+/// Sample `k` distinct indices from `[0, n)` using O(k) time and memory.
+///
+/// This replays [`Rng::sample_indices`]'s partial Fisher–Yates walk —
+/// same `below(n - i)` draws in the same order — but tracks only the
+/// displaced entries in a hash map instead of materializing the identity
+/// permutation, so the result is **bitwise-identical** to the dense
+/// version on an identically-seeded RNG (pinned by
+/// `tests/prop_invariants.rs`) while the cost is independent of `n`.
+/// Positions `<= i` are never read again (the draw is `j >= i`), so only
+/// the forward displacement needs recording.
+pub fn sample_indices_sparse(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "sample_indices_sparse: k > n");
+    let mut swapped: HashMap<usize, usize> = HashMap::with_capacity(k * 2);
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        let vi = *swapped.get(&i).unwrap_or(&i);
+        let vj = *swapped.get(&j).unwrap_or(&j);
+        out.push(vj);
+        swapped.insert(j, vi);
+    }
+    out
+}
+
+/// Derive the per-round selection RNG: a pure function of
+/// `(seed, round)`, so any round is replayable in isolation.
+fn round_rng(seed: u64, round: usize) -> Rng {
+    Rng::new(seed ^ (round as u64).wrapping_mul(PHI64))
+}
+
+/// Uniform K-of-N selection: every client equally likely each round,
+/// sampled without replacement in O(K).
+#[derive(Debug, Clone)]
+pub struct UniformSelector {
+    seed: u64,
+}
+
+impl UniformSelector {
+    /// Build a uniform selector over the given selection seed.
+    pub fn new(seed: u64) -> Self {
+        UniformSelector { seed }
+    }
+}
+
+impl ClientSelector for UniformSelector {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn select(&self, round: usize, n: usize, k: usize) -> Vec<usize> {
+        if k >= n {
+            return (0..n).collect();
+        }
+        let mut rng = round_rng(self.seed, round);
+        let mut sel = sample_indices_sparse(&mut rng, n, k);
+        sel.sort_unstable();
+        sel
+    }
+}
+
+/// Weighted K-of-N selection via Efraimidis–Spirakis exponential keys:
+/// each client draws `u^(1/w)` and the k largest keys win, giving
+/// inclusion probabilities proportional to the weights (e.g. local
+/// sample counts) without replacement.
+///
+/// Unlike [`UniformSelector`] this is O(N log N) per round — one uniform
+/// draw and a sort key per registered client — but it holds no
+/// per-client *state*, so resident memory stays O(active). For uniform
+/// weights prefer [`UniformSelector`].
+#[derive(Debug, Clone)]
+pub struct WeightedSelector {
+    seed: u64,
+    weights: Vec<f64>,
+}
+
+impl WeightedSelector {
+    /// Build a weighted selector. Every weight must be strictly
+    /// positive; `weights.len()` fixes the population the selector can
+    /// serve.
+    pub fn new(seed: u64, weights: Vec<f64>) -> Self {
+        assert!(
+            weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "WeightedSelector: weights must be finite and > 0"
+        );
+        WeightedSelector { seed, weights }
+    }
+}
+
+impl ClientSelector for WeightedSelector {
+    fn name(&self) -> &'static str {
+        "weighted"
+    }
+
+    fn select(&self, round: usize, n: usize, k: usize) -> Vec<usize> {
+        assert_eq!(self.weights.len(), n, "WeightedSelector: population mismatch");
+        if k >= n {
+            return (0..n).collect();
+        }
+        let mut rng = round_rng(self.seed, round);
+        // Key u^(1/w) per client, largest k win. Ties (vanishingly rare)
+        // break toward the lower id for determinism.
+        let mut keyed: Vec<(f64, usize)> = (0..n)
+            .map(|c| (rng.uniform().powf(1.0 / self.weights[c]), c))
+            .collect();
+        keyed.sort_unstable_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        let mut sel: Vec<usize> = keyed[..k].iter().map(|&(_, c)| c).collect();
+        sel.sort_unstable();
+        sel
+    }
+}
+
+/// Stratified K-of-N selection: clients are partitioned into `strata`
+/// groups by `id % strata` (the driver assigns data shards round-robin,
+/// so `id % strata` groups clients by shard family), the round quota is
+/// apportioned across strata by largest remainder, and each stratum
+/// samples its quota uniformly (O(quota) per stratum) from an
+/// independent per-`(round, stratum)` stream.
+#[derive(Debug, Clone)]
+pub struct StratifiedSelector {
+    seed: u64,
+    strata: usize,
+}
+
+impl StratifiedSelector {
+    /// Build a stratified selector with `strata >= 1` groups.
+    pub fn new(seed: u64, strata: usize) -> Self {
+        assert!(strata >= 1, "StratifiedSelector: strata must be >= 1");
+        StratifiedSelector { seed, strata }
+    }
+
+    /// Number of clients in stratum `s` for population `n`
+    /// (members are `s, s + strata, s + 2*strata, ...`).
+    fn stratum_size(&self, n: usize, s: usize) -> usize {
+        n.saturating_sub(s).div_ceil(self.strata)
+    }
+
+    /// Largest-remainder apportionment of `k` slots across the strata,
+    /// capped at each stratum's size (total capacity is `n >= k`, so the
+    /// remainder always places).
+    fn apportion(&self, n: usize, k: usize) -> Vec<usize> {
+        let sizes: Vec<usize> = (0..self.strata).map(|s| self.stratum_size(n, s)).collect();
+        let mut alloc: Vec<usize> = sizes.iter().map(|&sz| k * sz / n).collect();
+        let mut remaining = k - alloc.iter().sum::<usize>();
+        // Order strata by descending fractional remainder (k*sz mod n),
+        // ties toward the lower stratum index.
+        let mut order: Vec<usize> = (0..self.strata).collect();
+        order.sort_unstable_by_key(|&s| (std::cmp::Reverse(k * sizes[s] % n), s));
+        while remaining > 0 {
+            for &s in &order {
+                if remaining == 0 {
+                    break;
+                }
+                if alloc[s] < sizes[s] {
+                    alloc[s] += 1;
+                    remaining -= 1;
+                }
+            }
+        }
+        alloc
+    }
+}
+
+impl ClientSelector for StratifiedSelector {
+    fn name(&self) -> &'static str {
+        "stratified"
+    }
+
+    fn select(&self, round: usize, n: usize, k: usize) -> Vec<usize> {
+        if k >= n {
+            return (0..n).collect();
+        }
+        let alloc = self.apportion(n, k);
+        let mut sel = Vec::with_capacity(k);
+        for (s, &quota) in alloc.iter().enumerate() {
+            if quota == 0 {
+                continue;
+            }
+            let size = self.stratum_size(n, s);
+            let mut rng = Rng::new(
+                self.seed
+                    ^ (round as u64).wrapping_mul(PHI64)
+                    ^ (s as u64).wrapping_mul(STRATUM_MIX),
+            );
+            for j in sample_indices_sparse(&mut rng, size, quota) {
+                sel.push(s + j * self.strata);
+            }
+        }
+        sel.sort_unstable();
+        sel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_sampling_matches_dense_bitwise() {
+        for (n, k) in [(1, 1), (10, 3), (100, 100), (257, 64), (1000, 1)] {
+            for seed in [0u64, 7, 0xDEAD_BEEF] {
+                let dense = Rng::new(seed).sample_indices(n, k);
+                let sparse = sample_indices_sparse(&mut Rng::new(seed), n, k);
+                assert_eq!(dense, sparse, "n={n} k={k} seed={seed}");
+            }
+        }
+    }
+
+    fn assert_valid(sel: &[usize], n: usize, k: usize) {
+        assert_eq!(sel.len(), k);
+        assert!(sel.windows(2).all(|w| w[0] < w[1]), "not sorted/distinct");
+        assert!(sel.iter().all(|&c| c < n));
+    }
+
+    #[test]
+    fn uniform_is_sorted_distinct_and_deterministic() {
+        let s = UniformSelector::new(42);
+        for round in 0..8 {
+            let a = s.select(round, 1000, 32);
+            assert_valid(&a, 1000, 32);
+            assert_eq!(a, s.select(round, 1000, 32), "round replay diverged");
+        }
+        assert_ne!(s.select(0, 1000, 32), s.select(1, 1000, 32));
+    }
+
+    #[test]
+    fn k_of_n_degenerates_to_everyone() {
+        let n = 17;
+        let all: Vec<usize> = (0..n).collect();
+        assert_eq!(UniformSelector::new(3).select(5, n, n), all);
+        assert_eq!(UniformSelector::new(3).select(5, n, n + 4), all);
+        assert_eq!(
+            WeightedSelector::new(3, vec![1.0; n]).select(5, n, n),
+            all
+        );
+        assert_eq!(StratifiedSelector::new(3, 4).select(5, n, n), all);
+    }
+
+    #[test]
+    fn uniform_population_cost_is_independent_of_n() {
+        // Selecting 256 of a million allocates O(k): this would OOM or
+        // time out long before the suite does if it were O(n).
+        let s = UniformSelector::new(9);
+        let sel = s.select(0, 1_000_000, 256);
+        assert_valid(&sel, 1_000_000, 256);
+    }
+
+    #[test]
+    fn uniform_hit_counts_are_roughly_flat() {
+        let n = 40;
+        let k = 8;
+        let rounds = 4000;
+        let s = UniformSelector::new(77);
+        let mut hits = vec![0usize; n];
+        for r in 0..rounds {
+            for c in s.select(r, n, k) {
+                hits[c] += 1;
+            }
+        }
+        let expect = (rounds * k / n) as f64; // 800 per client
+        for (c, &h) in hits.iter().enumerate() {
+            assert!(
+                (h as f64 - expect).abs() < 0.15 * expect,
+                "client {c}: {h} hits vs ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_heavier_clients() {
+        let n = 20;
+        // First half weight 1, second half weight 4.
+        let weights: Vec<f64> = (0..n).map(|c| if c < n / 2 { 1.0 } else { 4.0 }).collect();
+        let s = WeightedSelector::new(5, weights);
+        let mut light = 0usize;
+        let mut heavy = 0usize;
+        for r in 0..2000 {
+            for c in s.select(r, n, 5) {
+                if c < n / 2 {
+                    light += 1;
+                } else {
+                    heavy += 1;
+                }
+            }
+        }
+        assert!(
+            heavy as f64 > 2.0 * light as f64,
+            "heavy={heavy} light={light}"
+        );
+    }
+
+    #[test]
+    fn stratified_apportions_exactly_and_stays_in_stratum() {
+        let n = 103; // strata of sizes 26, 26, 26, 25 at strata=4
+        let strata = 4;
+        let k = 10;
+        let s = StratifiedSelector::new(11, strata);
+        for round in 0..16 {
+            let sel = s.select(round, n, k);
+            assert_valid(&sel, n, k);
+            let mut per = vec![0usize; strata];
+            for &c in &sel {
+                per[c % strata] += 1;
+            }
+            // Largest remainder on sizes (26,26,26,25), k=10: quotas
+            // floor to (2,2,2,2) with remainders giving (3,3,2,2).
+            assert_eq!(per, vec![3, 3, 2, 2], "round {round}");
+        }
+    }
+
+    #[test]
+    fn apportionment_sums_to_k_and_respects_capacity() {
+        for (n, strata, k) in [(10, 3, 10), (11, 4, 7), (1000, 7, 256), (5, 5, 3)] {
+            let s = StratifiedSelector::new(1, strata);
+            let alloc = s.apportion(n, k);
+            assert_eq!(alloc.iter().sum::<usize>(), k, "n={n} strata={strata}");
+            for (i, &a) in alloc.iter().enumerate() {
+                assert!(a <= s.stratum_size(n, i));
+            }
+        }
+    }
+}

@@ -314,13 +314,93 @@ pub fn uniform_probs() -> Vec<f64> {
     vec![1.0 / NUM_CLASSES as f64; NUM_CLASSES]
 }
 
-/// Build per-collaborator shards plus a shared IID test set.
+/// Lazily synthesizes per-collaborator shards: each shard is a pure
+/// function of `(factory seed, collaborator id)`, so any single client's
+/// data can be materialized on demand — O(1) factory state regardless of
+/// the registered population, which is what lets the driver's resident
+/// client pool stay O(active) at a million registered clients.
 ///
-/// * `Iid` — every collaborator samples uniformly.
-/// * `LabelSkew` — per-collaborator class distribution ~ Dirichlet(alpha).
+/// Sharding policies (see [`make_shards`] for the eager convenience):
+///
+/// * `Iid` — every collaborator samples labels uniformly.
+/// * `LabelSkew` — per-collaborator class distribution ~ Dirichlet(alpha),
+///   drawn from a per-client stream derived from the shard seed (no
+///   sequential root RNG, so shard `c` never depends on shards `0..c`).
 /// * `ColorImbalance` — paper §5.2: even collaborators get colour data,
-///   odd collaborators get grayscale (CIFAR only; for MNIST it degrades
-///   to IID since there is no chroma).
+///   odd collaborators get grayscale (CIFAR only).
+#[derive(Debug, Clone)]
+pub struct ShardFactory {
+    kind: SynthKind,
+    sharding: Sharding,
+    alpha: f64,
+    per_collab: usize,
+    seed: u64,
+}
+
+impl ShardFactory {
+    /// Build a factory; `per_collab` is the samples per shard and `seed`
+    /// the experiment seed every shard derives from.
+    pub fn new(
+        kind: SynthKind,
+        sharding: Sharding,
+        alpha: f64,
+        per_collab: usize,
+        seed: u64,
+    ) -> ShardFactory {
+        ShardFactory {
+            kind,
+            sharding,
+            alpha,
+            per_collab,
+            seed,
+        }
+    }
+
+    /// The synthetic family this factory generates.
+    pub fn kind(&self) -> SynthKind {
+        self.kind
+    }
+
+    /// Materialize collaborator `c`'s shard. Deterministic and
+    /// independent of every other shard: calling this for any subset of
+    /// clients, in any order, yields the same datasets as generating all
+    /// of them eagerly.
+    pub fn shard(&self, c: usize) -> Result<Dataset> {
+        let shard_seed = self.seed.wrapping_add(1 + c as u64).wrapping_mul(0x9E37_79B9);
+        let (spec, probs) = match self.sharding {
+            Sharding::Iid => (base_spec(self.kind), uniform_probs()),
+            Sharding::LabelSkew => {
+                let mut rng = Rng::new(shard_seed ^ 0xD1A1_C4E7);
+                (base_spec(self.kind), rng.dirichlet(self.alpha, NUM_CLASSES))
+            }
+            Sharding::ColorImbalance => {
+                let spec = if self.kind == SynthKind::Cifar && c % 2 == 1 {
+                    SynthSpec::cifar_grayscale()
+                } else {
+                    base_spec(self.kind)
+                };
+                (spec, uniform_probs())
+            }
+        };
+        generate(spec, self.seed, shard_seed, self.per_collab, &probs)
+    }
+
+    /// The shared IID test set (colour, uniform labels, fixed derived
+    /// seed — the same set at any population size).
+    pub fn test_set(&self, test_size: usize) -> Result<Dataset> {
+        generate(
+            base_spec(self.kind),
+            self.seed,
+            self.seed ^ 0x7E57_5E7,
+            test_size,
+            &uniform_probs(),
+        )
+    }
+}
+
+/// Build per-collaborator shards plus a shared IID test set — the eager
+/// convenience over [`ShardFactory`] (generates every shard up front;
+/// the driver instead materializes shards lazily per selected client).
 pub fn make_shards(
     kind: SynthKind,
     sharding: Sharding,
@@ -330,27 +410,11 @@ pub fn make_shards(
     test_size: usize,
     seed: u64,
 ) -> Result<(Vec<Dataset>, Dataset)> {
-    let mut root = Rng::new(seed);
-    let mut shards = Vec::with_capacity(n_collabs);
-    for c in 0..n_collabs {
-        let shard_seed = seed.wrapping_add(1 + c as u64).wrapping_mul(0x9E37_79B9);
-        let (spec, probs) = match sharding {
-            Sharding::Iid => (base_spec(kind), uniform_probs()),
-            Sharding::LabelSkew => (base_spec(kind), root.dirichlet(alpha, NUM_CLASSES)),
-            Sharding::ColorImbalance => {
-                let spec = if kind == SynthKind::Cifar && c % 2 == 1 {
-                    SynthSpec::cifar_grayscale()
-                } else {
-                    base_spec(kind)
-                };
-                (spec, uniform_probs())
-            }
-        };
-        shards.push(generate(spec, seed, shard_seed, per_collab, &probs)?);
-    }
-    // Test set: colour, uniform labels, fixed derived seed.
-    let test = generate(base_spec(kind), seed, seed ^ 0x7E57_5E7, test_size, &uniform_probs())?;
-    Ok((shards, test))
+    let factory = ShardFactory::new(kind, sharding, alpha, per_collab, seed);
+    let shards = (0..n_collabs)
+        .map(|c| factory.shard(c))
+        .collect::<Result<Vec<Dataset>>>()?;
+    Ok((shards, factory.test_set(test_size)?))
 }
 
 fn base_spec(kind: SynthKind) -> SynthSpec {
@@ -502,7 +566,7 @@ mod tests {
             SynthKind::Mnist,
             Sharding::LabelSkew,
             0.1,
-            4,
+            8,
             400,
             50,
             13,
@@ -517,6 +581,26 @@ mod tests {
             })
             .fold(0.0, f64::max);
         assert!(max_frac > 0.5, "expected skew, max class fraction {max_frac}");
+    }
+
+    #[test]
+    fn lazy_factory_matches_eager_shards() {
+        // Any single shard materialized in isolation is bitwise the same
+        // dataset the eager path builds, for every sharding policy.
+        for sharding in [Sharding::Iid, Sharding::LabelSkew, Sharding::ColorImbalance] {
+            let (eager, test) =
+                make_shards(SynthKind::Cifar, sharding, 0.3, 4, 30, 20, 21).unwrap();
+            let factory = ShardFactory::new(SynthKind::Cifar, sharding, 0.3, 30, 21);
+            // Out-of-order, repeated access — shards are independent.
+            for c in [3usize, 0, 2, 1, 3] {
+                let lazy = factory.shard(c).unwrap();
+                assert_eq!(lazy.x, eager[c].x, "{sharding:?} shard {c}");
+                assert_eq!(lazy.y, eager[c].y);
+            }
+            let lazy_test = factory.test_set(20).unwrap();
+            assert_eq!(lazy_test.x, test.x);
+            assert_eq!(lazy_test.y, test.y);
+        }
     }
 
     #[test]

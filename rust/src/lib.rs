@@ -91,15 +91,18 @@ pub mod prelude {
     pub use crate::collaborator::Collaborator;
     pub use crate::compression::{CompressedUpdate, UpdateCompressor};
     pub use crate::config::manifest::Manifest;
-    pub use crate::config::{EngineConfig, EngineMode, ExperimentConfig};
+    pub use crate::config::{
+        EngineConfig, EngineMode, ExperimentConfig, SelectionConfig, SelectionPolicy,
+    };
     pub use crate::coordinator::{
-        AsyncRoundEngine, FlDriver, ParallelRoundEngine, RoundOutcome, StragglerStats,
+        AsyncRoundEngine, ClientSelector, DriverBuilder, FlDriver, ParallelRoundEngine,
+        RoundOutcome, SelectionStats, StragglerStats,
     };
     pub use crate::data::{Dataset, SynthSpec};
     pub use crate::error::FedAeError;
     pub use crate::metrics::ExperimentLog;
     pub use crate::models::{AeKind, ModelKind};
     pub use crate::network::SimulatedNetwork;
-    pub use crate::runtime::{AePipeline, Runtime};
+    pub use crate::runtime::{AePipeline, Runtime, RuntimeOptions};
     pub use crate::savings::SavingsModel;
 }

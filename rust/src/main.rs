@@ -16,7 +16,7 @@
 //! ```
 
 use fedae::backend::Kernel;
-use fedae::config::{AggPath, CompressionConfig, EngineMode, ExperimentConfig};
+use fedae::config::{AggPath, CompressionConfig, EngineMode, ExperimentConfig, SelectionPolicy};
 use fedae::coordinator::FlDriver;
 use fedae::error::FedAeError;
 use fedae::metrics::{ascii_plot, print_table};
@@ -47,6 +47,8 @@ fn main() -> Result<()> {
                  \u{20}        [--kernel naive|tiled (native compute kernels)]\n\
                  \u{20}        [--mode sync|async] [--deadline-ms N (0 = infinite)] [--dropout-rate X]\n\
                  \u{20}        [--staleness-decay A] [--straggler-log-std S] [--jitter-ms N]\n\
+                 \u{20}        [--selection uniform|weighted|stratified] [--select-fraction X] [--select-count K]\n\
+                 \u{20}        [--select-slack S (async over-provisioning)] [--max-resident N (0 = unbounded)] [--strata N]\n\
                  prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N] [--kernel naive|tiled]\n\
                  savings  [--rounds N] [--max-collabs N] [--mnist]\n\
                  inspect  [--artifacts DIR]\n\
@@ -134,12 +136,23 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(k) = args.get("kernel") {
         cfg.backend.kernel = Kernel::parse(k)?;
     }
+    if let Some(p) = args.get("selection") {
+        cfg.selection.policy = SelectionPolicy::parse(p)?;
+    }
+    cfg.selection.fraction = args.get_f64("select-fraction", cfg.selection.fraction)?;
+    cfg.selection.count = args.get_usize("select-count", cfg.selection.count)?;
+    cfg.selection.slack = args.get_usize("select-slack", cfg.selection.slack)?;
+    cfg.selection.max_resident = args.get_usize("max-resident", cfg.selection.max_resident)?;
+    cfg.selection.strata = args.get_usize("strata", cfg.selection.strata)?;
     Ok(cfg)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::from_dir_with_kernel(artifacts_dir(args), cfg.backend.kernel)?;
+    let rt = Runtime::builder()
+        .artifacts_dir(artifacts_dir(args))
+        .kernel(cfg.backend.kernel)
+        .build()?;
     println!(
         "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={} agg_path={} mode={} kernel={}",
         cfg.name,
@@ -168,10 +181,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         _ => None,
     };
-    let mut driver = FlDriver::new(&rt, cfg, pipe_ref)?;
+    let mut builder = FlDriver::builder(&rt, cfg);
+    if let Some(p) = pipe_ref {
+        builder = builder.pipeline(p);
+    }
+    let mut driver = builder.build()?;
+    let n_registered = driver.config().fl.collaborators;
     for r in 0..driver.config().fl.rounds {
         let out = driver.run_round()?;
         let s = out.stragglers;
+        let sel = out.selection;
+        let sel_suffix = if sel.sampled < n_registered {
+            format!(
+                " sampled={} activated={} resident={}",
+                sel.sampled, sel.newly_activated, sel.resident
+            )
+        } else {
+            String::new()
+        };
         let async_suffix = if is_async {
             format!(
                 " admitted={} late={} dropped={} stale={} sim_s={:.3}",
@@ -182,7 +209,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         };
         println!(
             "round {r:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e} \
-             agg_decodes={} agg_peak_floats={} agg_ms={:.1}{async_suffix}",
+             agg_decodes={} agg_peak_floats={} agg_ms={:.1}{sel_suffix}{async_suffix}",
             out.eval_loss,
             out.eval_acc,
             out.bytes_up,
@@ -219,7 +246,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_prepass(args: &Args) -> Result<()> {
-    let rt = Runtime::from_dir_with_kernel(artifacts_dir(args), kernel_from_args(args)?)?;
+    let rt = Runtime::builder()
+        .artifacts_dir(artifacts_dir(args))
+        .kernel(kernel_from_args(args)?)
+        .build()?;
     let model = args.get_or("model", "mnist").to_string();
     let ae_tag = args.get_or("ae", &model).to_string();
     let pipeline = AePipeline::new(&rt, &ae_tag)?;

@@ -39,6 +39,73 @@ pub struct Runtime {
     artifacts_dir: PathBuf,
 }
 
+/// Builder for [`Runtime`] construction ([`Runtime::builder`]).
+///
+/// One construction surface replaces the old `native`/`load`/`from_dir`
+/// `× _with_kernel` constructor matrix. Every knob is optional:
+///
+/// * no knobs — the built-in pure-rust native runtime;
+/// * [`artifacts_dir`](RuntimeOptions::artifacts_dir) — load
+///   `manifest.json` from that directory (with the clean-checkout
+///   fallback documented on [`Runtime::from_dir`]);
+/// * [`manifest`](RuntimeOptions::manifest) — use an explicit manifest,
+///   reading init blobs from `artifacts_dir` (default `artifacts`);
+/// * [`kernel`](RuntimeOptions::kernel) — pin the native compute kernel
+///   (`tiled` is the fast default, `naive` the reference oracle; the XLA
+///   backend compiles its own kernels so the knob only affects the
+///   default native build).
+///
+/// ```no_run
+/// # use fedae::runtime::Runtime;
+/// # use fedae::backend::Kernel;
+/// let rt = Runtime::builder()
+///     .artifacts_dir("artifacts")
+///     .kernel(Kernel::Naive)
+///     .build()?;
+/// # Ok::<(), fedae::error::FedAeError>(())
+/// ```
+#[derive(Debug, Default)]
+pub struct RuntimeOptions {
+    kernel: Kernel,
+    artifacts_dir: Option<PathBuf>,
+    manifest: Option<Manifest>,
+}
+
+impl RuntimeOptions {
+    /// Pin the native compute kernel (the CLI `--kernel` flag lands here).
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Directory to load `manifest.json` and init blobs from.
+    pub fn artifacts_dir(mut self, dir: impl AsRef<Path>) -> Self {
+        self.artifacts_dir = Some(dir.as_ref().to_path_buf());
+        self
+    }
+
+    /// Use an explicit manifest instead of reading one from disk. Init
+    /// blobs still come from [`artifacts_dir`](RuntimeOptions::artifacts_dir)
+    /// (default `artifacts`) when present on disk.
+    pub fn manifest(mut self, manifest: &Manifest) -> Self {
+        self.manifest = Some(manifest.clone());
+        self
+    }
+
+    /// Construct the [`Runtime`] described by this builder.
+    pub fn build(self) -> Result<Runtime> {
+        match (self.manifest, self.artifacts_dir) {
+            (Some(m), dir) => Runtime::load_impl(
+                &m,
+                dir.unwrap_or_else(|| PathBuf::from("artifacts")),
+                self.kernel,
+            ),
+            (None, Some(dir)) => Runtime::from_dir_impl(&dir, self.kernel),
+            (None, None) => Ok(Runtime::native_impl(self.kernel)),
+        }
+    }
+}
+
 impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Runtime")
@@ -49,17 +116,37 @@ impl std::fmt::Debug for Runtime {
 }
 
 impl Runtime {
-    /// Pure-rust runtime over the built-in manifest: no artifacts, no
-    /// external dependencies. Init blobs are synthesized deterministically.
-    /// Runs the default (tiled) compute kernels.
-    pub fn native() -> Runtime {
-        Runtime::native_with_kernel(Kernel::default())
+    /// Start building a runtime; see [`RuntimeOptions`] for the knobs.
+    pub fn builder() -> RuntimeOptions {
+        RuntimeOptions::default()
     }
 
-    /// [`Runtime::native`] pinned to an explicit native compute kernel
-    /// (`backend.kernel` config knob: `tiled` is the fast default, `naive`
-    /// the reference oracle for A/B testing).
-    pub fn native_with_kernel(kernel: Kernel) -> Runtime {
+    /// Pure-rust runtime over the built-in manifest: no artifacts, no
+    /// external dependencies. Init blobs are synthesized deterministically.
+    /// Runs the default (tiled) compute kernels — shorthand for
+    /// `Runtime::builder().build()` minus the infallible unwrap.
+    pub fn native() -> Runtime {
+        Runtime::native_impl(Kernel::default())
+    }
+
+    /// Convenience: load manifest + runtime from an artifacts dir with the
+    /// default kernel — shorthand for
+    /// `Runtime::builder().artifacts_dir(dir).build()`.
+    ///
+    /// On the default (native) build, a missing `manifest.json` at the
+    /// conventional `artifacts` location falls back to the built-in native
+    /// runtime so a clean checkout "just works". An explicit nonstandard
+    /// path without a manifest is treated as a misconfiguration (a typo'd
+    /// `--artifacts` must not silently swap in different geometry), and
+    /// with `--features xla` the caller asked for the compiled-HLO fast
+    /// path, so any missing manifest is a hard error rather than a silent
+    /// downgrade to pure-rust compute.
+    pub fn from_dir(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Runtime::from_dir_impl(artifacts_dir.as_ref(), Kernel::default())
+    }
+
+    /// Built-in manifest + native backend (infallible).
+    fn native_impl(kernel: Kernel) -> Runtime {
         let manifest = crate::backend::native::builtin_manifest();
         let backend = NativeBackend::with_kernel(manifest.clone(), kernel);
         Runtime {
@@ -69,24 +156,11 @@ impl Runtime {
         }
     }
 
-    /// Build a runtime over an explicit manifest + artifacts directory.
-    ///
-    /// With `--features xla` this compiles the HLO artifacts through PJRT;
-    /// by default the [`NativeBackend`] executes the same computations in
-    /// pure rust (reading init blobs from disk when present).
-    pub fn load(manifest: &Manifest, artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        Runtime::load_with_kernel(manifest, artifacts_dir, Kernel::default())
-    }
-
-    /// [`Runtime::load`] pinned to an explicit native compute kernel. The
-    /// XLA backend compiles its own kernels, so the knob only affects the
-    /// default (native) build.
-    pub fn load_with_kernel(
-        manifest: &Manifest,
-        artifacts_dir: impl AsRef<Path>,
-        kernel: Kernel,
-    ) -> Result<Runtime> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
+    /// Explicit manifest + artifacts directory. With `--features xla` this
+    /// compiles the HLO artifacts through PJRT; by default the
+    /// [`NativeBackend`] executes the same computations in pure rust
+    /// (reading init blobs from disk when present).
+    fn load_impl(manifest: &Manifest, dir: PathBuf, kernel: Kernel) -> Result<Runtime> {
         #[cfg(feature = "xla")]
         let backend: Box<dyn Backend> = {
             let _ = kernel; // the compiled-HLO path has its own kernels
@@ -102,31 +176,13 @@ impl Runtime {
         })
     }
 
-    /// Convenience: load manifest + runtime from an artifacts dir.
-    ///
-    /// On the default (native) build, a missing `manifest.json` at the
-    /// conventional `artifacts` location falls back to the built-in native
-    /// runtime so a clean checkout "just works". An explicit nonstandard
-    /// path without a manifest is treated as a misconfiguration (a typo'd
-    /// `--artifacts` must not silently swap in different geometry), and
-    /// with `--features xla` the caller asked for the compiled-HLO fast
-    /// path, so any missing manifest is a hard error rather than a silent
-    /// downgrade to pure-rust compute.
-    pub fn from_dir(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        Runtime::from_dir_with_kernel(artifacts_dir, Kernel::default())
-    }
-
-    /// [`Runtime::from_dir`] pinned to an explicit native compute kernel
-    /// (the CLI `--kernel` flag lands here).
-    pub fn from_dir_with_kernel(
-        artifacts_dir: impl AsRef<Path>,
-        kernel: Kernel,
-    ) -> Result<Runtime> {
-        let dir = artifacts_dir.as_ref();
+    /// Manifest discovery from a directory; see [`Runtime::from_dir`] for
+    /// the fallback rules.
+    fn from_dir_impl(dir: &Path, kernel: Kernel) -> Result<Runtime> {
         let manifest_path = dir.join("manifest.json");
         if !manifest_path.exists() {
             if !cfg!(feature = "xla") && dir == Path::new("artifacts") {
-                return Ok(Runtime::native_with_kernel(kernel));
+                return Ok(Runtime::native_impl(kernel));
             }
             return Err(FedAeError::Artifact(format!(
                 "no manifest at {} — generate artifacts with `python -m \
@@ -136,7 +192,7 @@ impl Runtime {
             )));
         }
         let manifest = Manifest::load(manifest_path)?;
-        Runtime::load_with_kernel(&manifest, dir, kernel)
+        Runtime::load_impl(&manifest, dir.to_path_buf(), kernel)
     }
 
     /// The artifact manifest this runtime serves.
@@ -486,10 +542,38 @@ mod tests {
     fn kernel_selection_reaches_the_backend() {
         let tiled = Runtime::native();
         assert!(tiled.platform_name().contains("tiled"));
-        let naive = Runtime::native_with_kernel(Kernel::Naive);
+        let naive = Runtime::builder().kernel(Kernel::Naive).build().unwrap();
         assert!(naive.platform_name().contains("naive"));
-        let rt = Runtime::from_dir_with_kernel("artifacts", Kernel::Naive).unwrap();
+        let rt = Runtime::builder()
+            .artifacts_dir("artifacts")
+            .kernel(Kernel::Naive)
+            .build()
+            .unwrap();
         assert!(rt.platform_name().contains("naive"));
+    }
+
+    #[test]
+    fn builder_routes_by_provided_knobs() {
+        // No knobs: the built-in native runtime, same as Runtime::native().
+        let rt = Runtime::builder().build().unwrap();
+        assert!(rt.platform_name().contains("native"));
+        assert_eq!(
+            rt.load_init("mnist_params").unwrap(),
+            Runtime::native().load_init("mnist_params").unwrap()
+        );
+        // Explicit manifest: served verbatim, init blobs synthesized.
+        let m = crate::backend::native::builtin_manifest();
+        let rt = Runtime::builder().manifest(&m).build().unwrap();
+        assert_eq!(
+            rt.manifest().model("mnist").unwrap().n_params,
+            m.model("mnist").unwrap().n_params
+        );
+        // Bad explicit path still errors through the builder.
+        let err = Runtime::builder()
+            .artifacts_dir("definitely/not/a/real/artifacts/dir")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("no manifest"));
     }
 
     #[test]

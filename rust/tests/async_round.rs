@@ -41,7 +41,7 @@ type RunArtifacts = (Vec<RoundOutcome>, Vec<f32>, Vec<Transfer>, usize);
 
 fn run_rounds(cfg: ExperimentConfig, rt: &Runtime) -> RunArtifacts {
     let rounds = cfg.fl.rounds;
-    let mut driver = FlDriver::new(rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(rt, cfg).build().unwrap();
     let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
     assert!(driver.network.ledger().check_conservation());
     (
@@ -137,7 +137,7 @@ fn tight_deadline_buffers_everything_one_round() {
     cfg.engine.deadline_ms = 20.0;
     cfg.fl.rounds = 3;
     let rounds = cfg.fl.rounds;
-    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
     let initial = driver.global_params().to_vec();
     let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
 
@@ -178,7 +178,7 @@ fn full_dropout_never_aggregates() {
     cfg.engine.dropout_rate = 1.0;
     cfg.fl.rounds = 2;
     let rounds = cfg.fl.rounds;
-    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
     let initial = driver.global_params().to_vec();
     for _ in 0..rounds {
         let out = driver.run_round().unwrap();
@@ -206,7 +206,7 @@ fn late_and_dropped_counts_are_conserved_with_fedbuff() {
     cfg.engine.jitter_ms = 15.0;
     cfg.fl.rounds = 5;
     let rounds = cfg.fl.rounds;
-    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
     let mut late_total = 0usize;
     let mut stale_total = 0usize;
     for _ in 0..rounds {

@@ -36,7 +36,7 @@ fn identity_fl_learns() {
     let rt = runtime();
     let mut cfg = small_cfg("mnist", CompressionConfig::Identity);
     cfg.fl.rounds = 6;
-    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
     let first = driver.run_round().unwrap();
     let mut last = first.clone();
     for _ in 1..6 {
@@ -63,7 +63,7 @@ fn ae_fl_compresses_and_learns() {
     cfg.prepass.epochs = 12;
     cfg.prepass.ae_epochs = 12;
     cfg.data.per_collab = 512;
-    let mut driver = FlDriver::new(&rt, cfg, Some(&pipeline)).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).pipeline(&pipeline).build().unwrap();
     let outcome = driver.run().unwrap();
     // Well above the 0.1 random-chance floor even at this tiny schedule;
     // the full 40x5 paper schedule (examples/fl_two_collab.rs) goes much
@@ -103,7 +103,7 @@ fn color_imbalance_runs_on_cifar() {
     cfg.fl.local_epochs = 1;
     cfg.data.per_collab = 64;
     cfg.data.test_size = 64;
-    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
     // Even this tiny schedule must improve the global eval loss over the
     // untrained init (reference run: ~2.4 -> ~1.5 nats in 16 CNN steps).
     let (loss0, _) = driver.eval_global().unwrap();
@@ -122,7 +122,7 @@ fn color_imbalance_rejected_on_mnist() {
     let rt = runtime();
     let mut cfg = small_cfg("mnist", CompressionConfig::Identity);
     cfg.data.sharding = Sharding::ColorImbalance;
-    assert!(FlDriver::new(&rt, cfg, None).is_err());
+    assert!(FlDriver::builder(&rt, cfg).build().is_err());
 }
 
 #[test]
@@ -143,7 +143,7 @@ fn all_baseline_compressors_run_a_round() {
     ] {
         let mut cfg = small_cfg("mnist", compression.clone());
         cfg.fl.rounds = 2;
-        let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+        let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
         let out = driver.run().unwrap();
         assert!(
             out.eval_acc.is_finite(),
@@ -160,7 +160,7 @@ fn fl_is_deterministic_for_fixed_seed() {
         let mut cfg = small_cfg("mnist", CompressionConfig::Identity);
         cfg.seed = seed;
         cfg.fl.rounds = 3;
-        let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+        let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
         let out = driver.run().unwrap();
         (out.eval_loss, out.eval_acc)
     };
@@ -176,7 +176,7 @@ fn participation_sampling_selects_subset() {
     cfg.fl.participation = 0.5;
     cfg.fl.rounds = 2;
     cfg.data.per_collab = 256;
-    let mut driver = FlDriver::new(&rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).build().unwrap();
     let out = driver.run_round().unwrap();
     assert_eq!(out.train_losses.len(), 2, "50% of 4 collaborators");
 }
@@ -275,7 +275,7 @@ fn config_validation_rejects_mismatched_ae() {
     // cifar AE on mnist model: dimension mismatch caught at validation.
     let cfg = small_cfg("mnist", CompressionConfig::Ae { ae: "cifar".into() });
     let pipeline = AePipeline::new(&rt, "cifar").unwrap();
-    assert!(FlDriver::new(&rt, cfg, Some(&pipeline)).is_err());
+    assert!(FlDriver::builder(&rt, cfg).pipeline(&pipeline).build().is_err());
 }
 
 #[test]
@@ -287,6 +287,7 @@ fn shipped_config_presets_parse_and_validate() {
         "configs/mnist_ae_256collab.json",
         "configs/mnist_ae_1024collab.json",
         "configs/mnist_ae_async_256collab.json",
+        "configs/mnist_ae_1m_sampled.json",
         "configs/baseline_topk.json",
     ] {
         let cfg = ExperimentConfig::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
@@ -321,4 +322,12 @@ fn shipped_config_presets_parse_and_validate() {
     assert_eq!(cfg.engine.agg_path, fedae::config::AggPath::Stream);
     // ... and pins the local-training hot path to the tiled kernel layer.
     assert_eq!(cfg.backend.kernel, fedae::backend::Kernel::Tiled);
+    // The million-client preset samples 256 of 1e6 registered clients per
+    // round and bounds resident collaborator state via the LRU pool.
+    let cfg = ExperimentConfig::load("configs/mnist_ae_1m_sampled.json").unwrap();
+    assert_eq!(cfg.fl.collaborators, 1_000_000);
+    assert_eq!(cfg.selection.policy, fedae::config::SelectionPolicy::Uniform);
+    assert_eq!(cfg.selection.count, 256);
+    assert_eq!(cfg.selection.max_resident, 512);
+    assert_eq!(cfg.selection.sample_size(cfg.fl.collaborators, cfg.fl.participation), 256);
 }

@@ -195,8 +195,8 @@ fn prop_im2col_conv_matches_reference_conv() {
 
 #[test]
 fn ae_train_step_agrees_across_kernels() {
-    let tiled = Runtime::native_with_kernel(Kernel::Tiled);
-    let naive = Runtime::native_with_kernel(Kernel::Naive);
+    let tiled = Runtime::builder().kernel(Kernel::Tiled).build().unwrap();
+    let naive = Runtime::builder().kernel(Kernel::Naive).build().unwrap();
     for tag in ["toy", "mnist"] {
         let pt = AePipeline::new(&tiled, tag).unwrap();
         let pn = AePipeline::new(&naive, tag).unwrap();
@@ -230,8 +230,8 @@ fn ae_train_step_agrees_across_kernels() {
 
 #[test]
 fn classifier_train_step_agrees_across_kernels() {
-    let tiled = Runtime::native_with_kernel(Kernel::Tiled);
-    let naive = Runtime::native_with_kernel(Kernel::Naive);
+    let tiled = Runtime::builder().kernel(Kernel::Tiled).build().unwrap();
+    let naive = Runtime::builder().kernel(Kernel::Naive).build().unwrap();
     for family in ["mnist", "cifar"] {
         let tt = TrainStep::new(&tiled, family).unwrap();
         let tn = TrainStep::new(&naive, family).unwrap();
@@ -262,7 +262,7 @@ fn classifier_train_step_agrees_across_kernels() {
 /// Tiny AE-compressed federated schedule (prepass + 1 round) for the
 /// cross-kernel integration assertion.
 fn run_round(kernel: Kernel, parallelism: usize) -> (Vec<RoundOutcome>, Vec<f32>) {
-    let rt = Runtime::native_with_kernel(kernel);
+    let rt = Runtime::builder().kernel(kernel).build().unwrap();
     let pipeline = AePipeline::new(&rt, "mnist").unwrap();
     let mut cfg = ExperimentConfig::default();
     cfg.model = "mnist".into();
@@ -277,7 +277,7 @@ fn run_round(kernel: Kernel, parallelism: usize) -> (Vec<RoundOutcome>, Vec<f32>
     cfg.prepass.ae_epochs = 2;
     cfg.seed = 23;
     cfg.engine.parallelism = parallelism;
-    let mut driver = FlDriver::new(&rt, cfg, Some(&pipeline)).unwrap();
+    let mut driver = FlDriver::builder(&rt, cfg).pipeline(&pipeline).build().unwrap();
     let outcomes = vec![driver.run_round().unwrap()];
     (outcomes, driver.global_params().to_vec())
 }

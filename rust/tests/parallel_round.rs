@@ -47,7 +47,11 @@ fn run_rounds(
     rt: &Runtime,
 ) -> RunArtifacts {
     let rounds = cfg.fl.rounds;
-    let mut driver = FlDriver::new(rt, cfg, pipeline).unwrap();
+    let mut builder = FlDriver::builder(rt, cfg);
+    if let Some(p) = pipeline {
+        builder = builder.pipeline(p);
+    }
+    let mut driver = builder.build().unwrap();
     let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
     assert!(driver.network.ledger().check_conservation());
     (

@@ -496,7 +496,7 @@ fn prop_degenerate_async_equals_sync_for_any_seed() {
 
         let run = |cfg: ExperimentConfig| -> Result<_, String> {
             let rounds = cfg.fl.rounds;
-            let mut driver = FlDriver::new(&rt, cfg, None).map_err(|e| format!("{e}"))?;
+            let mut driver = FlDriver::builder(&rt, cfg).build().map_err(|e| format!("{e}"))?;
             let mut outcomes = Vec::with_capacity(rounds);
             for _ in 0..rounds {
                 outcomes.push(driver.run_round().map_err(|e| format!("{e}"))?);
@@ -517,6 +517,35 @@ fn prop_degenerate_async_equals_sync_for_any_seed() {
         }
         if sync.2 != asy.2 {
             return Err("traffic ledger diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_shuffle_matches_dense_and_selection_is_seed_stable() {
+    // ISSUE 6: the O(k)-memory partial Fisher-Yates used for million-client
+    // selection must consume the rng stream exactly like the dense
+    // `Rng::sample_indices`, and per-round selection must be a pure
+    // function of (seed, round) — stable across query order.
+    use fedae::coordinator::selection::sample_indices_sparse;
+    use fedae::coordinator::{ClientSelector, UniformSelector};
+    use fedae::util::rng::Rng;
+    prop::check("sparse_shuffle_matches_dense", |rng| {
+        let n = prop::len_in(rng, 1, 5000);
+        let k = 1 + rng.below(n);
+        let seed = rng.next_u64();
+        let dense = Rng::new(seed).sample_indices(n, k);
+        let sparse = sample_indices_sparse(&mut Rng::new(seed), n, k);
+        if sparse != dense {
+            return Err(format!("n={n} k={k} seed={seed}: sparse != dense"));
+        }
+        let sel = UniformSelector::new(seed);
+        let (r1, r2) = (rng.below(64), rng.below(64));
+        let first = sel.select(r1, n, k);
+        let _ = sel.select(r2, n, k);
+        if sel.select(r1, n, k) != first {
+            return Err(format!("selection for round {r1} not stable across queries"));
         }
         Ok(())
     });

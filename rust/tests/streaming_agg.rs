@@ -47,7 +47,7 @@ type RunArtifacts = (
 
 fn run_rounds(cfg: ExperimentConfig, rt: &Runtime) -> RunArtifacts {
     let rounds = cfg.fl.rounds;
-    let mut driver = FlDriver::new(rt, cfg, None).unwrap();
+    let mut driver = FlDriver::builder(rt, cfg).build().unwrap();
     let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
     assert!(driver.network.ledger().check_conservation());
     let agg: Vec<_> = outcomes.iter().map(|o| o.agg).collect();
