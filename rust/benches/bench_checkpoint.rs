@@ -1,0 +1,152 @@
+//! Bench — checkpoint subsystem cost (ISSUE 7): snapshot capture +
+//! serialization, snapshot write, driver restore, and per-round
+//! checkpointing overhead (event-log append + snapshot cadence), at 256
+//! and 1024 registered collaborators.
+//!
+//! Each tier also carries the acceptance assert: the checkpointed run
+//! must produce bitwise the same outcomes as the plain run, and a driver
+//! resumed from the last snapshot must finish the experiment with the
+//! same final parameters as the uninterrupted one.
+//!
+//! `cargo bench --bench bench_checkpoint`
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use fedae::config::{CompressionConfig, ExperimentConfig};
+use fedae::coordinator::checkpoint;
+use fedae::coordinator::{FlDriver, RoundOutcome};
+use fedae::metrics::print_table;
+use fedae::runtime::Runtime;
+use fedae::util::Stopwatch;
+
+/// Rounds run before the simulated crash; the experiment has two more.
+const CUT: usize = 4;
+const ACTIVE: usize = 32;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedae_ckpt_bench_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg_for(registered: usize, ckpt_dir: Option<&Path>) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("bench_checkpoint_{registered}");
+    cfg.model = "mnist".into();
+    cfg.compression = CompressionConfig::Identity;
+    cfg.fl.collaborators = registered;
+    cfg.fl.rounds = CUT + 2;
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 32;
+    cfg.data.test_size = 64;
+    cfg.seed = 53;
+    cfg.selection.count = ACTIVE;
+    cfg.engine.parallelism = 0;
+    if let Some(dir) = ckpt_dir {
+        cfg.checkpoint.dir = dir.to_string_lossy().into_owned();
+        cfg.checkpoint.every_rounds = 1;
+    }
+    cfg
+}
+
+fn run_rounds(driver: &mut FlDriver<'_>, n: usize) -> fedae::error::Result<Vec<RoundOutcome>> {
+    let mut outcomes = Vec::with_capacity(n);
+    for _ in 0..n {
+        outcomes.push(driver.run_round()?);
+    }
+    Ok(outcomes)
+}
+
+fn run_tier(rt: &Runtime, registered: usize) -> fedae::error::Result<Vec<String>> {
+    let rounds = CUT + 2;
+
+    // Plain reference run: no checkpointing.
+    let sw = Stopwatch::start();
+    let mut plain = FlDriver::builder(rt, cfg_for(registered, None)).build()?;
+    let plain_outcomes = run_rounds(&mut plain, rounds)?;
+    let plain_ms = sw.elapsed_ms();
+    let plain_bits: Vec<u32> = plain.global_params().iter().map(|v| v.to_bits()).collect();
+    drop(plain);
+
+    // Checkpointed twin, interrupted after CUT rounds.
+    let dir = scratch(&format!("tier_{registered}"));
+    let cfg = cfg_for(registered, Some(&dir));
+    let sw = Stopwatch::start();
+    let mut ck = FlDriver::builder(rt, cfg.clone()).build()?;
+    let ck_outcomes = run_rounds(&mut ck, CUT)?;
+    let ck_ms_per_round = sw.elapsed_ms() / CUT as f64;
+    assert_eq!(
+        plain_outcomes[..CUT],
+        ck_outcomes[..],
+        "{registered}: checkpointing perturbed round outcomes"
+    );
+    let overhead_ms = ck_ms_per_round - plain_ms / rounds as f64;
+
+    // Snapshot capture + serialization cost (amortized over repeats).
+    const REPS: usize = 10;
+    let sw = Stopwatch::start();
+    let mut snapshot_bytes = 0usize;
+    for _ in 0..REPS {
+        snapshot_bytes = ck.snapshot()?.to_bytes().len();
+    }
+    let capture_ms = sw.elapsed_ms() / REPS as f64;
+    drop(ck); // simulated crash
+
+    let log_bytes = fs::metadata(checkpoint::events_path(&dir))?.len();
+
+    // Restore cost: rebuild a live driver from the newest snapshot.
+    let sw = Stopwatch::start();
+    let mut resumed = FlDriver::builder(rt, cfg).resume_from(&dir).build()?;
+    let restore_ms = sw.elapsed_ms();
+    assert_eq!(resumed.round(), CUT, "{registered}: wrong resume round");
+
+    // Acceptance: the resumed tail matches the uninterrupted run bitwise.
+    let tail = run_rounds(&mut resumed, rounds - CUT)?;
+    assert_eq!(
+        plain_outcomes[CUT..],
+        tail[..],
+        "{registered}: resumed outcomes diverged"
+    );
+    let resumed_bits: Vec<u32> = resumed.global_params().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(
+        plain_bits, resumed_bits,
+        "{registered}: resumed final params diverged"
+    );
+    drop(resumed);
+    fs::remove_dir_all(&dir)?;
+
+    Ok(vec![
+        registered.to_string(),
+        format!("{capture_ms:.2}"),
+        format!("{}", snapshot_bytes / 1024),
+        format!("{restore_ms:.0}"),
+        format!("{}", log_bytes / CUT as u64),
+        format!("{overhead_ms:.2}"),
+    ])
+}
+
+fn main() -> fedae::error::Result<()> {
+    let rt = Runtime::from_dir("artifacts")?;
+    println!("== checkpoint cost, K={ACTIVE} active, snapshot every round ==");
+    let mut rows = Vec::new();
+    for registered in [256usize, 1024] {
+        rows.push(run_tier(&rt, registered)?);
+    }
+    println!(
+        "{}",
+        print_table(
+            &[
+                "registered",
+                "snapshot ms",
+                "snapshot KiB",
+                "restore ms",
+                "log B/round",
+                "overhead ms/round",
+            ],
+            &rows
+        )
+    );
+    println!("(resumed == uninterrupted asserted bitwise at both tiers)");
+    Ok(())
+}

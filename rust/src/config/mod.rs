@@ -555,6 +555,43 @@ impl SelectionConfig {
     }
 }
 
+/// Checkpointing knobs: where snapshots and the round event log go, how
+/// often a snapshot is written, and how many snapshots to retain (see
+/// [`crate::coordinator::checkpoint`]).
+///
+/// Checkpointing changes nothing about the experiment semantics: a run
+/// with checkpointing enabled produces bitwise-identical results to one
+/// without, and a run resumed from any snapshot reproduces the
+/// uninterrupted run bitwise (`rust/tests/checkpoint.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointConfig {
+    /// Directory for snapshot files and the `events.log` round log.
+    /// Empty (the default) disables checkpointing entirely.
+    pub dir: String,
+    /// Write a snapshot every `every_rounds` completed rounds.
+    pub every_rounds: usize,
+    /// Retain only the newest `keep_last` snapshots (`0` = keep all).
+    /// The event log is append-only and never pruned.
+    pub keep_last: usize,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> Self {
+        CheckpointConfig {
+            dir: String::new(),
+            every_rounds: 1,
+            keep_last: 0,
+        }
+    }
+}
+
+impl CheckpointConfig {
+    /// True when a checkpoint directory is configured.
+    pub fn enabled(&self) -> bool {
+        !self.dir.is_empty()
+    }
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -584,6 +621,8 @@ pub struct ExperimentConfig {
     pub selection: SelectionConfig,
     /// Compute-backend knobs (native kernel selection).
     pub backend: BackendConfig,
+    /// Snapshot/event-log crash-recovery knobs.
+    pub checkpoint: CheckpointConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -602,6 +641,7 @@ impl Default for ExperimentConfig {
             engine: EngineConfig::default(),
             selection: SelectionConfig::default(),
             backend: BackendConfig::default(),
+            checkpoint: CheckpointConfig::default(),
         }
     }
 }
@@ -738,6 +778,17 @@ impl ExperimentConfig {
         if let Some(b) = j.get("backend") {
             if let Some(v) = b.get("kernel").and_then(|v| v.as_str()) {
                 cfg.backend.kernel = Kernel::parse(v)?;
+            }
+        }
+        if let Some(c) = j.get("checkpoint") {
+            if let Some(v) = c.get("dir").and_then(|v| v.as_str()) {
+                cfg.checkpoint.dir = v.to_string();
+            }
+            if let Some(v) = c.get("every_rounds").and_then(|v| v.as_usize()) {
+                cfg.checkpoint.every_rounds = v;
+            }
+            if let Some(v) = c.get("keep_last").and_then(|v| v.as_usize()) {
+                cfg.checkpoint.keep_last = v;
             }
         }
         Ok(cfg)
@@ -950,6 +1001,35 @@ impl ExperimentConfig {
                 return Err(FedAeError::Config(format!(
                     "selection.max_resident cannot bound `{}` compression: it \
                      keeps cross-round state that eviction would discard",
+                    self.compression.kind_name()
+                )));
+            }
+        }
+        if self.checkpoint.enabled() {
+            if self.checkpoint.every_rounds == 0 {
+                return Err(FedAeError::Config(
+                    "checkpoint.every_rounds must be > 0 when checkpoint.dir is set".into(),
+                ));
+            }
+            // A snapshot captures server-side state plus the per-client
+            // batch cursors; client compressors with their own
+            // cross-round state (TopK's error-feedback residual,
+            // stochastic quantization's advancing rng) are not part of
+            // it, so resuming would silently diverge. Reject up front —
+            // the same rule `selection.max_resident` applies, for the
+            // same reason.
+            let stateful = matches!(
+                self.compression,
+                CompressionConfig::TopK { .. }
+                    | CompressionConfig::Quantize {
+                        stochastic: true,
+                        ..
+                    }
+            );
+            if stateful {
+                return Err(FedAeError::Config(format!(
+                    "checkpointing cannot snapshot `{}` compression: it keeps \
+                     cross-round client state outside the snapshot",
                     self.compression.kind_name()
                 )));
             }
@@ -1235,6 +1315,56 @@ mod tests {
             bits: 8,
             stochastic: false,
         };
+        cfg.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn parses_checkpoint_section() {
+        let cfg = ExperimentConfig::default();
+        assert!(!cfg.checkpoint.enabled());
+        assert_eq!(cfg.checkpoint.every_rounds, 1);
+        assert_eq!(cfg.checkpoint.keep_last, 0);
+        let j = Json::parse(
+            r#"{"checkpoint": {"dir": "ckpt", "every_rounds": 5, "keep_last": 3}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert!(cfg.checkpoint.enabled());
+        assert_eq!(cfg.checkpoint.dir, "ckpt");
+        assert_eq!(cfg.checkpoint.every_rounds, 5);
+        assert_eq!(cfg.checkpoint.keep_last, 3);
+    }
+
+    #[test]
+    fn checkpoint_validation() {
+        let mjson = Json::parse(&manifest::tests::test_manifest_json()).unwrap();
+        let m = manifest::Manifest::from_json(&mjson).unwrap();
+        let base = || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = "toy".into();
+            cfg.compression = CompressionConfig::Identity;
+            cfg.checkpoint.dir = "ckpt".into();
+            cfg
+        };
+        base().validate(&m).unwrap();
+        let mut cfg = base();
+        cfg.checkpoint.every_rounds = 0;
+        assert!(cfg.validate(&m).is_err());
+        // Client compressors with cross-round state outside the snapshot
+        // cannot be checkpointed...
+        let mut cfg = base();
+        cfg.compression = CompressionConfig::TopK { fraction: 0.1 };
+        assert!(cfg.validate(&m).is_err());
+        let mut cfg = base();
+        cfg.compression = CompressionConfig::Quantize {
+            bits: 8,
+            stochastic: true,
+        };
+        assert!(cfg.validate(&m).is_err());
+        // ...but stay valid with checkpointing disabled.
+        let mut cfg = base();
+        cfg.checkpoint.dir.clear();
+        cfg.compression = CompressionConfig::TopK { fraction: 0.1 };
         cfg.validate(&m).unwrap();
     }
 

@@ -225,6 +225,24 @@ impl AsyncRoundEngine {
     pub fn totals(&self) -> StragglerStats {
         self.totals
     }
+
+    /// The buffered updates still in flight, in buffering order — the
+    /// async half of a checkpoint snapshot, paired with
+    /// [`AsyncRoundEngine::totals`] (see
+    /// [`crate::coordinator::checkpoint`]).
+    pub fn pending(&self) -> &[BufferedUpdate] {
+        &self.pending
+    }
+
+    /// Restore the late-update buffer and cumulative totals from a
+    /// checkpoint snapshot. Everything else the engine holds — deadline,
+    /// decay, straggler model — is a pure function of config + seed and
+    /// is rebuilt by [`AsyncRoundEngine::from_config`], so this
+    /// completes the engine's cross-round state.
+    pub fn restore(&mut self, pending: Vec<BufferedUpdate>, totals: StragglerStats) {
+        self.pending = pending;
+        self.totals = totals;
+    }
 }
 
 #[cfg(test)]

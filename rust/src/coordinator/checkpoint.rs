@@ -1,0 +1,970 @@
+//! Checkpointing + event-sourced round log.
+//!
+//! Two artifacts live in `checkpoint.dir`:
+//!
+//! * **Snapshots** (`snapshot_r{N:06}.ckpt`) — a versioned, self-describing
+//!   binary capture of every piece of cross-round driver state after `N`
+//!   completed rounds: the global model, the aggregator's momentum/buffer
+//!   state, the async late-update buffer with staleness tags, the lazy-pool
+//!   roster (with per-client suspended batch-cursor draw counts), the
+//!   shipped-decoder set, and the traffic-ledger totals. Everything *not*
+//!   in a snapshot is a pure function of `(config, seed)` and is rebuilt
+//!   bit-identically on resume — see ARCHITECTURE.md §Checkpointing &
+//!   replay for the argument.
+//! * **Event log** (`events.log`) — a compact append-only record per
+//!   round: the selected set, admission fates, eval results and byte
+//!   counts. One record is appended after every round; the reader
+//!   tolerates a torn trailing record, and resume truncates records at or
+//!   after the resume round so a crash between the event append and the
+//!   snapshot write (in either order) repairs to the uninterrupted log.
+//!
+//! The byte dialect is [`crate::util::codec`]: little-endian integers,
+//! floats as raw bit patterns, length-prefixed strings. Snapshots carry a
+//! magic, a format version and an FNV-1a content hash; corrupt, truncated
+//! or version-skewed files are rejected with typed
+//! [`FedAeError::Checkpoint`] errors, never panics.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::compression::CompressedUpdate;
+use crate::config::{CheckpointConfig, ExperimentConfig};
+use crate::coordinator::{BufferedUpdate, StragglerStats};
+use crate::error::{FedAeError, Result};
+use crate::network::{Direction, LedgerTotals, TrafficKind};
+use crate::util::codec::{self, Reader};
+
+/// Magic prefix of a snapshot file.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"FAECKPT1";
+/// Snapshot format version this build reads and writes.
+pub const SNAPSHOT_VERSION: u32 = 1;
+/// Magic prefix of the event-log file.
+pub const EVENTS_MAGIC: [u8; 8] = *b"FAEEVTL1";
+
+/// File name of the snapshot taken after `completed` rounds.
+pub fn snapshot_file_name(completed: usize) -> String {
+    format!("snapshot_r{completed:06}.ckpt")
+}
+
+/// The event-log path under a checkpoint directory.
+pub fn events_path(dir: &Path) -> PathBuf {
+    dir.join("events.log")
+}
+
+/// The newest snapshot in a checkpoint directory, if any (file names are
+/// zero-padded, so lexicographic max is numeric max).
+pub fn latest_snapshot(dir: &Path) -> Result<Option<PathBuf>> {
+    let mut best: Option<PathBuf> = None;
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n,
+            None => continue,
+        };
+        if name.starts_with("snapshot_r") && name.ends_with(".ckpt") {
+            if best
+                .as_ref()
+                .and_then(|b| b.file_name())
+                .and_then(|n| n.to_str())
+                .map_or(true, |b| name > b)
+            {
+                best = Some(path);
+            }
+        }
+    }
+    Ok(best)
+}
+
+fn direction_tag(d: Direction) -> u8 {
+    match d {
+        Direction::Up => 0,
+        Direction::Down => 1,
+    }
+}
+
+fn direction_from(tag: u8) -> Result<Direction> {
+    match tag {
+        0 => Ok(Direction::Up),
+        1 => Ok(Direction::Down),
+        other => Err(FedAeError::Checkpoint(format!(
+            "unknown direction tag {other}"
+        ))),
+    }
+}
+
+fn kind_tag(k: TrafficKind) -> u8 {
+    match k {
+        TrafficKind::Update => 0,
+        TrafficKind::GlobalModel => 1,
+        TrafficKind::DecoderShipment => 2,
+        TrafficKind::Control => 3,
+    }
+}
+
+fn kind_from(tag: u8) -> Result<TrafficKind> {
+    match tag {
+        0 => Ok(TrafficKind::Update),
+        1 => Ok(TrafficKind::GlobalModel),
+        2 => Ok(TrafficKind::DecoderShipment),
+        3 => Ok(TrafficKind::Control),
+        other => Err(FedAeError::Checkpoint(format!(
+            "unknown traffic-kind tag {other}"
+        ))),
+    }
+}
+
+/// The config fingerprint a snapshot carries so `--resume` can refuse a
+/// run whose config silently changed: same seed, model manifest entry,
+/// topology, compression scheme, aggregation algorithm, engine mode and
+/// selection policy — the inputs the rebuilt (non-snapshotted) state is a
+/// pure function of.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompatBlock {
+    /// Experiment seed (every derived stream keys off it).
+    pub seed: u64,
+    /// Model manifest entry name.
+    pub model: String,
+    /// Model parameter count from the manifest.
+    pub n_params: u64,
+    /// Registered population size (`fl.collaborators`).
+    pub collaborators: u64,
+    /// Compression scheme, parameters included (`Debug` rendering).
+    pub compression: String,
+    /// Aggregation algorithm, parameters included (`Debug` rendering).
+    pub aggregation: String,
+    /// Engine mode name (`sync` / `async`).
+    pub engine_mode: String,
+    /// Client-selection policy name.
+    pub selection_policy: String,
+}
+
+impl CompatBlock {
+    /// The fingerprint of a live config.
+    pub fn of(cfg: &ExperimentConfig, n_params: usize) -> CompatBlock {
+        CompatBlock {
+            seed: cfg.seed,
+            model: cfg.model.clone(),
+            n_params: n_params as u64,
+            collaborators: cfg.fl.collaborators as u64,
+            compression: format!("{:?}", cfg.compression),
+            aggregation: format!("{:?}", cfg.aggregation),
+            engine_mode: cfg.engine.mode.name().to_string(),
+            selection_policy: cfg.selection.policy.name().to_string(),
+        }
+    }
+
+    /// Reject a resume into an incompatible config, naming the first
+    /// mismatched field.
+    pub fn check(&self, cfg: &ExperimentConfig, n_params: usize) -> Result<()> {
+        let live = CompatBlock::of(cfg, n_params);
+        let pairs = [
+            ("seed", self.seed.to_string(), live.seed.to_string()),
+            ("model", self.model.clone(), live.model.clone()),
+            ("n_params", self.n_params.to_string(), live.n_params.to_string()),
+            (
+                "fl.collaborators",
+                self.collaborators.to_string(),
+                live.collaborators.to_string(),
+            ),
+            ("compression", self.compression.clone(), live.compression.clone()),
+            ("aggregation", self.aggregation.clone(), live.aggregation.clone()),
+            ("engine.mode", self.engine_mode.clone(), live.engine_mode.clone()),
+            (
+                "selection.policy",
+                self.selection_policy.clone(),
+                live.selection_policy.clone(),
+            ),
+        ];
+        for (field, snap, cur) in pairs {
+            if snap != cur {
+                return Err(FedAeError::Checkpoint(format!(
+                    "--resume config mismatch: snapshot was taken with {field} = `{snap}`, \
+                     this config has `{cur}`"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn write(&self, buf: &mut Vec<u8>) {
+        codec::put_u64(buf, self.seed);
+        codec::put_str(buf, &self.model);
+        codec::put_u64(buf, self.n_params);
+        codec::put_u64(buf, self.collaborators);
+        codec::put_str(buf, &self.compression);
+        codec::put_str(buf, &self.aggregation);
+        codec::put_str(buf, &self.engine_mode);
+        codec::put_str(buf, &self.selection_policy);
+    }
+
+    fn read(r: &mut Reader<'_>) -> Result<CompatBlock> {
+        Ok(CompatBlock {
+            seed: r.u64()?,
+            model: r.str()?,
+            n_params: r.u64()?,
+            collaborators: r.u64()?,
+            compression: r.str()?,
+            aggregation: r.str()?,
+            engine_mode: r.str()?,
+            selection_policy: r.str()?,
+        })
+    }
+}
+
+/// One resident client's snapshot entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RosterEntry {
+    /// Client id.
+    pub id: usize,
+    /// Round this client was last selected (the LRU eviction key).
+    pub last_used: usize,
+    /// Batches its seeded batch iterator has drawn so far; resume
+    /// fast-forwards the rebuilt iterator to exactly here.
+    pub batches_drawn: u64,
+}
+
+/// Async-engine state captured in a snapshot: the late-update buffer
+/// (with origin/apply rounds, i.e. staleness tags) and the cumulative
+/// straggler totals.
+#[derive(Debug, Clone)]
+pub struct AsyncState {
+    /// Buffered late updates not yet applied.
+    pub pending: Vec<BufferedUpdate>,
+    /// Cumulative admission accounting.
+    pub totals: StragglerStats,
+}
+
+/// A versioned capture of every piece of cross-round driver state.
+///
+/// Serialization is self-describing: magic, format version, payload
+/// length and an FNV-1a content hash precede the payload, so
+/// [`Snapshot::from_bytes`] rejects foreign files, version skew,
+/// truncation and corruption with typed errors.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Config fingerprint checked on `--resume`.
+    pub compat: CompatBlock,
+    /// Rounds completed when the snapshot was taken (= the next round to
+    /// run on resume).
+    pub round: usize,
+    /// The global model parameters.
+    pub global: Vec<f32>,
+    /// The server aggregator's exported state
+    /// ([`crate::aggregation::Aggregator::export_state`]); empty for
+    /// stateless aggregators.
+    pub agg_state: Vec<u8>,
+    /// Async-engine state; `None` in sync mode.
+    pub async_state: Option<AsyncState>,
+    /// Resident clients (the lazy pool).
+    pub roster: Vec<RosterEntry>,
+    /// Evicted clients' suspended batch-cursor draw counts, as
+    /// `(id, batches_drawn)`.
+    pub suspended: Vec<(usize, u64)>,
+    /// Clients whose decoder shipment was already metered.
+    pub shipped: Vec<usize>,
+    /// Traffic-ledger totals (restored as the new ledger baseline).
+    pub ledger: LedgerTotals,
+}
+
+impl Snapshot {
+    /// Serialize: header (magic, version, payload length, content hash)
+    /// followed by the payload.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        self.compat.write(&mut p);
+        codec::put_u64(&mut p, self.round as u64);
+        codec::put_vec_f32(&mut p, &self.global);
+        codec::put_bytes(&mut p, &self.agg_state);
+        match &self.async_state {
+            None => codec::put_u8(&mut p, 0),
+            Some(a) => {
+                codec::put_u8(&mut p, 1);
+                codec::put_u64(&mut p, a.pending.len() as u64);
+                for b in &a.pending {
+                    codec::put_u64(&mut p, b.collaborator as u64);
+                    codec::put_u32(&mut p, b.n_samples);
+                    codec::put_u64(&mut p, b.origin_round as u64);
+                    codec::put_u64(&mut p, b.apply_round as u64);
+                    codec::put_bytes(&mut p, &b.update.to_bytes());
+                }
+                codec::put_u64(&mut p, a.totals.admitted as u64);
+                codec::put_u64(&mut p, a.totals.late as u64);
+                codec::put_u64(&mut p, a.totals.dropped as u64);
+                codec::put_u64(&mut p, a.totals.stale_applied as u64);
+                codec::put_u64(&mut p, a.totals.max_staleness as u64);
+                codec::put_f64(&mut p, a.totals.sim_round_seconds);
+            }
+        }
+        codec::put_u64(&mut p, self.roster.len() as u64);
+        for e in &self.roster {
+            codec::put_u64(&mut p, e.id as u64);
+            codec::put_u64(&mut p, e.last_used as u64);
+            codec::put_u64(&mut p, e.batches_drawn);
+        }
+        codec::put_u64(&mut p, self.suspended.len() as u64);
+        for (id, drawn) in &self.suspended {
+            codec::put_u64(&mut p, *id as u64);
+            codec::put_u64(&mut p, *drawn);
+        }
+        codec::put_u64(&mut p, self.shipped.len() as u64);
+        for id in &self.shipped {
+            codec::put_u64(&mut p, *id as u64);
+        }
+        codec::put_u64(&mut p, self.ledger.by_kind.len() as u64);
+        for (d, k, bytes) in &self.ledger.by_kind {
+            codec::put_u8(&mut p, direction_tag(*d));
+            codec::put_u8(&mut p, kind_tag(*k));
+            codec::put_u64(&mut p, *bytes);
+        }
+        codec::put_u64(&mut p, self.ledger.total_bytes);
+        codec::put_f64(&mut p, self.ledger.total_sim_seconds);
+        codec::put_u64(&mut p, self.ledger.update_up_count);
+
+        let mut out = Vec::with_capacity(28 + p.len());
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        codec::put_u32(&mut out, SNAPSHOT_VERSION);
+        codec::put_u64(&mut out, p.len() as u64);
+        codec::put_u64(&mut out, codec::fnv1a64(&p));
+        out.extend_from_slice(&p);
+        out
+    }
+
+    /// Parse and verify a serialized snapshot.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot> {
+        if bytes.len() < 28 {
+            return Err(FedAeError::Checkpoint(format!(
+                "snapshot too short: {} bytes, header is 28",
+                bytes.len()
+            )));
+        }
+        if bytes[..8] != SNAPSHOT_MAGIC {
+            return Err(FedAeError::Checkpoint(
+                "not a fedae snapshot (bad magic)".into(),
+            ));
+        }
+        let mut h = Reader::new(&bytes[8..28]);
+        let version = h.u32()?;
+        if version != SNAPSHOT_VERSION {
+            return Err(FedAeError::Checkpoint(format!(
+                "snapshot format version {version} unsupported (this build reads \
+                 version {SNAPSHOT_VERSION})"
+            )));
+        }
+        let payload_len = h.u64()? as usize;
+        let hash = h.u64()?;
+        let payload = &bytes[28..];
+        if payload.len() != payload_len {
+            return Err(FedAeError::Checkpoint(format!(
+                "snapshot payload is {} bytes, header declares {payload_len}",
+                payload.len()
+            )));
+        }
+        if codec::fnv1a64(payload) != hash {
+            return Err(FedAeError::Checkpoint(
+                "snapshot content hash mismatch: file is corrupt".into(),
+            ));
+        }
+
+        let mut r = Reader::new(payload);
+        let compat = CompatBlock::read(&mut r)?;
+        let round = r.u64()? as usize;
+        let global = r.vec_f32()?;
+        let agg_state = r.bytes()?.to_vec();
+        let async_state = match r.u8()? {
+            0 => None,
+            1 => {
+                let n = r.len_prefix()?;
+                let mut pending = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let collaborator = r.u64()? as usize;
+                    let n_samples = r.u32()?;
+                    let origin_round = r.u64()? as usize;
+                    let apply_round = r.u64()? as usize;
+                    let update = CompressedUpdate::from_bytes(r.bytes()?)?;
+                    pending.push(BufferedUpdate {
+                        collaborator,
+                        n_samples,
+                        update,
+                        origin_round,
+                        apply_round,
+                    });
+                }
+                let totals = StragglerStats {
+                    admitted: r.u64()? as usize,
+                    late: r.u64()? as usize,
+                    dropped: r.u64()? as usize,
+                    stale_applied: r.u64()? as usize,
+                    max_staleness: r.u64()? as usize,
+                    sim_round_seconds: r.f64()?,
+                };
+                Some(AsyncState { pending, totals })
+            }
+            other => {
+                return Err(FedAeError::Checkpoint(format!(
+                    "unknown async-state flag {other}"
+                )))
+            }
+        };
+        let n = r.len_prefix()?;
+        let mut roster = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            roster.push(RosterEntry {
+                id: r.u64()? as usize,
+                last_used: r.u64()? as usize,
+                batches_drawn: r.u64()?,
+            });
+        }
+        let n = r.len_prefix()?;
+        let mut suspended = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            suspended.push((r.u64()? as usize, r.u64()?));
+        }
+        let n = r.len_prefix()?;
+        let mut shipped = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            shipped.push(r.u64()? as usize);
+        }
+        let n = r.len_prefix()?;
+        let mut by_kind = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let d = direction_from(r.u8()?)?;
+            let k = kind_from(r.u8()?)?;
+            by_kind.push((d, k, r.u64()?));
+        }
+        let ledger = LedgerTotals {
+            by_kind,
+            total_bytes: r.u64()?,
+            total_sim_seconds: r.f64()?,
+            update_up_count: r.u64()?,
+        };
+        r.finish()?;
+        Ok(Snapshot {
+            compat,
+            round,
+            global,
+            agg_state,
+            async_state,
+            roster,
+            suspended,
+            shipped,
+            ledger,
+        })
+    }
+
+    /// Write atomically (temp file + rename), so a torn write never
+    /// clobbers an existing good snapshot.
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("ckpt.tmp");
+        fs::write(&tmp, self.to_bytes())?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read and verify a snapshot file.
+    pub fn read_from(path: &Path) -> Result<Snapshot> {
+        Snapshot::from_bytes(&fs::read(path)?)
+    }
+}
+
+/// One round's event-log record: what happened, to whom, at what cost.
+#[derive(Debug, Clone)]
+pub struct EventRecord {
+    /// The round this record describes.
+    pub round: usize,
+    /// The sampled id set (sorted; includes async over-provision slack).
+    pub selected: Vec<usize>,
+    /// Fresh updates admitted this round.
+    pub admitted: usize,
+    /// Uploads past the deadline, buffered for a later round.
+    pub late: usize,
+    /// Uploads dropped outright.
+    pub dropped: usize,
+    /// Buffered stale updates applied this round.
+    pub stale_applied: usize,
+    /// On-time arrivals discarded by over-provisioned admission.
+    pub discarded: usize,
+    /// Post-aggregation global eval loss.
+    pub eval_loss: f32,
+    /// Post-aggregation global eval accuracy.
+    pub eval_acc: f32,
+    /// Mean reconstruction MSE (NaN when no fresh update applied).
+    pub mean_recon_mse: f32,
+    /// Uplink bytes this round.
+    pub bytes_up: u64,
+    /// Downlink bytes this round.
+    pub bytes_down: u64,
+    /// Full-vector decodes during aggregation.
+    pub full_decodes: u64,
+    /// Range decodes during aggregation.
+    pub range_decodes: u64,
+}
+
+impl PartialEq for EventRecord {
+    fn eq(&self, other: &EventRecord) -> bool {
+        self.round == other.round
+            && self.selected == other.selected
+            && self.admitted == other.admitted
+            && self.late == other.late
+            && self.dropped == other.dropped
+            && self.stale_applied == other.stale_applied
+            && self.discarded == other.discarded
+            && self.eval_loss.to_bits() == other.eval_loss.to_bits()
+            && self.eval_acc.to_bits() == other.eval_acc.to_bits()
+            && self.mean_recon_mse.to_bits() == other.mean_recon_mse.to_bits()
+            && self.bytes_up == other.bytes_up
+            && self.bytes_down == other.bytes_down
+            && self.full_decodes == other.full_decodes
+            && self.range_decodes == other.range_decodes
+    }
+}
+
+impl EventRecord {
+    fn body(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        codec::put_u64(&mut b, self.round as u64);
+        codec::put_u64(&mut b, self.selected.len() as u64);
+        for id in &self.selected {
+            codec::put_u64(&mut b, *id as u64);
+        }
+        codec::put_u64(&mut b, self.admitted as u64);
+        codec::put_u64(&mut b, self.late as u64);
+        codec::put_u64(&mut b, self.dropped as u64);
+        codec::put_u64(&mut b, self.stale_applied as u64);
+        codec::put_u64(&mut b, self.discarded as u64);
+        codec::put_f32(&mut b, self.eval_loss);
+        codec::put_f32(&mut b, self.eval_acc);
+        codec::put_f32(&mut b, self.mean_recon_mse);
+        codec::put_u64(&mut b, self.bytes_up);
+        codec::put_u64(&mut b, self.bytes_down);
+        codec::put_u64(&mut b, self.full_decodes);
+        codec::put_u64(&mut b, self.range_decodes);
+        b
+    }
+
+    fn parse(body: &[u8]) -> Result<EventRecord> {
+        let mut r = Reader::new(body);
+        let round = r.u64()? as usize;
+        let n = r.len_prefix()?;
+        let mut selected = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            selected.push(r.u64()? as usize);
+        }
+        let rec = EventRecord {
+            round,
+            selected,
+            admitted: r.u64()? as usize,
+            late: r.u64()? as usize,
+            dropped: r.u64()? as usize,
+            stale_applied: r.u64()? as usize,
+            discarded: r.u64()? as usize,
+            eval_loss: r.f32()?,
+            eval_acc: r.f32()?,
+            mean_recon_mse: r.f32()?,
+            bytes_up: r.u64()?,
+            bytes_down: r.u64()?,
+            full_decodes: r.u64()?,
+            range_decodes: r.u64()?,
+        };
+        r.finish()?;
+        Ok(rec)
+    }
+}
+
+/// Append one record to the event log, creating the file (with its
+/// magic) on first use. The record is written as a single length-prefixed
+/// blob so a crash mid-write leaves a detectable torn tail, not a
+/// corrupted log.
+pub fn append_event(dir: &Path, rec: &EventRecord) -> Result<()> {
+    let path = events_path(dir);
+    let mut file = fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)?;
+    let mut buf = Vec::new();
+    if file.metadata()?.len() == 0 {
+        buf.extend_from_slice(&EVENTS_MAGIC);
+    }
+    codec::put_bytes(&mut buf, &rec.body());
+    file.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read every intact record in the event log. A missing file reads as
+/// empty; a torn trailing record (crash mid-append) is silently dropped;
+/// corruption anywhere else is a typed error.
+pub fn read_events(dir: &Path) -> Result<Vec<EventRecord>> {
+    let path = events_path(dir);
+    let bytes = match fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    };
+    if bytes.len() < 8 || bytes[..8] != EVENTS_MAGIC {
+        return Err(FedAeError::Checkpoint(
+            "not a fedae event log (bad magic)".into(),
+        ));
+    }
+    let mut r = Reader::new(&bytes[8..]);
+    let mut out = Vec::new();
+    while r.remaining() > 0 {
+        // Length prefix or declared body extending past EOF: torn tail.
+        if r.remaining() < 8 {
+            break;
+        }
+        match r.bytes() {
+            Ok(body) => out.push(EventRecord::parse(body)?),
+            Err(_) => break,
+        }
+    }
+    Ok(out)
+}
+
+/// Drop every record for `round` or later, rewriting the log in place.
+/// Called on resume so rounds replayed after the snapshot append exactly
+/// one record each — the repaired log is byte-identical to an
+/// uninterrupted run's.
+pub fn truncate_events_from(dir: &Path, round: usize) -> Result<()> {
+    let keep: Vec<EventRecord> = read_events(dir)?
+        .into_iter()
+        .filter(|rec| rec.round < round)
+        .collect();
+    let mut buf = Vec::from(EVENTS_MAGIC);
+    for rec in &keep {
+        codec::put_bytes(&mut buf, &rec.body());
+    }
+    fs::write(events_path(dir), buf)?;
+    Ok(())
+}
+
+/// The driver's checkpoint writer: owns the directory, the snapshot
+/// cadence (`checkpoint.every_rounds`) and retention
+/// (`checkpoint.keep_last`, 0 = keep all).
+#[derive(Debug)]
+pub struct Checkpointer {
+    dir: PathBuf,
+    every_rounds: usize,
+    keep_last: usize,
+}
+
+impl Checkpointer {
+    /// Create the checkpoint directory and the writer.
+    pub fn new(cfg: &CheckpointConfig) -> Result<Checkpointer> {
+        let dir = PathBuf::from(&cfg.dir);
+        fs::create_dir_all(&dir)?;
+        Ok(Checkpointer {
+            dir,
+            every_rounds: cfg.every_rounds,
+            keep_last: cfg.keep_last,
+        })
+    }
+
+    /// The checkpoint directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Append one round's event record.
+    pub fn record_round(&self, rec: &EventRecord) -> Result<()> {
+        append_event(&self.dir, rec)
+    }
+
+    /// Whether a snapshot is due after `completed` rounds.
+    pub fn snapshot_due(&self, completed: usize) -> bool {
+        completed > 0 && completed % self.every_rounds == 0
+    }
+
+    /// Write a snapshot (atomic temp + rename), prune old ones, and
+    /// return its path.
+    pub fn write_snapshot(&self, snap: &Snapshot) -> Result<PathBuf> {
+        let path = self.dir.join(snapshot_file_name(snap.round));
+        snap.write_to(&path)?;
+        self.prune()?;
+        Ok(path)
+    }
+
+    /// Truncate the event log at the resume round.
+    pub fn truncate_events_from(&self, round: usize) -> Result<()> {
+        truncate_events_from(&self.dir, round)
+    }
+
+    /// Remove the oldest snapshots beyond `keep_last` (no-op when 0).
+    fn prune(&self) -> Result<()> {
+        if self.keep_last == 0 {
+            return Ok(());
+        }
+        let mut names: Vec<PathBuf> = fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("snapshot_r") && n.ends_with(".ckpt"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        names.sort();
+        while names.len() > self.keep_last {
+            fs::remove_file(names.remove(0))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fedae_ckpt_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_snapshot() -> Snapshot {
+        Snapshot {
+            compat: CompatBlock {
+                seed: 7,
+                model: "mnist".into(),
+                n_params: 101_770,
+                collaborators: 4,
+                compression: "Identity".into(),
+                aggregation: "FedAvgM { beta: 0.9 }".into(),
+                engine_mode: "async".into(),
+                selection_policy: "uniform".into(),
+            },
+            round: 3,
+            global: vec![0.5, -0.0, f32::NAN, 2.25],
+            agg_state: vec![1, 2, 3, 4],
+            async_state: Some(AsyncState {
+                pending: vec![BufferedUpdate {
+                    collaborator: 2,
+                    n_samples: 64,
+                    update: CompressedUpdate::Raw {
+                        values: vec![1.0, -2.0],
+                    },
+                    origin_round: 1,
+                    apply_round: 4,
+                }],
+                totals: StragglerStats {
+                    admitted: 5,
+                    late: 2,
+                    dropped: 1,
+                    stale_applied: 1,
+                    max_staleness: 3,
+                    sim_round_seconds: 12.5,
+                },
+            }),
+            roster: vec![
+                RosterEntry {
+                    id: 0,
+                    last_used: 2,
+                    batches_drawn: 40,
+                },
+                RosterEntry {
+                    id: 3,
+                    last_used: 3,
+                    batches_drawn: 12,
+                },
+            ],
+            suspended: vec![(1, 99)],
+            shipped: vec![0, 1, 3],
+            ledger: LedgerTotals {
+                by_kind: vec![
+                    (Direction::Up, TrafficKind::Update, 4096),
+                    (Direction::Down, TrafficKind::GlobalModel, 8192),
+                ],
+                total_bytes: 12288,
+                total_sim_seconds: 3.75,
+                update_up_count: 9,
+            },
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_byte_identically() {
+        let snap = sample_snapshot();
+        let bytes = snap.to_bytes();
+        let back = Snapshot::from_bytes(&bytes).unwrap();
+        // Serialize → parse → serialize is byte-identical (NaN global
+        // params included, since floats travel as bit patterns).
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.compat, snap.compat);
+        assert_eq!(back.round, snap.round);
+        assert_eq!(
+            back.global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            snap.global.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.agg_state, snap.agg_state);
+        assert_eq!(back.roster, snap.roster);
+        assert_eq!(back.suspended, snap.suspended);
+        assert_eq!(back.shipped, snap.shipped);
+        assert_eq!(back.ledger, snap.ledger);
+        let a = back.async_state.unwrap();
+        let b = snap.async_state.unwrap();
+        assert_eq!(a.totals, b.totals);
+        assert_eq!(a.pending.len(), 1);
+        assert_eq!(a.pending[0].collaborator, b.pending[0].collaborator);
+        assert_eq!(a.pending[0].update, b.pending[0].update);
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption_with_typed_errors() {
+        let bytes = sample_snapshot().to_bytes();
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        let err = Snapshot::from_bytes(&bad).unwrap_err();
+        assert!(matches!(err, FedAeError::Checkpoint(_)));
+        assert!(err.to_string().contains("magic"));
+
+        // Version skew.
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        let err = Snapshot::from_bytes(&bad).unwrap_err();
+        assert!(matches!(err, FedAeError::Checkpoint(_)));
+        assert!(err.to_string().contains("version 99"));
+
+        // Payload bit flip breaks the content hash.
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let err = Snapshot::from_bytes(&bad).unwrap_err();
+        assert!(matches!(err, FedAeError::Checkpoint(_)));
+        assert!(err.to_string().contains("hash"));
+
+        // Truncation.
+        let err = Snapshot::from_bytes(&bytes[..bytes.len() - 3]).unwrap_err();
+        assert!(matches!(err, FedAeError::Checkpoint(_)));
+
+        // Too short to even hold a header.
+        assert!(Snapshot::from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn compat_check_names_the_mismatched_field() {
+        use crate::config::manifest;
+        use crate::util::json::Json;
+        let mjson = Json::parse(&manifest::tests::test_manifest_json()).unwrap();
+        let m = manifest::Manifest::from_json(&mjson).unwrap();
+        let n_params = m.model("toy").unwrap().n_params;
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "toy".into();
+        cfg.compression = crate::config::CompressionConfig::Identity;
+        let block = CompatBlock::of(&cfg, n_params);
+        block.check(&cfg, n_params).unwrap();
+
+        let mut other = cfg.clone();
+        other.seed = cfg.seed.wrapping_add(1);
+        let err = block.check(&other, n_params).unwrap_err();
+        assert!(err.to_string().contains("seed"));
+
+        let mut other = cfg.clone();
+        other.compression = crate::config::CompressionConfig::Subsample { fraction: 0.5 };
+        let err = block.check(&other, n_params).unwrap_err();
+        assert!(err.to_string().contains("compression"));
+    }
+
+    #[test]
+    fn event_log_appends_reads_and_truncates() {
+        let dir = test_dir("events");
+        let rec = |round: usize| EventRecord {
+            round,
+            selected: vec![0, round],
+            admitted: 2,
+            late: 0,
+            dropped: 0,
+            stale_applied: 0,
+            discarded: 0,
+            eval_loss: 0.5,
+            eval_acc: 0.9,
+            mean_recon_mse: f32::NAN,
+            bytes_up: 100,
+            bytes_down: 200,
+            full_decodes: 2,
+            range_decodes: 0,
+        };
+        for round in 0..5 {
+            append_event(&dir, &rec(round)).unwrap();
+        }
+        let all = read_events(&dir).unwrap();
+        assert_eq!(all.len(), 5);
+        // NaN recon MSE still compares equal (bitwise).
+        assert_eq!(all[3], rec(3));
+
+        truncate_events_from(&dir, 3).unwrap();
+        let kept = read_events(&dir).unwrap();
+        assert_eq!(kept.len(), 3);
+        assert_eq!(kept.last().unwrap().round, 2);
+        // Appending after truncation continues the log seamlessly.
+        append_event(&dir, &rec(3)).unwrap();
+        assert_eq!(read_events(&dir).unwrap().len(), 4);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn event_log_tolerates_torn_tail() {
+        let dir = test_dir("torn");
+        let rec = EventRecord {
+            round: 0,
+            selected: vec![1],
+            admitted: 1,
+            late: 0,
+            dropped: 0,
+            stale_applied: 0,
+            discarded: 0,
+            eval_loss: 1.0,
+            eval_acc: 0.5,
+            mean_recon_mse: 0.0,
+            bytes_up: 10,
+            bytes_down: 20,
+            full_decodes: 1,
+            range_decodes: 0,
+        };
+        append_event(&dir, &rec).unwrap();
+        append_event(&dir, &rec).unwrap();
+        // Simulate a crash mid-append: chop the second record in half.
+        let path = events_path(&dir);
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let survivors = read_events(&dir).unwrap();
+        assert_eq!(survivors.len(), 1);
+        assert_eq!(survivors[0], rec);
+        // A foreign file is rejected outright.
+        fs::write(&path, b"not an event log at all").unwrap();
+        assert!(read_events(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpointer_cadence_prune_and_latest() {
+        let dir = test_dir("cadence");
+        let cfg = CheckpointConfig {
+            dir: dir.to_string_lossy().into_owned(),
+            every_rounds: 2,
+            keep_last: 2,
+        };
+        let ck = Checkpointer::new(&cfg).unwrap();
+        assert!(!ck.snapshot_due(0));
+        assert!(!ck.snapshot_due(1));
+        assert!(ck.snapshot_due(2));
+        assert!(ck.snapshot_due(4));
+
+        let mut snap = sample_snapshot();
+        for completed in [2usize, 4, 6] {
+            snap.round = completed;
+            ck.write_snapshot(&snap).unwrap();
+        }
+        // keep_last = 2: the round-2 snapshot was pruned.
+        assert!(!dir.join(snapshot_file_name(2)).exists());
+        assert!(dir.join(snapshot_file_name(4)).exists());
+        let latest = latest_snapshot(&dir).unwrap().unwrap();
+        assert_eq!(latest, dir.join(snapshot_file_name(6)));
+        assert_eq!(Snapshot::read_from(&latest).unwrap().round, 6);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -38,18 +38,28 @@
 //!   driver memory is O(active ∪ recently-active), not O(registered),
 //!   and million-client populations are simulable (ARCHITECTURE.md
 //!   §Client selection & lazy state, `rust/tests/selection.rs`).
+//! * [`checkpoint`] — versioned snapshots + an append-only per-round
+//!   event log. A snapshot captures the complete cross-round state;
+//!   [`DriverBuilder::resume_from`] rebuilds everything else as a pure
+//!   function of `(config, seed)`, so a resumed run replays the
+//!   remaining rounds bitwise-identically to the uninterrupted one
+//!   (ARCHITECTURE.md §Checkpointing & replay,
+//!   `rust/tests/checkpoint.rs`).
 
 pub mod async_engine;
+pub mod checkpoint;
 pub mod engine;
 pub mod selection;
 
 pub use async_engine::{AsyncRoundEngine, BufferedUpdate, StragglerStats};
+pub use checkpoint::{Checkpointer, EventRecord, Snapshot};
 pub use engine::ParallelRoundEngine;
 pub use selection::{
     ClientSelector, SelectionStats, StratifiedSelector, UniformSelector, WeightedSelector,
 };
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
 use std::sync::{mpsc, Arc, RwLock};
 
 use crate::aggregation::{
@@ -349,6 +359,22 @@ impl ServerAggregator {
             ServerAggregator::Sharded(s) => s.supports_streaming(),
         }
     }
+
+    /// Export the cross-round aggregator state for a snapshot.
+    fn export_state(&self) -> Vec<u8> {
+        match self {
+            ServerAggregator::Plain(a) => a.export_state(),
+            ServerAggregator::Sharded(s) => s.export_state(),
+        }
+    }
+
+    /// Restore aggregator state from a snapshot blob.
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        match self {
+            ServerAggregator::Plain(a) => a.import_state(bytes),
+            ServerAggregator::Sharded(s) => s.import_state(bytes),
+        }
+    }
 }
 
 /// One client's resident state: the collaborator (shard, local model,
@@ -429,6 +455,9 @@ pub struct FlDriver<'rt> {
     /// Deadline-driven round discipline (`engine.mode = "async"` only):
     /// straggler model, deadline admission and the late-update buffer.
     async_engine: Option<AsyncRoundEngine>,
+    /// Snapshot/event-log writer (`checkpoint.dir` set); `None` disables
+    /// checkpointing entirely.
+    checkpointer: Option<Checkpointer>,
     /// The simulated network + byte-exact traffic ledger.
     pub network: SimulatedNetwork,
     eval: EvalStep<'rt>,
@@ -464,6 +493,7 @@ pub struct DriverBuilder<'rt> {
     rt: &'rt Runtime,
     cfg: ExperimentConfig,
     pipeline: Option<&'rt AePipeline<'rt>>,
+    resume: Option<PathBuf>,
 }
 
 impl<'rt> DriverBuilder<'rt> {
@@ -474,13 +504,53 @@ impl<'rt> DriverBuilder<'rt> {
         self
     }
 
+    /// Resume from a snapshot: a `.ckpt` file, or a checkpoint directory
+    /// (the newest snapshot in it is used). The snapshot's config
+    /// fingerprint must match `cfg` — same seed, model, topology,
+    /// compression, aggregation, engine mode and selection policy — or
+    /// the build fails with a [`FedAeError::Checkpoint`] naming the
+    /// mismatched field. After a successful restore, rounds
+    /// `snapshot.round..fl.rounds` replay bitwise-identically to the
+    /// uninterrupted run.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
     /// Validate the config and wire the experiment: shared test set,
     /// aggregator, engines, network, selection policy. Per-client state
     /// (shards, pre-passes, compressors) is created lazily when a client
     /// is first selected, so building is O(1) in the registered
-    /// population.
+    /// population. With [`DriverBuilder::resume_from`], the snapshot is
+    /// then loaded, validated and restored, and the event log truncated
+    /// at the resume round (repairing any crash between a round's event
+    /// append and its snapshot write).
     pub fn build(self) -> Result<FlDriver<'rt>> {
-        FlDriver::from_parts(self.rt, self.cfg, self.pipeline)
+        let DriverBuilder {
+            rt,
+            cfg,
+            pipeline,
+            resume,
+        } = self;
+        let mut driver = FlDriver::from_parts(rt, cfg, pipeline)?;
+        if let Some(path) = resume {
+            let file = if path.is_dir() {
+                checkpoint::latest_snapshot(&path)?.ok_or_else(|| {
+                    FedAeError::Checkpoint(format!(
+                        "no snapshot found in `{}`",
+                        path.display()
+                    ))
+                })?
+            } else {
+                path
+            };
+            let snap = Snapshot::read_from(&file)?;
+            driver.restore_from(snap)?;
+            if let Some(ck) = &driver.checkpointer {
+                ck.truncate_events_from(driver.round)?;
+            }
+        }
+        Ok(driver)
     }
 }
 
@@ -491,6 +561,7 @@ impl<'rt> FlDriver<'rt> {
             rt,
             cfg,
             pipeline: None,
+            resume: None,
         }
     }
 
@@ -559,6 +630,12 @@ impl<'rt> FlDriver<'rt> {
             _ => None,
         };
 
+        let checkpointer = if cfg.checkpoint.enabled() {
+            Some(Checkpointer::new(&cfg.checkpoint)?)
+        } else {
+            None
+        };
+
         let n_clients = cfg.fl.collaborators;
         let sel_seed = cfg.seed ^ SELECTION_SEED_TAG;
         let selector: Box<dyn ClientSelector> = match cfg.selection.policy {
@@ -593,6 +670,7 @@ impl<'rt> FlDriver<'rt> {
             server_agg,
             engine,
             async_engine,
+            checkpointer,
             network,
             eval,
             test,
@@ -633,6 +711,137 @@ impl<'rt> FlDriver<'rt> {
     /// Clients currently resident in the lazy state pool.
     pub fn resident_clients(&self) -> usize {
         self.clients.len()
+    }
+
+    /// Rounds completed so far — the next round [`FlDriver::run_round`]
+    /// will execute, and the round a resumed driver continues from.
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    /// Capture every piece of cross-round driver state into a
+    /// [`Snapshot`]. Everything *not* captured — client models, batch
+    /// streams, compressors, decoders, pre-passes, the selection policy —
+    /// is a pure function of `(config, seed)` plus the captured cursors
+    /// (roster draw counts, round counter), so
+    /// [`FlDriver::restore_from`] rebuilds it bit-identically.
+    pub fn snapshot(&self) -> Result<Snapshot> {
+        Ok(Snapshot {
+            compat: checkpoint::CompatBlock::of(&self.cfg, self.model_n_params),
+            round: self.round,
+            global: self.global.clone(),
+            agg_state: self.server_agg.export_state(),
+            async_state: self.async_engine.as_ref().map(|e| checkpoint::AsyncState {
+                pending: e.pending().to_vec(),
+                totals: e.totals(),
+            }),
+            roster: self
+                .clients
+                .iter()
+                .map(|(&id, st)| checkpoint::RosterEntry {
+                    id,
+                    last_used: st.last_used,
+                    batches_drawn: st.collaborator.batches_drawn(),
+                })
+                .collect(),
+            suspended: self.suspended.iter().map(|(&id, &d)| (id, d)).collect(),
+            shipped: self.shipped.iter().copied().collect(),
+            ledger: self.network.ledger().totals(),
+        })
+    }
+
+    /// Restore a snapshot into a freshly built driver (see
+    /// [`DriverBuilder::resume_from`]). Validates the config fingerprint,
+    /// installs the explicit state (round counter, global model,
+    /// aggregator state, async buffer, ledger totals, shipped set,
+    /// suspended cursors), then eagerly re-activates the roster: each
+    /// client rebuilds from its seed and fast-forwards its batch stream
+    /// to the captured draw count, making it bit-identical to one that
+    /// was never torn down. The roster must be rebuilt eagerly — a
+    /// buffered late update may apply before its sender is ever
+    /// re-selected, and its decoder must already be resident.
+    fn restore_from(&mut self, snap: Snapshot) -> Result<()> {
+        snap.compat.check(&self.cfg, self.model_n_params)?;
+        if snap.global.len() != self.global.len() {
+            return Err(FedAeError::Checkpoint(format!(
+                "snapshot global model has {} params, model `{}` has {}",
+                snap.global.len(),
+                self.cfg.model,
+                self.global.len()
+            )));
+        }
+        if snap.round > self.cfg.fl.rounds {
+            return Err(FedAeError::Checkpoint(format!(
+                "snapshot is {} rounds in, config runs only {}",
+                snap.round, self.cfg.fl.rounds
+            )));
+        }
+        match (&mut self.async_engine, snap.async_state) {
+            (Some(e), Some(a)) => e.restore(a.pending, a.totals),
+            (None, None) => {}
+            // Unreachable past the compat check (engine mode is part of
+            // the fingerprint), kept as a typed corruption guard.
+            _ => {
+                return Err(FedAeError::Checkpoint(
+                    "snapshot async state does not match the engine mode".into(),
+                ))
+            }
+        }
+        self.server_agg.import_state(&snap.agg_state)?;
+        self.network.restore_ledger(&snap.ledger)?;
+        self.global = snap.global;
+        self.round = snap.round;
+        self.shipped = snap.shipped.iter().copied().collect();
+        // Feed every roster entry's draw count through the suspended map
+        // so activation fast-forwards each rebuilt batch stream to
+        // exactly where the checkpointed one stood.
+        self.suspended = snap.suspended.iter().copied().collect();
+        for e in &snap.roster {
+            self.suspended.insert(e.id, e.batches_drawn);
+        }
+        let roster_ids: Vec<usize> = snap.roster.iter().map(|e| e.id).collect();
+        // `shipped` was restored first, so re-activation re-registers
+        // decoders without re-metering shipments or re-recording
+        // pre-pass summaries.
+        self.activate(snap.round, &roster_ids)?;
+        for e in &snap.roster {
+            self.clients
+                .get_mut(&e.id)
+                .expect("roster client just activated")
+                .last_used = e.last_used;
+        }
+        Ok(())
+    }
+
+    /// Per-round checkpoint hook: append the round's event record, then
+    /// write a snapshot when one is due. The event append comes first, so
+    /// a crash between the two leaves the log one round ahead of the
+    /// snapshot — resume truncates the log at the snapshot round and the
+    /// replay re-appends it, repairing the log to the uninterrupted
+    /// bytes.
+    fn checkpoint_round(&self, outcome: &RoundOutcome, participants: &[usize]) -> Result<()> {
+        if let Some(ck) = &self.checkpointer {
+            ck.record_round(&EventRecord {
+                round: outcome.round,
+                selected: participants.to_vec(),
+                admitted: outcome.stragglers.admitted,
+                late: outcome.stragglers.late,
+                dropped: outcome.stragglers.dropped,
+                stale_applied: outcome.stragglers.stale_applied,
+                discarded: outcome.selection.discarded,
+                eval_loss: outcome.eval_loss,
+                eval_acc: outcome.eval_acc,
+                mean_recon_mse: outcome.mean_recon_mse,
+                bytes_up: outcome.bytes_up,
+                bytes_down: outcome.bytes_down,
+                full_decodes: outcome.agg.full_decodes,
+                range_decodes: outcome.agg.range_decodes,
+            })?;
+            if ck.snapshot_due(self.round) {
+                ck.write_snapshot(&self.snapshot()?)?;
+            }
+        }
+        Ok(())
     }
 
     /// Resolve this round's targets: `(admit_k, sampled)` where
@@ -1482,7 +1691,7 @@ impl<'rt> FlDriver<'rt> {
             engine.record_round(&stats);
         }
         self.round += 1;
-        Ok(RoundOutcome {
+        let outcome = RoundOutcome {
             round,
             train_losses,
             eval_loss,
@@ -1493,7 +1702,12 @@ impl<'rt> FlDriver<'rt> {
             stragglers: stats,
             agg: agg_stats,
             selection: sel_stats,
-        })
+        };
+
+        // 6. Checkpointing (when configured): event record every round,
+        //    snapshot every `checkpoint.every_rounds`.
+        self.checkpoint_round(&outcome, &participants)?;
+        Ok(outcome)
     }
 
     /// Cumulative async-mode straggler accounting (`None` in sync mode).
@@ -1510,14 +1724,16 @@ impl<'rt> FlDriver<'rt> {
             .unwrap_or(0)
     }
 
-    /// Run the configured number of rounds; returns the final outcome.
+    /// Run the remaining configured rounds (all of them on a fresh
+    /// driver, rounds `snapshot.round..fl.rounds` after a resume);
+    /// returns the final outcome.
     pub fn run(&mut self) -> Result<RoundOutcome> {
         let mut last = None;
         let mut agg_totals = AggRoundStats::default();
         let mut sel_activated = 0usize;
         let mut sel_evicted = 0usize;
         let mut sel_discarded = 0usize;
-        for _ in 0..self.cfg.fl.rounds {
+        for _ in self.round..self.cfg.fl.rounds {
             let outcome = self.run_round()?;
             agg_totals.accumulate(&outcome.agg);
             sel_activated += outcome.selection.newly_activated;

@@ -42,6 +42,10 @@ pub enum FedAeError {
     /// update for a stale round, unknown collaborator, missing decoder).
     Coordination(String),
 
+    /// Snapshot/event-log failure: corrupt or truncated bytes, content-hash
+    /// mismatch, version skew, or a `--resume` config incompatibility.
+    Checkpoint(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -58,6 +62,7 @@ impl fmt::Display for FedAeError {
             FedAeError::Protocol(msg) => write!(f, "protocol error: {msg}"),
             FedAeError::Compression(msg) => write!(f, "compression error: {msg}"),
             FedAeError::Coordination(msg) => write!(f, "coordination error: {msg}"),
+            FedAeError::Checkpoint(msg) => write!(f, "checkpoint error: {msg}"),
             FedAeError::Io(e) => write!(f, "io error: {e}"),
         }
     }

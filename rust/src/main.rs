@@ -49,6 +49,8 @@ fn main() -> Result<()> {
                  \u{20}        [--staleness-decay A] [--straggler-log-std S] [--jitter-ms N]\n\
                  \u{20}        [--selection uniform|weighted|stratified] [--select-fraction X] [--select-count K]\n\
                  \u{20}        [--select-slack S (async over-provisioning)] [--max-resident N (0 = unbounded)] [--strata N]\n\
+                 \u{20}        [--checkpoint-dir DIR] [--checkpoint-every N] [--keep-last K (0 = keep all)]\n\
+                 \u{20}        [--resume PATH (snapshot file or checkpoint dir; continues the run bitwise)]\n\
                  prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N] [--kernel naive|tiled]\n\
                  savings  [--rounds N] [--max-collabs N] [--mnist]\n\
                  inspect  [--artifacts DIR]\n\
@@ -144,6 +146,22 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.selection.slack = args.get_usize("select-slack", cfg.selection.slack)?;
     cfg.selection.max_resident = args.get_usize("max-resident", cfg.selection.max_resident)?;
     cfg.selection.strata = args.get_usize("strata", cfg.selection.strata)?;
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint.dir = dir.to_string();
+    }
+    cfg.checkpoint.every_rounds =
+        args.get_usize("checkpoint-every", cfg.checkpoint.every_rounds)?;
+    cfg.checkpoint.keep_last = args.get_usize("keep-last", cfg.checkpoint.keep_last)?;
+    // Resuming implies checkpointing into the same directory when
+    // --resume points at a directory and no explicit dir was given, so
+    // the continued run keeps appending to the same event log.
+    if !cfg.checkpoint.enabled() {
+        if let Some(path) = args.get("resume") {
+            if std::path::Path::new(path).is_dir() {
+                cfg.checkpoint.dir = path.to_string();
+            }
+        }
+    }
     Ok(cfg)
 }
 
@@ -185,9 +203,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(p) = pipe_ref {
         builder = builder.pipeline(p);
     }
+    if let Some(path) = args.get("resume") {
+        builder = builder.resume_from(path);
+    }
     let mut driver = builder.build()?;
+    if driver.round() > 0 {
+        println!(
+            "resumed at round {} ({} resident clients restored)",
+            driver.round(),
+            driver.resident_clients()
+        );
+    }
     let n_registered = driver.config().fl.collaborators;
-    for r in 0..driver.config().fl.rounds {
+    for r in driver.round()..driver.config().fl.rounds {
         let out = driver.run_round()?;
         let s = out.stragglers;
         let sel = out.selection;

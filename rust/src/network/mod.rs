@@ -28,6 +28,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::{EngineConfig, NetworkConfig};
+use crate::error::{FedAeError, Result};
 use crate::util::rng::Rng;
 
 /// Direction of a transfer relative to the aggregator.
@@ -300,6 +301,33 @@ impl SimulatedNetwork {
     pub fn merge_ledger(&mut self, worker: TrafficLedger) {
         self.ledger.merge(worker);
     }
+
+    /// Restore the ledger's aggregate totals from a checkpoint snapshot
+    /// (see [`TrafficLedger::restore_totals`]). Only valid before any
+    /// transfer has been recorded.
+    pub fn restore_ledger(&mut self, totals: &LedgerTotals) -> Result<()> {
+        self.ledger.restore_totals(totals)
+    }
+}
+
+/// The aggregate view of a [`TrafficLedger`] that a checkpoint snapshot
+/// carries: per-(direction, kind) byte buckets, grand totals, and the
+/// uplink-update transfer count. The raw per-transfer log is
+/// intentionally excluded — it grows with every transfer, and resume
+/// only needs the aggregates to keep byte accounting (and the paper's
+/// measured compression ratio) exact across a crash.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LedgerTotals {
+    /// Bytes per (direction, kind) bucket, in the index's sorted order.
+    pub by_kind: Vec<(Direction, TrafficKind, u64)>,
+    /// Total bytes across all transfers.
+    pub total_bytes: u64,
+    /// Total simulated transfer seconds across all transfers.
+    pub total_sim_seconds: f64,
+    /// Number of uplink [`TrafficKind::Update`] transfers (the
+    /// denominator count behind
+    /// [`TrafficLedger::measured_update_ratio`]).
+    pub update_up_count: u64,
 }
 
 /// Aggregated traffic accounting.
@@ -309,6 +337,12 @@ pub struct TrafficLedger {
     by_kind: BTreeMap<(Direction, TrafficKind), u64>,
     total_bytes: u64,
     total_sim_seconds: f64,
+    /// Bytes accounted by transfers that predate a checkpoint restore
+    /// (present in the totals/index but not in `transfers`); the
+    /// conservation invariant nets them out of the raw-log comparison.
+    restored_bytes: u64,
+    /// Uplink update transfers that predate a checkpoint restore.
+    restored_update_ups: u64,
 }
 
 impl TrafficLedger {
@@ -330,7 +364,53 @@ impl TrafficLedger {
         }
         self.total_bytes += other.total_bytes;
         self.total_sim_seconds += other.total_sim_seconds;
+        self.restored_bytes += other.restored_bytes;
+        self.restored_update_ups += other.restored_update_ups;
         self.transfers.extend(other.transfers);
+    }
+
+    /// The aggregate totals a checkpoint snapshot carries, pre-restore
+    /// history included — so totals taken after a resume match the
+    /// uninterrupted run's exactly.
+    pub fn totals(&self) -> LedgerTotals {
+        LedgerTotals {
+            by_kind: self
+                .by_kind
+                .iter()
+                .map(|(&(d, k), &bytes)| (d, k, bytes))
+                .collect(),
+            total_bytes: self.total_bytes,
+            total_sim_seconds: self.total_sim_seconds,
+            update_up_count: self.restored_update_ups
+                + self
+                    .transfers
+                    .iter()
+                    .filter(|t| t.direction == Direction::Up && t.kind == TrafficKind::Update)
+                    .count() as u64,
+        }
+    }
+
+    /// Seed a fresh ledger with a snapshot's aggregate totals. The raw
+    /// transfer log stays empty — restored bytes are tracked as a
+    /// baseline so [`TrafficLedger::check_conservation`] and
+    /// [`TrafficLedger::measured_update_ratio`] remain exact — which is
+    /// why this is only valid before any transfer has been recorded.
+    pub fn restore_totals(&mut self, totals: &LedgerTotals) -> Result<()> {
+        if !self.transfers.is_empty() || self.total_bytes != 0 {
+            return Err(FedAeError::Checkpoint(
+                "ledger totals can only be restored into an empty ledger".into(),
+            ));
+        }
+        self.by_kind = totals
+            .by_kind
+            .iter()
+            .map(|&(d, k, bytes)| ((d, k), bytes))
+            .collect();
+        self.total_bytes = totals.total_bytes;
+        self.total_sim_seconds = totals.total_sim_seconds;
+        self.restored_bytes = totals.total_bytes;
+        self.restored_update_ups = totals.update_up_count;
+        Ok(())
     }
 
     /// The raw transfer log, in record order.
@@ -368,22 +448,25 @@ impl TrafficLedger {
             .sum()
     }
 
-    /// Conservation invariant: the by-kind index matches the raw log.
-    /// (Checked by property tests.)
+    /// Conservation invariant: the by-kind index matches the raw log
+    /// plus any checkpoint-restored baseline. (Checked by property
+    /// tests.)
     pub fn check_conservation(&self) -> bool {
         let from_log: u64 = self.transfers.iter().map(|t| t.bytes).sum();
         let from_index: u64 = self.by_kind.values().sum();
-        from_log == self.total_bytes && from_index == self.total_bytes
+        from_log + self.restored_bytes == self.total_bytes && from_index == self.total_bytes
     }
 
     /// Measured compression ratio: raw update bytes / compressed update
-    /// bytes, given the uncompressed per-update size.
+    /// bytes, given the uncompressed per-update size. Counts transfers
+    /// from before a checkpoint restore via the snapshot's baseline.
     pub fn measured_update_ratio(&self, raw_update_bytes: u64) -> Option<f64> {
-        let n_updates = self
-            .transfers
-            .iter()
-            .filter(|t| t.direction == Direction::Up && t.kind == TrafficKind::Update)
-            .count() as u64;
+        let n_updates = self.restored_update_ups
+            + self
+                .transfers
+                .iter()
+                .filter(|t| t.direction == Direction::Up && t.kind == TrafficKind::Update)
+                .count() as u64;
         let sent = self.update_bytes_up();
         if sent == 0 || n_updates == 0 {
             return None;
@@ -476,6 +559,34 @@ mod tests {
         seq.send(0, 1, Direction::Up, TrafficKind::Update, 150);
         assert_eq!(seq.ledger().total_bytes(), ledger.total_bytes());
         assert_eq!(seq.ledger().transfers(), ledger.transfers());
+    }
+
+    #[test]
+    fn ledger_totals_restore_keeps_accounting_exact() {
+        // Run, snapshot the totals, restore into a fresh ledger, keep
+        // running: totals, conservation, and the measured compression
+        // ratio all match an uninterrupted ledger.
+        let mut full = SimulatedNetwork::new(link());
+        full.send(0, 0, Direction::Up, TrafficKind::Update, 50);
+        full.send(0, 0, Direction::Down, TrafficKind::GlobalModel, 400);
+        let snap = full.ledger().totals();
+
+        let mut resumed = SimulatedNetwork::new(link());
+        resumed.restore_ledger(&snap).unwrap();
+        assert!(resumed.ledger().check_conservation());
+        for net in [&mut full, &mut resumed] {
+            net.send(1, 1, Direction::Up, TrafficKind::Update, 70);
+        }
+        assert_eq!(full.ledger().totals(), resumed.ledger().totals());
+        assert!(resumed.ledger().check_conservation());
+        assert_eq!(
+            full.ledger().measured_update_ratio(5000),
+            resumed.ledger().measured_update_ratio(5000)
+        );
+        // Restoring into a ledger that has already metered is rejected.
+        let mut dirty = SimulatedNetwork::new(link());
+        dirty.send(0, 0, Direction::Up, TrafficKind::Control, 1);
+        assert!(dirty.restore_ledger(&snap).is_err());
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Little-endian byte codec shared by snapshot/event-log serialization.
+//!
+//! The checkpoint subsystem (see [`crate::coordinator::checkpoint`]) and the
+//! `Aggregator` state export/import hooks all speak the same tiny wire
+//! dialect as [`crate::compression::CompressedUpdate`]: fixed-width
+//! little-endian integers, `f32`/`f64` as raw bit patterns (so round-trips
+//! are bitwise even for NaNs), and length-prefixed byte strings. Reads go
+//! through a bounds-checked [`Reader`] that turns truncation into a typed
+//! [`FedAeError::Checkpoint`] instead of a panic.
+
+use crate::error::{FedAeError, Result};
+
+// ---------------------------------------------------------------------------
+// Writers: append to a Vec<u8>.
+// ---------------------------------------------------------------------------
+
+/// Append a single byte.
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+/// Append a little-endian `u32`.
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `u64`.
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f32` as its raw little-endian bit pattern.
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append an `f64` as its raw little-endian bit pattern.
+pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append a `u64` length prefix followed by the raw bytes.
+pub fn put_bytes(buf: &mut Vec<u8>, v: &[u8]) {
+    put_u64(buf, v.len() as u64);
+    buf.extend_from_slice(v);
+}
+
+/// Append a UTF-8 string, length-prefixed.
+pub fn put_str(buf: &mut Vec<u8>, v: &str) {
+    put_bytes(buf, v.as_bytes());
+}
+
+/// Append an `f32` vector: `u64` element count then raw bit patterns.
+pub fn put_vec_f32(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u64(buf, v.len() as u64);
+    for x in v {
+        put_f32(buf, *x);
+    }
+}
+
+/// Append an `f64` vector: `u64` element count then raw bit patterns.
+pub fn put_vec_f64(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u64(buf, v.len() as u64);
+    for x in v {
+        put_f64(buf, *x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader: bounds-checked cursor over a byte slice.
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked sequential reader over a byte slice.
+///
+/// Every accessor returns [`FedAeError::Checkpoint`] on truncation; call
+/// [`Reader::finish`] at the end to reject trailing garbage.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Wrap a byte slice.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(FedAeError::Checkpoint(format!(
+                "truncated record: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    /// Read a `u64` length prefix and narrow it to `usize`, rejecting overflow.
+    pub fn len_prefix(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| FedAeError::Checkpoint(format!("length {v} exceeds platform usize")))
+    }
+
+    /// Read an `f32` bit pattern.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a length-prefixed byte string.
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.len_prefix()?;
+        self.take(n)
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let s = self.bytes()?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| FedAeError::Checkpoint("invalid utf-8 in string field".into()))
+    }
+
+    /// Read a length-prefixed `f32` vector.
+    pub fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix()?;
+        if self.remaining() < n.saturating_mul(4) {
+            return Err(FedAeError::Checkpoint(format!(
+                "truncated f32 vector: {n} elements declared, {} bytes left",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed `f64` vector.
+    pub fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.len_prefix()?;
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(FedAeError::Checkpoint(format!(
+                "truncated f64 vector: {n} elements declared, {} bytes left",
+                self.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Require that every byte has been consumed.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(FedAeError::Checkpoint(format!(
+                "{} trailing bytes after record",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a 64-bit content hash (the snapshot integrity check).
+///
+/// Not cryptographic — it guards against torn writes and bit rot, not
+/// adversaries, and is stable across platforms and releases.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_f32(&mut buf, -0.0);
+        put_f64(&mut buf, f64::NAN);
+        put_str(&mut buf, "fedavg_m");
+        put_vec_f32(&mut buf, &[1.0, f32::INFINITY, -3.5]);
+        put_vec_f64(&mut buf, &[0.25, -1e300]);
+
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        assert_eq!(r.str().unwrap(), "fedavg_m");
+        let v = r.vec_f32().unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[1], f32::INFINITY);
+        assert_eq!(r.vec_f64().unwrap(), vec![0.25, -1e300]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_typed_error() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 100); // declares 100 bytes that are not there
+        let mut r = Reader::new(&buf);
+        let err = r.bytes().unwrap_err();
+        assert!(matches!(err, FedAeError::Checkpoint(_)));
+        // Declared-length overflow on vectors is also a typed error.
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX / 2);
+        let mut r = Reader::new(&buf);
+        assert!(r.vec_f32().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 1);
+        buf.push(0xFF);
+        let mut r = Reader::new(&buf);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // Sensitive to single-bit flips.
+        assert_ne!(fnv1a64(&[0b0000_0001]), fnv1a64(&[0b0000_0000]));
+    }
+}

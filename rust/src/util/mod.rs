@@ -6,6 +6,8 @@
 
 /// Tiny CLI argument parser.
 pub mod cli;
+/// Little-endian byte codec for snapshots and the round event log.
+pub mod codec;
 /// Minimal JSON parser + serializer.
 pub mod json;
 /// Deterministic PRNG (xoshiro256++).

@@ -1,0 +1,464 @@
+//! Fault-injection tests for the checkpoint subsystem (ISSUE 7): run K
+//! rounds, drop the driver mid-run (including in the crash window between
+//! a round's event-log append and its snapshot write), resume from disk,
+//! and assert that round outcomes, final parameters, traffic-ledger
+//! totals, selection stats and the repaired event log are bitwise equal
+//! to an uninterrupted run. Covers sync, async+FedBuff, and
+//! million-registered sampled-with-eviction configurations.
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedae::config::{
+    AggPath, AggregationConfig, CompressionConfig, EngineMode, ExperimentConfig, SelectionPolicy,
+};
+use fedae::coordinator::checkpoint::{self, Snapshot};
+use fedae::coordinator::{FlDriver, RoundOutcome, SelectionStats};
+use fedae::network::LedgerTotals;
+use fedae::runtime::Runtime;
+
+/// Fresh per-test scratch directory under the system temp dir. The
+/// `Checkpointer` itself creates it; we only guarantee it starts absent.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedae_ckpt_it_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Small native-model config: every test below is a pure function of the
+/// seed, so runs are comparable bit-for-bit.
+fn base_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mnist".into();
+    cfg.compression = CompressionConfig::Identity;
+    cfg.seed = seed;
+    cfg.fl.collaborators = 4;
+    cfg.fl.rounds = 6;
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 64;
+    cfg.data.test_size = 64;
+    cfg
+}
+
+/// Everything a run leaves behind that the resume contract promises to
+/// reproduce bitwise.
+struct RunTrace {
+    outcomes: Vec<RoundOutcome>,
+    selections: Vec<SelectionStats>,
+    global_bits: Vec<u32>,
+    ledger: LedgerTotals,
+}
+
+/// Drive `driver` from its current round to the configured horizon.
+fn run_to_end(driver: &mut FlDriver<'_>) -> RunTrace {
+    let rounds = driver.config().fl.rounds;
+    let mut outcomes = Vec::new();
+    let mut selections = Vec::new();
+    for _ in driver.round()..rounds {
+        let out = driver.run_round().expect("round failed");
+        selections.push(out.selection);
+        outcomes.push(out);
+    }
+    RunTrace {
+        outcomes,
+        selections,
+        global_bits: driver.global_params().iter().map(|v| v.to_bits()).collect(),
+        ledger: driver.network.ledger().totals(),
+    }
+}
+
+/// Assert that a resumed tail (rounds `skip..`) matches the uninterrupted
+/// reference run bitwise on every promised axis.
+fn assert_tail_matches(reference: &RunTrace, tail: &RunTrace, skip: usize, label: &str) {
+    assert_eq!(&reference.outcomes[skip..], &tail.outcomes[..], "{label}: round outcomes");
+    assert_eq!(&reference.selections[skip..], &tail.selections[..], "{label}: selection stats");
+    assert_eq!(reference.global_bits, tail.global_bits, "{label}: final global params");
+    assert_eq!(reference.ledger, tail.ledger, "{label}: ledger totals");
+}
+
+fn with_dir(mut cfg: ExperimentConfig, dir: &std::path::Path) -> ExperimentConfig {
+    cfg.checkpoint.dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+#[test]
+fn sync_resume_is_bitwise_identical_across_execution_knobs() {
+    let rt = Runtime::native();
+    let grid: [(usize, usize, AggPath, AggregationConfig); 3] = [
+        (1, 0, AggPath::Auto, AggregationConfig::FedAvg),
+        (2, 4096, AggPath::Stream, AggregationConfig::FedAvgM { beta: 0.9 }),
+        (2, 4096, AggPath::Batch, AggregationConfig::Median),
+    ];
+    for (i, (parallelism, shard_size, agg_path, aggregation)) in grid.into_iter().enumerate() {
+        let mut cfg = base_cfg(41 + i as u64);
+        cfg.engine.parallelism = parallelism;
+        cfg.engine.shard_size = shard_size;
+        cfg.engine.agg_path = agg_path;
+        cfg.aggregation = aggregation;
+        cfg.checkpoint.every_rounds = 2;
+        let label = format!("grid case {i}");
+
+        let dir_full = tmp_dir(&format!("sync_full_{i}"));
+        let dir_cut = tmp_dir(&format!("sync_cut_{i}"));
+
+        let mut full = FlDriver::builder(&rt, with_dir(cfg.clone(), &dir_full))
+            .build()
+            .unwrap();
+        let reference = run_to_end(&mut full);
+        drop(full);
+
+        // Interrupted twin: die after round 4 completes — snapshots exist
+        // for rounds 2 and 4, and the log holds records 0..=3.
+        let cut_cfg = with_dir(cfg.clone(), &dir_cut);
+        let mut cut = FlDriver::builder(&rt, cut_cfg.clone()).build().unwrap();
+        for _ in 0..4 {
+            cut.run_round().unwrap();
+        }
+        drop(cut); // simulated crash
+
+        let mut resumed = FlDriver::builder(&rt, cut_cfg)
+            .resume_from(&dir_cut)
+            .build()
+            .unwrap();
+        assert_eq!(resumed.round(), 4, "{label}: resume round");
+        let tail = run_to_end(&mut resumed);
+        assert_tail_matches(&reference, &tail, 4, &label);
+
+        // The event log of the interrupted-then-resumed run must be
+        // byte-identical to the uninterrupted one.
+        assert_eq!(
+            fs::read(checkpoint::events_path(&dir_cut)).unwrap(),
+            fs::read(checkpoint::events_path(&dir_full)).unwrap(),
+            "{label}: event log bytes"
+        );
+
+        fs::remove_dir_all(&dir_full).unwrap();
+        fs::remove_dir_all(&dir_cut).unwrap();
+    }
+}
+
+#[test]
+fn resume_repairs_the_log_after_a_crash_between_append_and_snapshot() {
+    // The driver appends a round's event record BEFORE writing its
+    // snapshot, so a crash in between leaves the log ahead of the newest
+    // snapshot. Resume must truncate the orphaned records and replay them
+    // to byte-identical values. A second variant tears the log mid-append
+    // (partial final record) before resuming.
+    let rt = Runtime::native();
+    let mut cfg = base_cfg(97);
+    cfg.aggregation = AggregationConfig::FedAvgM { beta: 0.9 };
+    cfg.checkpoint.every_rounds = 2;
+
+    let dir_full = tmp_dir("crash_full");
+    let mut full = FlDriver::builder(&rt, with_dir(cfg.clone(), &dir_full))
+        .build()
+        .unwrap();
+    let reference = run_to_end(&mut full);
+    drop(full);
+
+    for (variant, tear) in [("orphaned record", false), ("torn tail", true)] {
+        let dir_cut = tmp_dir(&format!("crash_cut_{tear}"));
+        let cut_cfg = with_dir(cfg.clone(), &dir_cut);
+        let mut cut = FlDriver::builder(&rt, cut_cfg.clone()).build().unwrap();
+        // Die after round 2 completes: the log holds records 0..=2 but the
+        // newest snapshot is for round 2 — record 2 is orphaned.
+        for _ in 0..3 {
+            cut.run_round().unwrap();
+        }
+        drop(cut);
+        assert_eq!(checkpoint::read_events(&dir_cut).unwrap().len(), 3);
+
+        if tear {
+            // Chop the final record mid-write, as an interrupted append
+            // would leave it.
+            let path = checkpoint::events_path(&dir_cut);
+            let bytes = fs::read(&path).unwrap();
+            fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        }
+
+        let mut resumed = FlDriver::builder(&rt, cut_cfg)
+            .resume_from(&dir_cut)
+            .build()
+            .unwrap();
+        assert_eq!(resumed.round(), 2, "{variant}: resume round");
+        let tail = run_to_end(&mut resumed);
+        assert_tail_matches(&reference, &tail, 2, variant);
+        assert_eq!(
+            fs::read(checkpoint::events_path(&dir_cut)).unwrap(),
+            fs::read(checkpoint::events_path(&dir_full)).unwrap(),
+            "{variant}: repaired log bytes"
+        );
+        fs::remove_dir_all(&dir_cut).unwrap();
+    }
+    fs::remove_dir_all(&dir_full).unwrap();
+}
+
+#[test]
+fn async_fedbuff_resume_restores_the_pending_buffer_bitwise() {
+    // Async mode with aggressive straggler knobs so updates land in every
+    // fate (admitted / buffered-late / dropped). The snapshot must carry
+    // the in-flight late-update buffer and staleness totals across the
+    // restart for the tail to match.
+    let rt = Runtime::native();
+    let mut cfg = base_cfg(7);
+    cfg.fl.collaborators = 6;
+    cfg.fl.rounds = 8;
+    cfg.aggregation = AggregationConfig::FedBuff { goal: 3, lr: 0.5 };
+    cfg.engine.mode = EngineMode::Async;
+    cfg.engine.deadline_ms = 30.0;
+    cfg.engine.straggler_log_std = 1.0;
+    cfg.engine.jitter_ms = 10.0;
+    cfg.engine.dropout_rate = 0.1;
+    cfg.engine.staleness_decay = 0.5;
+    cfg.checkpoint.every_rounds = 3;
+
+    let dir_full = tmp_dir("async_full");
+    let mut full = FlDriver::builder(&rt, with_dir(cfg.clone(), &dir_full))
+        .build()
+        .unwrap();
+    let reference = run_to_end(&mut full);
+    drop(full);
+    let churn: usize = reference
+        .outcomes
+        .iter()
+        .map(|o| o.stragglers.late + o.stragglers.dropped + o.stragglers.stale_applied)
+        .sum();
+    assert!(churn > 0, "straggler knobs produced no async churn; test exercises nothing");
+
+    // Die after round 4: latest snapshot is round 3, records 0..=3 on
+    // disk, and (with churn above) late updates are typically still
+    // buffered at the cut point.
+    let dir_cut = tmp_dir("async_cut");
+    let cut_cfg = with_dir(cfg.clone(), &dir_cut);
+    let mut cut = FlDriver::builder(&rt, cut_cfg.clone()).build().unwrap();
+    for _ in 0..4 {
+        cut.run_round().unwrap();
+    }
+    drop(cut);
+
+    let mut resumed = FlDriver::builder(&rt, cut_cfg)
+        .resume_from(&dir_cut)
+        .build()
+        .unwrap();
+    assert_eq!(resumed.round(), 3);
+    let tail = run_to_end(&mut resumed);
+    assert_tail_matches(&reference, &tail, 3, "async fedbuff");
+    assert_eq!(
+        fs::read(checkpoint::events_path(&dir_cut)).unwrap(),
+        fs::read(checkpoint::events_path(&dir_full)).unwrap(),
+        "async fedbuff: event log bytes"
+    );
+
+    fs::remove_dir_all(&dir_full).unwrap();
+    fs::remove_dir_all(&dir_cut).unwrap();
+}
+
+#[test]
+fn sampled_selection_with_eviction_resumes_bitwise_for_every_policy() {
+    // K-of-N sampling with a bounded resident pool: the snapshot must
+    // carry the roster (last-used order + per-client batch-cursor draw
+    // counts) so evicted-and-rebuilt clients replay identically.
+    let rt = Runtime::native();
+    for (i, policy) in [
+        SelectionPolicy::Uniform,
+        SelectionPolicy::Weighted,
+        SelectionPolicy::Stratified,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut cfg = base_cfg(300 + i as u64);
+        cfg.fl.collaborators = 64;
+        cfg.fl.rounds = 5;
+        cfg.selection.policy = policy;
+        cfg.selection.count = 4;
+        cfg.selection.max_resident = 6;
+        if policy == SelectionPolicy::Stratified {
+            cfg.selection.strata = 4;
+        }
+        cfg.checkpoint.every_rounds = 2;
+        let label = format!("policy {policy:?}");
+
+        let dir_full = tmp_dir(&format!("evict_full_{i}"));
+        let mut full = FlDriver::builder(&rt, with_dir(cfg.clone(), &dir_full))
+            .build()
+            .unwrap();
+        let reference = run_to_end(&mut full);
+        drop(full);
+
+        let dir_cut = tmp_dir(&format!("evict_cut_{i}"));
+        let cut_cfg = with_dir(cfg.clone(), &dir_cut);
+        let mut cut = FlDriver::builder(&rt, cut_cfg.clone()).build().unwrap();
+        for _ in 0..4 {
+            cut.run_round().unwrap();
+        }
+        drop(cut);
+
+        let mut resumed = FlDriver::builder(&rt, cut_cfg)
+            .resume_from(&dir_cut)
+            .build()
+            .unwrap();
+        assert_eq!(resumed.round(), 4, "{label}: resume round");
+        assert!(
+            resumed.resident_clients() <= cfg.selection.max_resident,
+            "{label}: resume must not overfill the resident pool"
+        );
+        let tail = run_to_end(&mut resumed);
+        assert_tail_matches(&reference, &tail, 4, &label);
+
+        fs::remove_dir_all(&dir_full).unwrap();
+        fs::remove_dir_all(&dir_cut).unwrap();
+    }
+}
+
+#[test]
+fn million_registered_sampled_run_resumes_bitwise() {
+    // O(active) lazy state means a million-registered roster is cheap as
+    // long as only a handful of clients activate; the snapshot must stay
+    // proportional to the active set, not the registered population.
+    let rt = Runtime::native();
+    let mut cfg = base_cfg(11);
+    cfg.fl.collaborators = 1_000_000;
+    cfg.fl.rounds = 3;
+    cfg.selection.count = 3;
+    cfg.selection.max_resident = 4;
+    cfg.checkpoint.every_rounds = 1;
+
+    let dir_full = tmp_dir("million_full");
+    let mut full = FlDriver::builder(&rt, with_dir(cfg.clone(), &dir_full))
+        .build()
+        .unwrap();
+    let reference = run_to_end(&mut full);
+    drop(full);
+
+    let dir_cut = tmp_dir("million_cut");
+    let cut_cfg = with_dir(cfg.clone(), &dir_cut);
+    let mut cut = FlDriver::builder(&rt, cut_cfg.clone()).build().unwrap();
+    for _ in 0..2 {
+        cut.run_round().unwrap();
+    }
+    drop(cut);
+
+    // Snapshot size must scale with the active set: a 1M-registered
+    // roster with <= 4 resident clients has no business exceeding a few
+    // hundred KB (the model itself is ~64 KB of f32).
+    let snap_path = checkpoint::latest_snapshot(&dir_cut).unwrap().unwrap();
+    let snap_len = fs::metadata(&snap_path).unwrap().len();
+    assert!(
+        snap_len < 1_000_000,
+        "snapshot is {snap_len} bytes — scaling with registered population?"
+    );
+
+    let mut resumed = FlDriver::builder(&rt, cut_cfg)
+        .resume_from(snap_path)
+        .build()
+        .unwrap();
+    assert_eq!(resumed.round(), 2);
+    let tail = run_to_end(&mut resumed);
+    assert_tail_matches(&reference, &tail, 2, "million-registered");
+
+    fs::remove_dir_all(&dir_full).unwrap();
+    fs::remove_dir_all(&dir_cut).unwrap();
+}
+
+#[test]
+fn resume_rejects_incompatible_configs_and_corrupt_snapshots() {
+    let rt = Runtime::native();
+    let mut cfg = base_cfg(123);
+    cfg.checkpoint.every_rounds = 1;
+    let dir = tmp_dir("reject");
+    let cfg = with_dir(cfg, &dir);
+
+    let mut driver = FlDriver::builder(&rt, cfg.clone()).build().unwrap();
+    driver.run_round().unwrap();
+    driver.run_round().unwrap();
+    drop(driver);
+
+    let expect_mismatch = |cfg: ExperimentConfig, field: &str| {
+        let err = FlDriver::builder(&rt, cfg)
+            .resume_from(&dir)
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("--resume config mismatch") && err.contains(field),
+            "expected a `{field}` mismatch error, got: {err}"
+        );
+    };
+
+    let mut other_seed = cfg.clone();
+    other_seed.seed = 999;
+    expect_mismatch(other_seed, "seed");
+
+    let mut other_compression = cfg.clone();
+    other_compression.compression = CompressionConfig::Subsample { fraction: 0.5 };
+    expect_mismatch(other_compression, "compression");
+
+    let mut other_pop = cfg.clone();
+    other_pop.fl.collaborators = 8;
+    expect_mismatch(other_pop, "collaborators");
+
+    // A directory with no snapshots is a clear, typed error.
+    let empty = tmp_dir("reject_empty");
+    fs::create_dir_all(&empty).unwrap();
+    let err = FlDriver::builder(&rt, cfg.clone())
+        .resume_from(&empty)
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no snapshot found"), "got: {err}");
+
+    // A bit-flipped snapshot fails the content hash, not an assertion.
+    let snap_path = checkpoint::latest_snapshot(&dir).unwrap().unwrap();
+    let mut bytes = fs::read(&snap_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    fs::write(&snap_path, &bytes).unwrap();
+    let err = FlDriver::builder(&rt, cfg)
+        .resume_from(snap_path)
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("corrupt"), "got: {err}");
+
+    fs::remove_dir_all(&dir).unwrap();
+    fs::remove_dir_all(&empty).unwrap();
+}
+
+#[test]
+fn snapshot_of_a_restored_driver_is_byte_identical_to_the_file() {
+    // snapshot -> restore -> snapshot must be the identity on bytes: the
+    // wire format is canonical (BTree-ordered collections, bit-pattern
+    // floats), so nothing may drift through a round trip.
+    let rt = Runtime::native();
+    let mut cfg = base_cfg(55);
+    cfg.aggregation = AggregationConfig::FedAvgM { beta: 0.9 };
+    cfg.checkpoint.every_rounds = 2;
+    let dir = tmp_dir("identity");
+    let cfg = with_dir(cfg, &dir);
+
+    let mut driver = FlDriver::builder(&rt, cfg.clone()).build().unwrap();
+    for _ in 0..4 {
+        driver.run_round().unwrap();
+    }
+    drop(driver);
+
+    let snap_path = checkpoint::latest_snapshot(&dir).unwrap().unwrap();
+    let on_disk = fs::read(&snap_path).unwrap();
+    assert_eq!(Snapshot::read_from(&snap_path).unwrap().to_bytes(), on_disk);
+
+    let resumed = FlDriver::builder(&rt, cfg)
+        .resume_from(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(
+        resumed.snapshot().unwrap().to_bytes(),
+        on_disk,
+        "re-snapshotting a restored driver must reproduce the file bitwise"
+    );
+
+    fs::remove_dir_all(&dir).unwrap();
+}

@@ -288,6 +288,7 @@ fn shipped_config_presets_parse_and_validate() {
         "configs/mnist_ae_1024collab.json",
         "configs/mnist_ae_async_256collab.json",
         "configs/mnist_ae_1m_sampled.json",
+        "configs/mnist_ae_resume.json",
         "configs/baseline_topk.json",
     ] {
         let cfg = ExperimentConfig::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
@@ -330,4 +331,16 @@ fn shipped_config_presets_parse_and_validate() {
     assert_eq!(cfg.selection.count, 256);
     assert_eq!(cfg.selection.max_resident, 512);
     assert_eq!(cfg.selection.sample_size(cfg.fl.collaborators, cfg.fl.participation), 256);
+    // The crash-recovery preset snapshots every 5 rounds, prunes to the
+    // newest 3, and keeps the momentum aggregator (whose state the
+    // snapshot must carry) in the loop.
+    let cfg = ExperimentConfig::load("configs/mnist_ae_resume.json").unwrap();
+    assert!(cfg.checkpoint.enabled());
+    assert_eq!(cfg.checkpoint.dir, "checkpoints/mnist_ae_resume");
+    assert_eq!(cfg.checkpoint.every_rounds, 5);
+    assert_eq!(cfg.checkpoint.keep_last, 3);
+    assert!(matches!(
+        cfg.aggregation,
+        fedae::config::AggregationConfig::FedAvgM { .. }
+    ));
 }

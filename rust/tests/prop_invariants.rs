@@ -626,3 +626,211 @@ fn prop_compressors_from_config_roundtrip_dimensionality() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_resume_at_any_round_is_bitwise_identical() {
+    // ISSUE 7 tentpole: checkpoint at a random round R under random
+    // (seed, policy, parallelism, shard size, agg path, aggregation)
+    // knobs, then resume — rounds R..N must be bitwise identical to the
+    // uninterrupted run on outcomes, final params, and ledger totals, and
+    // re-snapshotting the restored driver must reproduce the snapshot
+    // file byte-for-byte. Full FL runs are costly → few cases.
+    use fedae::config::{AggPath, SelectionPolicy};
+    use fedae::coordinator::checkpoint;
+    let rt = Runtime::native();
+    let pcfg = prop::PropConfig {
+        cases: 6,
+        ..Default::default()
+    };
+    prop::check_with(&pcfg, "resume_bitwise_identical", |rng| {
+        let mut base = ExperimentConfig::default();
+        base.model = "mnist".into();
+        base.compression = CompressionConfig::Identity;
+        base.seed = rng.next_u64();
+        base.fl.collaborators = 3 + rng.below(3);
+        base.fl.rounds = 2 + rng.below(3);
+        base.fl.local_epochs = 1;
+        base.data.per_collab = 64;
+        base.data.test_size = 64;
+        base.aggregation = [
+            AggregationConfig::FedAvg,
+            AggregationConfig::FedAvgM { beta: 0.9 },
+        ][rng.below(2)]
+        .clone();
+        base.selection.policy = [
+            SelectionPolicy::Uniform,
+            SelectionPolicy::Weighted,
+            SelectionPolicy::Stratified,
+        ][rng.below(3)];
+        if base.selection.policy == SelectionPolicy::Stratified {
+            base.selection.strata = 1 + rng.below(base.fl.collaborators);
+        }
+        base.engine.parallelism = [1usize, 2][rng.below(2)];
+        base.engine.shard_size = [0usize, 4096][rng.below(2)];
+        base.engine.agg_path = [AggPath::Auto, AggPath::Batch, AggPath::Stream][rng.below(3)];
+        base.checkpoint.every_rounds = 1;
+
+        let cut_round = 1 + rng.below(base.fl.rounds - 1);
+        let case = rng.next_u64();
+        let run = |mut cfg: ExperimentConfig,
+                   dir: &std::path::Path,
+                   stop_after: Option<usize>|
+         -> Result<_, String> {
+            cfg.checkpoint.dir = dir.to_string_lossy().into_owned();
+            let rounds = stop_after.unwrap_or(cfg.fl.rounds);
+            let mut driver = FlDriver::builder(&rt, cfg).build().map_err(|e| format!("{e}"))?;
+            let mut outcomes = Vec::new();
+            for _ in 0..rounds {
+                outcomes.push(driver.run_round().map_err(|e| format!("{e}"))?);
+            }
+            Ok((
+                outcomes,
+                driver.global_params().to_vec(),
+                driver.network.ledger().totals(),
+            ))
+        };
+
+        let dir_full =
+            std::env::temp_dir().join(format!("fedae_ckpt_prop_full_{case}_{}", std::process::id()));
+        let dir_cut =
+            std::env::temp_dir().join(format!("fedae_ckpt_prop_cut_{case}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir_full);
+        let _ = std::fs::remove_dir_all(&dir_cut);
+
+        let full = run(base.clone(), &dir_full, None)?;
+        run(base.clone(), &dir_cut, Some(cut_round))?; // driver dropped: crash
+
+        let snap_path = checkpoint::latest_snapshot(&dir_cut)
+            .map_err(|e| format!("{e}"))?
+            .ok_or("no snapshot written before the cut")?;
+        let on_disk = std::fs::read(&snap_path).map_err(|e| format!("{e}"))?;
+
+        let mut cfg = base.clone();
+        cfg.checkpoint.dir = dir_cut.to_string_lossy().into_owned();
+        let mut resumed = FlDriver::builder(&rt, cfg)
+            .resume_from(&dir_cut)
+            .build()
+            .map_err(|e| format!("{e}"))?;
+        if resumed.round() != cut_round {
+            return Err(format!(
+                "resumed at round {} instead of {cut_round}",
+                resumed.round()
+            ));
+        }
+        // Snapshot -> restore -> snapshot is the identity on bytes.
+        let resnap = resumed.snapshot().map_err(|e| format!("{e}"))?.to_bytes();
+        if resnap != on_disk {
+            return Err("re-snapshot of restored driver differs from the file".into());
+        }
+        let mut tail_outcomes = Vec::new();
+        for _ in cut_round..base.fl.rounds {
+            tail_outcomes.push(resumed.run_round().map_err(|e| format!("{e}"))?);
+        }
+        let tail_global = resumed.global_params().to_vec();
+        let tail_ledger = resumed.network.ledger().totals();
+        drop(resumed);
+
+        let _ = std::fs::remove_dir_all(&dir_full);
+        let _ = std::fs::remove_dir_all(&dir_cut);
+
+        if full.0[cut_round..] != tail_outcomes[..] {
+            return Err(format!("outcomes diverged after resume at {cut_round}"));
+        }
+        let full_bits: Vec<u32> = full.1.iter().map(|v| v.to_bits()).collect();
+        let tail_bits: Vec<u32> = tail_global.iter().map(|v| v.to_bits()).collect();
+        if full_bits != tail_bits {
+            return Err("final global params diverged after resume".into());
+        }
+        if full.2 != tail_ledger {
+            return Err("ledger totals diverged after resume".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_snapshot_wire_format_round_trips_bytes() {
+    // ISSUE 7 satellite: Snapshot::from_bytes(s.to_bytes()) == s for
+    // arbitrary synthetic contents (including NaN params and buffered
+    // async updates), and re-encoding is byte-identical.
+    use fedae::compression::CompressedUpdate;
+    use fedae::coordinator::checkpoint::{AsyncState, CompatBlock, RosterEntry, Snapshot};
+    use fedae::coordinator::{BufferedUpdate, StragglerStats};
+    use fedae::network::LedgerTotals;
+    use fedae::network::{Direction, TrafficKind};
+    prop::check("snapshot_wire_round_trip", |rng| {
+        let n = prop::len_in(rng, 1, 64);
+        let mut global = prop::vec_f32(rng, n);
+        if rng.below(4) == 0 {
+            global[rng.below(n)] = f32::NAN;
+        }
+        let pending = (0..rng.below(3))
+            .map(|_| BufferedUpdate {
+                collaborator: rng.below(100),
+                n_samples: rng.below(1000) as u32,
+                update: CompressedUpdate::Raw {
+                    values: prop::vec_f32(rng, n),
+                },
+                origin_round: rng.below(10),
+                apply_round: rng.below(20),
+            })
+            .collect::<Vec<_>>();
+        let snap = Snapshot {
+            compat: CompatBlock {
+                seed: rng.next_u64(),
+                model: "mnist".into(),
+                n_params: n as u64,
+                collaborators: 1 + rng.below(1000) as u64,
+                compression: "Identity".into(),
+                aggregation: "FedAvg".into(),
+                engine_mode: "sync".into(),
+                selection_policy: "uniform".into(),
+            },
+            round: rng.below(100),
+            global,
+            agg_state: (0..rng.below(32)).map(|_| rng.below(256) as u8).collect(),
+            async_state: if rng.below(2) == 0 {
+                Some(AsyncState {
+                    pending,
+                    totals: StragglerStats {
+                        admitted: rng.below(50),
+                        late: rng.below(50),
+                        dropped: rng.below(50),
+                        stale_applied: rng.below(50),
+                        max_staleness: rng.below(10),
+                        sim_round_seconds: rng.uniform(),
+                    },
+                })
+            } else {
+                None
+            },
+            roster: (0..rng.below(5))
+                .map(|i| RosterEntry {
+                    id: i * 7,
+                    last_used: rng.below(100),
+                    batches_drawn: rng.next_u64() % 1000,
+                })
+                .collect(),
+            suspended: (0..rng.below(4))
+                .map(|i| (1000 + i, rng.next_u64() % 500))
+                .collect(),
+            shipped: (0..rng.below(6)).collect(),
+            ledger: LedgerTotals {
+                by_kind: vec![(
+                    Direction::Up,
+                    TrafficKind::Update,
+                    rng.next_u64() % 1_000_000,
+                )],
+                total_bytes: rng.next_u64() % 1_000_000,
+                total_sim_seconds: rng.uniform() * 100.0,
+                update_up_count: rng.next_u64() % 10_000,
+            },
+        };
+        let bytes = snap.to_bytes();
+        let back = Snapshot::from_bytes(&bytes).map_err(|e| format!("{e}"))?;
+        if back.to_bytes() != bytes {
+            return Err("snapshot re-encode is not byte-identical".into());
+        }
+        Ok(())
+    });
+}
