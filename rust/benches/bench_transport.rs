@@ -1,0 +1,176 @@
+//! Bench — wire-format and transport cost (ISSUE 8): frame encode /
+//! decode throughput (frames/s and MB/s) at the mnist (15,910-param)
+//! and cifar (51,082-param) model sizes, plus one simulated round trip
+//! (GlobalModel down, EncodedUpdate up) over the in-proc channel versus
+//! a real loopback-TCP socket.
+//!
+//! Carries the byte-count parity assert: `Transport::send` must report
+//! exactly `Message::wire_bytes()` on both transports — the invariant
+//! that makes the protocol coordinator's traffic ledger bitwise-equal
+//! to the simulator's.
+//!
+//! `cargo bench --bench bench_transport`
+
+use std::net::TcpListener;
+use std::thread;
+
+use fedae::metrics::print_table;
+use fedae::transport::{InProcChannel, Message, TcpTransport, Transport};
+use fedae::util::rng::Rng;
+use fedae::util::Stopwatch;
+
+/// (model tag, parameter count) tiers.
+const TIERS: [(&str, usize); 2] = [("mnist", 15_910), ("cifar", 51_082)];
+
+/// Encode/decode repetitions per tier.
+const REPS: usize = 200;
+/// Round trips per transport per tier.
+const TRIPS: usize = 50;
+
+fn global_model(n: usize) -> Message {
+    let mut rng = Rng::new(0x7ea1);
+    Message::GlobalModel {
+        round: 3,
+        params: (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+    }
+}
+
+/// A latent-sized uplink frame (the AE wire format: tiny next to the
+/// model) plus an identity-sized one for the uncompressed bound.
+fn encoded_update(payload_bytes: usize) -> Message {
+    let mut rng = Rng::new(0xf10a);
+    // Scheme byte 0 = Raw; the payload body is opaque to the transport.
+    let mut payload = vec![0u8; payload_bytes];
+    for b in payload.iter_mut().skip(1) {
+        *b = rng.below(256) as u8;
+    }
+    Message::encoded_update(3, 1, 512, payload)
+}
+
+fn encode_decode_row(tag: &str, msg: &Message) -> Vec<String> {
+    let frame = msg.to_frame();
+    let mb = frame.len() as f64 / 1e6;
+
+    let sw = Stopwatch::start();
+    for _ in 0..REPS {
+        std::hint::black_box(msg.to_frame());
+    }
+    let enc_s = sw.elapsed_secs();
+
+    let sw = Stopwatch::start();
+    for _ in 0..REPS {
+        std::hint::black_box(Message::from_frame(&frame).expect("bench frame parses"));
+    }
+    let dec_s = sw.elapsed_secs();
+
+    vec![
+        tag.to_string(),
+        format!("{}", frame.len()),
+        format!("{:.0}", REPS as f64 / enc_s),
+        format!("{:.1}", REPS as f64 * mb / enc_s),
+        format!("{:.0}", REPS as f64 / dec_s),
+        format!("{:.1}", REPS as f64 * mb / dec_s),
+    ]
+}
+
+/// One federated exchange: coordinator sends the global model, the
+/// worker answers with an encoded update. Returns ms per round trip.
+fn round_trip_ms(
+    coord: &mut dyn Transport,
+    worker_done: thread::JoinHandle<()>,
+    down: &Message,
+) -> f64 {
+    let sw = Stopwatch::start();
+    for _ in 0..TRIPS {
+        coord.send(down).expect("send global");
+        let up = coord.recv().expect("recv update");
+        assert!(matches!(up, Message::EncodedUpdate { .. }));
+    }
+    let ms = sw.elapsed_secs() * 1e3 / TRIPS as f64;
+    worker_done.join().expect("worker thread");
+    ms
+}
+
+/// The worker half of the echo exchange: answer every `GlobalModel`
+/// with the prebuilt update, assert reported bytes match `wire_bytes`.
+fn echo_worker(mut t: impl Transport + 'static, up: Message) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        for _ in 0..TRIPS {
+            let down = t.recv().expect("recv global");
+            assert!(matches!(down, Message::GlobalModel { .. }));
+            let sent = t.send(&up).expect("send update");
+            assert_eq!(sent, up.wire_bytes(), "transport under-reported bytes");
+        }
+    })
+}
+
+fn transport_rows(n_params: usize, tag: &str) -> Vec<Vec<String>> {
+    let down = global_model(n_params);
+    // AE-latent-sized uplink: 600 latent floats ≈ the paper's z-dim.
+    let up = encoded_update(600 * 4 + 9);
+
+    // Byte-count parity: both transports report wire_bytes exactly.
+    let (mut a, mut b) = InProcChannel::pair();
+    let sent = Transport::send(&mut a, &down).expect("in-proc send");
+    assert_eq!(sent, down.wire_bytes());
+    let _ = Transport::recv(&mut b).expect("in-proc recv");
+
+    // In-proc round trip.
+    let (mut coord, worker) = InProcChannel::pair();
+    let h = echo_worker(worker, up.clone());
+    let inproc_ms = round_trip_ms(&mut coord, h, &down);
+
+    // Loopback-TCP round trip.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let accept = thread::spawn(move || {
+        let (stream, _) = listener.accept().expect("accept");
+        TcpTransport::new(stream)
+    });
+    let mut coord = TcpTransport::connect(&addr).expect("connect loopback");
+    let worker = accept.join().expect("accept thread");
+    let h = echo_worker(worker, up.clone());
+    let tcp_ms = round_trip_ms(&mut coord, h, &down);
+
+    vec![vec![
+        tag.to_string(),
+        format!("{}", down.wire_bytes()),
+        format!("{}", up.wire_bytes()),
+        format!("{inproc_ms:.3}"),
+        format!("{tcp_ms:.3}"),
+    ]]
+}
+
+fn main() {
+    println!("== frame encode/decode, {REPS} reps ==");
+    let mut rows = Vec::new();
+    for (tag, n) in TIERS {
+        rows.push(encode_decode_row(&format!("global_{tag}"), &global_model(n)));
+        rows.push(encode_decode_row(
+            &format!("update_raw_{tag}"),
+            &encoded_update(n * 4 + 1),
+        ));
+    }
+    rows.push(encode_decode_row("update_latent", &encoded_update(600 * 4 + 9)));
+    println!(
+        "{}",
+        print_table(
+            &["frame", "bytes", "enc fps", "enc MB/s", "dec fps", "dec MB/s"],
+            &rows
+        )
+    );
+
+    println!("== one round trip (GlobalModel down, latent update up), {TRIPS} trips ==");
+    let mut rows = Vec::new();
+    for (tag, n) in TIERS {
+        rows.extend(transport_rows(n, tag));
+    }
+    println!(
+        "{}",
+        print_table(
+            &["model", "down B", "up B", "in-proc ms", "tcp ms"],
+            &rows
+        )
+    );
+    println!("(Transport::send == wire_bytes asserted on both transports)");
+}

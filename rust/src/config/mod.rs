@@ -592,6 +592,53 @@ impl CheckpointConfig {
     }
 }
 
+/// Coordinator protocol knobs for the message-driven multi-process mode
+/// (`fedae serve` / `fedae worker`; see [`crate::coordinator::protocol`]).
+///
+/// The protocol changes nothing about the experiment semantics: a
+/// loopback federation produces bitwise-identical global params and
+/// ledger byte totals to the in-process simulator on the same config
+/// (`rust/tests/protocol.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProtocolConfig {
+    /// Collaborators that must rendezvous (`Hello`) before the first
+    /// round starts; `0` (the default) means all `fl.collaborators`.
+    pub min_participants: usize,
+    /// Wall-clock heartbeat deadline in milliseconds: a selected
+    /// collaborator silent for longer is evicted from the round.
+    pub heartbeat_ms: u64,
+    /// Wall-clock ceiling in milliseconds for one full round (covers
+    /// pre-pass + local training); silent workers past it are evicted.
+    pub round_timeout_ms: u64,
+    /// Per-connection frame-size ceiling in bytes
+    /// ([`crate::transport::TcpTransport`] rejects larger headers before
+    /// allocating anything).
+    pub max_frame_bytes: usize,
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> Self {
+        ProtocolConfig {
+            min_participants: 0,
+            heartbeat_ms: 10_000,
+            round_timeout_ms: 300_000,
+            max_frame_bytes: crate::transport::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+impl ProtocolConfig {
+    /// The rendezvous population: `min_participants`, defaulting to the
+    /// full `fl.collaborators` roster when unset.
+    pub fn resolve_min_participants(&self, collaborators: usize) -> usize {
+        if self.min_participants == 0 {
+            collaborators
+        } else {
+            self.min_participants.min(collaborators)
+        }
+    }
+}
+
 /// Root experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -623,6 +670,8 @@ pub struct ExperimentConfig {
     pub backend: BackendConfig,
     /// Snapshot/event-log crash-recovery knobs.
     pub checkpoint: CheckpointConfig,
+    /// Coordinator protocol knobs (multi-process serve/worker mode).
+    pub protocol: ProtocolConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -642,6 +691,7 @@ impl Default for ExperimentConfig {
             selection: SelectionConfig::default(),
             backend: BackendConfig::default(),
             checkpoint: CheckpointConfig::default(),
+            protocol: ProtocolConfig::default(),
         }
     }
 }
@@ -789,6 +839,20 @@ impl ExperimentConfig {
             }
             if let Some(v) = c.get("keep_last").and_then(|v| v.as_usize()) {
                 cfg.checkpoint.keep_last = v;
+            }
+        }
+        if let Some(p) = j.get("protocol") {
+            if let Some(v) = p.get("min_participants").and_then(|v| v.as_usize()) {
+                cfg.protocol.min_participants = v;
+            }
+            if let Some(v) = p.get("heartbeat_ms").and_then(|v| v.as_usize()) {
+                cfg.protocol.heartbeat_ms = v as u64;
+            }
+            if let Some(v) = p.get("round_timeout_ms").and_then(|v| v.as_usize()) {
+                cfg.protocol.round_timeout_ms = v as u64;
+            }
+            if let Some(v) = p.get("max_frame_bytes").and_then(|v| v.as_usize()) {
+                cfg.protocol.max_frame_bytes = v;
             }
         }
         Ok(cfg)
@@ -1004,6 +1068,25 @@ impl ExperimentConfig {
                     self.compression.kind_name()
                 )));
             }
+        }
+        let p = &self.protocol;
+        if p.min_participants > n {
+            return Err(FedAeError::Config(format!(
+                "protocol.min_participants {} exceeds the {} registered collaborators",
+                p.min_participants, n
+            )));
+        }
+        if p.heartbeat_ms == 0 || p.round_timeout_ms == 0 {
+            return Err(FedAeError::Config(
+                "protocol.heartbeat_ms and protocol.round_timeout_ms must be > 0".into(),
+            ));
+        }
+        if p.max_frame_bytes < 1024 {
+            return Err(FedAeError::Config(format!(
+                "protocol.max_frame_bytes {} too small to carry a frame header \
+                 plus any payload (minimum 1024)",
+                p.max_frame_bytes
+            )));
         }
         if self.checkpoint.enabled() {
             if self.checkpoint.every_rounds == 0 {
@@ -1366,6 +1449,50 @@ mod tests {
         cfg.checkpoint.dir.clear();
         cfg.compression = CompressionConfig::TopK { fraction: 0.1 };
         cfg.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn parses_protocol_section() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.protocol, ProtocolConfig::default());
+        assert_eq!(cfg.protocol.min_participants, 0);
+        assert_eq!(cfg.protocol.resolve_min_participants(5), 5);
+        let j = Json::parse(
+            r#"{"protocol": {"min_participants": 2, "heartbeat_ms": 500,
+                "round_timeout_ms": 60000, "max_frame_bytes": 1048576}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.protocol.min_participants, 2);
+        assert_eq!(cfg.protocol.heartbeat_ms, 500);
+        assert_eq!(cfg.protocol.round_timeout_ms, 60_000);
+        assert_eq!(cfg.protocol.max_frame_bytes, 1 << 20);
+        assert_eq!(cfg.protocol.resolve_min_participants(5), 2);
+    }
+
+    #[test]
+    fn protocol_validation() {
+        let mjson = Json::parse(&manifest::tests::test_manifest_json()).unwrap();
+        let m = manifest::Manifest::from_json(&mjson).unwrap();
+        let base = || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.model = "toy".into();
+            cfg.compression = CompressionConfig::Identity;
+            cfg
+        };
+        base().validate(&m).unwrap();
+        let mut cfg = base();
+        cfg.protocol.min_participants = cfg.fl.collaborators + 1;
+        assert!(cfg.validate(&m).is_err());
+        let mut cfg = base();
+        cfg.protocol.heartbeat_ms = 0;
+        assert!(cfg.validate(&m).is_err());
+        let mut cfg = base();
+        cfg.protocol.round_timeout_ms = 0;
+        assert!(cfg.validate(&m).is_err());
+        let mut cfg = base();
+        cfg.protocol.max_frame_bytes = 64;
+        assert!(cfg.validate(&m).is_err());
     }
 
     #[test]

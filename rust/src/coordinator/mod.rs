@@ -45,15 +45,26 @@
 //!   remaining rounds bitwise-identically to the uninterrupted one
 //!   (ARCHITECTURE.md §Checkpointing & replay,
 //!   `rust/tests/checkpoint.rs`).
+//! * [`protocol`] — the message-driven coordinator state machine and
+//!   worker loop: STANDBY/ROUND/FINISHED transitions, rendezvous,
+//!   heartbeat-deadline eviction, hash-verified frames, and bitwise
+//!   parity with this in-process driver over in-proc or TCP transports
+//!   (ARCHITECTURE.md §Coordinator protocol & transports,
+//!   `rust/tests/protocol.rs`).
 
 pub mod async_engine;
 pub mod checkpoint;
 pub mod engine;
+pub mod protocol;
 pub mod selection;
 
 pub use async_engine::{AsyncRoundEngine, BufferedUpdate, StragglerStats};
 pub use checkpoint::{Checkpointer, EventRecord, Snapshot};
 pub use engine::ParallelRoundEngine;
+pub use protocol::{
+    run_worker, CoordinatorState, EndpointSource, ProtocolReport, ProtocolServer,
+    StaticEndpoints, TcpAcceptor, WorkerReport,
+};
 pub use selection::{
     ClientSelector, SelectionStats, StratifiedSelector, UniformSelector, WeightedSelector,
 };
@@ -143,6 +154,17 @@ impl RoundState {
             .filter(|c| !self.received.contains_key(c))
             .copied()
             .collect()
+    }
+
+    /// Evict a collaborator from the round: it is no longer expected
+    /// (and any update it already delivered is discarded), so the round
+    /// can complete without it. Returns `true` if the collaborator was
+    /// part of the round. Used by the protocol coordinator's
+    /// heartbeat-deadline eviction ([`protocol`]).
+    pub fn evict(&mut self, collab: usize) -> bool {
+        let was_expected = self.expected.remove(&collab);
+        self.received.remove(&collab);
+        was_expected
     }
 
     /// Drain the received updates (ordered by collaborator id).
@@ -916,11 +938,11 @@ impl<'rt> FlDriver<'rt> {
                         // models server memory, not the protocol, so a
                         // re-activation re-registers the bit-identical
                         // decoder without re-paying the shipment.
-                        let ship = Message::DecoderShipment {
-                            collab_id: id as u32,
-                            ae_tag: ae.clone(),
-                            dec_params: pp.dec_params.clone(),
-                        };
+                        let ship = Message::decoder_shipment(
+                            id as u32,
+                            ae.clone(),
+                            pp.dec_params.clone(),
+                        );
                         self.network.send(
                             round,
                             id,
@@ -1328,12 +1350,12 @@ impl<'rt> FlDriver<'rt> {
             let (local_eval_loss, local_eval_acc) =
                 eval.eval(collab.params(), &test_x, &test_y)?;
             let update = collab.compressed_update(round)?;
-            let msg = Message::EncodedUpdate {
-                round: round as u32,
-                collab_id: cid as u32,
-                n_samples: collab.n_samples() as u32,
-                payload: update.to_bytes(),
-            };
+            let msg = Message::encoded_update(
+                round as u32,
+                cid as u32,
+                collab.n_samples() as u32,
+                update.to_bytes(),
+            );
             let bytes = msg.wire_bytes();
             let base_s = link.transfer_time(bytes);
             // Sync mode: every upload arrives at the uniform link time.

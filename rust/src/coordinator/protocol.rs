@@ -1,0 +1,1288 @@
+//! Message-driven coordinator protocol: the explicit state machine that
+//! turns the in-process simulator into a multi-process federation.
+//!
+//! # State machine
+//!
+//! ```text
+//!            Hello (version/id checked)          all rounds done
+//! Standby ──────────────────────────▶ Round(0) ─▶ … ─▶ Round(R-1) ──▶ Finished
+//!    │  rendezvous until                  │ per round:                    │
+//!    │  `protocol.min_participants`       │  RoundStart → shipments →     │ Shutdown
+//!    │  workers joined                    │  GlobalModel → updates +      │ to every
+//!    ▼                                    │  eval reports → RoundEnd      ▼ worker
+//!  (timeout ⇒ error)                      ▼  (silent workers evicted)
+//! ```
+//!
+//! The coordinator ([`ProtocolServer`]) drives rounds purely by
+//! exchanging [`Message`] frames over a [`Transport`], so the same loop
+//! runs over deterministic in-process channels
+//! ([`crate::transport::InProcChannel`]) and real TCP sockets
+//! ([`crate::transport::TcpTransport`]) — `fedae serve` / `fedae worker`
+//! are thin wrappers over [`ProtocolServer::run`] and [`run_worker`].
+//!
+//! # Bitwise parity with the simulator
+//!
+//! A protocol federation on config `C` produces the *same bits* as
+//! [`super::FlDriver`] on `C` — final global params, per-round
+//! [`RoundOutcome`]s, and [`LedgerTotals`] — because every seeded
+//! stream and every float operation is replicated exactly:
+//!
+//! * selection draws from `seed ^ SELECTION_SEED_TAG` via the identical
+//!   [`ClientSelector`] construction;
+//! * each worker rebuilds its collaborator as the same pure function of
+//!   `(seed, id)` the simulator uses for lazy activation (shard, AE
+//!   pre-pass seeded `seed + id`, non-AE compressor seeded
+//!   `seed*31 + id`, training stream seeded `seed + 1000 + id`);
+//! * updates are decoded server-side and aggregated batch-materialized
+//!   in collaborator-id order — bitwise-equal to the simulator's
+//!   streaming path (pinned by `rust/tests/streaming_agg.rs`);
+//! * reconstruction MSE is computed on the *worker* against its own
+//!   post-training params and reported via [`Message::EvalReport`]:
+//!   decompression is stateless for every scheme, so the worker-side
+//!   value is bit-identical to the simulator's server-side one;
+//! * byte metering is frame-exact: the worker sends the very frames the
+//!   simulator costs ([`Message::encoded_update`] /
+//!   [`Message::decoder_shipment`] are the shared construction path),
+//!   and control frames (`Hello`, `Heartbeat`, `RoundStart`,
+//!   `RoundEnd`, `Reject`, `EvalReport`, `Shutdown`) are never metered
+//!   in either world.
+//!
+//! `rust/tests/protocol.rs` asserts all three parity surfaces over
+//! loopback TCP and in-proc channels, plus the fault matrix below.
+//!
+//! # Faults
+//!
+//! * A worker whose connection errors, or that stays silent past
+//!   `protocol.heartbeat_ms` (before acking the round) /
+//!   `protocol.round_timeout_ms` (after acking — it is presumed
+//!   computing), is evicted: [`super::RoundState::evict`] removes it
+//!   from the barrier and the round completes without it.
+//! * `EncodedUpdate` / `DecoderShipment` frames carry an FNV-1a content
+//!   hash: mismatches are answered with
+//!   [`RejectReason::HashMismatch`] and ignored; byte-identical replays
+//!   are deduplicated (counted, never re-metered, never re-aggregated).
+//! * A `Hello` with the wrong protocol version, an out-of-range id, or
+//!   an id that is already live is answered with a typed
+//!   [`Message::Reject`] and the connection dropped — a *dead* slot
+//!   with the same id is replaced instead (reconnect).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::{SocketAddr, TcpListener, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::aggregation::{Aggregator, WeightedUpdate};
+use crate::collaborator::{run_prepass, Collaborator};
+use crate::compression::{ae::AeCompressor, CompressedUpdate, MeteredDecoder, UpdateCompressor};
+use crate::config::{CompressionConfig, EngineMode, ExperimentConfig, SelectionPolicy, Sharding};
+use crate::data::{Dataset, ShardFactory, SynthKind};
+use crate::error::{FedAeError, Result};
+use crate::network::{Direction, LedgerTotals, SimulatedNetwork, TrafficKind};
+use crate::runtime::{AePipeline, EvalStep, Runtime};
+use crate::tensor;
+use crate::transport::{Message, RejectReason, TcpTransport, Transport, PROTOCOL_VERSION};
+
+use super::selection::{
+    ClientSelector, SelectionStats, StratifiedSelector, UniformSelector, WeightedSelector,
+};
+use super::{AggRoundStats, RoundOutcome, RoundState, StragglerStats, SELECTION_SEED_TAG};
+
+/// Per-endpoint poll interval of the coordinator's single-threaded
+/// event loop (every blocking wait is bounded by this).
+const POLL: Duration = Duration::from_millis(5);
+
+/// The coordinator's explicit protocol state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordinatorState {
+    /// Rendezvous: waiting for `protocol.min_participants` workers.
+    Standby,
+    /// Driving communication round `n`.
+    Round(usize),
+    /// Every configured round completed; `Shutdown` sent to workers.
+    Finished,
+}
+
+impl std::fmt::Display for CoordinatorState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorState::Standby => write!(f, "STANDBY"),
+            CoordinatorState::Round(n) => write!(f, "ROUND({n})"),
+            CoordinatorState::Finished => write!(f, "FINISHED"),
+        }
+    }
+}
+
+/// Source of freshly connected, pre-`Hello` endpoints for the
+/// coordinator — polled throughout the run, so late joiners and
+/// reconnecting workers are admitted mid-experiment.
+pub trait EndpointSource {
+    /// Poll for one new endpoint; `Ok(None)` when none is waiting.
+    fn poll(&mut self) -> Result<Option<Box<dyn Transport>>>;
+}
+
+/// A fixed set of endpoints handed over up front (in-proc federations:
+/// one [`crate::transport::InProcChannel`] server end per worker).
+pub struct StaticEndpoints {
+    endpoints: Vec<Box<dyn Transport>>,
+}
+
+impl StaticEndpoints {
+    /// Wrap the server-side endpoints; they are yielded in order.
+    pub fn new(endpoints: Vec<Box<dyn Transport>>) -> StaticEndpoints {
+        let mut endpoints = endpoints;
+        endpoints.reverse();
+        StaticEndpoints { endpoints }
+    }
+}
+
+impl EndpointSource for StaticEndpoints {
+    fn poll(&mut self) -> Result<Option<Box<dyn Transport>>> {
+        Ok(self.endpoints.pop())
+    }
+}
+
+/// Reconnect-aware non-blocking TCP accept loop: every accepted stream
+/// becomes a hardened [`TcpTransport`] (frame ceiling + write timeout)
+/// awaiting its `Hello`.
+pub struct TcpAcceptor {
+    listener: TcpListener,
+    max_frame: usize,
+}
+
+impl TcpAcceptor {
+    /// Bind and switch the listener to non-blocking accepts. Accepted
+    /// connections inherit `max_frame` as their frame-size ceiling.
+    pub fn bind(addr: impl ToSocketAddrs, max_frame: usize) -> Result<TcpAcceptor> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(TcpAcceptor { listener, max_frame })
+    }
+
+    /// The bound address (port resolution for `127.0.0.1:0` binds).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+}
+
+impl EndpointSource for TcpAcceptor {
+    fn poll(&mut self) -> Result<Option<Box<dyn Transport>>> {
+        match self.listener.accept() {
+            Ok((stream, _)) => {
+                let mut t = TcpTransport::new(stream);
+                t.set_max_frame(self.max_frame);
+                t.set_write_timeout(Some(Duration::from_secs(30)))?;
+                Ok(Some(Box::new(t)))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// What a completed protocol run hands back: the parity surfaces
+/// (outcomes, final params, ledger totals) plus fault accounting.
+#[derive(Debug, Clone)]
+pub struct ProtocolReport {
+    /// One [`RoundOutcome`] per completed round, in order.
+    pub outcomes: Vec<RoundOutcome>,
+    /// The final global model parameters.
+    pub final_params: Vec<f32>,
+    /// Aggregate traffic-ledger totals (byte-exact simulator parity).
+    pub ledger_totals: LedgerTotals,
+    /// `(round, collaborator)` pairs evicted for silence/disconnect.
+    pub evictions: Vec<(usize, usize)>,
+    /// Replayed frames deduplicated by content hash.
+    pub dedup_hits: u64,
+    /// Frames answered with a [`Message::Reject`] or dropped as
+    /// protocol violations.
+    pub rejected_frames: u64,
+    /// Unmetered control frames received (heartbeats, eval reports).
+    pub control_frames: u64,
+}
+
+/// One connected worker endpoint and its liveness bookkeeping.
+struct WorkerSlot {
+    transport: Box<dyn Transport>,
+    /// Cleared on transport error or eviction; a dead slot's id may be
+    /// re-claimed by a reconnecting worker.
+    alive: bool,
+    /// Last instant any frame arrived on this endpoint.
+    last_seen: Instant,
+    /// Round this worker last acked (heartbeat after `RoundStart`):
+    /// acked workers are presumed computing and get the long
+    /// `round_timeout_ms` silence allowance instead of `heartbeat_ms`.
+    acked_round: Option<usize>,
+}
+
+/// A connection that has not sent its `Hello` yet.
+struct PendingConn {
+    transport: Box<dyn Transport>,
+    since: Instant,
+}
+
+/// The message-driven coordinator: [`CoordinatorState`] machine,
+/// rendezvous, per-round start/admit/close transitions, heartbeat
+/// eviction, and the server half of the simulator's round math
+/// (selection, metering, decode, aggregation, evaluation).
+pub struct ProtocolServer<'rt> {
+    cfg: ExperimentConfig,
+    pipeline: Option<&'rt AePipeline<'rt>>,
+    /// Registered population size (`fl.collaborators`).
+    n_clients: usize,
+    /// Model parameter count (non-AE decoder construction).
+    model_n_params: usize,
+    /// The AE tag every `DecoderShipment` must carry (`None` off-AE).
+    ae_tag: Option<String>,
+    /// Seeded selection policy — identical construction to the
+    /// simulator's, so both draw the same participant sets.
+    selector: Box<dyn ClientSelector>,
+    /// Server aggregator (plain batch path; bitwise-equal to the
+    /// simulator's streaming path).
+    aggregator: Box<dyn Aggregator>,
+    eval: EvalStep<'rt>,
+    /// The shared test batch, gathered once (deterministic values).
+    test_x: Vec<f32>,
+    test_y: Vec<f32>,
+    global: Vec<f32>,
+    /// Simulated-cost ledger: the same `send` calls the simulator makes,
+    /// driven by real frames.
+    network: SimulatedNetwork,
+    /// Server-side metered decoders, keyed by collaborator id.
+    decoders: BTreeMap<usize, MeteredDecoder<'rt>>,
+    /// Collaborators whose decoder shipment was metered (once each).
+    shipped: BTreeSet<usize>,
+    workers: BTreeMap<usize, WorkerSlot>,
+    pending: Vec<PendingConn>,
+    state: CoordinatorState,
+    round: usize,
+    outcomes: Vec<RoundOutcome>,
+    evictions: Vec<(usize, usize)>,
+    dedup_hits: u64,
+    rejected_frames: u64,
+    control_frames: u64,
+}
+
+impl<'rt> ProtocolServer<'rt> {
+    /// Validate the config and wire the server half of the experiment:
+    /// selector, aggregator, eval, test batch, initial global model,
+    /// simulated-cost ledger. Protocol mode is sync-barrier only and
+    /// does not support checkpointing; both are rejected here.
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: ExperimentConfig,
+        pipeline: Option<&'rt AePipeline<'rt>>,
+    ) -> Result<ProtocolServer<'rt>> {
+        cfg.validate(rt.manifest())?;
+        if cfg.engine.mode != EngineMode::Sync {
+            return Err(FedAeError::Config(
+                "the protocol coordinator supports engine.mode = \"sync\" only".into(),
+            ));
+        }
+        if cfg.checkpoint.enabled() {
+            return Err(FedAeError::Config(
+                "checkpointing is not supported in protocol mode; use the in-process simulator"
+                    .into(),
+            ));
+        }
+        let model = rt.manifest().model(&cfg.model)?.clone();
+        let kind = match cfg.model.as_str() {
+            "mnist" => SynthKind::Mnist,
+            "cifar" => SynthKind::Cifar,
+            other => {
+                return Err(FedAeError::Config(format!(
+                    "no synthetic data family for model `{other}`"
+                )))
+            }
+        };
+        if cfg.data.sharding == Sharding::ColorImbalance && kind != SynthKind::Cifar {
+            return Err(FedAeError::Config(
+                "color_imbalance sharding requires the cifar model".into(),
+            ));
+        }
+        let factory = ShardFactory::new(
+            kind,
+            cfg.data.sharding,
+            cfg.data.alpha,
+            cfg.data.per_collab,
+            cfg.seed,
+        );
+        let test = factory.test_set(cfg.data.test_size)?;
+        let eval = EvalStep::new(rt, &cfg.model)?;
+        let test_idx: Vec<usize> = (0..test.len()).collect();
+        let (test_x, test_y) = test.gather_batch(&test_idx, eval.batch);
+        let global = rt.load_init(&format!("{}_params", cfg.model))?;
+        let network = SimulatedNetwork::from_config(&cfg.network);
+        let aggregator = crate::aggregation::from_config(&cfg.aggregation)?;
+        let ae_tag = match &cfg.compression {
+            CompressionConfig::Ae { ae } => {
+                let pipeline = pipeline.ok_or_else(|| {
+                    FedAeError::Config("AE compression requires an AePipeline".into())
+                })?;
+                if &pipeline.tag != ae {
+                    return Err(FedAeError::Config(format!(
+                        "pipeline is `{}`, config wants `{ae}`",
+                        pipeline.tag
+                    )));
+                }
+                Some(ae.clone())
+            }
+            _ => None,
+        };
+        let n_clients = cfg.fl.collaborators;
+        let sel_seed = cfg.seed ^ SELECTION_SEED_TAG;
+        let selector: Box<dyn ClientSelector> = match cfg.selection.policy {
+            SelectionPolicy::Uniform => Box::new(UniformSelector::new(sel_seed)),
+            SelectionPolicy::Weighted => Box::new(WeightedSelector::new(
+                sel_seed,
+                vec![cfg.data.per_collab as f64; n_clients],
+            )),
+            SelectionPolicy::Stratified => {
+                Box::new(StratifiedSelector::new(sel_seed, cfg.selection.strata))
+            }
+        };
+        Ok(ProtocolServer {
+            n_clients,
+            model_n_params: model.n_params,
+            ae_tag,
+            selector,
+            aggregator,
+            eval,
+            test_x,
+            test_y,
+            global,
+            network,
+            cfg,
+            pipeline,
+            decoders: BTreeMap::new(),
+            shipped: BTreeSet::new(),
+            workers: BTreeMap::new(),
+            pending: Vec::new(),
+            state: CoordinatorState::Standby,
+            round: 0,
+            outcomes: Vec::new(),
+            evictions: Vec::new(),
+            dedup_hits: 0,
+            rejected_frames: 0,
+            control_frames: 0,
+        })
+    }
+
+    /// The machine's current protocol state.
+    pub fn state(&self) -> CoordinatorState {
+        self.state
+    }
+
+    /// The current global model parameters.
+    pub fn global_params(&self) -> &[f32] {
+        &self.global
+    }
+
+    /// The byte-exact simulated-cost ledger.
+    pub fn network(&self) -> &SimulatedNetwork {
+        &self.network
+    }
+
+    /// Drive the whole federation: rendezvous until
+    /// `protocol.min_participants` workers joined, run every configured
+    /// round, then send `Shutdown` to all live workers and report.
+    pub fn run(&mut self, source: &mut dyn EndpointSource) -> Result<ProtocolReport> {
+        self.rendezvous(source)?;
+        for _ in 0..self.cfg.fl.rounds {
+            let outcome = self.run_protocol_round(source)?;
+            self.outcomes.push(outcome);
+        }
+        self.state = CoordinatorState::Finished;
+        let ids: Vec<usize> = self.workers.keys().copied().collect();
+        for wid in ids {
+            self.send_to(wid, &Message::Shutdown);
+        }
+        Ok(self.report())
+    }
+
+    /// The parity + fault report as of now (valid mid-run too).
+    pub fn report(&self) -> ProtocolReport {
+        ProtocolReport {
+            outcomes: self.outcomes.clone(),
+            final_params: self.global.clone(),
+            ledger_totals: self.network.ledger().totals(),
+            evictions: self.evictions.clone(),
+            dedup_hits: self.dedup_hits,
+            rejected_frames: self.rejected_frames,
+            control_frames: self.control_frames,
+        }
+    }
+
+    /// Live (non-evicted, non-errored) worker endpoints.
+    fn alive_workers(&self) -> usize {
+        self.workers.values().filter(|s| s.alive).count()
+    }
+
+    /// STANDBY: admit `Hello`s until `min_participants` workers are
+    /// live, bounded by `round_timeout_ms`.
+    fn rendezvous(&mut self, source: &mut dyn EndpointSource) -> Result<()> {
+        let min = self.cfg.protocol.resolve_min_participants(self.n_clients);
+        let deadline =
+            Instant::now() + Duration::from_millis(self.cfg.protocol.round_timeout_ms);
+        while self.alive_workers() < min {
+            self.absorb_connections(source)?;
+            self.poll_pending();
+            let ids: Vec<usize> = self.workers.keys().copied().collect();
+            for wid in ids {
+                if let Some(msg) = self.pump_one(wid) {
+                    self.note_stray(msg);
+                }
+            }
+            if self.workers.is_empty() && self.pending.is_empty() {
+                // Nothing to poll yet: pace the accept loop.
+                std::thread::sleep(POLL);
+            }
+            if self.alive_workers() < min && Instant::now() > deadline {
+                return Err(FedAeError::Coordination(format!(
+                    "rendezvous timed out: {} of {min} workers joined",
+                    self.alive_workers()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pull every waiting connection off the source into the pending
+    /// (pre-`Hello`) pool.
+    fn absorb_connections(&mut self, source: &mut dyn EndpointSource) -> Result<()> {
+        while let Some(t) = source.poll()? {
+            self.pending.push(PendingConn {
+                transport: t,
+                since: Instant::now(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Give every pending connection one bounded chance to produce its
+    /// `Hello`; anything else (or an error, or a `Hello` that does not
+    /// arrive within the round timeout) drops the connection.
+    fn poll_pending(&mut self) {
+        let pending = std::mem::take(&mut self.pending);
+        let patience = Duration::from_millis(self.cfg.protocol.round_timeout_ms);
+        for mut conn in pending {
+            match conn.transport.recv_timeout(POLL) {
+                Ok(Some(Message::Hello { collab_id, version })) => {
+                    self.admit(conn.transport, collab_id, version);
+                }
+                Ok(Some(_)) => {
+                    self.rejected_frames += 1;
+                }
+                Ok(None) => {
+                    if conn.since.elapsed() <= patience {
+                        self.pending.push(conn);
+                    }
+                }
+                Err(_) => {}
+            }
+        }
+    }
+
+    /// Validate a `Hello` and either install the worker slot or answer
+    /// with a typed [`Message::Reject`] and drop the connection. A dead
+    /// slot with the same id is replaced (reconnect).
+    fn admit(&mut self, mut transport: Box<dyn Transport>, collab_id: u32, version: u16) {
+        if version != PROTOCOL_VERSION {
+            let _ = transport.send(&Message::Reject {
+                reason: RejectReason::VersionMismatch {
+                    got: version,
+                    want: PROTOCOL_VERSION,
+                },
+            });
+            self.rejected_frames += 1;
+            return;
+        }
+        let id = collab_id as usize;
+        if id >= self.n_clients {
+            let _ = transport.send(&Message::Reject {
+                reason: RejectReason::UnknownCollaborator { collab_id },
+            });
+            self.rejected_frames += 1;
+            return;
+        }
+        if self.workers.get(&id).map(|s| s.alive).unwrap_or(false) {
+            let _ = transport.send(&Message::Reject {
+                reason: RejectReason::DuplicateCollaborator { collab_id },
+            });
+            self.rejected_frames += 1;
+            return;
+        }
+        self.workers.insert(
+            id,
+            WorkerSlot {
+                transport,
+                alive: true,
+                last_seen: Instant::now(),
+                acked_round: None,
+            },
+        );
+    }
+
+    /// Bounded receive from one worker slot; updates liveness
+    /// bookkeeping and marks the slot dead on transport errors.
+    fn pump_one(&mut self, wid: usize) -> Option<Message> {
+        let round = self.round;
+        let slot = self.workers.get_mut(&wid)?;
+        if !slot.alive {
+            return None;
+        }
+        match slot.transport.recv_timeout(POLL) {
+            Ok(Some(msg)) => {
+                slot.last_seen = Instant::now();
+                if matches!(msg, Message::Heartbeat { .. }) {
+                    slot.acked_round = Some(round);
+                }
+                Some(msg)
+            }
+            Ok(None) => None,
+            Err(_) => {
+                slot.alive = false;
+                None
+            }
+        }
+    }
+
+    /// Count a frame that needed no handling (heartbeats and other
+    /// control traffic outside a round phase).
+    fn note_stray(&mut self, msg: Message) {
+        match msg {
+            Message::Heartbeat { .. } | Message::EvalReport { .. } => self.control_frames += 1,
+            _ => self.rejected_frames += 1,
+        }
+    }
+
+    /// Best-effort send to a worker; transport errors kill the slot.
+    fn send_to(&mut self, wid: usize, msg: &Message) {
+        if let Some(slot) = self.workers.get_mut(&wid) {
+            if slot.alive && slot.transport.send(msg).is_err() {
+                slot.alive = false;
+            }
+        }
+    }
+
+    /// Whether `cid`'s slot is currently live.
+    fn is_live(&self, cid: usize) -> bool {
+        self.workers.get(&cid).map(|s| s.alive).unwrap_or(false)
+    }
+
+    /// The ids among `waiting_on` whose workers are dead or have been
+    /// silent past their allowance (`heartbeat_ms` before the round
+    /// ack, `round_timeout_ms` after — an acked worker is computing).
+    fn silent_among(&self, round: usize, waiting_on: &[usize], deadline: Instant) -> Vec<usize> {
+        let heartbeat = Duration::from_millis(self.cfg.protocol.heartbeat_ms);
+        let computing = Duration::from_millis(self.cfg.protocol.round_timeout_ms);
+        let overdue = Instant::now() > deadline;
+        waiting_on
+            .iter()
+            .copied()
+            .filter(|cid| match self.workers.get(cid) {
+                None => true,
+                Some(s) if !s.alive => true,
+                Some(s) => {
+                    let allowance = if s.acked_round == Some(round) {
+                        computing
+                    } else {
+                        heartbeat
+                    };
+                    overdue || s.last_seen.elapsed() > allowance
+                }
+            })
+            .collect()
+    }
+
+    /// Register one verified decoder shipment: build the metered
+    /// AE decoder, meter the upload exactly once per collaborator, and
+    /// dedup byte-identical replays.
+    fn handle_shipment(
+        &mut self,
+        round: usize,
+        wid: usize,
+        msg: Message,
+        waiting: &mut BTreeSet<usize>,
+        sel_stats: &mut SelectionStats,
+    ) -> Result<()> {
+        let wire = msg.wire_bytes();
+        let verified = msg.verify_hash();
+        let Message::DecoderShipment {
+            collab_id,
+            ae_tag,
+            hash: _,
+            dec_params,
+        } = msg
+        else {
+            unreachable!("caller matched DecoderShipment");
+        };
+        let cid = collab_id as usize;
+        if verified.is_err() {
+            self.send_to(wid, &Message::Reject {
+                reason: RejectReason::HashMismatch { collab_id },
+            });
+            self.rejected_frames += 1;
+            return Ok(());
+        }
+        if cid != wid || Some(&ae_tag) != self.ae_tag.as_ref() {
+            // Shipment for someone else's id, or for a different AE
+            // config: a misconfigured worker that can never participate.
+            self.rejected_frames += 1;
+            self.kill(wid);
+            return Ok(());
+        }
+        if self.shipped.contains(&cid) {
+            // Byte-identical replay (the decoder is a pure function of
+            // the shipped params): dedup, never re-meter.
+            self.dedup_hits += 1;
+        } else {
+            let pipeline = self.pipeline.expect("AE pipeline checked at build");
+            let decoder =
+                MeteredDecoder::new(Box::new(AeCompressor::server(pipeline, dec_params)?));
+            self.decoders.insert(cid, decoder);
+            self.shipped.insert(cid);
+            self.network.send(
+                round,
+                cid,
+                Direction::Up,
+                TrafficKind::DecoderShipment,
+                wire,
+            );
+            sel_stats.newly_activated += 1;
+        }
+        waiting.remove(&cid);
+        Ok(())
+    }
+
+    /// Mark a worker slot dead (its transport is abandoned; the id can
+    /// be re-claimed by a reconnect).
+    fn kill(&mut self, cid: usize) {
+        if let Some(slot) = self.workers.get_mut(&cid) {
+            slot.alive = false;
+        }
+    }
+
+    /// Evict `cid` from the in-flight round: dead slot, removed from
+    /// the barrier, recorded in the fault report.
+    fn evict_now(
+        &mut self,
+        round: usize,
+        cid: usize,
+        active: &mut Vec<usize>,
+        state: Option<&mut RoundState>,
+    ) {
+        self.kill(cid);
+        active.retain(|&c| c != cid);
+        if let Some(state) = state {
+            state.evict(cid);
+        }
+        self.evictions.push((round, cid));
+    }
+
+    /// Drive one full round: select → `RoundStart` → decoder shipments
+    /// (fresh AE workers) → `GlobalModel` broadcast → collect updates +
+    /// eval reports (evicting silent workers) → decode/aggregate/eval →
+    /// `RoundEnd`. The math mirrors [`super::FlDriver::run_round`]
+    /// operation-for-operation — see the module docs for the parity
+    /// argument.
+    fn run_protocol_round(&mut self, source: &mut dyn EndpointSource) -> Result<RoundOutcome> {
+        let round = self.round;
+        self.state = CoordinatorState::Round(round);
+        let n = self.n_clients;
+        let sample = self.cfg.selection.sample_size(n, self.cfg.fl.participation);
+        let participants = self.selector.select(round, n, sample);
+        let mut sel_stats = SelectionStats {
+            sampled: participants.len(),
+            ..SelectionStats::default()
+        };
+
+        // Round start: reset acks, notify every selected live worker;
+        // selected ids with no live endpoint are evicted immediately.
+        let mut active: Vec<usize> = Vec::with_capacity(participants.len());
+        for &cid in &participants {
+            if self.is_live(cid) {
+                if let Some(slot) = self.workers.get_mut(&cid) {
+                    slot.acked_round = None;
+                }
+                self.send_to(cid, &Message::RoundStart { round: round as u32 });
+            }
+            if self.is_live(cid) {
+                active.push(cid);
+            } else {
+                self.evictions.push((round, cid));
+            }
+        }
+
+        let phase_deadline =
+            Instant::now() + Duration::from_millis(self.cfg.protocol.round_timeout_ms);
+
+        // Phase A: fresh AE participants run the pre-pass and ship
+        // their decoders; non-AE decoders are pure functions of
+        // (seed, id) and are built right here.
+        let mut waiting: BTreeSet<usize> = BTreeSet::new();
+        if self.ae_tag.is_some() {
+            waiting = active
+                .iter()
+                .copied()
+                .filter(|cid| !self.decoders.contains_key(cid))
+                .collect();
+        } else {
+            for &cid in &active {
+                if !self.decoders.contains_key(&cid) {
+                    let seed = self.cfg.seed.wrapping_mul(31).wrapping_add(cid as u64);
+                    let decoder = crate::compression::from_config(
+                        &self.cfg.compression,
+                        self.model_n_params,
+                        seed,
+                    )?;
+                    self.decoders.insert(cid, MeteredDecoder::new(decoder));
+                    sel_stats.newly_activated += 1;
+                }
+            }
+        }
+        while !waiting.is_empty() {
+            self.absorb_connections(source)?;
+            self.poll_pending();
+            let ids: Vec<usize> = self.workers.keys().copied().collect();
+            for wid in ids {
+                let Some(msg) = self.pump_one(wid) else { continue };
+                match msg {
+                    Message::DecoderShipment { .. } => {
+                        self.handle_shipment(round, wid, msg, &mut waiting, &mut sel_stats)?;
+                    }
+                    other => self.note_stray(other),
+                }
+            }
+            let stalled: Vec<usize> = waiting.iter().copied().collect();
+            for cid in self.silent_among(round, &stalled, phase_deadline) {
+                self.evict_now(round, cid, &mut active, None);
+                waiting.remove(&cid);
+            }
+        }
+
+        // Broadcast the global model (metered per participant, exactly
+        // like the simulator's step 1).
+        let broadcast = Message::GlobalModel {
+            round: round as u32,
+            params: self.global.clone(),
+        };
+        let mut bytes_down = 0u64;
+        let snapshot = active.clone();
+        for &cid in &snapshot {
+            self.network.send(
+                round,
+                cid,
+                Direction::Down,
+                TrafficKind::GlobalModel,
+                broadcast.wire_bytes(),
+            );
+            bytes_down += broadcast.wire_bytes();
+            self.send_to(cid, &broadcast);
+            if !self.is_live(cid) {
+                self.evict_now(round, cid, &mut active, None);
+            }
+        }
+
+        // Phase B: collect one verified `EncodedUpdate` + one
+        // `EvalReport` per active participant, evicting the silent.
+        let mut state = RoundState::new(round, active.iter().copied());
+        let mut reports: BTreeMap<usize, (f32, f32, f32, f32)> = BTreeMap::new();
+        let mut arrivals: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut received_hash: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut bytes_up = 0u64;
+        loop {
+            let mut need: Vec<usize> = state.missing();
+            for &cid in &active {
+                if !reports.contains_key(&cid) && !need.contains(&cid) {
+                    need.push(cid);
+                }
+            }
+            if need.is_empty() {
+                break;
+            }
+            self.absorb_connections(source)?;
+            self.poll_pending();
+            let ids: Vec<usize> = self.workers.keys().copied().collect();
+            for wid in ids {
+                let Some(msg) = self.pump_one(wid) else { continue };
+                match msg {
+                    Message::EncodedUpdate { .. } => {
+                        let wire = msg.wire_bytes();
+                        let verified = msg.verify_hash();
+                        let Message::EncodedUpdate {
+                            round: r,
+                            collab_id,
+                            n_samples,
+                            scheme: _,
+                            hash,
+                            payload,
+                        } = msg
+                        else {
+                            unreachable!("matched EncodedUpdate");
+                        };
+                        let cid = collab_id as usize;
+                        if verified.is_err() {
+                            self.send_to(wid, &Message::Reject {
+                                reason: RejectReason::HashMismatch { collab_id },
+                            });
+                            self.rejected_frames += 1;
+                            continue;
+                        }
+                        if r as usize != round || cid != wid {
+                            self.rejected_frames += 1;
+                            continue;
+                        }
+                        if !active.contains(&cid) {
+                            self.send_to(wid, &Message::Reject {
+                                reason: RejectReason::UnknownCollaborator { collab_id },
+                            });
+                            self.rejected_frames += 1;
+                            continue;
+                        }
+                        if let Some(&prev) = received_hash.get(&cid) {
+                            if prev == hash {
+                                // Byte-identical replay: dedup, never
+                                // re-meter or re-aggregate.
+                                self.dedup_hits += 1;
+                            } else {
+                                // Two different uploads for one round:
+                                // protocol violation, evict.
+                                self.rejected_frames += 1;
+                                self.evict_now(round, cid, &mut active, Some(&mut state));
+                            }
+                            continue;
+                        }
+                        let update = match CompressedUpdate::from_bytes(&payload) {
+                            Ok(update) => update,
+                            Err(_) => {
+                                self.rejected_frames += 1;
+                                self.evict_now(round, cid, &mut active, Some(&mut state));
+                                continue;
+                            }
+                        };
+                        let arrival_s = self.network.send(
+                            round,
+                            cid,
+                            Direction::Up,
+                            TrafficKind::Update,
+                            wire,
+                        );
+                        bytes_up += wire;
+                        received_hash.insert(cid, hash);
+                        arrivals.insert(cid, arrival_s);
+                        state.accept(round, cid, n_samples, update)?;
+                    }
+                    Message::EvalReport {
+                        round: r,
+                        collab_id,
+                        train_loss,
+                        loss,
+                        acc,
+                        recon_mse,
+                    } => {
+                        let cid = collab_id as usize;
+                        self.control_frames += 1;
+                        if r as usize == round && cid == wid && active.contains(&cid) {
+                            reports.insert(cid, (train_loss, loss, acc, recon_mse));
+                        }
+                    }
+                    Message::DecoderShipment { .. } => {
+                        let mut ignore = BTreeSet::new();
+                        self.handle_shipment(round, wid, msg, &mut ignore, &mut sel_stats)?;
+                    }
+                    other => self.note_stray(other),
+                }
+            }
+            let mut need: Vec<usize> = state.missing();
+            for &cid in &active {
+                if !reports.contains_key(&cid) && !need.contains(&cid) {
+                    need.push(cid);
+                }
+            }
+            for cid in self.silent_among(round, &need, phase_deadline) {
+                self.evict_now(round, cid, &mut active, Some(&mut state));
+                reports.remove(&cid);
+            }
+        }
+
+        // Fold in collaborator-id order (RoundState yields updates
+        // sorted by id), mirroring the simulator's admission fold.
+        let updates = state.take_updates();
+        let mut stats = StragglerStats::default();
+        let mut train_losses: Vec<(usize, f32)> = Vec::with_capacity(updates.len());
+        for (cid, _, _) in &updates {
+            stats.admitted += 1;
+            let arrival_s = *arrivals.get(cid).unwrap_or(&0.0);
+            stats.sim_round_seconds = stats.sim_round_seconds.max(arrival_s);
+            let report = reports.get(cid).ok_or_else(|| {
+                FedAeError::Coordination(format!("missing eval report from collaborator {cid}"))
+            })?;
+            train_losses.push((*cid, report.0));
+        }
+
+        // Decode + aggregate, batch-materialized in id order — the
+        // simulator's `agg_path = "batch"` math, bitwise-equal to its
+        // streaming default. Reconstruction MSEs come from the workers'
+        // eval reports (stateless decoders make them bit-identical to
+        // server-side recomputation against local params).
+        let mut agg_stats = AggRoundStats::default();
+        let recon_mses: Vec<f32> = if updates.is_empty() {
+            Vec::new()
+        } else {
+            agg_stats.peak_floats = (updates.len() * self.global.len()) as u64;
+            let mut weighted = Vec::with_capacity(updates.len());
+            let mut mses = Vec::with_capacity(updates.len());
+            let staleness = vec![0usize; updates.len()];
+            for (cid, n_samples, update) in updates {
+                let decoder = self.decoders.get_mut(&cid).ok_or_else(|| {
+                    FedAeError::Coordination(format!(
+                        "no registered decoder for collaborator {cid}"
+                    ))
+                })?;
+                let recon = decoder.decompress(&update)?;
+                if let Err(i) = tensor::check_finite(&recon) {
+                    return Err(FedAeError::Coordination(format!(
+                        "non-finite reconstruction from collaborator {cid} at index {i}"
+                    )));
+                }
+                mses.push(reports[&cid].3);
+                weighted.push(WeightedUpdate {
+                    weight: n_samples as f64,
+                    values: recon,
+                });
+            }
+            self.global = self.aggregator.aggregate_stale(weighted, &staleness, 1.0)?;
+            mses
+        };
+        for decoder in self.decoders.values_mut() {
+            let s = decoder.take_stats();
+            agg_stats.full_decodes += s.full_decodes;
+            agg_stats.range_decodes += s.range_decodes;
+            agg_stats.decoded_floats += s.decoded_floats;
+        }
+
+        let (eval_loss, eval_acc) = self.eval.eval(&self.global, &self.test_x, &self.test_y)?;
+        let mean_recon_mse = if recon_mses.is_empty() {
+            f32::NAN
+        } else {
+            recon_mses.iter().sum::<f32>() / recon_mses.len() as f32
+        };
+        sel_stats.resident = self.decoders.len();
+
+        for &cid in &active {
+            self.send_to(cid, &Message::RoundEnd { round: round as u32 });
+        }
+        self.round += 1;
+        Ok(RoundOutcome {
+            round,
+            train_losses,
+            eval_loss,
+            eval_acc,
+            mean_recon_mse,
+            bytes_up,
+            bytes_down,
+            stragglers: stats,
+            agg: agg_stats,
+            selection: sel_stats,
+        })
+    }
+}
+
+/// One activated worker: the training collaborator plus a private copy
+/// of the server-side decoder used to report reconstruction MSE
+/// (decompression is stateless, so both copies decode identically).
+struct ActiveWorker<'rt> {
+    collaborator: Collaborator<'rt>,
+    decoder: Box<dyn UpdateCompressor + 'rt>,
+}
+
+/// Build a worker's training state as the same pure function of
+/// `(seed, id)` the simulator's lazy activation uses; for the AE scheme
+/// this runs the pre-pass and ships the decoder (adding the frame bytes
+/// to `bytes_up`).
+#[allow(clippy::too_many_arguments)]
+fn activate_worker<'rt>(
+    rt: &'rt Runtime,
+    cfg: &ExperimentConfig,
+    pipeline: Option<&'rt AePipeline<'rt>>,
+    ae_init: Option<&Vec<f32>>,
+    init_params: &[f32],
+    model_n_params: usize,
+    factory: &ShardFactory,
+    id: usize,
+    transport: &mut dyn Transport,
+    bytes_up: &mut u64,
+) -> Result<ActiveWorker<'rt>> {
+    let shard: Dataset = factory.shard(id)?;
+    let (compressor, decoder): (Box<dyn UpdateCompressor + 'rt>, Box<dyn UpdateCompressor + 'rt>) =
+        match &cfg.compression {
+            CompressionConfig::Ae { ae } => {
+                let pipeline = pipeline.ok_or_else(|| {
+                    FedAeError::Config("AE compression requires an AePipeline".into())
+                })?;
+                let ae_init = ae_init.ok_or_else(|| {
+                    FedAeError::Config("AE compression requires the ae init".into())
+                })?;
+                let pp = run_prepass(
+                    rt,
+                    &cfg.model,
+                    pipeline,
+                    &shard,
+                    &cfg.prepass,
+                    &cfg.train,
+                    init_params,
+                    ae_init,
+                    cfg.seed.wrapping_add(id as u64),
+                )?;
+                let ship =
+                    Message::decoder_shipment(id as u32, ae.clone(), pp.dec_params.clone());
+                *bytes_up += transport.send(&ship)?;
+                (
+                    Box::new(AeCompressor::collaborator(pipeline, pp.enc_params)?)
+                        as Box<dyn UpdateCompressor + 'rt>,
+                    Box::new(AeCompressor::server(pipeline, pp.dec_params)?)
+                        as Box<dyn UpdateCompressor + 'rt>,
+                )
+            }
+            other => {
+                let seed = cfg.seed.wrapping_mul(31).wrapping_add(id as u64);
+                (
+                    crate::compression::from_config(other, model_n_params, seed)?,
+                    crate::compression::from_config(other, model_n_params, seed)?,
+                )
+            }
+        };
+    let collaborator = Collaborator::new(
+        rt,
+        &cfg.model,
+        id,
+        shard,
+        init_params.to_vec(),
+        compressor,
+        cfg.seed.wrapping_add(1000 + id as u64),
+    )?;
+    Ok(ActiveWorker {
+        collaborator,
+        decoder,
+    })
+}
+
+/// Accounting a worker hands back after a clean `Shutdown`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerReport {
+    /// Rounds this worker trained in and uploaded for.
+    pub rounds_participated: usize,
+    /// Data-plane bytes sent (updates + decoder shipment).
+    pub bytes_up: u64,
+    /// Idle heartbeats sent.
+    pub heartbeats_sent: u64,
+}
+
+/// The worker half of the protocol: `Hello`, then react to coordinator
+/// frames until `Shutdown` — ack each `RoundStart` with a heartbeat,
+/// activate lazily on first selection (AE pre-pass + decoder shipment),
+/// and answer each `GlobalModel` with local training, an
+/// [`Message::encoded_update`] and an [`Message::EvalReport`].
+/// Heartbeats are sent whenever the line goes idle for a third of
+/// `protocol.heartbeat_ms`.
+///
+/// Every seeded stream matches the simulator's per-client activation,
+/// so a federation of these workers reproduces the in-process run
+/// bitwise (see the module docs).
+pub fn run_worker<'rt>(
+    rt: &'rt Runtime,
+    cfg: &ExperimentConfig,
+    pipeline: Option<&'rt AePipeline<'rt>>,
+    id: usize,
+    transport: &mut dyn Transport,
+) -> Result<WorkerReport> {
+    cfg.validate(rt.manifest())?;
+    if id >= cfg.fl.collaborators {
+        return Err(FedAeError::Config(format!(
+            "worker id {id} out of range for {} collaborators",
+            cfg.fl.collaborators
+        )));
+    }
+    let model = rt.manifest().model(&cfg.model)?.clone();
+    let kind = match cfg.model.as_str() {
+        "mnist" => SynthKind::Mnist,
+        "cifar" => SynthKind::Cifar,
+        other => {
+            return Err(FedAeError::Config(format!(
+                "no synthetic data family for model `{other}`"
+            )))
+        }
+    };
+    let factory = ShardFactory::new(
+        kind,
+        cfg.data.sharding,
+        cfg.data.alpha,
+        cfg.data.per_collab,
+        cfg.seed,
+    );
+    let test = factory.test_set(cfg.data.test_size)?;
+    let eval = EvalStep::new(rt, &cfg.model)?;
+    let test_idx: Vec<usize> = (0..test.len()).collect();
+    let (test_x, test_y) = test.gather_batch(&test_idx, eval.batch);
+    let init_params = rt.load_init(&format!("{}_params", cfg.model))?;
+    let ae_init = match &cfg.compression {
+        CompressionConfig::Ae { ae } => {
+            let pipeline = pipeline.ok_or_else(|| {
+                FedAeError::Config("AE compression requires an AePipeline".into())
+            })?;
+            if &pipeline.tag != ae {
+                return Err(FedAeError::Config(format!(
+                    "pipeline is `{}`, config wants `{ae}`",
+                    pipeline.tag
+                )));
+            }
+            Some(rt.load_init(&format!("ae_{ae}_init"))?)
+        }
+        _ => None,
+    };
+
+    let mut report = WorkerReport::default();
+    transport.send(&Message::Hello {
+        collab_id: id as u32,
+        version: PROTOCOL_VERSION,
+    })?;
+    let tick = Duration::from_millis((cfg.protocol.heartbeat_ms / 3).max(10));
+    let mut state: Option<ActiveWorker<'rt>> = None;
+    loop {
+        match transport.recv_timeout(tick)? {
+            None => {
+                transport.send(&Message::Heartbeat {
+                    collab_id: id as u32,
+                })?;
+                report.heartbeats_sent += 1;
+            }
+            Some(Message::RoundStart { .. }) => {
+                // Ack first so the coordinator extends the silence
+                // allowance over the (possibly long) pre-pass.
+                transport.send(&Message::Heartbeat {
+                    collab_id: id as u32,
+                })?;
+                if state.is_none() {
+                    state = Some(activate_worker(
+                        rt,
+                        cfg,
+                        pipeline,
+                        ae_init.as_ref(),
+                        &init_params,
+                        model.n_params,
+                        &factory,
+                        id,
+                        transport,
+                        &mut report.bytes_up,
+                    )?);
+                }
+            }
+            Some(Message::GlobalModel { round, params }) => {
+                if state.is_none() {
+                    state = Some(activate_worker(
+                        rt,
+                        cfg,
+                        pipeline,
+                        ae_init.as_ref(),
+                        &init_params,
+                        model.n_params,
+                        &factory,
+                        id,
+                        transport,
+                        &mut report.bytes_up,
+                    )?);
+                }
+                let worker = state.as_mut().expect("activated above");
+                worker.collaborator.set_global(&params);
+                let train_loss = worker
+                    .collaborator
+                    .local_train(cfg.fl.local_epochs, &cfg.train)?;
+                let (loss, acc) = eval.eval(worker.collaborator.params(), &test_x, &test_y)?;
+                let update = worker.collaborator.compressed_update(round as usize)?;
+                let recon = worker.decoder.decompress(&update)?;
+                let recon_mse = tensor::mse(&recon, worker.collaborator.params()) as f32;
+                let msg = Message::encoded_update(
+                    round,
+                    id as u32,
+                    worker.collaborator.n_samples() as u32,
+                    update.to_bytes(),
+                );
+                report.bytes_up += transport.send(&msg)?;
+                transport.send(&Message::EvalReport {
+                    round,
+                    collab_id: id as u32,
+                    train_loss,
+                    loss,
+                    acc,
+                    recon_mse,
+                })?;
+                report.rounds_participated += 1;
+            }
+            Some(Message::RoundEnd { .. }) => {}
+            Some(Message::Reject { reason }) => {
+                return Err(FedAeError::Protocol(format!(
+                    "rejected by coordinator: {reason}"
+                )));
+            }
+            Some(Message::Shutdown) => break,
+            Some(_) => {}
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "mnist".into();
+        cfg.fl.collaborators = 2;
+        cfg.fl.rounds = 1;
+        cfg.fl.local_epochs = 1;
+        cfg.data.per_collab = 32;
+        cfg.data.test_size = 32;
+        cfg.compression = CompressionConfig::Identity;
+        cfg
+    }
+
+    #[test]
+    fn starts_in_standby() {
+        let rt = Runtime::native().unwrap();
+        let server = ProtocolServer::new(&rt, tiny_cfg(), None).unwrap();
+        assert_eq!(server.state(), CoordinatorState::Standby);
+        assert_eq!(format!("{}", server.state()), "STANDBY");
+        assert_eq!(format!("{}", CoordinatorState::Round(3)), "ROUND(3)");
+        assert_eq!(format!("{}", CoordinatorState::Finished), "FINISHED");
+    }
+
+    #[test]
+    fn rejects_async_mode_and_checkpointing() {
+        let rt = Runtime::native().unwrap();
+        let mut cfg = tiny_cfg();
+        cfg.engine.mode = EngineMode::Async;
+        cfg.engine.deadline_ms = 100.0;
+        let err = ProtocolServer::new(&rt, cfg, None).unwrap_err();
+        assert!(err.to_string().contains("sync"), "got: {err}");
+
+        let mut cfg = tiny_cfg();
+        cfg.checkpoint.dir = "/tmp/nope".into();
+        let err = ProtocolServer::new(&rt, cfg, None).unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "got: {err}");
+    }
+
+    #[test]
+    fn rendezvous_times_out_without_workers() {
+        let rt = Runtime::native().unwrap();
+        let mut cfg = tiny_cfg();
+        cfg.protocol.round_timeout_ms = 50;
+        let mut server = ProtocolServer::new(&rt, cfg, None).unwrap();
+        let mut source = StaticEndpoints::new(Vec::new());
+        let err = server.run(&mut source).unwrap_err();
+        assert!(
+            err.to_string().contains("rendezvous timed out"),
+            "got: {err}"
+        );
+    }
+}

@@ -5,14 +5,16 @@
 //! * `prepass`  — run only the pre-pass round and report AE training curves.
 //! * `savings`  — evaluate the paper's Eq. 4–6 savings model (Figs 10/11).
 //! * `inspect`  — print manifest / artifact info.
-//! * `serve` / `worker` — TCP leader/worker deployment of the same protocol.
+//! * `serve` / `worker` — the same full pipeline as a multi-process TCP
+//!   federation (message-driven coordinator, bitwise parity with `train`).
 //!
 //! Examples:
 //! ```text
 //! fedae train --model mnist --compression ae --rounds 10
 //! fedae savings --rounds 100 --max-collabs 2000
-//! fedae serve --port 7070 --collabs 2 &
-//! fedae worker --connect 127.0.0.1:7070 --id 0
+//! fedae serve --port 7070 --compression ae --collabs 2 --rounds 3 &
+//! fedae worker --connect 127.0.0.1:7070 --id 0 --compression ae --collabs 2 --rounds 3 &
+//! fedae worker --connect 127.0.0.1:7070 --id 1 --compression ae --collabs 2 --rounds 3
 //! ```
 
 use fedae::backend::Kernel;
@@ -54,8 +56,9 @@ fn main() -> Result<()> {
                  prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N] [--kernel naive|tiled]\n\
                  savings  [--rounds N] [--max-collabs N] [--mnist]\n\
                  inspect  [--artifacts DIR]\n\
-                 serve    --port P --collabs N [--rounds N]\n\
-                 worker   --connect HOST:PORT --id K"
+                 serve    --port P [any train flags] [--min-participants N (0 = all collabs)]\n\
+                 \u{20}        [--heartbeat-ms N] [--round-timeout-ms N] [--max-frame-bytes N]\n\
+                 worker   --connect HOST:PORT --id K [same config flags as the coordinator]"
             );
             std::process::exit(2);
         }
@@ -146,6 +149,13 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     cfg.selection.slack = args.get_usize("select-slack", cfg.selection.slack)?;
     cfg.selection.max_resident = args.get_usize("max-resident", cfg.selection.max_resident)?;
     cfg.selection.strata = args.get_usize("strata", cfg.selection.strata)?;
+    cfg.protocol.min_participants =
+        args.get_usize("min-participants", cfg.protocol.min_participants)?;
+    cfg.protocol.heartbeat_ms = args.get_u64("heartbeat-ms", cfg.protocol.heartbeat_ms)?;
+    cfg.protocol.round_timeout_ms =
+        args.get_u64("round-timeout-ms", cfg.protocol.round_timeout_ms)?;
+    cfg.protocol.max_frame_bytes =
+        args.get_usize("max-frame-bytes", cfg.protocol.max_frame_bytes)?;
     if let Some(dir) = args.get("checkpoint-dir") {
         cfg.checkpoint.dir = dir.to_string();
     }
@@ -447,138 +457,104 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// TCP leader/worker mode
+// Multi-process protocol mode (full pipeline over TCP)
 // ---------------------------------------------------------------------------
 
-/// Leader: accept N workers, run FedAvg rounds over TCP using the same
-/// wire protocol the simulator meters.
+/// Coordinator: run the full federated pipeline — any compression
+/// scheme (AE latents + decoder shipment included), any aggregator,
+/// seeded selection — over real TCP sockets via the message-driven
+/// [`fedae::coordinator::ProtocolServer`]. On the same config this
+/// produces bitwise-identical final params and ledger byte totals to
+/// `fedae train` (the in-process simulator).
 fn fedae_serve(args: &Args) -> Result<()> {
-    use fedae::aggregation::{Aggregator, FedAvg, WeightedUpdate};
-    use fedae::transport::{Message, TcpTransport};
+    use fedae::coordinator::{ProtocolServer, TcpAcceptor};
 
-    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let cfg = config_from_args(args)?;
     let port = args.get_usize("port", 7070)?;
-    let n_workers = args.get_usize("collabs", 2)?;
-    let rounds = args.get_usize("rounds", 5)?;
-    let model = args.get_or("model", "mnist").to_string();
-    let mut global = rt.load_init(&format!("{model}_params"))?;
-
-    let listener = std::net::TcpListener::bind(("0.0.0.0", port as u16))?;
-    println!("leader: waiting for {n_workers} workers on :{port}");
-    let mut workers = Vec::new();
-    while workers.len() < n_workers {
-        let (stream, addr) = listener.accept()?;
-        let mut t = TcpTransport::new(stream);
-        match t.recv()? {
-            Message::Hello { collab_id, .. } => {
-                println!("worker {collab_id} joined from {addr}");
-                workers.push((collab_id as usize, t));
-            }
-            m => return Err(format!("expected Hello, got {m:?}").into()),
+    let rt = Runtime::builder()
+        .artifacts_dir(artifacts_dir(args))
+        .kernel(cfg.backend.kernel)
+        .build()?;
+    let pipeline;
+    let pipe_ref = match &cfg.compression {
+        CompressionConfig::Ae { ae } => {
+            pipeline = AePipeline::new(&rt, ae)?;
+            Some(&pipeline)
         }
+        _ => None,
+    };
+    let mut acceptor = TcpAcceptor::bind(("0.0.0.0", port as u16), cfg.protocol.max_frame_bytes)?;
+    println!(
+        "coordinator: model={} compression={} rounds={} collabs={} min_participants={} on :{port}",
+        cfg.model,
+        cfg.compression.kind_name(),
+        cfg.fl.rounds,
+        cfg.fl.collaborators,
+        cfg.protocol.resolve_min_participants(cfg.fl.collaborators),
+    );
+    let mut server = ProtocolServer::new(&rt, cfg, pipe_ref)?;
+    let report = server.run(&mut acceptor)?;
+    for out in &report.outcomes {
+        println!(
+            "round {:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e} admitted={}",
+            out.round,
+            out.eval_loss,
+            out.eval_acc,
+            out.bytes_up,
+            out.bytes_down,
+            out.mean_recon_mse,
+            out.stragglers.admitted,
+        );
     }
-
-    let mut agg = FedAvg;
-    for round in 0..rounds {
-        for (_, t) in workers.iter_mut() {
-            t.send(&Message::GlobalModel {
-                round: round as u32,
-                params: global.clone(),
-            })?;
-        }
-        let mut updates = Vec::new();
-        for (wid, t) in workers.iter_mut() {
-            match t.recv()? {
-                Message::EncodedUpdate {
-                    round: r,
-                    n_samples,
-                    payload,
-                    ..
-                } if r as usize == round => {
-                    let u = fedae::compression::CompressedUpdate::from_bytes(&payload)?;
-                    let values = match u {
-                        fedae::compression::CompressedUpdate::Raw { values } => values,
-                        other => {
-                            return Err(format!(
-                                "leader expects raw updates in TCP demo, got {other:?}"
-                            )
-                            .into())
-                        }
-                    };
-                    updates.push(WeightedUpdate {
-                        weight: n_samples as f64,
-                        values,
-                    });
-                }
-                m => return Err(format!("worker {wid}: unexpected {m:?}").into()),
-            }
-        }
-        global = agg.aggregate(&updates)?;
-        println!("round {round}: aggregated {} updates", updates.len());
+    for (round, cid) in &report.evictions {
+        println!("evicted: collaborator {cid} in round {round}");
     }
-    for (_, t) in workers.iter_mut() {
-        t.send(&Message::Shutdown)?;
-    }
-    println!("leader done");
+    let totals = &report.ledger_totals;
+    println!(
+        "done: state={} total_bytes={} update_uploads={} dedup_hits={} rejected_frames={}",
+        server.state(),
+        totals.total_bytes,
+        totals.update_up_count,
+        report.dedup_hits,
+        report.rejected_frames,
+    );
     Ok(())
 }
 
-/// Worker: connect, train locally each round, send raw updates.
+/// Worker: connect to the coordinator and run the full collaborator
+/// loop — lazy activation (AE pre-pass + decoder shipment on first
+/// selection), local training, compressed uploads, eval reports, and
+/// idle heartbeats — until the coordinator sends `Shutdown`. The config
+/// flags must match the coordinator's.
 fn fedae_worker(args: &Args) -> Result<()> {
-    use fedae::transport::{Message, TcpTransport, PROTOCOL_VERSION};
+    use fedae::coordinator::run_worker;
+    use fedae::transport::TcpTransport;
 
-    let rt = Runtime::from_dir(artifacts_dir(args))?;
+    let cfg = config_from_args(args)?;
     let addr = args
         .get("connect")
         .ok_or("worker needs --connect HOST:PORT")?;
     let id = args.get_usize("id", 0)?;
-    let model = args.get_or("model", "mnist").to_string();
-    let kind = if model == "mnist" {
-        fedae::data::SynthKind::Mnist
-    } else {
-        fedae::data::SynthKind::Cifar
-    };
-    let (shards, _) = fedae::data::make_shards(
-        kind,
-        fedae::config::Sharding::Iid,
-        0.5,
-        id + 1,
-        args.get_usize("per-collab", 1024)?,
-        16,
-        args.get_u64("seed", 1)?,
-    )?;
-    let shard = shards.into_iter().last().unwrap();
-    let train = fedae::runtime::TrainStep::new(&rt, &model)?;
-    let mut batches = fedae::data::BatchIter::new(shard.len(), train.batch, id as u64);
-    let mut t = TcpTransport::connect(addr)?;
-    t.send(&Message::Hello {
-        collab_id: id as u32,
-        version: PROTOCOL_VERSION,
-    })?;
-    loop {
-        match t.recv()? {
-            Message::GlobalModel { round, params } => {
-                let mut p = params;
-                for _ in 0..batches.batches_per_epoch() {
-                    let idx = batches.next_batch();
-                    let (x, y) = shard.gather_batch(&idx, train.batch);
-                    let (np, _) = train.step(&p, &x, &y, 0.05)?;
-                    p = np;
-                }
-                let update = fedae::compression::CompressedUpdate::Raw { values: p };
-                t.send(&Message::EncodedUpdate {
-                    round,
-                    collab_id: id as u32,
-                    n_samples: shard.len() as u32,
-                    payload: update.to_bytes(),
-                })?;
-                println!("worker {id}: round {round} done");
-            }
-            Message::Shutdown => {
-                println!("worker {id}: shutdown");
-                return Ok(());
-            }
-            m => return Err(format!("worker: unexpected {m:?}").into()),
+    let rt = Runtime::builder()
+        .artifacts_dir(artifacts_dir(args))
+        .kernel(cfg.backend.kernel)
+        .build()?;
+    let pipeline;
+    let pipe_ref = match &cfg.compression {
+        CompressionConfig::Ae { ae } => {
+            pipeline = AePipeline::new(&rt, ae)?;
+            Some(&pipeline)
         }
-    }
+        _ => None,
+    };
+    let mut transport = TcpTransport::connect(addr)?;
+    transport.set_max_frame(cfg.protocol.max_frame_bytes);
+    transport.set_write_timeout(Some(std::time::Duration::from_secs(30)))?;
+    println!("worker {id}: connected to {addr}");
+    let report = run_worker(&rt, &cfg, pipe_ref, id, &mut transport)?;
+    println!(
+        "worker {id}: shutdown after {} rounds ({} data bytes up, {} heartbeats)",
+        report.rounds_participated, report.bytes_up, report.heartbeats_sent,
+    );
+    Ok(())
 }

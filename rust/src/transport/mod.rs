@@ -1,20 +1,33 @@
 //! Wire protocol: framed messages between collaborators and the aggregator.
 //!
-//! Frame layout (little-endian): `[u32 payload_len][u16 kind][payload]`.
+//! Frame layout v2 (little-endian): `[u32 payload_len][u16 kind][payload]`.
 //! The byte counts fed into the [`crate::network::TrafficLedger`] are real
 //! frame lengths from this module — the compression ratios reported in
 //! EXPERIMENTS.md (the paper's Eq. 4 savings ratio and the §5 headline
 //! 500x/1720x numbers) are measured on-wire, not analytic.
 //!
-//! The message set mirrors the paper's protocol: `GlobalModel` is the
-//! Fig 3 broadcast, `EncodedUpdate` carries the AE latent uplink, and
-//! `DecoderShipment` is the one-time Eq. 5 cost paid at the end of the
-//! pre-pass round (Fig 2).
+//! The message set mirrors the paper's protocol plus the coordinator
+//! state machine's control plane ([`crate::coordinator::protocol`]):
+//! `GlobalModel` is the Fig 3 broadcast, `EncodedUpdate` carries the AE
+//! latent uplink, `DecoderShipment` is the one-time Eq. 5 cost paid at
+//! the end of the pre-pass round (Fig 2), and `Heartbeat` /
+//! `RoundStart` / `RoundEnd` / `Reject` drive rendezvous, liveness
+//! tracking and round transitions.
 //!
-//! Two transports implement the same protocol:
-//! * [`InProcChannel`] — mpsc pairs for the single-process simulator.
-//! * [`TcpTransport`] — std::net TCP for the leader/worker deployment mode
-//!   (`fedae serve` / `fedae worker`).
+//! Data-plane frames (`EncodedUpdate`, `DecoderShipment`) carry an
+//! FNV-1a content hash (plus, for updates, the compression scheme tag):
+//! receivers verify the hash before decoding and use `(round, sender,
+//! hash)` to dedup replayed uploads. See ARCHITECTURE.md §Coordinator
+//! protocol & transports for the full frame table.
+//!
+//! Two transports implement the same protocol behind the [`Transport`]
+//! trait:
+//! * [`InProcChannel`] — mpsc pairs for the single-process simulator and
+//!   deterministic tests.
+//! * [`TcpTransport`] — std::net TCP for the leader/worker deployment
+//!   mode (`fedae serve` / `fedae worker`), hardened with read/write
+//!   timeouts, a max-frame-size guard, and incremental reads that never
+//!   allocate an attacker-declared length up front.
 //!
 //! [`Message`] construction/serialization is pure and the types are
 //! `Send`, so parallel round workers build and meter their own frames;
@@ -23,12 +36,121 @@
 
 use std::io::{Read, Write};
 use std::sync::mpsc;
+use std::time::Duration;
 
 use crate::error::{FedAeError, Result};
 use crate::tensor::{bytes_to_f32s, f32s_to_bytes};
 
-/// Protocol version; bump on wire-format changes.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// Protocol version; bump on wire-format changes. v2 added content
+/// hashes + the scheme tag on data-plane frames and the control-plane
+/// messages (`Heartbeat`, `RoundStart`, `RoundEnd`, `Reject`).
+pub const PROTOCOL_VERSION: u16 = 2;
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit content hash over a byte slice — the integrity/dedup
+/// hash carried by [`Message::EncodedUpdate`] frames.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a 64-bit hash over the little-endian bytes of an f32 slice —
+/// the hash carried by [`Message::DecoderShipment`] frames (computed
+/// without materializing the byte buffer).
+pub fn fnv1a64_f32s(values: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for v in values {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Typed rejection reason carried by [`Message::Reject`] (wire: a u16
+/// code plus two u32 operands).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// `Hello` carried a different [`PROTOCOL_VERSION`].
+    VersionMismatch {
+        /// The version the peer announced.
+        got: u16,
+        /// The version this endpoint speaks.
+        want: u16,
+    },
+    /// Another live connection already holds this collaborator id.
+    DuplicateCollaborator {
+        /// The contested collaborator id.
+        collab_id: u32,
+    },
+    /// A data-plane frame's content hash did not match its payload.
+    HashMismatch {
+        /// The sender whose frame failed verification.
+        collab_id: u32,
+    },
+    /// A message arrived from a collaborator id outside the registered
+    /// population.
+    UnknownCollaborator {
+        /// The unknown collaborator id.
+        collab_id: u32,
+    },
+}
+
+impl RejectReason {
+    fn encode(&self) -> (u16, u32, u32) {
+        match *self {
+            RejectReason::VersionMismatch { got, want } => (1, got as u32, want as u32),
+            RejectReason::DuplicateCollaborator { collab_id } => (2, collab_id, 0),
+            RejectReason::HashMismatch { collab_id } => (3, collab_id, 0),
+            RejectReason::UnknownCollaborator { collab_id } => (4, collab_id, 0),
+        }
+    }
+
+    fn decode(code: u16, a: u32, b: u32) -> Result<RejectReason> {
+        Ok(match code {
+            1 => RejectReason::VersionMismatch {
+                got: a as u16,
+                want: b as u16,
+            },
+            2 => RejectReason::DuplicateCollaborator { collab_id: a },
+            3 => RejectReason::HashMismatch { collab_id: a },
+            4 => RejectReason::UnknownCollaborator { collab_id: a },
+            other => {
+                return Err(FedAeError::Protocol(format!(
+                    "unknown reject reason code {other}"
+                )))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::VersionMismatch { got, want } => {
+                write!(f, "protocol version mismatch: peer speaks v{got}, server v{want}")
+            }
+            RejectReason::DuplicateCollaborator { collab_id } => {
+                write!(f, "collaborator {collab_id} already connected")
+            }
+            RejectReason::HashMismatch { collab_id } => {
+                write!(f, "content hash mismatch from collaborator {collab_id}")
+            }
+            RejectReason::UnknownCollaborator { collab_id } => {
+                write!(f, "unknown collaborator {collab_id}")
+            }
+        }
+    }
+}
 
 /// All protocol messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -53,6 +175,9 @@ pub enum Message {
         collab_id: u32,
         /// Manifest tag of the AE the decoder belongs to.
         ae_tag: String,
+        /// FNV-1a hash of `dec_params`' little-endian bytes
+        /// ([`fnv1a64_f32s`]); verified on receipt.
+        hash: u64,
         /// The decoder half's parameters.
         dec_params: Vec<f32>,
     },
@@ -65,25 +190,123 @@ pub enum Message {
         collab_id: u32,
         /// Local sample count (the FedAvg aggregation weight).
         n_samples: u32,
+        /// The [`crate::compression::CompressedUpdate`] scheme tag
+        /// (`payload`'s leading byte), self-describing on the wire.
+        scheme: u8,
+        /// FNV-1a content hash of `payload` ([`fnv1a64`]); verified on
+        /// receipt and used to dedup replayed uploads.
+        hash: u64,
         /// Serialized [`crate::compression::CompressedUpdate`].
         payload: Vec<u8>,
     },
-    /// Collaborator -> server: local evaluation metrics.
+    /// Collaborator -> server: local round metrics.
     EvalReport {
         /// Round the metrics belong to.
         round: u32,
         /// Sender's collaborator id.
         collab_id: u32,
-        /// Local eval loss.
+        /// Mean local training loss over the round's local epochs.
+        train_loss: f32,
+        /// Local eval loss on the shared test set.
         loss: f32,
-        /// Local eval accuracy.
+        /// Local eval accuracy on the shared test set.
         acc: f32,
+        /// Reconstruction MSE of the sender's own update through its
+        /// decoder copy (NaN when not measured).
+        recon_mse: f32,
     },
     /// Server -> collaborator: end of experiment.
     Shutdown,
+    /// Collaborator -> server: liveness signal while idle (not
+    /// selected, or waiting out another collaborator's pre-pass).
+    Heartbeat {
+        /// Sender's collaborator id.
+        collab_id: u32,
+    },
+    /// Server -> collaborator: the collaborator was selected for
+    /// `round`; run the pre-pass if it has not shipped a decoder yet and
+    /// await the round's `GlobalModel`.
+    RoundStart {
+        /// The opening round.
+        round: u32,
+    },
+    /// Server -> collaborator: `round` closed (aggregation done).
+    RoundEnd {
+        /// The closed round.
+        round: u32,
+    },
+    /// Server -> collaborator: the connection or a frame was refused.
+    Reject {
+        /// Why the server refused.
+        reason: RejectReason,
+    },
 }
 
 impl Message {
+    /// Build an [`Message::EncodedUpdate`], deriving the scheme tag from
+    /// the payload's leading byte and the content hash with [`fnv1a64`]
+    /// — the one construction path shared by the simulator and the
+    /// protocol endpoints, so both produce bit-identical frames.
+    pub fn encoded_update(round: u32, collab_id: u32, n_samples: u32, payload: Vec<u8>) -> Message {
+        Message::EncodedUpdate {
+            round,
+            collab_id,
+            n_samples,
+            scheme: payload.first().copied().unwrap_or(u8::MAX),
+            hash: fnv1a64(&payload),
+            payload,
+        }
+    }
+
+    /// Build a [`Message::DecoderShipment`], deriving the content hash
+    /// with [`fnv1a64_f32s`].
+    pub fn decoder_shipment(collab_id: u32, ae_tag: String, dec_params: Vec<f32>) -> Message {
+        Message::DecoderShipment {
+            collab_id,
+            ae_tag,
+            hash: fnv1a64_f32s(&dec_params),
+            dec_params,
+        }
+    }
+
+    /// Verify the content hash of a data-plane frame against its
+    /// payload. `Ok(())` for message kinds that carry no hash.
+    pub fn verify_hash(&self) -> Result<()> {
+        match self {
+            Message::EncodedUpdate {
+                collab_id,
+                hash,
+                payload,
+                ..
+            } => {
+                let actual = fnv1a64(payload);
+                if actual != *hash {
+                    return Err(FedAeError::Protocol(format!(
+                        "content hash mismatch on update from collaborator {collab_id}: \
+                         frame says {hash:#018x}, payload hashes to {actual:#018x}"
+                    )));
+                }
+                Ok(())
+            }
+            Message::DecoderShipment {
+                collab_id,
+                hash,
+                dec_params,
+                ..
+            } => {
+                let actual = fnv1a64_f32s(dec_params);
+                if actual != *hash {
+                    return Err(FedAeError::Protocol(format!(
+                        "content hash mismatch on decoder shipment from collaborator \
+                         {collab_id}: frame says {hash:#018x}, params hash to {actual:#018x}"
+                    )));
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
     fn kind(&self) -> u16 {
         match self {
             Message::Hello { .. } => 1,
@@ -92,6 +315,10 @@ impl Message {
             Message::EncodedUpdate { .. } => 4,
             Message::EvalReport { .. } => 5,
             Message::Shutdown => 6,
+            Message::Heartbeat { .. } => 7,
+            Message::RoundStart { .. } => 8,
+            Message::RoundEnd { .. } => 9,
+            Message::Reject { .. } => 10,
         }
     }
 
@@ -111,10 +338,12 @@ impl Message {
             Message::DecoderShipment {
                 collab_id,
                 ae_tag,
+                hash,
                 dec_params,
             } => {
                 put_u32(&mut payload, *collab_id);
                 put_str(&mut payload, ae_tag);
+                put_u64(&mut payload, *hash);
                 put_u32(&mut payload, dec_params.len() as u32);
                 payload.extend_from_slice(&f32s_to_bytes(dec_params));
             }
@@ -122,26 +351,49 @@ impl Message {
                 round,
                 collab_id,
                 n_samples,
+                scheme,
+                hash,
                 payload: p,
             } => {
                 put_u32(&mut payload, *round);
                 put_u32(&mut payload, *collab_id);
                 put_u32(&mut payload, *n_samples);
+                payload.push(*scheme);
+                put_u64(&mut payload, *hash);
                 put_u32(&mut payload, p.len() as u32);
                 payload.extend_from_slice(p);
             }
             Message::EvalReport {
                 round,
                 collab_id,
+                train_loss,
                 loss,
                 acc,
+                recon_mse,
             } => {
                 put_u32(&mut payload, *round);
                 put_u32(&mut payload, *collab_id);
+                payload.extend_from_slice(&train_loss.to_le_bytes());
                 payload.extend_from_slice(&loss.to_le_bytes());
                 payload.extend_from_slice(&acc.to_le_bytes());
+                payload.extend_from_slice(&recon_mse.to_le_bytes());
             }
             Message::Shutdown => {}
+            Message::Heartbeat { collab_id } => {
+                put_u32(&mut payload, *collab_id);
+            }
+            Message::RoundStart { round } => {
+                put_u32(&mut payload, *round);
+            }
+            Message::RoundEnd { round } => {
+                put_u32(&mut payload, *round);
+            }
+            Message::Reject { reason } => {
+                let (code, a, b) = reason.encode();
+                put_u16(&mut payload, code);
+                put_u32(&mut payload, a);
+                put_u32(&mut payload, b);
+            }
         }
         let mut frame = Vec::with_capacity(6 + payload.len());
         put_u32(&mut frame, payload.len() as u32);
@@ -159,10 +411,14 @@ impl Message {
             Message::GlobalModel { params, .. } => 8 + 4 * params.len(),
             Message::DecoderShipment {
                 ae_tag, dec_params, ..
-            } => 12 + ae_tag.len() + 4 * dec_params.len(),
-            Message::EncodedUpdate { payload, .. } => 16 + payload.len(),
-            Message::EvalReport { .. } => 16,
+            } => 20 + ae_tag.len() + 4 * dec_params.len(),
+            Message::EncodedUpdate { payload, .. } => 25 + payload.len(),
+            Message::EvalReport { .. } => 24,
             Message::Shutdown => 0,
+            Message::Heartbeat { .. } => 4,
+            Message::RoundStart { .. } => 4,
+            Message::RoundEnd { .. } => 4,
+            Message::Reject { .. } => 10,
         };
         6 + payload as u64
     }
@@ -198,10 +454,12 @@ impl Message {
             3 => {
                 let collab_id = cur.u32()?;
                 let ae_tag = cur.str()?;
+                let hash = cur.u64()?;
                 let n = cur.u32()? as usize;
                 Message::DecoderShipment {
                     collab_id,
                     ae_tag,
+                    hash,
                     dec_params: cur.f32s(n)?,
                 }
             }
@@ -209,21 +467,40 @@ impl Message {
                 let round = cur.u32()?;
                 let collab_id = cur.u32()?;
                 let n_samples = cur.u32()?;
+                let scheme = cur.u8()?;
+                let hash = cur.u64()?;
                 let n = cur.u32()? as usize;
                 Message::EncodedUpdate {
                     round,
                     collab_id,
                     n_samples,
+                    scheme,
+                    hash,
                     payload: cur.bytes(n)?.to_vec(),
                 }
             }
             5 => Message::EvalReport {
                 round: cur.u32()?,
                 collab_id: cur.u32()?,
+                train_loss: cur.f32()?,
                 loss: cur.f32()?,
                 acc: cur.f32()?,
+                recon_mse: cur.f32()?,
             },
             6 => Message::Shutdown,
+            7 => Message::Heartbeat {
+                collab_id: cur.u32()?,
+            },
+            8 => Message::RoundStart { round: cur.u32()? },
+            9 => Message::RoundEnd { round: cur.u32()? },
+            10 => {
+                let code = cur.u16()?;
+                let a = cur.u32()?;
+                let b = cur.u32()?;
+                Message::Reject {
+                    reason: RejectReason::decode(code, a, b)?,
+                }
+            }
             other => {
                 return Err(FedAeError::Protocol(format!(
                     "unknown message kind {other}"
@@ -249,6 +526,10 @@ fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
 fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_u32(buf, s.len() as u32);
     buf.extend_from_slice(s.as_bytes());
@@ -261,16 +542,25 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // checked_add: a malicious length near usize::MAX must not wrap
+        // the bounds check into a panic-free out-of-range slice.
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            FedAeError::Protocol(format!("frame length overflow: {n} bytes at {}", self.pos))
+        })?;
+        if end > self.buf.len() {
             return Err(FedAeError::Protocol(format!(
                 "truncated frame: wanted {n} bytes at {}, have {}",
                 self.pos,
                 self.buf.len()
             )));
         }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
         Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
     }
 
     fn u16(&mut self) -> Result<u16> {
@@ -283,13 +573,22 @@ impl<'a> Cursor<'a> {
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte read")))
+    }
+
     fn f32(&mut self) -> Result<f32> {
         let b = self.bytes(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        bytes_to_f32s(self.bytes(n * 4)?)
+        // Guard n*4 against overflow before the byte read sizes it.
+        let total = n.checked_mul(4).ok_or_else(|| {
+            FedAeError::Protocol(format!("f32 count overflow: {n} values"))
+        })?;
+        bytes_to_f32s(self.bytes(total)?)
     }
 
     fn str(&mut self) -> Result<String> {
@@ -303,6 +602,27 @@ impl<'a> Cursor<'a> {
 // ---------------------------------------------------------------------------
 // Transports
 // ---------------------------------------------------------------------------
+
+/// One protocol endpoint: framed message exchange with a single peer.
+///
+/// Implemented by [`InProcChannel`] (deterministic, in-memory) and
+/// [`TcpTransport`] (sockets); [`crate::coordinator::protocol`] drives
+/// rounds purely through this trait, so the state machine is
+/// transport-agnostic and the bitwise parity suite can pin TCP against
+/// in-proc behavior.
+pub trait Transport: Send {
+    /// Send one message; returns its on-wire frame length (for the
+    /// ledger).
+    fn send(&mut self, msg: &Message) -> Result<u64>;
+
+    /// Blocking receive of one message.
+    fn recv(&mut self) -> Result<Message>;
+
+    /// Receive with a timeout: `Ok(None)` when no complete message
+    /// arrived within `timeout` (any partial frame stays buffered), an
+    /// error on disconnect or a malformed frame.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>>;
+}
 
 /// Bidirectional in-process message channel (one endpoint).
 #[derive(Debug)]
@@ -344,17 +664,63 @@ impl InProcChannel {
     }
 }
 
-/// TCP transport: blocking framed reads/writes over a socket.
+impl Transport for InProcChannel {
+    fn send(&mut self, msg: &Message) -> Result<u64> {
+        InProcChannel::send(self, msg.clone())?;
+        Ok(msg.wire_bytes())
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        InProcChannel::recv(self)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(FedAeError::Protocol("peer hung up".into()))
+            }
+        }
+    }
+}
+
+/// Default per-connection frame-size ceiling (64 MiB) — see
+/// [`crate::config::ProtocolConfig::max_frame_bytes`].
+pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+
+/// Incremental read chunk: received frames grow by at most this much
+/// per read, so a lying `payload_len` header can never make the
+/// receiver allocate the declared length up front.
+const READ_CHUNK: usize = 64 << 10;
+
+/// TCP transport: framed reads/writes over a socket, hardened for
+/// untrusted peers — a max-frame-size guard, incremental reads that
+/// allocate only for bytes actually received, and timeout-aware receive
+/// (partial frames stay buffered across [`Transport::recv_timeout`]
+/// calls).
 #[derive(Debug)]
 pub struct TcpTransport {
     stream: std::net::TcpStream,
+    max_frame: usize,
+    /// In-progress frame bytes (header first); survives a receive
+    /// timeout so slow frames assemble across calls.
+    partial: Vec<u8>,
+    /// Total frame length once the 6-byte header has been parsed.
+    need: Option<usize>,
 }
 
 impl TcpTransport {
-    /// Wrap an accepted/connected stream (enables TCP_NODELAY).
+    /// Wrap an accepted/connected stream (enables TCP_NODELAY, default
+    /// frame ceiling).
     pub fn new(stream: std::net::TcpStream) -> TcpTransport {
         stream.set_nodelay(true).ok();
-        TcpTransport { stream }
+        TcpTransport {
+            stream,
+            max_frame: DEFAULT_MAX_FRAME,
+            partial: Vec::new(),
+            need: None,
+        }
     }
 
     /// Connect to a listening leader at `addr`.
@@ -362,26 +728,134 @@ impl TcpTransport {
         Ok(TcpTransport::new(std::net::TcpStream::connect(addr)?))
     }
 
+    /// Override the frame-size ceiling (`protocol.max_frame_bytes`).
+    pub fn set_max_frame(&mut self, max_frame: usize) {
+        self.max_frame = max_frame.max(6);
+    }
+
+    /// The active frame-size ceiling.
+    pub fn max_frame(&self) -> usize {
+        self.max_frame
+    }
+
+    /// Set the socket write timeout (`None` blocks indefinitely).
+    pub fn set_write_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        Ok(self.stream.set_write_timeout(timeout)?)
+    }
+
+    /// Absorb freshly read bytes into the partial frame, parsing the
+    /// header as soon as it is complete and enforcing the frame
+    /// ceiling. Returns a message when the frame completed.
+    fn absorb(&mut self, bytes: &[u8]) -> Result<Option<Message>> {
+        self.partial.extend_from_slice(bytes);
+        if self.need.is_none() && self.partial.len() >= 6 {
+            let len = u32::from_le_bytes([
+                self.partial[0],
+                self.partial[1],
+                self.partial[2],
+                self.partial[3],
+            ]) as usize;
+            let total = len.checked_add(6).ok_or_else(|| {
+                FedAeError::Protocol(format!("frame length overflow: {len}"))
+            })?;
+            if total > self.max_frame {
+                return Err(FedAeError::Protocol(format!(
+                    "frame too large: {total} bytes (max {})",
+                    self.max_frame
+                )));
+            }
+            self.need = Some(total);
+        }
+        if let Some(total) = self.need {
+            if self.partial.len() >= total {
+                if self.partial.len() > total {
+                    // A peer that pipelines frames would land here; the
+                    // protocol is strictly request/response per frame,
+                    // so treat it as a framing violation rather than
+                    // buffering ahead.
+                    return Err(FedAeError::Protocol(format!(
+                        "bytes beyond frame boundary: got {}, frame is {total}",
+                        self.partial.len()
+                    )));
+                }
+                let frame = std::mem::take(&mut self.partial);
+                self.need = None;
+                return Ok(Some(Message::from_frame(&frame)?));
+            }
+        }
+        Ok(None)
+    }
+
+    /// One bounded read into the partial frame. `Ok(Some)` on frame
+    /// completion, `Ok(None)` when more bytes are needed or the read
+    /// timed out (`timed_out` is set in that case).
+    fn pump(&mut self, timed_out: &mut bool) -> Result<Option<Message>> {
+        let mut buf = [0u8; READ_CHUNK];
+        // Never read past the current frame's end once the header is
+        // known — the next frame must start on a fresh buffer.
+        let want = match self.need {
+            Some(total) => (total - self.partial.len()).min(buf.len()),
+            None => {
+                debug_assert!(self.partial.len() < 6);
+                6 - self.partial.len()
+            }
+        };
+        match self.stream.read(&mut buf[..want]) {
+            Ok(0) => Err(FedAeError::Protocol(if self.partial.is_empty() {
+                "peer closed the connection".into()
+            } else {
+                format!(
+                    "peer closed mid-frame ({} of {} bytes)",
+                    self.partial.len(),
+                    self.need.map(|t| t.to_string()).unwrap_or_else(|| "?".into())
+                )
+            })),
+            Ok(n) => self.absorb(&buf[..n].to_vec()),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                *timed_out = true;
+                Ok(None)
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
     /// Write one message; returns bytes written (for the ledger).
-    pub fn send(&mut self, msg: &Message) -> Result<u64> {
+    fn send(&mut self, msg: &Message) -> Result<u64> {
         let frame = msg.to_frame();
         self.stream.write_all(&frame)?;
         Ok(frame.len() as u64)
     }
 
     /// Blocking read of one message.
-    pub fn recv(&mut self) -> Result<Message> {
-        let mut header = [0u8; 6];
-        self.stream.read_exact(&mut header)?;
-        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
-        const MAX_FRAME: usize = 1 << 30;
-        if len > MAX_FRAME {
-            return Err(FedAeError::Protocol(format!("frame too large: {len}")));
+    fn recv(&mut self) -> Result<Message> {
+        self.stream.set_read_timeout(None)?;
+        loop {
+            let mut timed_out = false;
+            if let Some(msg) = self.pump(&mut timed_out)? {
+                return Ok(msg);
+            }
         }
-        let mut frame = header.to_vec();
-        frame.resize(6 + len, 0);
-        self.stream.read_exact(&mut frame[6..])?;
-        Message::from_frame(&frame)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        // A zero Duration would mean "no timeout" to the socket API.
+        self.stream
+            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+        let mut timed_out = false;
+        loop {
+            match self.pump(&mut timed_out)? {
+                Some(msg) => return Ok(Some(msg)),
+                None if timed_out => return Ok(None),
+                // Partial progress: keep pulling until the frame
+                // completes or the socket timeout fires.
+                None => {}
+            }
+        }
     }
 }
 
@@ -406,39 +880,105 @@ mod tests {
             round: 7,
             params: vec![1.0, -2.5, 3.25],
         });
-        roundtrip(Message::DecoderShipment {
-            collab_id: 1,
-            ae_tag: "mnist".into(),
-            dec_params: vec![0.5; 10],
-        });
-        roundtrip(Message::EncodedUpdate {
-            round: 2,
-            collab_id: 0,
-            n_samples: 128,
-            payload: vec![1, 2, 3, 4, 5],
-        });
+        roundtrip(Message::decoder_shipment(1, "mnist".into(), vec![0.5; 10]));
+        roundtrip(Message::encoded_update(2, 0, 128, vec![1, 2, 3, 4, 5]));
         roundtrip(Message::EvalReport {
             round: 4,
             collab_id: 9,
+            train_loss: 0.5,
             loss: 0.25,
             acc: 0.9,
+            recon_mse: 1e-4,
         });
         roundtrip(Message::Shutdown);
+        roundtrip(Message::Heartbeat { collab_id: 11 });
+        roundtrip(Message::RoundStart { round: 6 });
+        roundtrip(Message::RoundEnd { round: 6 });
+        for reason in [
+            RejectReason::VersionMismatch {
+                got: 1,
+                want: PROTOCOL_VERSION,
+            },
+            RejectReason::DuplicateCollaborator { collab_id: 4 },
+            RejectReason::HashMismatch { collab_id: 2 },
+            RejectReason::UnknownCollaborator { collab_id: 900 },
+        ] {
+            roundtrip(Message::Reject { reason });
+        }
+    }
+
+    #[test]
+    fn nan_inf_and_empty_payloads_roundtrip_bitwise() {
+        // NaN payloads must round-trip bit-exactly (PartialEq on f32
+        // treats NaN != NaN, so compare the re-serialized frames).
+        let weird = Message::GlobalModel {
+            round: 0,
+            params: vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 0.0],
+        };
+        let frame = weird.to_frame();
+        let back = Message::from_frame(&frame).unwrap();
+        assert_eq!(back.to_frame(), frame);
+
+        roundtrip(Message::GlobalModel {
+            round: 1,
+            params: vec![],
+        });
+        roundtrip(Message::decoder_shipment(0, String::new(), vec![]));
+        roundtrip(Message::encoded_update(0, 0, 0, vec![]));
+        let report = Message::EvalReport {
+            round: 0,
+            collab_id: 0,
+            train_loss: f32::NAN,
+            loss: f32::NAN,
+            acc: 0.0,
+            recon_mse: f32::NAN,
+        };
+        let frame = report.to_frame();
+        assert_eq!(Message::from_frame(&frame).unwrap().to_frame(), frame);
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Reference FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // The f32 variant agrees with hashing the serialized bytes.
+        let values = [1.5f32, -2.25, f32::NAN, 0.0];
+        assert_eq!(fnv1a64_f32s(&values), fnv1a64(&f32s_to_bytes(&values)));
+    }
+
+    #[test]
+    fn constructors_fill_verifiable_hashes() {
+        let msg = Message::encoded_update(3, 1, 64, vec![1, 9, 9, 9]);
+        msg.verify_hash().unwrap();
+        match &msg {
+            Message::EncodedUpdate { scheme, .. } => assert_eq!(*scheme, 1),
+            _ => unreachable!(),
+        }
+        let ship = Message::decoder_shipment(0, "mnist".into(), vec![0.25; 8]);
+        ship.verify_hash().unwrap();
+        // Tampering with the payload breaks verification with a typed
+        // protocol error.
+        let mut frame = msg.to_frame();
+        let last = frame.len() - 1;
+        frame[last] ^= 0xFF;
+        let tampered = Message::from_frame(&frame).unwrap();
+        let err = tampered.verify_hash().unwrap_err();
+        assert!(matches!(err, FedAeError::Protocol(_)));
+        assert!(err.to_string().contains("hash mismatch"));
+        // Control-plane frames have no hash to verify.
+        Message::Shutdown.verify_hash().unwrap();
     }
 
     #[test]
     fn wire_bytes_reflect_compression() {
-        // A 32-float latent frame must be ~500x smaller than a 15910-float raw frame.
+        // A 32-float latent frame must be ~400x smaller than a 15910-float raw frame.
         let raw = Message::GlobalModel {
             round: 0,
             params: vec![0.0; 15910],
         };
-        let latent = Message::EncodedUpdate {
-            round: 0,
-            collab_id: 0,
-            n_samples: 1,
-            payload: vec![0u8; 32 * 4],
-        };
+        let latent = Message::encoded_update(0, 0, 1, vec![0u8; 32 * 4]);
         let ratio = raw.wire_bytes() as f64 / latent.wire_bytes() as f64;
         assert!(ratio > 400.0, "ratio {ratio}");
     }
@@ -453,6 +993,13 @@ mod tests {
         let mut frame = Message::Shutdown.to_frame();
         frame[4] = 42;
         assert!(Message::from_frame(&frame).is_err());
+        // Unknown reject reason code.
+        let mut frame = Message::Reject {
+            reason: RejectReason::HashMismatch { collab_id: 0 },
+        }
+        .to_frame();
+        frame[6] = 99;
+        assert!(Message::from_frame(&frame).is_err());
         // Truncated interior.
         let good = Message::GlobalModel {
             round: 1,
@@ -466,16 +1013,75 @@ mod tests {
     }
 
     #[test]
+    fn oversized_interior_lengths_error_without_allocating() {
+        // An EncodedUpdate whose interior payload length claims
+        // u32::MAX: the parse must fail with a typed error (the cursor
+        // bounds-check fires) instead of allocating 4 GiB.
+        let mut frame = Message::encoded_update(0, 0, 1, vec![7; 16]).to_frame();
+        let len_at = 6 + 4 + 4 + 4 + 1 + 8; // interior payload-length offset
+        frame[len_at..len_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Message::from_frame(&frame).unwrap_err();
+        assert!(matches!(err, FedAeError::Protocol(_)), "{err}");
+        // Same for a GlobalModel float count near usize overflow.
+        let mut frame = Message::GlobalModel {
+            round: 0,
+            params: vec![0.0; 4],
+        }
+        .to_frame();
+        frame[10..14].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::from_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn random_corruptions_never_panic() {
+        // Deterministic sweep: every 1-byte truncation and every
+        // single-bit flip of valid frames either parses or returns a
+        // typed error — no panics, ever.
+        let frames = [
+            Message::Hello {
+                collab_id: 1,
+                version: PROTOCOL_VERSION,
+            }
+            .to_frame(),
+            Message::GlobalModel {
+                round: 2,
+                params: vec![0.5; 7],
+            }
+            .to_frame(),
+            Message::decoder_shipment(0, "mnist".into(), vec![1.0; 5]).to_frame(),
+            Message::encoded_update(1, 2, 3, vec![1, 2, 3, 4, 5, 6]).to_frame(),
+            Message::Reject {
+                reason: RejectReason::VersionMismatch { got: 1, want: 2 },
+            }
+            .to_frame(),
+        ];
+        for frame in &frames {
+            for cut in 0..frame.len() {
+                let _ = Message::from_frame(&frame[..cut]);
+            }
+            for byte in 0..frame.len() {
+                for bit in 0..8 {
+                    let mut bad = frame.clone();
+                    bad[byte] ^= 1 << bit;
+                    let _ = Message::from_frame(&bad);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn trailing_bytes_rejected() {
         let mut frame = Message::EvalReport {
             round: 0,
             collab_id: 0,
+            train_loss: 0.5,
             loss: 1.0,
             acc: 0.5,
+            recon_mse: 0.0,
         }
         .to_frame();
         frame.extend_from_slice(&[0, 0, 0, 0]);
-        frame[0..4].copy_from_slice(&20u32.to_le_bytes()); // 16 + 4 trailing
+        frame[0..4].copy_from_slice(&28u32.to_le_bytes()); // 24 + 4 trailing
         assert!(Message::from_frame(&frame).is_err());
     }
 
@@ -498,25 +1104,101 @@ mod tests {
     }
 
     #[test]
-    fn tcp_roundtrip() {
+    fn inproc_transport_trait_timeout() {
+        let (mut server, client) = InProcChannel::pair();
+        assert_eq!(
+            Transport::recv_timeout(&mut server, Duration::from_millis(10)).unwrap(),
+            None
+        );
+        client.send(Message::Shutdown).unwrap();
+        assert_eq!(
+            Transport::recv_timeout(&mut server, Duration::from_millis(100)).unwrap(),
+            Some(Message::Shutdown)
+        );
+        drop(client);
+        assert!(Transport::recv_timeout(&mut server, Duration::from_millis(10)).is_err());
+    }
+
+    fn tcp_pair() -> (TcpTransport, TcpTransport) {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let handle = std::thread::spawn(move || {
-            let (stream, _) = listener.accept().unwrap();
-            let mut t = TcpTransport::new(stream);
-            let msg = t.recv().unwrap();
-            t.send(&msg).unwrap(); // echo
-        });
-        let mut c = TcpTransport::connect(&addr.to_string()).unwrap();
-        let msg = Message::EncodedUpdate {
-            round: 5,
-            collab_id: 2,
-            n_samples: 64,
-            payload: vec![9; 128],
-        };
-        let sent = c.send(&msg).unwrap();
+        let client = std::thread::spawn(move || TcpTransport::connect(&addr.to_string()).unwrap());
+        let (stream, _) = listener.accept().unwrap();
+        (TcpTransport::new(stream), client.join().unwrap())
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let (mut server, mut client) = tcp_pair();
+        let msg = Message::encoded_update(5, 2, 64, vec![9; 128]);
+        let sent = client.send(&msg).unwrap();
         assert_eq!(sent, msg.wire_bytes());
-        assert_eq!(c.recv().unwrap(), msg);
-        handle.join().unwrap();
+        assert_eq!(server.recv().unwrap(), msg);
+        // Echo back.
+        server.send(&msg).unwrap();
+        assert_eq!(client.recv().unwrap(), msg);
+    }
+
+    #[test]
+    fn tcp_recv_timeout_preserves_partial_frames() {
+        let (mut server, mut client) = tcp_pair();
+        // Nothing sent: times out cleanly.
+        assert_eq!(
+            server.recv_timeout(Duration::from_millis(20)).unwrap(),
+            None
+        );
+        // Send only half a frame; the receiver buffers it across a
+        // timed-out call and completes on the second half.
+        let msg = Message::GlobalModel {
+            round: 1,
+            params: vec![1.0; 50],
+        };
+        let frame = msg.to_frame();
+        let (a, b) = frame.split_at(frame.len() / 2);
+        client.stream.write_all(a).unwrap();
+        client.stream.flush().unwrap();
+        assert_eq!(
+            server.recv_timeout(Duration::from_millis(50)).unwrap(),
+            None
+        );
+        client.stream.write_all(b).unwrap();
+        assert_eq!(
+            server.recv_timeout(Duration::from_millis(200)).unwrap(),
+            Some(msg)
+        );
+    }
+
+    #[test]
+    fn tcp_oversized_header_rejected_before_allocation() {
+        let (mut server, mut client) = tcp_pair();
+        server.set_max_frame(1 << 10);
+        // Header declares a 3 GiB payload; the guard must fire as soon
+        // as the header arrives, long before any such allocation.
+        let mut header = Vec::new();
+        header.extend_from_slice(&(3u32 << 30).to_le_bytes());
+        header.extend_from_slice(&2u16.to_le_bytes());
+        client.stream.write_all(&header).unwrap();
+        let err = server.recv().unwrap_err();
+        assert!(matches!(err, FedAeError::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("frame too large"));
+    }
+
+    #[test]
+    fn tcp_mid_frame_disconnect_is_typed_error() {
+        let (mut server, client) = tcp_pair();
+        let frame = Message::GlobalModel {
+            round: 0,
+            params: vec![2.0; 64],
+        }
+        .to_frame();
+        {
+            let mut stream = client.stream;
+            stream.write_all(&frame[..10]).unwrap();
+            stream.flush().unwrap();
+            // Dropping the stream closes the socket mid-frame.
+        }
+        let err = server.recv().unwrap_err();
+        assert!(matches!(err, FedAeError::Protocol(_)), "{err}");
+        assert!(err.to_string().contains("mid-frame"), "{err}");
     }
 }

@@ -232,8 +232,16 @@ fn tcp_leader_worker_round_trip() {
         })
         .unwrap();
         let update = match t.recv().unwrap() {
-            Message::EncodedUpdate { payload, .. } => {
-                fedae::compression::CompressedUpdate::from_bytes(&payload).unwrap()
+            msg @ Message::EncodedUpdate { .. } => {
+                // v2 frames carry a content hash: verify on receipt.
+                msg.verify_hash().unwrap();
+                match msg {
+                    Message::EncodedUpdate { scheme, payload, .. } => {
+                        assert_eq!(Some(&scheme), payload.first());
+                        fedae::compression::CompressedUpdate::from_bytes(&payload).unwrap()
+                    }
+                    _ => unreachable!(),
+                }
             }
             m => panic!("unexpected {m:?}"),
         };
@@ -258,13 +266,8 @@ fn tcp_leader_worker_round_trip() {
         m => panic!("unexpected {m:?}"),
     };
     let update = fedae::compression::CompressedUpdate::Raw { values: params };
-    t.send(&Message::EncodedUpdate {
-        round: 0,
-        collab_id: 0,
-        n_samples: 128,
-        payload: update.to_bytes(),
-    })
-    .unwrap();
+    t.send(&Message::encoded_update(0, 0, 128, update.to_bytes()))
+        .unwrap();
     assert_eq!(t.recv().unwrap(), Message::Shutdown);
     leader.join().unwrap();
 }

@@ -11,7 +11,7 @@ use fedae::network::{Direction, Link, SimulatedNetwork, TrafficKind};
 use fedae::runtime::Runtime;
 use fedae::savings::SavingsModel;
 use fedae::testing::prop;
-use fedae::transport::Message;
+use fedae::transport::{Message, RejectReason};
 use fedae::util::json::Json;
 
 #[test]
@@ -210,52 +210,147 @@ fn prop_compressed_update_wire_roundtrip() {
     });
 }
 
+/// Generate a random `Message` covering every wire kind, including
+/// non-finite floats and empty vectors.
+fn arbitrary_message(rng: &mut fedae::util::rng::Rng) -> Message {
+    // Occasionally poison a float vector with NaN/Inf; NaN payloads must
+    // survive a byte-exact round trip (PartialEq on Message compares bits
+    // for float payloads via the frame equality below).
+    fn maybe_poison(rng: &mut fedae::util::rng::Rng, v: &mut [f32]) {
+        if !v.is_empty() && rng.below(4) == 0 {
+            let i = rng.below(v.len());
+            v[i] = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY][rng.below(3)];
+        }
+    }
+    match rng.below(10) {
+        0 => Message::Hello {
+            collab_id: rng.below(1000) as u32,
+            version: rng.below(10) as u16,
+        },
+        1 => {
+            let n = prop::len_in(rng, 0, 300);
+            let mut params = prop::vec_f32(rng, n, 1.0);
+            maybe_poison(rng, &mut params);
+            Message::GlobalModel {
+                round: rng.below(500) as u32,
+                params,
+            }
+        }
+        2 => {
+            let n = prop::len_in(rng, 0, 100);
+            let mut dec = prop::vec_f32(rng, n, 1.0);
+            maybe_poison(rng, &mut dec);
+            Message::decoder_shipment(
+                rng.below(50) as u32,
+                ["mnist", "cifar", "mnist_deep", ""][rng.below(4)].to_string(),
+                dec,
+            )
+        }
+        3 => Message::encoded_update(
+            rng.below(500) as u32,
+            rng.below(50) as u32,
+            rng.below(10_000) as u32,
+            (0..prop::len_in(rng, 0, 256))
+                .map(|_| rng.below(256) as u8)
+                .collect(),
+        ),
+        4 => Message::EvalReport {
+            round: rng.below(500) as u32,
+            collab_id: rng.below(50) as u32,
+            train_loss: rng.uniform_in(0.0, 10.0),
+            loss: rng.uniform_in(0.0, 10.0),
+            acc: rng.uniform_in(0.0, 1.0),
+            recon_mse: if rng.below(8) == 0 {
+                f32::NAN
+            } else {
+                rng.uniform_in(0.0, 1.0)
+            },
+        },
+        5 => Message::Shutdown,
+        6 => Message::Heartbeat {
+            collab_id: rng.below(1000) as u32,
+        },
+        7 => Message::RoundStart {
+            round: rng.below(500) as u32,
+        },
+        8 => Message::RoundEnd {
+            round: rng.below(500) as u32,
+        },
+        _ => Message::Reject {
+            reason: match rng.below(4) {
+                0 => RejectReason::VersionMismatch {
+                    got: rng.below(10) as u16,
+                    want: rng.below(10) as u16,
+                },
+                1 => RejectReason::DuplicateCollaborator {
+                    collab_id: rng.below(1000) as u32,
+                },
+                2 => RejectReason::HashMismatch {
+                    collab_id: rng.below(1000) as u32,
+                },
+                _ => RejectReason::UnknownCollaborator {
+                    collab_id: rng.below(1000) as u32,
+                },
+            },
+        },
+    }
+}
+
 #[test]
 fn prop_transport_frames_roundtrip() {
     prop::check("transport_frames", |rng| {
-        let msg = match rng.below(6) {
-            0 => Message::Hello {
-                collab_id: rng.below(1000) as u32,
-                version: rng.below(10) as u16,
-            },
-            1 => {
-                let n = prop::len_in(rng, 0, 300);
-                Message::GlobalModel {
-                    round: rng.below(500) as u32,
-                    params: prop::vec_f32(rng, n, 1.0),
-                }
-            }
-            2 => {
-                let n = prop::len_in(rng, 0, 100);
-                Message::DecoderShipment {
-                    collab_id: rng.below(50) as u32,
-                    ae_tag: ["mnist", "cifar", "mnist_deep", ""][rng.below(4)].to_string(),
-                    dec_params: prop::vec_f32(rng, n, 1.0),
-                }
-            }
-            3 => Message::EncodedUpdate {
-                round: rng.below(500) as u32,
-                collab_id: rng.below(50) as u32,
-                n_samples: rng.below(10_000) as u32,
-                payload: (0..prop::len_in(rng, 0, 256))
-                    .map(|_| rng.below(256) as u8)
-                    .collect(),
-            },
-            4 => Message::EvalReport {
-                round: rng.below(500) as u32,
-                collab_id: rng.below(50) as u32,
-                loss: rng.uniform_in(0.0, 10.0),
-                acc: rng.uniform_in(0.0, 1.0),
-            },
-            _ => Message::Shutdown,
-        };
+        let msg = arbitrary_message(rng);
         let frame = msg.to_frame();
         let back = Message::from_frame(&frame).map_err(|e| format!("{e}"))?;
-        if back != msg {
-            return Err("frame roundtrip mismatch".into());
+        // Byte-exact: re-encoding the decoded message must reproduce the
+        // frame, which also covers NaN payloads where `==` on floats lies.
+        if back.to_frame() != frame {
+            return Err("frame re-encode mismatch".into());
         }
         if frame.len() as u64 != msg.wire_bytes() {
             return Err("wire_bytes inconsistent".into());
+        }
+        // Constructed messages carry a valid content hash.
+        if msg.verify_hash().is_err() {
+            return Err("freshly built message failed hash check".into());
+        }
+        if back.verify_hash().is_err() {
+            return Err("decoded message failed hash check".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transport_corruption_never_panics() {
+    prop::check("transport_corruption", |rng| {
+        let frame = arbitrary_message(rng).to_frame();
+        match rng.below(3) {
+            // Truncation at an arbitrary boundary must yield a typed error.
+            0 => {
+                let cut = rng.below(frame.len());
+                if Message::from_frame(&frame[..cut]).is_ok() {
+                    return Err(format!("truncation to {cut} bytes parsed as Ok"));
+                }
+            }
+            // A single bit flip must never panic; Ok is allowed only when
+            // the flip lands in a value field (the frame stays well-formed).
+            1 => {
+                let mut bad = frame.clone();
+                let i = rng.below(bad.len());
+                bad[i] ^= 1 << rng.below(8);
+                let _ = Message::from_frame(&bad);
+            }
+            // An oversized declared payload_len must be rejected without
+            // trusting (or allocating) the attacker-declared length.
+            _ => {
+                let mut bad = frame.clone();
+                let huge = (u32::MAX - rng.below(1000) as u32).to_le_bytes();
+                bad[..4].copy_from_slice(&huge);
+                if Message::from_frame(&bad).is_ok() {
+                    return Err("oversized payload_len parsed as Ok".into());
+                }
+            }
         }
         Ok(())
     });

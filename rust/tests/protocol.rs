@@ -1,0 +1,439 @@
+//! Protocol parity and fault-injection suite.
+//!
+//! Parity: a multi-process-shaped federation (one `ProtocolServer`, one
+//! `run_worker` per collaborator, real frames over loopback TCP or
+//! in-proc channels) must produce bitwise-identical global parameters,
+//! per-round outcomes, and traffic-ledger totals to the in-process
+//! simulator (`FlDriver`) on the same config.
+//!
+//! Faults: killed workers are evicted and rounds still complete,
+//! duplicate/version-skewed `Hello`s get typed `Reject`s, replayed
+//! updates are deduplicated by content hash, and half-written frames
+//! from rogue connections never wedge the coordinator.
+
+use std::thread;
+
+use fedae::compression::CompressedUpdate;
+use fedae::config::{AggregationConfig, CompressionConfig, ExperimentConfig};
+use fedae::coordinator::{
+    run_worker, CoordinatorState, FlDriver, ProtocolReport, ProtocolServer, RoundOutcome,
+    StaticEndpoints, TcpAcceptor, WorkerReport,
+};
+use fedae::network::LedgerTotals;
+use fedae::runtime::{AePipeline, Runtime};
+use fedae::transport::{
+    InProcChannel, Message, RejectReason, TcpTransport, Transport, PROTOCOL_VERSION,
+};
+
+fn runtime() -> Runtime {
+    Runtime::from_dir("artifacts").expect("runtime loads")
+}
+
+/// The smallest config that still trains: 2 collaborators, 2 rounds.
+fn tiny_cfg(compression: CompressionConfig) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mnist".into();
+    cfg.compression = compression;
+    cfg.fl.collaborators = 2;
+    cfg.fl.rounds = 2;
+    cfg.fl.local_epochs = 1;
+    cfg.data.per_collab = 64;
+    cfg.data.test_size = 64;
+    cfg.prepass.epochs = 4;
+    cfg.prepass.ae_epochs = 4;
+    cfg.seed = 7;
+    cfg
+}
+
+fn build_pipeline<'rt>(rt: &'rt Runtime, cfg: &ExperimentConfig) -> Option<AePipeline<'rt>> {
+    match &cfg.compression {
+        CompressionConfig::Ae { ae } => Some(AePipeline::new(rt, ae).unwrap()),
+        _ => None,
+    }
+}
+
+/// Ground truth: the in-process simulator, round by round.
+fn run_simulator(cfg: &ExperimentConfig) -> (Vec<RoundOutcome>, Vec<f32>, LedgerTotals) {
+    let rt = runtime();
+    let pipeline = build_pipeline(&rt, cfg);
+    let mut builder = FlDriver::builder(&rt, cfg.clone());
+    if let Some(p) = &pipeline {
+        builder = builder.pipeline(p);
+    }
+    let mut driver = builder.build().unwrap();
+    let mut outcomes = Vec::with_capacity(cfg.fl.rounds);
+    for _ in 0..cfg.fl.rounds {
+        outcomes.push(driver.run_round().unwrap());
+    }
+    let totals = driver.network.ledger().totals();
+    (outcomes, driver.global_params().to_vec(), totals)
+}
+
+/// Real-worker federation over loopback TCP: every worker is a thread
+/// running [`run_worker`] with its own `Runtime`, exactly like a
+/// separate `fedae worker` process.
+fn run_protocol_tcp(cfg: &ExperimentConfig) -> (ProtocolReport, Vec<WorkerReport>) {
+    let rt = runtime();
+    let pipeline = build_pipeline(&rt, cfg);
+    let mut server = ProtocolServer::new(&rt, cfg.clone(), pipeline.as_ref()).unwrap();
+    let mut acceptor = TcpAcceptor::bind("127.0.0.1:0", cfg.protocol.max_frame_bytes).unwrap();
+    let addr = acceptor.local_addr().unwrap().to_string();
+    let handles: Vec<_> = (0..cfg.fl.collaborators)
+        .map(|id| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let rt = runtime();
+                let pipeline = build_pipeline(&rt, &cfg);
+                let mut t = TcpTransport::connect(&addr).unwrap();
+                run_worker(&rt, &cfg, pipeline.as_ref(), id, &mut t).unwrap()
+            })
+        })
+        .collect();
+    let report = server.run(&mut acceptor).unwrap();
+    assert_eq!(server.state(), CoordinatorState::Finished);
+    let workers = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (report, workers)
+}
+
+/// Same federation over in-proc channels.
+fn run_protocol_inproc(cfg: &ExperimentConfig) -> (ProtocolReport, Vec<WorkerReport>) {
+    let mut endpoints: Vec<Box<dyn Transport>> = Vec::new();
+    let mut handles = Vec::new();
+    for id in 0..cfg.fl.collaborators {
+        let (server_end, mut worker_end) = InProcChannel::pair();
+        endpoints.push(Box::new(server_end));
+        let cfg = cfg.clone();
+        handles.push(thread::spawn(move || {
+            let rt = runtime();
+            let pipeline = build_pipeline(&rt, &cfg);
+            run_worker(&rt, &cfg, pipeline.as_ref(), id, &mut worker_end).unwrap()
+        }));
+    }
+    let rt = runtime();
+    let pipeline = build_pipeline(&rt, cfg);
+    let mut server = ProtocolServer::new(&rt, cfg.clone(), pipeline.as_ref()).unwrap();
+    let mut source = StaticEndpoints::new(endpoints);
+    let report = server.run(&mut source).unwrap();
+    assert_eq!(server.state(), CoordinatorState::Finished);
+    let workers = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (report, workers)
+}
+
+/// Bitwise parity between a simulator run and a protocol run.
+fn assert_parity(
+    tag: &str,
+    sim: &(Vec<RoundOutcome>, Vec<f32>, LedgerTotals),
+    report: &ProtocolReport,
+) {
+    assert_eq!(sim.0, report.outcomes, "{tag}: per-round outcomes differ");
+    assert_eq!(
+        sim.1.len(),
+        report.final_params.len(),
+        "{tag}: final param count differs"
+    );
+    for (i, (a, b)) in sim.1.iter().zip(&report.final_params).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{tag}: final param {i} differs: {a} vs {b}"
+        );
+    }
+    assert_eq!(sim.2, report.ledger_totals, "{tag}: ledger totals differ");
+    assert!(report.evictions.is_empty(), "{tag}: spurious evictions");
+    assert_eq!(report.dedup_hits, 0, "{tag}: spurious dedup hits");
+    assert_eq!(report.rejected_frames, 0, "{tag}: spurious rejections");
+}
+
+#[test]
+fn ae_tcp_federation_matches_simulator_bitwise() {
+    let cfg = tiny_cfg(CompressionConfig::Ae { ae: "mnist".into() });
+    let sim = run_simulator(&cfg);
+    let (report, workers) = run_protocol_tcp(&cfg);
+    assert_parity("ae/tcp", &sim, &report);
+    for (id, w) in workers.iter().enumerate() {
+        assert_eq!(
+            w.rounds_participated, cfg.fl.rounds,
+            "worker {id} missed rounds"
+        );
+        // Latent uploads plus the one-time decoder shipment.
+        assert!(w.bytes_up > 0, "worker {id} uploaded nothing");
+    }
+    // The per-kind byte buckets prove the AE data plane ran: decoder
+    // shipments were metered once per collaborator, updates every round.
+    assert_eq!(report.ledger_totals.update_up_count, (2 * cfg.fl.rounds) as u64);
+}
+
+#[test]
+fn ae_inproc_federation_matches_simulator_bitwise() {
+    let cfg = tiny_cfg(CompressionConfig::Ae { ae: "mnist".into() });
+    let sim = run_simulator(&cfg);
+    let (report, _) = run_protocol_inproc(&cfg);
+    assert_parity("ae/inproc", &sim, &report);
+}
+
+#[test]
+fn baseline_grid_tcp_matches_simulator_bitwise() {
+    let compressions = [
+        CompressionConfig::Identity,
+        CompressionConfig::Quantize {
+            bits: 8,
+            stochastic: false,
+        },
+        CompressionConfig::TopK { fraction: 0.05 },
+    ];
+    let aggregations = [
+        AggregationConfig::FedAvg,
+        AggregationConfig::FedAvgM { beta: 0.9 },
+    ];
+    for compression in &compressions {
+        for aggregation in &aggregations {
+            let mut cfg = tiny_cfg(compression.clone());
+            cfg.aggregation = aggregation.clone();
+            let tag = format!("{compression:?}/{aggregation:?}");
+            let sim = run_simulator(&cfg);
+            let (report, workers) = run_protocol_tcp(&cfg);
+            assert_parity(&tag, &sim, &report);
+            for w in &workers {
+                assert_eq!(w.rounds_participated, cfg.fl.rounds, "{tag}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------
+
+/// A hand-scripted worker speaking the wire protocol directly (identity
+/// compression): heartbeat-acks each `RoundStart`, answers each
+/// `GlobalModel` with a `Raw` echo of the received params (optionally
+/// sent twice to exercise replay dedup) plus an `EvalReport`.
+fn scripted_identity_worker(t: InProcChannel, id: u32, replay_updates: bool) {
+    loop {
+        match t.recv().unwrap() {
+            Message::RoundStart { .. } => {
+                t.send(Message::Heartbeat { collab_id: id }).unwrap();
+            }
+            Message::GlobalModel { round, params } => {
+                let update = CompressedUpdate::Raw { values: params };
+                let msg = Message::encoded_update(round, id, 64, update.to_bytes());
+                t.send(msg.clone()).unwrap();
+                if replay_updates {
+                    t.send(msg).unwrap();
+                }
+                t.send(Message::EvalReport {
+                    round,
+                    collab_id: id,
+                    train_loss: 0.5,
+                    loss: 1.0,
+                    acc: 0.5,
+                    recon_mse: 0.0,
+                })
+                .unwrap();
+            }
+            Message::RoundEnd { .. } => {}
+            Message::Shutdown => break,
+            other => panic!("scripted worker {id}: unexpected {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn worker_killed_mid_round_is_evicted_and_rounds_complete() {
+    let cfg = tiny_cfg(CompressionConfig::Identity);
+
+    // Worker 0: real. Worker 1: sends Hello, then dies right after the
+    // first RoundStart — a mid-round crash.
+    let (end0, mut worker0) = InProcChannel::pair();
+    let (end1, worker1) = InProcChannel::pair();
+    let cfg0 = cfg.clone();
+    let h0 = thread::spawn(move || {
+        let rt = runtime();
+        run_worker(&rt, &cfg0, None, 0, &mut worker0).unwrap()
+    });
+    let h1 = thread::spawn(move || {
+        worker1
+            .send(Message::Hello {
+                collab_id: 1,
+                version: PROTOCOL_VERSION,
+            })
+            .unwrap();
+        loop {
+            if matches!(worker1.recv().unwrap(), Message::RoundStart { .. }) {
+                break; // drop the channel: crash mid-round
+            }
+        }
+    });
+
+    let rt = runtime();
+    let mut server = ProtocolServer::new(&rt, cfg.clone(), None).unwrap();
+    let mut source = StaticEndpoints::new(vec![Box::new(end0), Box::new(end1)]);
+    let report = server.run(&mut source).unwrap();
+
+    // Both rounds completed with the surviving worker only; the dead
+    // worker was evicted in round 0 (crash) and round 1 (still dead at
+    // selection time).
+    assert_eq!(report.outcomes.len(), cfg.fl.rounds);
+    for outcome in &report.outcomes {
+        assert_eq!(outcome.train_losses.len(), 1, "round ran with survivor only");
+        assert_eq!(outcome.train_losses[0].0, 0);
+    }
+    assert_eq!(report.evictions, vec![(0, 1), (1, 1)]);
+    assert_eq!(report.ledger_totals.update_up_count, cfg.fl.rounds as u64);
+    let w0 = h0.join().unwrap();
+    assert_eq!(w0.rounds_participated, cfg.fl.rounds);
+    h1.join().unwrap();
+}
+
+#[test]
+fn rogue_hellos_get_typed_rejects() {
+    let mut cfg = tiny_cfg(CompressionConfig::Identity);
+    cfg.fl.collaborators = 1;
+    cfg.fl.rounds = 1;
+    cfg.protocol.min_participants = 1;
+
+    // One legitimate scripted worker plus three rogues. All Hellos are
+    // buffered before the server starts, so admission order is fixed:
+    // the legitimate endpoint is polled first.
+    let (end_ok, worker_ok) = InProcChannel::pair();
+    let (end_skew, skew) = InProcChannel::pair();
+    let (end_unknown, unknown) = InProcChannel::pair();
+    let (end_dup, dup) = InProcChannel::pair();
+    worker_ok
+        .send(Message::Hello {
+            collab_id: 0,
+            version: PROTOCOL_VERSION,
+        })
+        .unwrap();
+    skew.send(Message::Hello {
+        collab_id: 0,
+        version: 1,
+    })
+    .unwrap();
+    unknown
+        .send(Message::Hello {
+            collab_id: 7,
+            version: PROTOCOL_VERSION,
+        })
+        .unwrap();
+    dup.send(Message::Hello {
+        collab_id: 0,
+        version: PROTOCOL_VERSION,
+    })
+    .unwrap();
+
+    let h = thread::spawn(move || scripted_identity_worker(worker_ok, 0, false));
+
+    let rt = runtime();
+    let mut server = ProtocolServer::new(&rt, cfg.clone(), None).unwrap();
+    let mut source = StaticEndpoints::new(vec![
+        Box::new(end_ok),
+        Box::new(end_skew),
+        Box::new(end_unknown),
+        Box::new(end_dup),
+    ]);
+    let report = server.run(&mut source).unwrap();
+    h.join().unwrap();
+
+    assert_eq!(report.outcomes.len(), 1, "round completed despite rogues");
+    assert_eq!(report.rejected_frames, 3);
+    assert!(report.evictions.is_empty());
+
+    // Each rogue got the matching typed Reject before its connection
+    // was dropped.
+    assert_eq!(
+        skew.recv().unwrap(),
+        Message::Reject {
+            reason: RejectReason::VersionMismatch {
+                got: 1,
+                want: PROTOCOL_VERSION,
+            },
+        }
+    );
+    assert_eq!(
+        unknown.recv().unwrap(),
+        Message::Reject {
+            reason: RejectReason::UnknownCollaborator { collab_id: 7 },
+        }
+    );
+    assert_eq!(
+        dup.recv().unwrap(),
+        Message::Reject {
+            reason: RejectReason::DuplicateCollaborator { collab_id: 0 },
+        }
+    );
+}
+
+#[test]
+fn replayed_update_is_deduped_by_content_hash() {
+    let mut cfg = tiny_cfg(CompressionConfig::Identity);
+    cfg.fl.rounds = 1;
+
+    // Worker 0: real. Worker 1: scripted, sends its (byte-identical)
+    // update twice per round.
+    let (end0, mut worker0) = InProcChannel::pair();
+    let (end1, worker1) = InProcChannel::pair();
+    let cfg0 = cfg.clone();
+    let h0 = thread::spawn(move || {
+        let rt = runtime();
+        run_worker(&rt, &cfg0, None, 0, &mut worker0).unwrap()
+    });
+    worker1
+        .send(Message::Hello {
+            collab_id: 1,
+            version: PROTOCOL_VERSION,
+        })
+        .unwrap();
+    let h1 = thread::spawn(move || scripted_identity_worker(worker1, 1, true));
+
+    let rt = runtime();
+    let mut server = ProtocolServer::new(&rt, cfg.clone(), None).unwrap();
+    let mut source = StaticEndpoints::new(vec![Box::new(end0), Box::new(end1)]);
+    let report = server.run(&mut source).unwrap();
+    h0.join().unwrap();
+    h1.join().unwrap();
+
+    // The replay was recognized by hash: no double-metering, no
+    // eviction, the round folded exactly two updates.
+    assert_eq!(report.dedup_hits, 1);
+    assert!(report.evictions.is_empty());
+    assert_eq!(report.outcomes.len(), 1);
+    assert_eq!(report.outcomes[0].train_losses.len(), 2);
+    assert_eq!(report.ledger_totals.update_up_count, 2);
+}
+
+#[test]
+fn partial_frame_disconnect_does_not_wedge_the_coordinator() {
+    let mut cfg = tiny_cfg(CompressionConfig::Identity);
+    cfg.fl.collaborators = 1;
+    cfg.fl.rounds = 1;
+    cfg.protocol.min_participants = 1;
+
+    let rt = runtime();
+    let mut server = ProtocolServer::new(&rt, cfg.clone(), None).unwrap();
+    let mut acceptor = TcpAcceptor::bind("127.0.0.1:0", cfg.protocol.max_frame_bytes).unwrap();
+    let addr = acceptor.local_addr().unwrap().to_string();
+
+    // A rogue connection writes half a frame header and disconnects
+    // mid-frame before the server even starts polling.
+    {
+        use std::io::Write;
+        let mut rogue = std::net::TcpStream::connect(&addr).unwrap();
+        rogue.write_all(&[0xAA, 0xBB, 0xCC]).unwrap();
+    }
+
+    let cfg0 = cfg.clone();
+    let addr0 = addr.clone();
+    let h = thread::spawn(move || {
+        let rt = runtime();
+        let mut t = TcpTransport::connect(&addr0).unwrap();
+        run_worker(&rt, &cfg0, None, 0, &mut t).unwrap()
+    });
+
+    let report = server.run(&mut acceptor).unwrap();
+    let w = h.join().unwrap();
+    assert_eq!(report.outcomes.len(), 1);
+    assert_eq!(w.rounds_participated, 1);
+    assert!(report.evictions.is_empty());
+}
