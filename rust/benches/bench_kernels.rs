@@ -1,12 +1,17 @@
-//! Bench — tiled GEMM kernel layer vs the naive reference loops (ISSUE 5
-//! acceptance: >= 3x speedup on the default AE train-step shape, identical
-//! math within float-rounding tolerance).
+//! Bench — compute-kernel tiers: naive reference loops vs the tiled GEMM
+//! layer (ISSUE 5: >= 3x on the default AE train-step shape) vs the
+//! AVX2+FMA `simd` microkernels (ISSUE 9: >= tiled GFLOP/s where the CPU
+//! supports it; bitwise tiled fallback elsewhere), identical math within
+//! float-rounding tolerance.
 //!
 //! Three tiers:
 //! * raw GEMM at the paper-relevant dense shapes (GFLOP/s, speedup),
 //! * `ae_train_step` per AE geometry (the pre-pass + per-round hot path),
 //! * `classifier_train_step` for the MNIST MLP and the CIFAR-shaped CNN
 //!   (im2col + GEMM vs the naive per-pixel conv loops).
+//!
+//! Besides the tables, the run writes machine-readable results to
+//! `BENCH_kernels.json` in the working directory.
 //!
 //! `cargo bench --bench bench_kernels`
 //! (set `FEDAE_BENCH_MAX_COLLABS=1024` to include the largest tier — the
@@ -18,19 +23,20 @@ use fedae::backend::Kernel;
 use fedae::metrics::print_table;
 use fedae::runtime::{AdamState, AePipeline, Runtime, TrainStep};
 use fedae::util::bench_timings;
+use fedae::util::json::Json;
 
-/// Naive-vs-tiled agreement after a multi-step training schedule: nearly
+/// Cross-kernel agreement after a multi-step training schedule: nearly
 /// all coordinates tight, stragglers (near-zero-gradient sign flips under
 /// Adam, ReLU boundary routing) bounded in absolute terms.
-fn assert_params_agree(what: &str, naive: &[f32], tiled: &[f32]) {
+fn assert_params_agree(what: &str, naive: &[f32], blocked: &[f32]) {
     let close = naive
         .iter()
-        .zip(tiled)
+        .zip(blocked)
         .filter(|(n, t)| (*n - *t).abs() <= 1e-3 * (1.0 + n.abs()))
         .count();
     let frac = close as f64 / naive.len().max(1) as f64;
     assert!(frac >= 0.99, "{what}: only {frac} of params agree across kernels");
-    for (i, (n, t)) in naive.iter().zip(tiled).enumerate() {
+    for (i, (n, t)) in naive.iter().zip(blocked).enumerate() {
         assert!(
             (n - t).abs() <= 0.1,
             "{what}: kernels diverged at param {i}: {n} vs {t}"
@@ -38,7 +44,7 @@ fn assert_params_agree(what: &str, naive: &[f32], tiled: &[f32]) {
     }
 }
 
-/// The naive axpy-style matmul the tiled kernels replace (mirrors the
+/// The naive axpy-style matmul the blocked kernels replace (mirrors the
 /// reference `dense_forward` loop structure).
 fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for (i, crow) in c.chunks_exact_mut(n).enumerate() {
@@ -53,12 +59,23 @@ fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32])
     }
 }
 
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
 fn main() -> fedae::error::Result<()> {
     let max_collabs: usize = std::env::var("FEDAE_BENCH_MAX_COLLABS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    println!("== tiled kernels vs naive reference loops ==");
+    let simd = kernels::simd_available();
+    println!(
+        "== kernel tiers: naive reference vs tiled vs simd ({}) ==",
+        if simd { "avx2+fma detected" } else { "no avx2+fma — simd falls back to tiled" }
+    );
+    let mut json_gemm = Vec::new();
+    let mut json_ae = Vec::new();
+    let mut json_clf = Vec::new();
 
     // --- raw GEMM at the MNIST-AE layer shapes (batch 8) ------------------
     let mut rows = Vec::new();
@@ -71,40 +88,75 @@ fn main() -> fedae::error::Result<()> {
         let b: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 0.29).cos() * 0.1).collect();
         let mut c_naive = vec![0.0f32; m * n];
         let mut c_tiled = vec![0.0f32; m * n];
+        let mut c_simd = vec![0.0f32; m * n];
         let mut packs = PackBufs::default();
         let (naive_ms, _, _) = bench_timings(2, 9, || {
             naive_gemm(m, k, n, &a, &b, &mut c_naive);
         });
+        packs.exec = kernels::Exec::for_kernel(Kernel::Tiled, 1);
         let (tiled_ms, _, _) = bench_timings(2, 9, || {
             kernels::gemm_nn(&mut packs, m, k, n, &a, &b, &mut c_tiled, Epilogue::Store);
         });
-        for (i, (t, nv)) in c_tiled.iter().zip(&c_naive).enumerate() {
-            assert!(
-                (t - nv).abs() <= 1e-3 * (1.0 + nv.abs()),
-                "{what}: tiled diverged from naive at {i}: {t} vs {nv}"
-            );
+        packs.exec = kernels::Exec::for_kernel(Kernel::Simd, 1);
+        let (simd_ms, _, _) = bench_timings(2, 9, || {
+            kernels::gemm_nn(&mut packs, m, k, n, &a, &b, &mut c_simd, Epilogue::Store);
+        });
+        for (label, c) in [("tiled", &c_tiled), ("simd", &c_simd)] {
+            for (i, (t, nv)) in c.iter().zip(&c_naive).enumerate() {
+                assert!(
+                    (t - nv).abs() <= 1e-3 * (1.0 + nv.abs()),
+                    "{what}: {label} diverged from naive at {i}: {t} vs {nv}"
+                );
+            }
         }
         let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+        let tiled_gflops = gflop / (tiled_ms / 1e3);
+        let simd_gflops = gflop / (simd_ms / 1e3);
         rows.push(vec![
             what.to_string(),
             format!("{m}x{k}x{n}"),
             format!("{naive_ms:.3}"),
             format!("{tiled_ms:.3}"),
-            format!("{:.2}", gflop / (tiled_ms / 1e3)),
-            format!("{:.2}x", naive_ms / tiled_ms),
+            format!("{simd_ms:.3}"),
+            format!("{tiled_gflops:.2}"),
+            format!("{simd_gflops:.2}"),
+            format!("{:.2}x", naive_ms / simd_ms),
         ]);
+        json_gemm.push(obj(vec![
+            ("what", Json::Str(what.to_string())),
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("n", Json::Num(n as f64)),
+            ("naive_ms", Json::Num(naive_ms)),
+            ("tiled_ms", Json::Num(tiled_ms)),
+            ("simd_ms", Json::Num(simd_ms)),
+            ("tiled_gflops", Json::Num(tiled_gflops)),
+            ("simd_gflops", Json::Num(simd_gflops)),
+            ("speedup_simd_vs_naive", Json::Num(naive_ms / simd_ms)),
+            ("speedup_simd_vs_tiled", Json::Num(tiled_ms / simd_ms)),
+        ]));
     }
     println!(
         "{}",
         print_table(
-            &["gemm", "m x k x n", "naive ms", "tiled ms", "tiled GFLOP/s", "speedup"],
+            &[
+                "gemm",
+                "m x k x n",
+                "naive ms",
+                "tiled ms",
+                "simd ms",
+                "tiled GFLOP/s",
+                "simd GFLOP/s",
+                "speedup"
+            ],
             &rows
         )
     );
 
     // --- AE train step (the pre-pass / per-round hot path) ----------------
-    let tiled_rt = Runtime::builder().kernel(Kernel::Tiled).build()?;
     let naive_rt = Runtime::builder().kernel(Kernel::Naive).build()?;
+    let tiled_rt = Runtime::builder().kernel(Kernel::Tiled).build()?;
+    let simd_rt = Runtime::builder().kernel(Kernel::Simd).build()?;
     let mut rows = Vec::new();
     for tag in ["toy", "mnist", "cifar", "mnist_deep"] {
         if tag == "mnist_deep" && max_collabs < 1024 {
@@ -114,7 +166,7 @@ fn main() -> fedae::error::Result<()> {
         let iters = if tag == "toy" { 40 } else { 10 };
         let mut step_ms = Vec::new();
         let mut final_params = Vec::new();
-        for rt in [&naive_rt, &tiled_rt] {
+        for rt in [&naive_rt, &tiled_rt, &simd_rt] {
             let pipe = AePipeline::new(rt, tag)?;
             let mut ae = rt.load_init(&format!("ae_{tag}_init"))?;
             let mut adam = AdamState::zeros(ae.len());
@@ -127,27 +179,40 @@ fn main() -> fedae::error::Result<()> {
             step_ms.push(mean);
             final_params.push(ae);
         }
-        // Same math: after the identical step schedule both kernels hold
+        // Same math: after the identical step schedule every kernel holds
         // near-identical parameters (sign-flip coordinates of near-zero
         // gradients are bounded by the Adam step size; see
         // rust/tests/kernels.rs for the tight assertions).
         assert_params_agree(tag, &final_params[0], &final_params[1]);
+        assert_params_agree(tag, &final_params[0], &final_params[2]);
         let pipe = AePipeline::new(&tiled_rt, tag)?;
         // fwd + two backward GEMMs per layer ~ 6 flops per param per sample.
         let gflop = 6.0 * (pipe.n_params * pipe.train_batch) as f64 / 1e9;
+        let simd_gflops = gflop / (step_ms[2] / 1e3);
         rows.push(vec![
             tag.to_string(),
             pipe.n_params.to_string(),
             format!("{:.2}", step_ms[0]),
             format!("{:.2}", step_ms[1]),
-            format!("{:.2}", gflop / (step_ms[1] / 1e3)),
-            format!("{:.2}x", step_ms[0] / step_ms[1]),
+            format!("{:.2}", step_ms[2]),
+            format!("{simd_gflops:.2}"),
+            format!("{:.2}x", step_ms[0] / step_ms[2]),
         ]);
+        json_ae.push(obj(vec![
+            ("tag", Json::Str(tag.to_string())),
+            ("params", Json::Num(pipe.n_params as f64)),
+            ("naive_ms", Json::Num(step_ms[0])),
+            ("tiled_ms", Json::Num(step_ms[1])),
+            ("simd_ms", Json::Num(step_ms[2])),
+            ("simd_gflops", Json::Num(simd_gflops)),
+            ("speedup_simd_vs_naive", Json::Num(step_ms[0] / step_ms[2])),
+            ("speedup_simd_vs_tiled", Json::Num(step_ms[1] / step_ms[2])),
+        ]));
     }
     println!(
         "{}",
         print_table(
-            &["ae_train_step", "params", "naive ms", "tiled ms", "~GFLOP/s", "speedup"],
+            &["ae_train_step", "params", "naive ms", "tiled ms", "simd ms", "~GFLOP/s", "speedup"],
             &rows
         )
     );
@@ -158,7 +223,7 @@ fn main() -> fedae::error::Result<()> {
         let iters = if family == "cifar" { 8 } else { 20 };
         let mut step_ms = Vec::new();
         let mut final_params = Vec::new();
-        for rt in [&naive_rt, &tiled_rt] {
+        for rt in [&naive_rt, &tiled_rt, &simd_rt] {
             let ts = TrainStep::new(rt, family)?;
             let mut params = rt.load_init(&format!("{family}_params"))?;
             let x: Vec<f32> = (0..ts.batch * ts.input_dim)
@@ -176,17 +241,39 @@ fn main() -> fedae::error::Result<()> {
             final_params.push(params);
         }
         assert_params_agree(family, &final_params[0], &final_params[1]);
+        assert_params_agree(family, &final_params[0], &final_params[2]);
         rows.push(vec![
             family.to_string(),
             format!("{:.2}", step_ms[0]),
             format!("{:.2}", step_ms[1]),
-            format!("{:.2}x", step_ms[0] / step_ms[1]),
+            format!("{:.2}", step_ms[2]),
+            format!("{:.2}x", step_ms[0] / step_ms[2]),
         ]);
+        json_clf.push(obj(vec![
+            ("family", Json::Str(family.to_string())),
+            ("naive_ms", Json::Num(step_ms[0])),
+            ("tiled_ms", Json::Num(step_ms[1])),
+            ("simd_ms", Json::Num(step_ms[2])),
+            ("speedup_simd_vs_naive", Json::Num(step_ms[0] / step_ms[2])),
+        ]));
     }
     println!(
         "{}",
-        print_table(&["classifier_train_step", "naive ms", "tiled ms", "speedup"], &rows)
+        print_table(
+            &["classifier_train_step", "naive ms", "tiled ms", "simd ms", "speedup"],
+            &rows
+        )
     );
-    println!("(tiled results verified against naive within rounding tolerance)");
+    println!("(tiled and simd results verified against naive within rounding tolerance)");
+
+    let doc = obj(vec![
+        ("bench", Json::Str("kernels".to_string())),
+        ("simd_available", Json::Bool(simd)),
+        ("gemm", Json::Arr(json_gemm)),
+        ("ae_train_step", Json::Arr(json_ae)),
+        ("classifier_train_step", Json::Arr(json_clf)),
+    ]);
+    std::fs::write("BENCH_kernels.json", doc.to_string_pretty())?;
+    println!("machine-readable results written to BENCH_kernels.json");
     Ok(())
 }

@@ -3,14 +3,20 @@
 //! streaming path's peak buffered floats are bounded by the accumulator
 //! + in-flight model — independent of the participant count — while the
 //! batch paths scale with `participants x shard_size` or
-//! `participants x n`; outcomes stay bitwise identical).
+//! `participants x n`; outcomes stay bitwise identical), plus the
+//! decoder-level batched decode the coordinator uses for duplicate-cid
+//! rounds (ISSUE 9: `decompress_batch` runs B latents as one
+//! `[B, latent]` GEMM chain, bitwise-equal to B separate decodes).
 //!
 //! Per federation size this runs the same fixed-seed experiment three
 //! ways — `agg_path = "batch"` (sequential, sharded), `"stream"`
 //! (sequential), and `"stream"` with all-core shard workers — and
 //! reports per-round server aggregation time, peak buffered floats, and
-//! the decode meter readings (full/range decodes), all read from
+//! the decode meter readings (full/range/batched decodes), all read from
 //! `RoundOutcome::agg`, the same source of truth as the CLI log fields.
+//!
+//! Besides the tables, the run writes machine-readable results to
+//! `BENCH_streaming_agg.json` in the working directory.
 //!
 //! `cargo bench --bench bench_streaming_agg`
 //! (set `FEDAE_BENCH_MAX_COLLABS=1024` for the largest tier; default 256
@@ -19,7 +25,9 @@
 use fedae::config::{AggPath, AggregationConfig, CompressionConfig, EngineConfig, ExperimentConfig};
 use fedae::coordinator::{AggRoundStats, FlDriver, RoundOutcome};
 use fedae::metrics::print_table;
-use fedae::runtime::Runtime;
+use fedae::runtime::{AePipeline, Runtime};
+use fedae::util::bench_timings;
+use fedae::util::json::Json;
 
 /// MNIST classifier parameter count (fixed by the manifest).
 const N: u64 = 15_910;
@@ -76,6 +84,10 @@ fn run(
     })
 }
 
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
 fn main() -> fedae::error::Result<()> {
     let rt = Runtime::from_dir("artifacts")?;
     let workers = fedae::coordinator::ParallelRoundEngine::new(0).workers();
@@ -86,6 +98,8 @@ fn main() -> fedae::error::Result<()> {
     println!(
         "== streaming aggregation, synth-mnist (n={N}), shard_size={SHARD}, {workers} workers =="
     );
+    let mut json_agg = Vec::new();
+    let mut json_decode = Vec::new();
 
     let mut rows = Vec::new();
     for collabs in [64, 256, 1024] {
@@ -129,9 +143,11 @@ fn main() -> fedae::error::Result<()> {
         assert_eq!(b.agg.peak_floats, m * SHARD as u64);
         assert_eq!(s.agg.peak_floats, 2 * N);
         assert!(p.agg.peak_floats <= 4 * N);
-        // One full decode per update per round on the streaming path.
+        // One full decode per update per round on the streaming path;
+        // sync rounds never repeat a cid, so nothing groups into a batch.
         assert_eq!(s.agg.full_decodes, m * rounds as u64);
         assert_eq!(s.agg.range_decodes, 0);
+        assert_eq!(s.agg.batched_decodes, 0);
 
         for (label, r) in [("batch", &b), ("stream", &s), ("stream+par", &p)] {
             rows.push(vec![
@@ -141,7 +157,17 @@ fn main() -> fedae::error::Result<()> {
                 r.agg.peak_floats.to_string(),
                 (r.agg.full_decodes / rounds as u64).to_string(),
                 (r.agg.range_decodes / rounds as u64).to_string(),
+                (r.agg.batched_decodes / rounds as u64).to_string(),
             ]);
+            json_agg.push(obj(vec![
+                ("collaborators", Json::Num(collabs as f64)),
+                ("agg_path", Json::Str(label.to_string())),
+                ("agg_ms_per_round", Json::Num(r.agg_ms)),
+                ("peak_floats", Json::Num(r.agg.peak_floats as f64)),
+                ("full_decodes", Json::Num(r.agg.full_decodes as f64)),
+                ("range_decodes", Json::Num(r.agg.range_decodes as f64)),
+                ("batched_decodes", Json::Num(r.agg.batched_decodes as f64)),
+            ]));
         }
     }
     println!(
@@ -153,11 +179,72 @@ fn main() -> fedae::error::Result<()> {
                 "agg ms/round",
                 "peak buffered floats",
                 "full decodes/round",
-                "range decodes/round"
+                "range decodes/round",
+                "batched decodes/round"
             ],
             &rows
         )
     );
     println!("(outcomes verified bitwise-identical across all three paths)");
+
+    // --- decoder-level batched decode (what duplicate-cid rounds hit) -----
+    // B latents through the mnist AE decoder: one `[B, latent]` GEMM
+    // chain vs B single-row decodes. The batched path must be bitwise
+    // identical; the win is amortizing the decoder-weight traffic
+    // (32 -> 15910 is heavily memory-bound at m = 1).
+    let pipe = AePipeline::new(&rt, "mnist")?;
+    let ae = rt.load_init("ae_mnist_init")?;
+    let (_, dec) = pipe.split(&ae)?;
+    let mut rows = Vec::new();
+    for batch in [64usize, 256] {
+        let zs: Vec<Vec<f32>> = (0..batch)
+            .map(|r| {
+                (0..pipe.latent)
+                    .map(|i| ((r * pipe.latent + i) as f32 * 0.17).sin() * 0.3)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = zs.iter().map(|z| z.as_slice()).collect();
+        let mut looped = Vec::new();
+        let (loop_ms, _, _) = bench_timings(1, 5, || {
+            looped = zs.iter().map(|z| pipe.decode(&dec, z).unwrap()).collect();
+        });
+        let mut batched: Vec<Vec<f32>> = Vec::new();
+        let (batch_ms, _, _) = bench_timings(1, 5, || {
+            batched = pipe.decode_batch(&dec, &refs).unwrap();
+        });
+        assert_eq!(looped, batched, "batched decode diverged at B={batch}");
+        rows.push(vec![
+            batch.to_string(),
+            format!("{loop_ms:.2}"),
+            format!("{batch_ms:.2}"),
+            format!("{:.2}x", loop_ms / batch_ms),
+        ]);
+        json_decode.push(obj(vec![
+            ("batch", Json::Num(batch as f64)),
+            ("loop_ms", Json::Num(loop_ms)),
+            ("batched_ms", Json::Num(batch_ms)),
+            ("speedup", Json::Num(loop_ms / batch_ms)),
+        ]));
+    }
+    println!(
+        "{}",
+        print_table(
+            &["decode batch B", "looped ms", "batched ms", "speedup"],
+            &rows
+        )
+    );
+    println!("(batched rows verified bitwise-identical to per-latent decodes)");
+
+    let doc = obj(vec![
+        ("bench", Json::Str("streaming_agg".to_string())),
+        ("n", Json::Num(N as f64)),
+        ("shard_size", Json::Num(SHARD as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("aggregation", Json::Arr(json_agg)),
+        ("batched_decode", Json::Arr(json_decode)),
+    ]);
+    std::fs::write("BENCH_streaming_agg.json", doc.to_string_pretty())?;
+    println!("machine-readable results written to BENCH_streaming_agg.json");
     Ok(())
 }

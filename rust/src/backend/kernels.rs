@@ -31,26 +31,44 @@
 //!             └────────┴────────┘            depth in registers.
 //! ```
 //!
-//! The microkernel is plain chunked FMA over fixed-size slices — no
-//! platform intrinsics — written so LLVM autovectorizes the `NR`-wide inner
-//! loop; partial k-blocks accumulate into `C` and the epilogue fires on the
-//! final block only.
+//! The default (`tiled`) microkernel is plain chunked FMA over fixed-size
+//! slices — no platform intrinsics — written so LLVM autovectorizes the
+//! `NR`-wide inner loop; partial k-blocks accumulate into `C` and the
+//! epilogue fires on the final block only. The `simd` tier swaps in
+//! explicit x86-64 AVX2+FMA microkernels (two 8-lane `vfmadd` columns per
+//! `MR` row) for the packed core and the gemv fast path, selected at
+//! runtime by [`simd_available`] and falling back to the tiled microkernel
+//! bitwise-transparently on hosts without the features. Epilogues stay
+//! scalar in every tier — they are O(m·n) against the O(m·k·n) accumulate,
+//! and sharing the scalar writeback keeps the cross-tier parity arguments
+//! one-dimensional (only the accumulation chain differs).
 //!
 //! # Determinism
 //!
 //! Every kernel uses a **fixed, data-independent accumulation order**: each
 //! output element is a sum over `k` in strictly ascending index order
-//! (sequentially within a k-block, blocks in ascending order), there are no
-//! threads inside any kernel, and no accumulation order depends on buffer
-//! reuse state. Two consequences the test suites pin:
+//! (sequentially within a k-block, blocks in ascending order), and no
+//! accumulation order depends on buffer reuse state. Because each output
+//! *column* owns its whole chain, the optional intra-step column split
+//! ([`Exec::threads`], the `engine.step_parallelism` knob) hands disjoint
+//! `[lo, hi)` column ranges to scoped workers without touching any chain:
+//! tile and panel boundaries shift per worker, but a lane's accumulation
+//! never depends on which panel position computed it. Three consequences
+//! the test suites pin:
 //!
-//! * a tiled computation is bitwise reproducible across runs, processes and
-//!   worker threads — so the sequential-vs-parallel bitwise parity suites
+//! * a tiled or simd computation is bitwise reproducible across runs,
+//!   processes, worker threads *and any `Exec::threads` width* — so the
+//!   sequential-vs-parallel bitwise parity suites
 //!   (`rust/tests/parallel_round.rs`, `streaming_agg.rs`, `async_round.rs`)
-//!   hold unchanged under `backend.kernel = tiled`;
+//!   hold unchanged under `backend.kernel = tiled` and `= simd`;
 //! * tiled results differ from the naive reference loops only by float
-//!   reassociation at the tile boundary (different *rounding*, same math) —
-//!   `rust/tests/kernels.rs` pins a tight relative tolerance.
+//!   reassociation at the tile boundary, and simd results additionally by
+//!   fusing each multiply-add (different *rounding*, same math) —
+//!   `rust/tests/kernels.rs` pins a tight relative tolerance;
+//! * within the simd tier, a batch-1 gemv and one row of a batched GEMM
+//!   produce identical FMA chains whenever `k` fits a single k-block
+//!   (`k <= KC`) — the bitwise contract behind the server's batched
+//!   multi-update decode (`AePipeline::decode_batch`).
 //!
 //! The naive per-sample loops in [`super::native`] remain the reference
 //! oracle behind the `backend.kernel = naive` config knob (CLI `--kernel`),
@@ -75,7 +93,10 @@ pub const MR: usize = 4;
 /// Columns of `B`/`C` per microkernel tile (the autovectorized width).
 pub const NR: usize = 16;
 /// Depth (`k`) of a cache block: one packed `A` panel is `MR * KC` floats.
-const KC: usize = 256;
+/// Public because it is also the single-k-block bound under which a
+/// batch-1 gemv row is bitwise equal to one row of a blocked batched GEMM
+/// (the batched-decode contract; see `NativeBackend::execute_decode_batch`).
+pub const KC: usize = 256;
 /// Columns of `B` per cache block: one packed `B` block is `KC * NC` floats
 /// (~256 KiB), sized to stay cache-resident across the row sweep.
 const NC: usize = 256;
@@ -97,6 +118,11 @@ pub enum Kernel {
     /// Cache-blocked, register-tiled GEMM + im2col kernels (the default).
     #[default]
     Tiled,
+    /// The tiled layer with explicit x86-64 AVX2+FMA microkernels. Falls
+    /// back to the `tiled` microkernel at runtime when the host lacks the
+    /// features ([`simd_available`]); the fallback is reported via
+    /// `platform_name`, never an error.
+    Simd,
 }
 
 impl Kernel {
@@ -105,6 +131,7 @@ impl Kernel {
         match self {
             Kernel::Naive => "naive",
             Kernel::Tiled => "tiled",
+            Kernel::Simd => "simd",
         }
     }
 
@@ -114,14 +141,80 @@ impl Kernel {
         Ok(match s {
             "naive" => Kernel::Naive,
             "tiled" => Kernel::Tiled,
+            "simd" => Kernel::Simd,
             other => {
                 return Err(FedAeError::Config(format!(
-                    "unknown kernel `{other}` (expected naive|tiled)"
+                    "unknown kernel `{other}` (expected naive|tiled|simd)"
                 )))
             }
         })
     }
 }
+
+/// Whether this host can run the `Kernel::Simd` AVX2+FMA microkernels,
+/// detected once at runtime. Always `false` off x86-64. The `simd` config
+/// value stays valid either way — execution silently dispatches to the
+/// tiled microkernel and `platform_name` reports the fallback.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVAIL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *AVAIL.get_or_init(|| {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    false
+}
+
+/// Execution controls for one GEMM call chain, carried on [`PackBufs`] so
+/// the kernel entry points keep their signatures: the resolved simd
+/// dispatch decision and the intra-step column-parallelism width
+/// (`engine.step_parallelism`). Neither changes results — simd by the
+/// rounding-only argument in the module docs, threading bitwise (disjoint
+/// output columns, unchanged per-element chains).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Exec {
+    /// Run the AVX2+FMA microkernels. Only ever set when
+    /// [`simd_available`] returned true (see [`Exec::for_kernel`]).
+    pub simd: bool,
+    /// Worker threads splitting one GEMM's output columns (`1` =
+    /// everything inline on the calling thread).
+    pub threads: usize,
+}
+
+impl Default for Exec {
+    fn default() -> Self {
+        Exec { simd: false, threads: 1 }
+    }
+}
+
+impl Exec {
+    /// Resolve execution controls for a configured kernel: simd only when
+    /// `Kernel::Simd` is selected *and* the host supports it (the
+    /// transparent fallback), `threads` from `engine.step_parallelism`.
+    pub fn for_kernel(kernel: Kernel, step_parallelism: usize) -> Exec {
+        Exec {
+            simd: kernel == Kernel::Simd && simd_available(),
+            threads: step_parallelism.max(1),
+        }
+    }
+
+    /// How many workers to split `n` output columns across: the configured
+    /// width, bounded so every worker gets at least `min_cols` columns
+    /// (finer splits only add thread churn; the result is bitwise
+    /// independent of the choice).
+    fn column_workers(&self, n: usize, min_cols: usize) -> usize {
+        self.threads.min(n.div_ceil(min_cols)).max(1)
+    }
+}
+
+/// Minimum columns per worker before the blocked core splits (2 panels of
+/// packing + microkernel work each).
+const GEMM_PAR_MIN_COLS: usize = 2 * NR;
+/// Minimum columns per worker before the gemv fast path splits (an axpy
+/// sweep is cheap per column; only wide outputs amortize a thread).
+const GEMV_PAR_MIN_COLS: usize = 2048;
 
 // ---------------------------------------------------------------------------
 // Activations and epilogues
@@ -203,11 +296,16 @@ pub enum Epilogue<'a> {
 // Pack buffers + workspace
 // ---------------------------------------------------------------------------
 
-/// Reusable packing buffers for one GEMM call chain (A panels, B panels).
+/// Reusable packing buffers for one GEMM call chain (A panels, B panels),
+/// plus the [`Exec`] controls every call through these buffers runs with.
 #[derive(Debug, Default)]
 pub struct PackBufs {
     a: Vec<f32>,
     b: Vec<f32>,
+    /// Execution controls (simd dispatch + column-parallelism width) for
+    /// calls made with these buffers. `Default` is scalar/inline, so every
+    /// existing call site keeps its exact pre-simd behavior.
+    pub exec: Exec,
 }
 
 /// Thread-local scratch arena threaded through forward/backward/im2col so
@@ -313,9 +411,29 @@ pub fn gemm_nt(
     gemm_strided(packs, m, k, n, a, Stride { rs: k, cs: 1 }, b, Stride { rs: 1, cs: k }, c, ep);
 }
 
-/// The shared blocked core. Deterministic: for every `C[i, j]` the `k`
+/// A `*mut f32` that may cross scoped-thread boundaries. Soundness rests
+/// on the column-split contract: every worker writes only `C[i, j]` for
+/// `j` inside its own disjoint `[lo, hi)` column range.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Contiguous `[lo, hi)` column chunks, one per worker, balanced to ±1.
+fn column_chunks(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let per = n.div_ceil(workers);
+    (0..workers)
+        .map(|t| (t * per, ((t + 1) * per).min(n)))
+        .filter(|(lo, hi)| lo < hi)
+        .collect()
+}
+
+/// The shared strided entry: dispatches between the gemv fast path and
+/// the blocked core, splitting output columns across scoped workers when
+/// `packs.exec.threads > 1`. Deterministic: for every `C[i, j]` the `k`
 /// products accumulate in strictly ascending `k` order regardless of tile
-/// geometry, and nothing here spawns threads.
+/// geometry, microkernel tier, or how the column space is partitioned —
+/// so results are bitwise identical at any worker count.
 fn gemm_strided(
     packs: &mut PackBufs,
     m: usize,
@@ -333,14 +451,67 @@ fn gemm_strided(
     if m == 0 || n == 0 {
         return;
     }
+    let exec = packs.exec;
     // Single-row fast path (the batch-1 encode/decode shape): a plain
     // vectorized axpy sweep beats packing when there is no row reuse.
     if m == 1 && sa.cs == 1 && sb.cs == 1 {
-        gemv_row(a, b, k, n, sb.rs, c, ep);
+        let workers = exec.column_workers(n, GEMV_PAR_MIN_COLS);
+        let cptr = SendPtr(c.as_mut_ptr());
+        if workers > 1 {
+            std::thread::scope(|scope| {
+                for (lo, hi) in column_chunks(n, workers) {
+                    scope.spawn(move || gemv_range(a, b, k, sb.rs, cptr, lo, hi, &ep, exec.simd));
+                }
+            });
+        } else {
+            gemv_range(a, b, k, sb.rs, cptr, 0, n, &ep, exec.simd);
+        }
         return;
     }
-    for j0 in (0..n).step_by(NC) {
-        let nc = NC.min(n - j0);
+    let workers = exec.column_workers(n, GEMM_PAR_MIN_COLS);
+    let cptr = SendPtr(c.as_mut_ptr());
+    if workers > 1 {
+        std::thread::scope(|scope| {
+            for (lo, hi) in column_chunks(n, workers) {
+                scope.spawn(move || {
+                    // Fresh per-worker pack buffers: packing is scratch
+                    // state, never shared, never observable in results.
+                    let mut local = PackBufs {
+                        exec: Exec { threads: 1, ..exec },
+                        ..PackBufs::default()
+                    };
+                    gemm_block_range(&mut local, m, k, n, a, sa, b, sb, cptr, lo, hi, &ep);
+                });
+            }
+        });
+    } else {
+        gemm_block_range(packs, m, k, n, a, sa, b, sb, cptr, 0, n, &ep);
+    }
+}
+
+/// The blocked sweep over output columns `[lo, hi)` (absolute indices,
+/// row stride `ldc`). Writes only inside that column range — the
+/// column-split soundness contract. Per-element accumulation is identical
+/// for every `(lo, hi)` partition: tile/panel boundaries shift, but each
+/// `C[i, j]` still sums ascending within a k-block with k-blocks
+/// ascending, and a lane's chain does not depend on its panel position.
+fn gemm_block_range(
+    packs: &mut PackBufs,
+    m: usize,
+    k: usize,
+    ldc: usize,
+    a: &[f32],
+    sa: Stride,
+    b: &[f32],
+    sb: Stride,
+    c: SendPtr,
+    lo: usize,
+    hi: usize,
+    ep: &Epilogue<'_>,
+) {
+    let simd = packs.exec.simd;
+    for j0 in (lo..hi).step_by(NC) {
+        let nc = NC.min(hi - j0);
         let panels = nc.div_ceil(NR);
         for p0 in (0..k).step_by(KC) {
             let kc = KC.min(k - p0);
@@ -352,13 +523,29 @@ fn gemm_strided(
                 pack_a(&mut packs.a, a, sa, i0, mr, p0, kc);
                 for (q, bpanel) in packs.b.chunks_exact(kc * NR).enumerate() {
                     let jabs = j0 + q * NR;
-                    let nr_eff = NR.min(n - jabs);
-                    let acc = microkernel(&packs.a[..kc * MR], bpanel);
-                    writeback(c, n, i0, mr, jabs, nr_eff, &acc, first, last, &ep);
+                    let nr_eff = NR.min(hi - jabs);
+                    let acc = run_microkernel(simd, &packs.a[..kc * MR], bpanel);
+                    writeback(c, ldc, i0, mr, jabs, nr_eff, &acc, first, last, ep);
                 }
             }
         }
     }
+}
+
+/// Microkernel dispatch: the AVX2+FMA tile when `simd` is set (only ever
+/// true after [`simd_available`] confirmed the features), the
+/// autovectorized scalar tile otherwise — including every non-x86-64
+/// build, where the simd flag can never be set.
+#[inline]
+fn run_microkernel(simd: bool, apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: `Exec::for_kernel` sets `simd` only when
+        // `simd_available()` detected AVX2+FMA on this host.
+        return unsafe { avx2::microkernel(apanel, bpanel) };
+    }
+    let _ = simd;
+    microkernel(apanel, bpanel)
 }
 
 /// Pack an `MR x kc` panel of `A` rows `i0..i0+mr` (zero-padded to `MR`),
@@ -432,9 +619,12 @@ fn microkernel(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
 }
 
 /// Write an accumulated tile into `C`, accumulating across k-blocks and
-/// applying the epilogue on the last block only.
+/// applying the epilogue on the last block only. `C` arrives as a raw
+/// pointer so disjoint column ranges of one output can be written from
+/// different workers; this function only touches columns
+/// `jabs..jabs + nr_eff` of rows `i0..i0 + mr`.
 fn writeback(
-    c: &mut [f32],
+    c: SendPtr,
     ldc: usize,
     i0: usize,
     mr: usize,
@@ -447,7 +637,10 @@ fn writeback(
 ) {
     for (r, accr) in acc.iter().enumerate().take(mr) {
         let base = (i0 + r) * ldc + jabs;
-        let crow = &mut c[base..base + nr_eff];
+        // SAFETY: the caller owns columns `jabs..jabs + nr_eff` of every
+        // row (the column-split contract), and `i0 + r < m`, so the row
+        // segment is in bounds of the `m * ldc` output allocation.
+        let crow = unsafe { std::slice::from_raw_parts_mut(c.0.add(base), nr_eff) };
         if !last {
             if first {
                 crow.copy_from_slice(&accr[..nr_eff]);
@@ -486,39 +679,144 @@ fn writeback(
     }
 }
 
-/// Single-row GEMM (`m == 1`, contiguous operands): vectorized axpy over
-/// the rows of `B`, epilogue applied in place. Accumulation over `k` stays
-/// in ascending order.
-fn gemv_row(
+/// Single-row GEMM over output columns `[lo, hi)` (`m == 1`, contiguous
+/// operands): an axpy sweep over the rows of `B`, epilogue applied in
+/// place. Accumulation over `k` stays in ascending order per element.
+///
+/// The scalar path's zero-skip cannot change any bit for finite operands:
+/// the accumulator is never `-0.0` (it starts at `+0.0`, and under
+/// round-to-nearest both `+0.0 + ±0.0` and exact cancellation produce
+/// `+0.0`), so adding a `±0.0` product is always a no-op. The simd path
+/// has no skip — every term is one FMA, giving exactly the chain the
+/// blocked microkernel gives each lane (the batched-decode contract).
+fn gemv_range(
     a: &[f32],
     b: &[f32],
     k: usize,
-    n: usize,
     b_rs: usize,
-    c: &mut [f32],
-    ep: Epilogue<'_>,
+    c: SendPtr,
+    lo: usize,
+    hi: usize,
+    ep: &Epilogue<'_>,
+    simd: bool,
 ) {
-    let c = &mut c[..n];
+    let n = hi - lo;
+    // SAFETY: the caller owns columns `lo..hi` of the single output row.
+    let c = unsafe { std::slice::from_raw_parts_mut(c.0.add(lo), n) };
     c.fill(0.0);
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // SAFETY: `Exec::for_kernel` sets `simd` only when
+        // `simd_available()` detected AVX2+FMA on this host.
+        unsafe { avx2::gemv_accum(&a[..k], b, b_rs, lo, c) };
+        apply_row_epilogue(c, lo, ep);
+        return;
+    }
+    let _ = simd;
     for (p, &av) in a[..k].iter().enumerate() {
         if av == 0.0 {
             continue;
         }
-        let brow = &b[p * b_rs..p * b_rs + n];
+        let brow = &b[p * b_rs + lo..p * b_rs + hi];
         for (cv, &bv) in c.iter_mut().zip(brow) {
             *cv += av * bv;
         }
     }
-    match ep {
+    apply_row_epilogue(c, lo, ep);
+}
+
+/// Row epilogue shared by the gemv paths, reading bias/mask operands at
+/// absolute column offset `lo`. Scalar in every tier (see module docs).
+fn apply_row_epilogue(c: &mut [f32], lo: usize, ep: &Epilogue<'_>) {
+    let n = c.len();
+    match *ep {
         Epilogue::Store => {}
         Epilogue::BiasAct { bias, act } => {
-            for (cv, &bv) in c.iter_mut().zip(&bias[..n]) {
+            for (cv, &bv) in c.iter_mut().zip(&bias[lo..lo + n]) {
                 *cv = act.apply(*cv + bv);
             }
         }
         Epilogue::MaskDeriv { h, act } => {
-            for (cv, &hv) in c.iter_mut().zip(&h[..n]) {
+            for (cv, &hv) in c.iter_mut().zip(&h[lo..lo + n]) {
                 *cv = act.deriv_mask(*cv, hv);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA microkernels (the `Kernel::Simd` tier)
+// ---------------------------------------------------------------------------
+
+/// Explicit x86-64 AVX2+FMA inner loops. Everything here is reached only
+/// through the `simd` dispatch flag, which [`Exec::for_kernel`] sets only
+/// after [`simd_available`] confirmed both features at runtime; lane order
+/// is fixed and data-independent, so the tier is bitwise reproducible
+/// across runs and worker counts.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    // The kernels below hard-code NR as two 8-lane AVX registers.
+    const _: () = assert!(NR == 16);
+
+    /// The `MR x NR` register tile over the packed panels: per depth step,
+    /// broadcast each `A` lane and run two `vfmadd` columns. Each
+    /// `acc[r][j]` is a fused multiply-add chain over `p` in ascending
+    /// order — the determinism contract, with fused rounding.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support (`simd_available`).
+    /// Panel layout is guaranteed by `pack_a`/`pack_b`: `apanel` is
+    /// `kc * MR` floats, `bpanel` is `kc * NR` floats.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn microkernel(apanel: &[f32], bpanel: &[f32]) -> [[f32; NR]; MR] {
+        let kc = apanel.len() / MR;
+        debug_assert_eq!(bpanel.len(), kc * NR);
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for p in 0..kc {
+            let b0 = _mm256_loadu_ps(bpanel.as_ptr().add(p * NR));
+            let b1 = _mm256_loadu_ps(bpanel.as_ptr().add(p * NR + 8));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*apanel.get_unchecked(p * MR + r));
+                accr[0] = _mm256_fmadd_ps(av, b0, accr[0]);
+                accr[1] = _mm256_fmadd_ps(av, b1, accr[1]);
+            }
+        }
+        let mut out = [[0.0f32; NR]; MR];
+        for (accr, outr) in acc.iter().zip(out.iter_mut()) {
+            _mm256_storeu_ps(outr.as_mut_ptr(), accr[0]);
+            _mm256_storeu_ps(outr.as_mut_ptr().add(8), accr[1]);
+        }
+        out
+    }
+
+    /// `c[j] += Σ_p a[p] * b[p * b_rs + lo + j]` with one fused
+    /// multiply-add chain per element, `p` ascending, no zero-skip. Tail
+    /// columns use scalar `f32::mul_add`, which rounds identically to a
+    /// `vfmadd` lane — so every element of the row gets the same chain
+    /// the blocked microkernel would give it in a single k-block.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA support (`simd_available`), and
+    /// `b` must cover `p * b_rs + lo + c.len()` for every `p < a.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn gemv_accum(a: &[f32], b: &[f32], b_rs: usize, lo: usize, c: &mut [f32]) {
+        let n = c.len();
+        let lanes = n - n % 8;
+        for (p, &av) in a.iter().enumerate() {
+            let brow = &b[p * b_rs + lo..p * b_rs + lo + n];
+            let avv = _mm256_set1_ps(av);
+            let mut j = 0;
+            while j < lanes {
+                let cv = _mm256_loadu_ps(c.as_ptr().add(j));
+                let bv = _mm256_loadu_ps(brow.as_ptr().add(j));
+                _mm256_storeu_ps(c.as_mut_ptr().add(j), _mm256_fmadd_ps(avv, bv, cv));
+                j += 8;
+            }
+            for jj in lanes..n {
+                c[jj] = av.mul_add(brow[jj], c[jj]);
             }
         }
     }
@@ -990,10 +1288,108 @@ mod tests {
     fn kernel_knob_parses_and_names() {
         assert_eq!(Kernel::parse("naive").unwrap(), Kernel::Naive);
         assert_eq!(Kernel::parse("tiled").unwrap(), Kernel::Tiled);
+        assert_eq!(Kernel::parse("simd").unwrap(), Kernel::Simd);
         assert_eq!(Kernel::default(), Kernel::Tiled);
-        for k in [Kernel::Naive, Kernel::Tiled] {
+        for k in [Kernel::Naive, Kernel::Tiled, Kernel::Simd] {
             assert_eq!(Kernel::parse(k.name()).unwrap(), k);
         }
-        assert!(Kernel::parse("simd").is_err());
+        assert!(Kernel::parse("cuda").is_err());
+    }
+
+    #[test]
+    fn simd_matches_scalar_within_tolerance_on_ragged_shapes() {
+        if !simd_available() {
+            eprintln!("skipping: AVX2+FMA not available on this host");
+            return;
+        }
+        let mut scalar_packs = PackBufs::default();
+        let mut simd_packs = PackBufs {
+            exec: Exec { simd: true, threads: 1 },
+            ..PackBufs::default()
+        };
+        let mut rng = Rng::new(91);
+        for &(m, k, n) in &[
+            (1usize, 7usize, 5usize),
+            (1, 300, 4099), // gemv path, ragged simd tail
+            (3, 300, 17),
+            (5, 257, 33),
+            (13, 9, 270),
+        ] {
+            let a = crate::testing::prop::vec_f32(&mut rng, m * k, 1.0);
+            let b = crate::testing::prop::vec_f32(&mut rng, k * n, 1.0);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(&mut simd_packs, m, k, n, &a, &b, &mut c, Epilogue::Store);
+            let want = naive_mm(m, k, n, &a, |i, p| i * k + p, &b, |p, j| p * n + j);
+            assert_rel_close(&c, &want, 1e-4, "simd nn");
+            let mut scalar = vec![0.0f32; m * n];
+            gemm_nn(&mut scalar_packs, m, k, n, &a, &b, &mut scalar, Epilogue::Store);
+            for (i, (s, v)) in c.iter().zip(&scalar).enumerate() {
+                let diff = (s - v).abs();
+                assert!(diff <= 1e-4 * (1.0 + v.abs()), "simd vs tiled at {i}: {s} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn column_split_threads_are_bitwise_equal_to_inline() {
+        let mut rng = Rng::new(52);
+        // Shapes past both parallel thresholds so the split actually runs.
+        let cases = [(6usize, 300usize, 4 * GEMM_PAR_MIN_COLS + 7), (1, 300, 2 * GEMV_PAR_MIN_COLS + 9)];
+        for simd in [false, simd_available()] {
+            for &(m, k, n) in &cases {
+                let a = crate::testing::prop::vec_f32(&mut rng, m * k, 1.0);
+                let b = crate::testing::prop::vec_f32(&mut rng, k * n, 1.0);
+                let bias = crate::testing::prop::vec_f32(&mut rng, n, 1.0);
+                let run = |threads: usize| {
+                    let mut packs = PackBufs {
+                        exec: Exec { simd, threads },
+                        ..PackBufs::default()
+                    };
+                    let mut c = vec![0.0f32; m * n];
+                    gemm_nn(
+                        &mut packs,
+                        m,
+                        k,
+                        n,
+                        &a,
+                        &b,
+                        &mut c,
+                        Epilogue::BiasAct { bias: &bias, act: Act::Relu },
+                    );
+                    c
+                };
+                let inline = run(1);
+                for threads in [2, 3, 4] {
+                    assert_eq!(inline, run(threads), "simd={simd} m={m} n={n} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rows_match_per_row_gemv_bitwise_within_one_k_block() {
+        // The batched-decode contract: for k <= KC, row i of a batched
+        // [batch, k]x[k, n] GEMM is bitwise the gemv of that row alone.
+        let mut rng = Rng::new(68);
+        let (batch, n) = (7usize, 333usize);
+        for simd in [false, simd_available()] {
+            for &k in &[8usize, 32, 128, KC] {
+                let zs = crate::testing::prop::vec_f32(&mut rng, batch * k, 1.0);
+                let w = crate::testing::prop::vec_f32(&mut rng, k * n, 1.0);
+                let bias = crate::testing::prop::vec_f32(&mut rng, n, 1.0);
+                let ep = || Epilogue::BiasAct { bias: &bias, act: Act::Tanh };
+                let mut packs = PackBufs {
+                    exec: Exec { simd, threads: 1 },
+                    ..PackBufs::default()
+                };
+                let mut batched = vec![0.0f32; batch * n];
+                gemm_nn(&mut packs, batch, k, n, &zs, &w, &mut batched, ep());
+                for i in 0..batch {
+                    let mut row = vec![0.0f32; n];
+                    gemm_nn(&mut packs, 1, k, n, &zs[i * k..(i + 1) * k], &w, &mut row, ep());
+                    assert_eq!(&batched[i * n..(i + 1) * n], &row[..], "simd={simd} k={k} row {i}");
+                }
+            }
+        }
     }
 }

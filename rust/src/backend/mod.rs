@@ -10,9 +10,9 @@
 //!   and the paper's funnel-autoencoder train/encode/decode/roundtrip with
 //!   Adam, all over the [`crate::tensor`] flat-vector substrate. Builds and
 //!   runs everywhere with zero non-std dependencies. Its training hot path
-//!   runs on the cache-blocked tiled GEMM layer in [`kernels`] by default,
-//!   with the naive reference loops selectable via `backend.kernel =
-//!   naive` ([`Kernel`]).
+//!   runs on the cache-blocked tiled GEMM layer in [`kernels`] by default;
+//!   `backend.kernel` ([`Kernel`]) selects the naive reference loops or
+//!   the AVX2+FMA `simd` tier (runtime-detected, falls back to tiled).
 //! * `XlaBackend` (`--features xla`) — the compiled-HLO fast path: loads
 //!   the AOT artifacts emitted by `python -m compile.aot` and executes them
 //!   through the PJRT C API, with the Pallas fused-dense kernel on the AE's
@@ -65,5 +65,42 @@ pub trait Backend: Send + Sync {
     fn warmup(&self, entry: &ArtifactEntry) -> Result<()> {
         let _ = entry;
         Ok(())
+    }
+
+    /// Run a `decode_*` artifact over `batch` latent vectors packed
+    /// row-major into `zs` (`batch * latent` floats), returning the
+    /// reconstructions concatenated in the same order.
+    ///
+    /// The default simply loops [`Backend::execute`] per row, so every
+    /// backend supports the call; [`NativeBackend`] overrides it to run
+    /// all rows as one GEMM chain per decoder layer (bitwise-equal to the
+    /// loop — the server's batched-decode contract).
+    fn execute_decode_batch(
+        &self,
+        entry: &ArtifactEntry,
+        dec_params: &[f32],
+        zs: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        if batch == 0 || zs.len() % batch != 0 {
+            return Err(crate::error::FedAeError::Artifact(format!(
+                "`{}`: batched z has {} floats for batch {batch}",
+                entry.name,
+                zs.len()
+            )));
+        }
+        let latent = zs.len() / batch;
+        let mut out = Vec::new();
+        for row in zs.chunks(latent) {
+            let mut res = self.execute(entry, &[dec_params, row])?;
+            if res.is_empty() {
+                return Err(crate::error::FedAeError::Artifact(format!(
+                    "`{}`: decode produced no outputs",
+                    entry.name
+                )));
+            }
+            out.extend(res.remove(0));
+        }
+        Ok(out)
     }
 }

@@ -15,12 +15,16 @@
 //! hidden activations; autoencoders use tanh on every hidden layer and a
 //! linear reconstruction (paper Eq. 1–3).
 //!
-//! Compute runs on one of two kernel implementations selected by
+//! Compute runs on one of three kernel implementations selected by
 //! [`Kernel`] (`backend.kernel` config knob / `--kernel` CLI flag): the
 //! cache-blocked tiled GEMM + im2col layer in [`super::kernels`] (the
-//! default), or the naive per-sample loops kept in this module as the
-//! reference oracle. Both are deterministic; `rust/tests/kernels.rs` pins
-//! their agreement.
+//! default), the `simd` tier layering AVX2+FMA microkernels over the same
+//! blocking (runtime-detected; transparently runs as `tiled` on
+//! non-supporting CPUs, reported via `platform_name`), or the naive
+//! per-sample loops kept in this module as the reference oracle. All are
+//! deterministic; `rust/tests/kernels.rs` pins their agreement. An
+//! optional `engine.step_parallelism` splits one step's GEMM output
+//! columns across threads (bitwise-neutral; see the kernels module docs).
 
 use std::collections::BTreeMap;
 
@@ -59,6 +63,7 @@ const CNN_PARAMS: usize = 51_082;
 pub struct NativeBackend {
     manifest: Manifest,
     kernel: Kernel,
+    step_parallelism: usize,
 }
 
 impl std::fmt::Debug for NativeBackend {
@@ -67,6 +72,7 @@ impl std::fmt::Debug for NativeBackend {
             .field("models", &self.manifest.models.len())
             .field("autoencoders", &self.manifest.autoencoders.len())
             .field("kernel", &self.kernel)
+            .field("step_parallelism", &self.step_parallelism)
             .finish()
     }
 }
@@ -81,18 +87,48 @@ impl NativeBackend {
     /// A native backend pinned to an explicit kernel implementation
     /// (`backend.kernel` config knob; `naive` is the reference oracle).
     pub fn with_kernel(manifest: Manifest, kernel: Kernel) -> NativeBackend {
-        NativeBackend { manifest, kernel }
+        NativeBackend {
+            manifest,
+            kernel,
+            step_parallelism: 1,
+        }
+    }
+
+    /// Split each step's GEMM output columns across up to `threads` worker
+    /// threads (`engine.step_parallelism`; bitwise-neutral, no-op for the
+    /// naive kernel and for 0/1).
+    pub fn with_step_parallelism(mut self, threads: usize) -> NativeBackend {
+        self.step_parallelism = threads.max(1);
+        self
     }
 
     /// Which kernel implementation this backend runs.
     pub fn kernel(&self) -> Kernel {
         self.kernel
     }
+
+    /// Execution policy derived from the configured kernel + runtime CPU
+    /// feature detection (what blocked-kernel calls actually run with).
+    fn exec(&self) -> kernels::Exec {
+        kernels::Exec::for_kernel(self.kernel, self.step_parallelism)
+    }
+
+    /// Configured kernel plus the runtime-detected dispatch, for
+    /// `platform_name`: `simd` reports `simd(avx2+fma)` where the AVX2
+    /// microkernels actually run and `simd→tiled(fallback)` where they
+    /// can't.
+    fn kernel_desc(&self) -> String {
+        match self.kernel {
+            Kernel::Simd if kernels::simd_available() => "simd(avx2+fma)".to_string(),
+            Kernel::Simd => "simd→tiled(fallback)".to_string(),
+            k => k.name().to_string(),
+        }
+    }
 }
 
 impl Backend for NativeBackend {
     fn platform_name(&self) -> String {
-        format!("native-cpu (pure rust, {} kernels)", self.kernel.name())
+        format!("native-cpu (pure rust, {} kernels)", self.kernel_desc())
     }
 
     fn execute(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
@@ -122,6 +158,66 @@ impl Backend for NativeBackend {
         Err(FedAeError::Artifact(format!(
             "native backend has no implementation for artifact `{name}`"
         )))
+    }
+
+    /// Batched decoder pass: all `batch` latent rows run as one
+    /// `[batch, latent] x [latent, ...]` GEMM chain per layer instead of
+    /// `batch` gemv calls.
+    ///
+    /// Bitwise contract: row `i` of the batched output equals the
+    /// single-row decode of `zs[i]` on the same kernel. For the blocked
+    /// kernels this holds whenever every decoder layer's fan-in fits one
+    /// k-block (`<= kernels::KC`, true for every shipped AE: latents and
+    /// funnel widths are at most 128); a wider decoder falls back to the
+    /// per-row loop rather than risk a different accumulation split.
+    fn execute_decode_batch(
+        &self,
+        entry: &ArtifactEntry,
+        dec_params: &[f32],
+        zs: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let name = entry.name.as_str();
+        let Some(tag) = name.strip_prefix("decode_") else {
+            return Err(FedAeError::Artifact(format!(
+                "execute_decode_batch: `{name}` is not a decode artifact"
+            )));
+        };
+        let spec = self.ae_spec(tag)?;
+        let acts = spec.acts();
+        let dec_dims = &spec.dims[spec.latent_index..];
+        let dec_acts = &acts[spec.latent_index..];
+        let latent = dec_dims[0];
+        if zs.len() != batch * latent {
+            return Err(FedAeError::Artifact(format!(
+                "`{name}`: batched z has {} floats, want {batch} x {latent}",
+                zs.len()
+            )));
+        }
+        if dec_dims[..dec_dims.len() - 1].iter().all(|&d| d <= kernels::KC) {
+            return Ok(mlp_last_output(
+                self.kernel,
+                self.exec(),
+                dec_params,
+                dec_dims,
+                dec_acts,
+                zs,
+                batch,
+            ));
+        }
+        let mut out = Vec::with_capacity(batch * dec_dims[dec_dims.len() - 1]);
+        for row in zs.chunks(latent) {
+            out.extend(mlp_last_output(
+                self.kernel,
+                self.exec(),
+                dec_params,
+                dec_dims,
+                dec_acts,
+                row,
+                1,
+            ));
+        }
+        Ok(out)
     }
 }
 
@@ -376,7 +472,8 @@ impl NativeBackend {
         let batch = m.train_batch;
         let lr = lr.first().copied().unwrap_or(0.0);
         let spec = classifier_spec(family, m)?;
-        let (loss, _acc, grad) = classifier_loss_grad(&spec, self.kernel, params, x, y, batch)?;
+        let (loss, _acc, grad) =
+            classifier_loss_grad(&spec, self.kernel, self.exec(), params, x, y, batch)?;
         let mut new_params = params.to_vec();
         tensor::axpy(&mut new_params, -lr, &grad);
         Ok(vec![new_params, vec![loss]])
@@ -387,7 +484,7 @@ impl NativeBackend {
         let m = self.manifest.model(family)?;
         let batch = m.eval_batch;
         let spec = classifier_spec(family, m)?;
-        let logits = classifier_logits(&spec, self.kernel, params, x, batch)?;
+        let logits = classifier_logits(&spec, self.kernel, self.exec(), params, x, batch)?;
         let (loss, acc, _) = softmax_xent(&logits, y, batch, m.classes);
         Ok(vec![vec![loss], vec![acc]])
     }
@@ -396,21 +493,23 @@ impl NativeBackend {
 fn classifier_logits(
     spec: &ClassifierSpec,
     kernel: Kernel,
+    exec: kernels::Exec,
     params: &[f32],
     x: &[f32],
     batch: usize,
 ) -> Result<Vec<f32>> {
     match spec {
         ClassifierSpec::Mlp { dims } => {
-            Ok(mlp_last_output(kernel, params, dims, &[Act::Relu, Act::Linear], x, batch))
+            Ok(mlp_last_output(kernel, exec, params, dims, &[Act::Relu, Act::Linear], x, batch))
         }
-        ClassifierSpec::CifarCnn => Ok(cnn_forward(kernel, params, x, batch).logits),
+        ClassifierSpec::CifarCnn => Ok(cnn_forward(kernel, exec, params, x, batch).logits),
     }
 }
 
 fn classifier_loss_grad(
     spec: &ClassifierSpec,
     kernel: Kernel,
+    exec: kernels::Exec,
     params: &[f32],
     x: &[f32],
     y: &[f32],
@@ -427,7 +526,8 @@ fn classifier_loss_grad(
                     let (grad, _) = mlp_backward(params, dims, &acts, x, batch, &outs, dlogits);
                     Ok((loss, acc, grad))
                 }
-                Kernel::Tiled => kernels::with_ws(|ws| {
+                Kernel::Tiled | Kernel::Simd => kernels::with_ws(|ws| {
+                    ws.packs.exec = exec;
                     kernels::mlp_forward_ws(ws, params, dims, &acts, x, batch);
                     let (loss, acc, dlogits) =
                         softmax_xent(ws.layer(acts.len() - 1), y, batch, dims[2]);
@@ -440,7 +540,7 @@ fn classifier_loss_grad(
             }
         }
         ClassifierSpec::CifarCnn => {
-            let (loss, acc, grad) = cnn_loss_grad(kernel, params, x, y, batch);
+            let (loss, acc, grad) = cnn_loss_grad(kernel, exec, params, x, y, batch);
             Ok((loss, acc, grad))
         }
     }
@@ -451,6 +551,7 @@ fn classifier_loss_grad(
 /// tiled workspace instead of being materialized).
 fn mlp_last_output(
     kernel: Kernel,
+    exec: kernels::Exec,
     params: &[f32],
     dims: &[usize],
     acts: &[Act],
@@ -462,7 +563,8 @@ fn mlp_last_output(
             .into_iter()
             .next_back()
             .unwrap(),
-        Kernel::Tiled => kernels::with_ws(|ws| {
+        Kernel::Tiled | Kernel::Simd => kernels::with_ws(|ws| {
+            ws.packs.exec = exec;
             kernels::mlp_forward_ws(ws, params, dims, acts, x, batch);
             ws.layer(acts.len() - 1).to_vec()
         }),
@@ -648,10 +750,13 @@ fn unpool_masked(arg: &[u32], dsmall: &[f32], act_post: &[f32]) -> Vec<f32> {
     d
 }
 
-fn cnn_forward(kernel: Kernel, params: &[f32], x: &[f32], batch: usize) -> CnnCache {
+fn cnn_forward(kernel: Kernel, exec: kernels::Exec, params: &[f32], x: &[f32], batch: usize) -> CnnCache {
     match kernel {
         Kernel::Naive => cnn_forward_naive(params, x, batch),
-        Kernel::Tiled => kernels::with_ws(|ws| cnn_forward_tiled(ws, params, x, batch)),
+        Kernel::Tiled | Kernel::Simd => kernels::with_ws(|ws| {
+            ws.packs.exec = exec;
+            cnn_forward_tiled(ws, params, x, batch)
+        }),
     }
 }
 
@@ -742,6 +847,7 @@ fn cnn_forward_tiled(
 
 fn cnn_loss_grad(
     kernel: Kernel,
+    exec: kernels::Exec,
     params: &[f32],
     x: &[f32],
     y: &[f32],
@@ -749,7 +855,10 @@ fn cnn_loss_grad(
 ) -> (f32, f32, Vec<f32>) {
     match kernel {
         Kernel::Naive => cnn_loss_grad_naive(params, x, y, batch),
-        Kernel::Tiled => kernels::with_ws(|ws| cnn_loss_grad_tiled(ws, params, x, y, batch)),
+        Kernel::Tiled | Kernel::Simd => kernels::with_ws(|ws| {
+            ws.packs.exec = exec;
+            cnn_loss_grad_tiled(ws, params, x, y, batch)
+        }),
     }
 }
 
@@ -957,7 +1066,8 @@ impl NativeBackend {
                 let (new_p, new_m, new_v) = adam_from(params, m_in, v_in, &grad, t);
                 (mse, acc, new_p, new_m, new_v)
             }
-            Kernel::Tiled => kernels::with_ws(|ws| {
+            Kernel::Tiled | Kernel::Simd => kernels::with_ws(|ws| {
+                ws.packs.exec = self.exec();
                 kernels::mlp_forward_ws(ws, params, &spec.dims, &acts, batch_x, batch);
                 let mut dlast = std::mem::take(&mut ws.dlast);
                 let (mse, acc);
@@ -989,7 +1099,7 @@ impl NativeBackend {
         let acts = spec.acts();
         let enc_dims = &spec.dims[..=spec.latent_index];
         let enc_acts = &acts[..spec.latent_index];
-        Ok(vec![mlp_last_output(self.kernel, enc_params, enc_dims, enc_acts, w, 1)])
+        Ok(vec![mlp_last_output(self.kernel, self.exec(), enc_params, enc_dims, enc_acts, w, 1)])
     }
 
     /// Decoder half: `[dec_params, z] -> [w]`.
@@ -999,7 +1109,7 @@ impl NativeBackend {
         let acts = spec.acts();
         let dec_dims = &spec.dims[spec.latent_index..];
         let dec_acts = &acts[spec.latent_index..];
-        Ok(vec![mlp_last_output(self.kernel, dec_params, dec_dims, dec_acts, z, 1)])
+        Ok(vec![mlp_last_output(self.kernel, self.exec(), dec_params, dec_dims, dec_acts, z, 1)])
     }
 
     /// Whole-AE roundtrip: `[ae_params, w] -> [recon, mse, acc]`.
@@ -1007,7 +1117,7 @@ impl NativeBackend {
         let [ae_params, w] = expect_inputs::<2>(tag, inputs)?;
         let spec = self.ae_spec(tag)?;
         let acts = spec.acts();
-        let recon = mlp_last_output(self.kernel, ae_params, &spec.dims, &acts, w, 1);
+        let recon = mlp_last_output(self.kernel, self.exec(), ae_params, &spec.dims, &acts, w, 1);
         let mse = tensor::mse(&recon, w) as f32;
         let acc = tensor::within_tol_fraction(&recon, w, AE_ACC_TOL) as f32;
         Ok(vec![recon, vec![mse], vec![acc]])
@@ -1378,10 +1488,12 @@ mod tests {
             y[b * 10 + (b * 3) % 10] = 1.0;
         }
         let spec = ClassifierSpec::Mlp { dims };
-        for kernel in [Kernel::Naive, Kernel::Tiled] {
-            let (_, _, grad) = classifier_loss_grad(&spec, kernel, &params, &x, &y, batch).unwrap();
+        for kernel in [Kernel::Naive, Kernel::Tiled, Kernel::Simd] {
+            let exec = kernels::Exec::for_kernel(kernel, 1);
+            let (_, _, grad) =
+                classifier_loss_grad(&spec, kernel, exec, &params, &x, &y, batch).unwrap();
             let loss_at = |p: &[f32]| {
-                let logits = classifier_logits(&spec, kernel, p, &x, batch).unwrap();
+                let logits = classifier_logits(&spec, kernel, exec, p, &x, batch).unwrap();
                 softmax_xent(&logits, &y, batch, 10).0 as f64
             };
             let eps = 1e-3f32;
@@ -1451,10 +1563,11 @@ mod tests {
             .collect();
         let mut y = vec![0.0f32; batch * 10];
         y[3] = 1.0;
-        for kernel in [Kernel::Naive, Kernel::Tiled] {
-            let (_, _, grad) = cnn_loss_grad(kernel, &params, &x, &y, batch);
+        for kernel in [Kernel::Naive, Kernel::Tiled, Kernel::Simd] {
+            let exec = kernels::Exec::for_kernel(kernel, 1);
+            let (_, _, grad) = cnn_loss_grad(kernel, exec, &params, &x, &y, batch);
             let loss_at = |p: &[f32]| {
-                let c = cnn_forward(kernel, p, &x, batch);
+                let c = cnn_forward(kernel, exec, p, &x, batch);
                 softmax_xent(&c.logits, &y, batch, 10).0 as f64
             };
             let eps = 3e-3f32;
@@ -1504,6 +1617,32 @@ mod tests {
             first.unwrap()
         );
         assert!(tensor::check_finite(&params).is_ok());
+    }
+
+    #[test]
+    fn batched_decode_matches_per_row_decode_bitwise() {
+        let m = builtin_manifest();
+        let ae = m.ae("toy").unwrap().clone();
+        let params = synth_init(&m, "ae_toy_init").unwrap();
+        let dec = &params[ae.encoder_params..];
+        let mut rng = Rng::new(11);
+        let batch = 5usize;
+        let zs: Vec<f32> = (0..batch * ae.latent)
+            .map(|_| rng.uniform_in(-1.0, 1.0))
+            .collect();
+        let entry = entry_for("decode_toy");
+        for kernel in [Kernel::Naive, Kernel::Tiled, Kernel::Simd] {
+            let be = NativeBackend::with_kernel(builtin_manifest(), kernel);
+            let batched = be.execute_decode_batch(&entry, dec, &zs, batch).unwrap();
+            assert_eq!(batched.len(), batch * 172);
+            for (i, z) in zs.chunks(ae.latent).enumerate() {
+                let row = be.execute(&entry, &[dec, z]).unwrap().remove(0);
+                assert_eq!(&batched[i * 172..(i + 1) * 172], &row[..], "{kernel:?} row {i}");
+            }
+        }
+        let be = NativeBackend::new(builtin_manifest());
+        assert!(be.execute_decode_batch(&entry_for("encode_toy"), &[], &[], 0).is_err());
+        assert!(be.execute_decode_batch(&entry, dec, &zs[1..], batch).is_err());
     }
 
     #[test]

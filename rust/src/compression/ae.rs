@@ -16,7 +16,11 @@
 //! the decode meter. That is exactly why the coordinator's streaming
 //! aggregation path matters for the AE: the linear aggregators decode
 //! each update once per round instead of once per coordinate shard
-//! (scheme table in [`crate::aggregation::sharded`]).
+//! (scheme table in [`crate::aggregation::sharded`]). When several
+//! updates share this decoder, [`UpdateCompressor::decompress_batch`]
+//! runs them as one `[B, latent]` GEMM chain per decoder layer —
+//! bitwise-equal to B independent decodes, but amortizing the decoder
+//! weight traffic across rows.
 
 use super::{CompressedUpdate, UpdateCompressor};
 use crate::error::{FedAeError, Result};
@@ -164,6 +168,38 @@ impl<'rt> UpdateCompressor for AeCompressor<'rt> {
             }
             other => Err(FedAeError::Compression(format!("AE got {other:?}"))),
         }
+    }
+
+    fn decompress_batch(&mut self, updates: &[&CompressedUpdate]) -> Result<Vec<Vec<f32>>> {
+        let dec = self.dec_params.as_ref().ok_or_else(|| {
+            FedAeError::Compression(format!(
+                "AE compressor role {:?} has no decoder half",
+                self.role
+            ))
+        })?;
+        let mut zs: Vec<&[f32]> = Vec::with_capacity(updates.len());
+        for update in updates {
+            match update {
+                CompressedUpdate::Latent { z, n } => {
+                    if z.len() != self.pipeline.latent {
+                        return Err(FedAeError::Compression(format!(
+                            "latent size {} != AE latent {}",
+                            z.len(),
+                            self.pipeline.latent
+                        )));
+                    }
+                    if *n as usize != self.pipeline.input_dim {
+                        return Err(FedAeError::Compression(format!(
+                            "latent encodes {}-dim update, AE reconstructs {}",
+                            n, self.pipeline.input_dim
+                        )));
+                    }
+                    zs.push(z);
+                }
+                other => return Err(FedAeError::Compression(format!("AE got {other:?}"))),
+            }
+        }
+        self.pipeline.decode_batch(dec, &zs)
     }
 
     fn nominal_ratio(&self, n: usize) -> Option<f64> {

@@ -336,6 +336,17 @@ pub trait UpdateCompressor: Send {
     /// Reconstruct a full vector from the compressed form (server side).
     fn decompress(&mut self, update: &CompressedUpdate) -> Result<Vec<f32>>;
 
+    /// Reconstruct several updates at once, in order. Semantically exactly
+    /// a loop of [`UpdateCompressor::decompress`] — and the default *is*
+    /// that loop, bitwise — but schemes whose decode is a dense compute
+    /// pass can amortize it: [`ae::AeCompressor`] overrides this to run
+    /// all B latents as one `[B, latent]` GEMM chain per decoder layer
+    /// (bitwise-equal by the kernel layer's batched-decode contract).
+    /// Each update still counts as one logical decode in the meter.
+    fn decompress_batch(&mut self, updates: &[&CompressedUpdate]) -> Result<Vec<Vec<f32>>> {
+        updates.iter().map(|u| self.decompress(u)).collect()
+    }
+
     /// Reconstruct only the coordinates in `range` of the full vector —
     /// the seam the sharded aggregation path streams through
     /// ([`crate::aggregation::ShardedAggregator`]): the server never has
@@ -406,6 +417,11 @@ pub struct DecodeStats {
     /// Total floats reconstructed (full decodes count their logical
     /// dimensionality, range decodes their range length).
     pub decoded_floats: u64,
+    /// How many of the full decodes ran inside a batched
+    /// [`UpdateCompressor::decompress_batch`] call of two or more updates
+    /// (each still bills one `full_decode`; this tracks how much of the
+    /// decode work was amortized).
+    pub batched_decodes: u64,
 }
 
 impl DecodeStats {
@@ -419,6 +435,7 @@ impl DecodeStats {
         self.full_decodes += other.full_decodes;
         self.range_decodes += other.range_decodes;
         self.decoded_floats += other.decoded_floats;
+        self.batched_decodes += other.batched_decodes;
     }
 }
 
@@ -478,6 +495,16 @@ impl UpdateCompressor for MeteredDecoder<'_> {
         self.stats.full_decodes += 1;
         self.stats.decoded_floats += out.len() as u64;
         Ok(out)
+    }
+
+    fn decompress_batch(&mut self, updates: &[&CompressedUpdate]) -> Result<Vec<Vec<f32>>> {
+        let outs = self.inner.decompress_batch(updates)?;
+        self.stats.full_decodes += outs.len() as u64;
+        self.stats.decoded_floats += outs.iter().map(|o| o.len() as u64).sum::<u64>();
+        if outs.len() >= 2 {
+            self.stats.batched_decodes += outs.len() as u64;
+        }
+        Ok(outs)
     }
 
     fn decompress_range(
@@ -687,15 +714,34 @@ mod tests {
             full_decodes: 2,
             range_decodes: 3,
             decoded_floats: 10,
+            batched_decodes: 2,
         });
         merged.merge(DecodeStats {
             full_decodes: 1,
             range_decodes: 0,
             decoded_floats: 5,
+            batched_decodes: 0,
         });
         assert_eq!(merged.full_decodes, 3);
         assert_eq!(merged.range_decodes, 3);
         assert_eq!(merged.decoded_floats, 15);
+        assert_eq!(merged.batched_decodes, 2);
+    }
+
+    #[test]
+    fn metered_decoder_bills_batched_decodes() {
+        let mut d = MeteredDecoder::new(Box::new(identity::IdentityCompressor::new()));
+        let a = CompressedUpdate::Raw { values: vec![1.0, 2.0] };
+        let b = CompressedUpdate::Raw { values: vec![3.0, 4.0] };
+        // A batch of one is a plain decode: no batching to credit.
+        assert_eq!(d.decompress_batch(&[&a]).unwrap(), vec![vec![1.0, 2.0]]);
+        let s = d.take_stats();
+        assert_eq!((s.full_decodes, s.batched_decodes, s.decoded_floats), (1, 0, 2));
+        // A batch of two bills two full decodes AND two batched ones.
+        let outs = d.decompress_batch(&[&a, &b]).unwrap();
+        assert_eq!(outs, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let s = d.take_stats();
+        assert_eq!((s.full_decodes, s.batched_decodes, s.decoded_floats), (2, 2, 4));
     }
 
     #[test]

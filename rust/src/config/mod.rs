@@ -404,6 +404,12 @@ pub struct EngineConfig {
     /// `stream` (see [`AggPath`]). Changes decode counts / memory /
     /// wall-clock only, never results.
     pub agg_path: AggPath,
+    /// Worker threads *inside* one step's GEMMs (the N-dimension splits
+    /// into disjoint column ranges, so results are bitwise-identical):
+    /// `0`/`1` = inline (the default), `k` = up to `k` threads. Useful
+    /// when small federations leave `parallelism` fan-out starved for
+    /// work; no-op on the `naive` kernel.
+    pub step_parallelism: usize,
 }
 
 impl Default for EngineConfig {
@@ -418,6 +424,7 @@ impl Default for EngineConfig {
             straggler_log_std: 0.0,
             jitter_ms: 0.0,
             agg_path: AggPath::Auto,
+            step_parallelism: 1,
         }
     }
 }
@@ -425,16 +432,18 @@ impl Default for EngineConfig {
 /// Compute-backend selection knobs.
 ///
 /// `kernel` picks the native backend's compute-kernel implementation
-/// ([`Kernel`]): the cache-blocked `tiled` GEMM layer (default) or the
-/// `naive` per-sample reference loops kept as the correctness oracle.
+/// ([`Kernel`]): the cache-blocked `tiled` GEMM layer (default), the
+/// `simd` tier running AVX2+FMA microkernels over the same blocking
+/// (runtime-detected, transparently falls back to tiled elsewhere), or
+/// the `naive` per-sample reference loops kept as the correctness oracle.
 /// Mirroring `engine.agg_path`, the knob changes *how* training executes —
-/// wall-clock only — never the experiment semantics; both kernels are
+/// wall-clock only — never the experiment semantics; all kernels are
 /// deterministic and agree within float-rounding tolerance
 /// (`rust/tests/kernels.rs`). Ignored by the `--features xla` backend,
 /// which compiles its own kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct BackendConfig {
-    /// Native compute-kernel implementation (`naive` | `tiled`).
+    /// Native compute-kernel implementation (`naive` | `tiled` | `simd`).
     pub kernel: Kernel,
 }
 
@@ -804,6 +813,9 @@ impl ExperimentConfig {
             if let Some(v) = e.get("agg_path").and_then(|v| v.as_str()) {
                 cfg.engine.agg_path = AggPath::parse(v)?;
             }
+            if let Some(v) = e.get("step_parallelism").and_then(|v| v.as_usize()) {
+                cfg.engine.step_parallelism = v;
+            }
         }
         if let Some(s) = j.get("selection") {
             if let Some(v) = s.get("policy").and_then(|v| v.as_str()) {
@@ -1168,6 +1180,14 @@ mod tests {
         assert_eq!(cfg.engine.staleness_decay, 1.0);
         assert_eq!(cfg.engine.dropout_rate, 0.0);
         assert_eq!(cfg.engine.agg_path, AggPath::Auto);
+        assert_eq!(cfg.engine.step_parallelism, 1);
+    }
+
+    #[test]
+    fn parses_engine_step_parallelism() {
+        let j = Json::parse(r#"{"engine": {"step_parallelism": 4}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.engine.step_parallelism, 4);
     }
 
     #[test]
@@ -1192,6 +1212,7 @@ mod tests {
         for (doc, want) in [
             (r#"{"backend": {"kernel": "naive"}}"#, Kernel::Naive),
             (r#"{"backend": {"kernel": "tiled"}}"#, Kernel::Tiled),
+            (r#"{"backend": {"kernel": "simd"}}"#, Kernel::Simd),
         ] {
             let cfg = ExperimentConfig::from_json(&Json::parse(doc).unwrap()).unwrap();
             assert_eq!(cfg.backend.kernel, want);

@@ -263,6 +263,10 @@ pub struct AggRoundStats {
     /// Random-access range decodes performed during aggregation (the
     /// shard-major batch path over random-access schemes).
     pub range_decodes: u64,
+    /// How many of the full decodes ran inside a batched
+    /// `decompress_batch` of two or more same-decoder updates (each still
+    /// counts one full decode; this measures the amortization).
+    pub batched_decodes: u64,
     /// Total floats the decode meter saw reconstructed.
     pub decoded_floats: u64,
     /// Peak floats the aggregation path buffers at once — accumulators
@@ -281,6 +285,7 @@ impl AggRoundStats {
     pub fn accumulate(&mut self, round: &AggRoundStats) {
         self.full_decodes += round.full_decodes;
         self.range_decodes += round.range_decodes;
+        self.batched_decodes += round.batched_decodes;
         self.decoded_floats += round.decoded_floats;
         self.peak_floats = self.peak_floats.max(round.peak_floats);
         self.ms += round.ms;
@@ -1112,6 +1117,43 @@ impl<'rt> FlDriver<'rt> {
         // borrow `server_agg`, decoding and the MSE bookkeeping borrow
         // the resident client pool.
         let clients = &mut self.clients;
+
+        // Batched decode: when one collaborator contributes several
+        // updates this round (async buffering), decode them together via
+        // `decompress_batch` — one `[B, latent]` GEMM chain per decoder
+        // layer for the AE instead of B gemv passes, bitwise-equal by the
+        // batched-decode contract. Results are stashed and consumed at
+        // the same positions, so ingest order, MSE bookkeeping and the
+        // one-logical-decode-per-update meter invariant are unchanged.
+        let mut prefetched: Vec<Option<Vec<f32>>> = Vec::new();
+        let mut prefetch_floats = 0u64;
+        {
+            let mut by_cid: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (idx, (cid, ..)) in updates.iter().enumerate() {
+                by_cid.entry(*cid).or_default().push(idx);
+            }
+            for (cid, idxs) in by_cid {
+                if idxs.len() < 2 {
+                    continue;
+                }
+                if prefetched.is_empty() {
+                    prefetched.resize_with(m, || None);
+                }
+                let st = clients.get_mut(&cid).ok_or_else(|| {
+                    FedAeError::Coordination(format!(
+                        "no resident state for collaborator {cid}"
+                    ))
+                })?;
+                let batch: Vec<&CompressedUpdate> =
+                    idxs.iter().map(|&i| &updates[i].2).collect();
+                let outs = st.decoder.decompress_batch(&batch)?;
+                prefetch_floats += (outs.len() * n) as u64;
+                for (i, out) in idxs.into_iter().zip(outs) {
+                    prefetched[i] = Some(out);
+                }
+            }
+        }
+
         let mut mses: Vec<f32> = Vec::with_capacity(m);
         let mut decode_one = |idx: usize, mses: &mut Vec<f32>| -> Result<Vec<f32>> {
             let (cid, _, update, age) = &updates[idx];
@@ -1120,7 +1162,10 @@ impl<'rt> FlDriver<'rt> {
                     "no resident state for collaborator {cid}"
                 ))
             })?;
-            let recon = st.decoder.decompress(update)?;
+            let recon = match prefetched.get_mut(idx).and_then(Option::take) {
+                Some(recon) => recon,
+                None => st.decoder.decompress(update)?,
+            };
             if recon.len() != n {
                 return Err(FedAeError::Coordination(format!(
                     "collaborator {cid}: decode returned {} values, expected {n}",
@@ -1140,7 +1185,7 @@ impl<'rt> FlDriver<'rt> {
 
         match &mut self.server_agg {
             ServerAggregator::Plain(agg) => {
-                agg_stats.peak_floats = (accum_floats + n) as u64;
+                agg_stats.peak_floats = (accum_floats + n) as u64 + prefetch_floats;
                 let mut stream = agg.begin_stream(&plan)?;
                 for i in 0..m {
                     let recon = decode_one(i, &mut mses)?;
@@ -1154,7 +1199,7 @@ impl<'rt> FlDriver<'rt> {
                 let mut shard_streams = sharded.begin_shard_streams(&plan)?;
                 let workers = self.engine.workers().min(shard_streams.len());
                 if workers <= 1 {
-                    agg_stats.peak_floats = (accum_floats + n) as u64;
+                    agg_stats.peak_floats = (accum_floats + n) as u64 + prefetch_floats;
                     let mut new_global = vec![0.0f32; n];
                     for i in 0..m {
                         let recon = decode_one(i, &mut mses)?;
@@ -1180,7 +1225,7 @@ impl<'rt> FlDriver<'rt> {
                     // (the one being distributed plus one queued / one
                     // being ingested, all shared as one Arc) alive at
                     // once, regardless of worker count.
-                    agg_stats.peak_floats = (accum_floats + 3 * n) as u64;
+                    agg_stats.peak_floats = (accum_floats + 3 * n) as u64 + prefetch_floats;
                     let chunks = self.engine.chunk(shard_streams);
                     let new_global = std::thread::scope(|scope| -> Result<Vec<f32>> {
                         let mut txs = Vec::with_capacity(chunks.len());
@@ -1672,6 +1717,7 @@ impl<'rt> FlDriver<'rt> {
             let s = st.decoder.take_stats();
             agg_stats.full_decodes += s.full_decodes;
             agg_stats.range_decodes += s.range_decodes;
+            agg_stats.batched_decodes += s.batched_decodes;
             agg_stats.decoded_floats += s.decoded_floats;
         }
         agg_stats.ms = agg_sw.elapsed_ms();
@@ -1787,6 +1833,8 @@ impl<'rt> FlDriver<'rt> {
             .add_summary("agg_full_decodes_total", agg_totals.full_decodes);
         self.log
             .add_summary("agg_range_decodes_total", agg_totals.range_decodes);
+        self.log
+            .add_summary("agg_batched_decodes_total", agg_totals.batched_decodes);
         self.log
             .add_summary("agg_decoded_floats_total", agg_totals.decoded_floats);
         self.log

@@ -46,14 +46,15 @@ fn main() -> Result<()> {
                  \u{20}        [--rounds N] [--collabs N] [--local-epochs N] [--seed N] [--out metrics.json]\n\
                  \u{20}        [--parallelism N (0 = all cores)] [--shard-size N (0 = unsharded aggregation)]\n\
                  \u{20}        [--agg-path auto|batch|stream (server aggregation execution path)]\n\
-                 \u{20}        [--kernel naive|tiled (native compute kernels)]\n\
+                 \u{20}        [--kernel naive|tiled|simd (native compute kernels)]\n\
+                 \u{20}        [--step-parallelism N (threads per GEMM; bitwise-neutral, 0/1 = inline)]\n\
                  \u{20}        [--mode sync|async] [--deadline-ms N (0 = infinite)] [--dropout-rate X]\n\
                  \u{20}        [--staleness-decay A] [--straggler-log-std S] [--jitter-ms N]\n\
                  \u{20}        [--selection uniform|weighted|stratified] [--select-fraction X] [--select-count K]\n\
                  \u{20}        [--select-slack S (async over-provisioning)] [--max-resident N (0 = unbounded)] [--strata N]\n\
                  \u{20}        [--checkpoint-dir DIR] [--checkpoint-every N] [--keep-last K (0 = keep all)]\n\
                  \u{20}        [--resume PATH (snapshot file or checkpoint dir; continues the run bitwise)]\n\
-                 prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N] [--kernel naive|tiled]\n\
+                 prepass  [--model mnist|cifar] [--ae mnist|cifar|mnist_deep] [--epochs N] [--ae-epochs N] [--kernel naive|tiled|simd]\n\
                  savings  [--rounds N] [--max-collabs N] [--mnist]\n\
                  inspect  [--artifacts DIR]\n\
                  serve    --port P [any train flags] [--min-participants N (0 = all collabs)]\n\
@@ -141,6 +142,8 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(k) = args.get("kernel") {
         cfg.backend.kernel = Kernel::parse(k)?;
     }
+    cfg.engine.step_parallelism =
+        args.get_usize("step-parallelism", cfg.engine.step_parallelism)?;
     if let Some(p) = args.get("selection") {
         cfg.selection.policy = SelectionPolicy::parse(p)?;
     }
@@ -180,6 +183,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::builder()
         .artifacts_dir(artifacts_dir(args))
         .kernel(cfg.backend.kernel)
+        .step_parallelism(cfg.engine.step_parallelism)
         .build()?;
     println!(
         "experiment `{}`: model={} compression={} rounds={} collabs={} parallelism={} shard_size={} agg_path={} mode={} kernel={}",
@@ -474,6 +478,7 @@ fn fedae_serve(args: &Args) -> Result<()> {
     let rt = Runtime::builder()
         .artifacts_dir(artifacts_dir(args))
         .kernel(cfg.backend.kernel)
+        .step_parallelism(cfg.engine.step_parallelism)
         .build()?;
     let pipeline;
     let pipe_ref = match &cfg.compression {
@@ -538,6 +543,7 @@ fn fedae_worker(args: &Args) -> Result<()> {
     let rt = Runtime::builder()
         .artifacts_dir(artifacts_dir(args))
         .kernel(cfg.backend.kernel)
+        .step_parallelism(cfg.engine.step_parallelism)
         .build()?;
     let pipeline;
     let pipe_ref = match &cfg.compression {

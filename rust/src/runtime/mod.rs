@@ -51,9 +51,13 @@ pub struct Runtime {
 /// * [`manifest`](RuntimeOptions::manifest) — use an explicit manifest,
 ///   reading init blobs from `artifacts_dir` (default `artifacts`);
 /// * [`kernel`](RuntimeOptions::kernel) — pin the native compute kernel
-///   (`tiled` is the fast default, `naive` the reference oracle; the XLA
-///   backend compiles its own kernels so the knob only affects the
-///   default native build).
+///   (`tiled` is the fast default, `naive` the reference oracle, `simd`
+///   the AVX2+FMA tier with runtime fallback to tiled; the XLA backend
+///   compiles its own kernels so the knob only affects the default native
+///   build);
+/// * [`step_parallelism`](RuntimeOptions::step_parallelism) — split each
+///   step's GEMM output columns across threads
+///   (`engine.step_parallelism`; bitwise-neutral).
 ///
 /// ```no_run
 /// # use fedae::runtime::Runtime;
@@ -67,6 +71,7 @@ pub struct Runtime {
 #[derive(Debug, Default)]
 pub struct RuntimeOptions {
     kernel: Kernel,
+    step_parallelism: usize,
     artifacts_dir: Option<PathBuf>,
     manifest: Option<Manifest>,
 }
@@ -75,6 +80,13 @@ impl RuntimeOptions {
     /// Pin the native compute kernel (the CLI `--kernel` flag lands here).
     pub fn kernel(mut self, kernel: Kernel) -> Self {
         self.kernel = kernel;
+        self
+    }
+
+    /// Intra-step GEMM column parallelism (`engine.step_parallelism`;
+    /// 0/1 = inline, the default).
+    pub fn step_parallelism(mut self, threads: usize) -> Self {
+        self.step_parallelism = threads;
         self
     }
 
@@ -94,14 +106,16 @@ impl RuntimeOptions {
 
     /// Construct the [`Runtime`] described by this builder.
     pub fn build(self) -> Result<Runtime> {
+        let sp = self.step_parallelism;
         match (self.manifest, self.artifacts_dir) {
             (Some(m), dir) => Runtime::load_impl(
                 &m,
                 dir.unwrap_or_else(|| PathBuf::from("artifacts")),
                 self.kernel,
+                sp,
             ),
-            (None, Some(dir)) => Runtime::from_dir_impl(&dir, self.kernel),
-            (None, None) => Ok(Runtime::native_impl(self.kernel)),
+            (None, Some(dir)) => Runtime::from_dir_impl(&dir, self.kernel, sp),
+            (None, None) => Ok(Runtime::native_impl(self.kernel, sp)),
         }
     }
 }
@@ -126,7 +140,7 @@ impl Runtime {
     /// Runs the default (tiled) compute kernels — shorthand for
     /// `Runtime::builder().build()` minus the infallible unwrap.
     pub fn native() -> Runtime {
-        Runtime::native_impl(Kernel::default())
+        Runtime::native_impl(Kernel::default(), 1)
     }
 
     /// Convenience: load manifest + runtime from an artifacts dir with the
@@ -142,13 +156,14 @@ impl Runtime {
     /// path, so any missing manifest is a hard error rather than a silent
     /// downgrade to pure-rust compute.
     pub fn from_dir(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        Runtime::from_dir_impl(artifacts_dir.as_ref(), Kernel::default())
+        Runtime::from_dir_impl(artifacts_dir.as_ref(), Kernel::default(), 1)
     }
 
     /// Built-in manifest + native backend (infallible).
-    fn native_impl(kernel: Kernel) -> Runtime {
+    fn native_impl(kernel: Kernel, step_parallelism: usize) -> Runtime {
         let manifest = crate::backend::native::builtin_manifest();
-        let backend = NativeBackend::with_kernel(manifest.clone(), kernel);
+        let backend = NativeBackend::with_kernel(manifest.clone(), kernel)
+            .with_step_parallelism(step_parallelism);
         Runtime {
             backend: Box::new(backend),
             manifest,
@@ -160,15 +175,23 @@ impl Runtime {
     /// compiles the HLO artifacts through PJRT; by default the
     /// [`NativeBackend`] executes the same computations in pure rust
     /// (reading init blobs from disk when present).
-    fn load_impl(manifest: &Manifest, dir: PathBuf, kernel: Kernel) -> Result<Runtime> {
+    fn load_impl(
+        manifest: &Manifest,
+        dir: PathBuf,
+        kernel: Kernel,
+        step_parallelism: usize,
+    ) -> Result<Runtime> {
         #[cfg(feature = "xla")]
         let backend: Box<dyn Backend> = {
-            let _ = kernel; // the compiled-HLO path has its own kernels
+            // the compiled-HLO path has its own kernels
+            let _ = (kernel, step_parallelism);
             Box::new(crate::backend::XlaBackend::new(&dir)?)
         };
         #[cfg(not(feature = "xla"))]
-        let backend: Box<dyn Backend> =
-            Box::new(NativeBackend::with_kernel(manifest.clone(), kernel));
+        let backend: Box<dyn Backend> = Box::new(
+            NativeBackend::with_kernel(manifest.clone(), kernel)
+                .with_step_parallelism(step_parallelism),
+        );
         Ok(Runtime {
             backend,
             manifest: manifest.clone(),
@@ -178,11 +201,11 @@ impl Runtime {
 
     /// Manifest discovery from a directory; see [`Runtime::from_dir`] for
     /// the fallback rules.
-    fn from_dir_impl(dir: &Path, kernel: Kernel) -> Result<Runtime> {
+    fn from_dir_impl(dir: &Path, kernel: Kernel, step_parallelism: usize) -> Result<Runtime> {
         let manifest_path = dir.join("manifest.json");
         if !manifest_path.exists() {
             if !cfg!(feature = "xla") && dir == Path::new("artifacts") {
-                return Ok(Runtime::native_impl(kernel));
+                return Ok(Runtime::native_impl(kernel, step_parallelism));
             }
             return Err(FedAeError::Artifact(format!(
                 "no manifest at {} — generate artifacts with `python -m \
@@ -192,7 +215,7 @@ impl Runtime {
             )));
         }
         let manifest = Manifest::load(manifest_path)?;
-        Runtime::load_impl(&manifest, dir.to_path_buf(), kernel)
+        Runtime::load_impl(&manifest, dir.to_path_buf(), kernel, step_parallelism)
     }
 
     /// The artifact manifest this runtime serves.
@@ -256,6 +279,45 @@ impl Runtime {
             )));
         }
         Ok(outputs)
+    }
+
+    /// Execute a `decode_*` artifact over `batch` latent rows packed into
+    /// `zs` (`batch * latent` floats), returning the reconstructions
+    /// concatenated row-major. The per-row shapes are validated against
+    /// the manifest exactly as `batch` individual [`Runtime::run`] calls
+    /// would be; the backend decides whether the rows actually run as one
+    /// batched GEMM chain (the native backend does, bitwise-equal to the
+    /// per-row loop).
+    pub fn run_decode_batch(
+        &self,
+        name: &str,
+        dec_params: &[f32],
+        zs: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        let entry = self.manifest.artifact(name)?;
+        if entry.inputs.len() != 2 {
+            return Err(FedAeError::Artifact(format!(
+                "artifact `{name}` is not a decode artifact (expects {} inputs)",
+                entry.inputs.len()
+            )));
+        }
+        if entry.inputs[0].elements() != dec_params.len() {
+            return Err(FedAeError::Artifact(format!(
+                "artifact `{name}` input `{}` expects {} elements, got {}",
+                entry.inputs[0].name,
+                entry.inputs[0].elements(),
+                dec_params.len()
+            )));
+        }
+        let latent = entry.inputs[1].elements();
+        if batch == 0 || zs.len() != batch * latent {
+            return Err(FedAeError::Artifact(format!(
+                "artifact `{name}`: batched z has {} floats, want {batch} x {latent}",
+                zs.len()
+            )));
+        }
+        self.backend.execute_decode_batch(entry, dec_params, zs, batch)
     }
 
     /// Load an initial-parameter blob. On-disk blobs
@@ -492,6 +554,48 @@ impl<'rt> AePipeline<'rt> {
         Ok(out.into_iter().next().unwrap())
     }
 
+    /// Batched decoder: B latents -> B reconstructions, run as one
+    /// `[B, latent]` GEMM chain per decoder layer instead of B gemv calls.
+    /// Row `i` of the result is bitwise-equal to `decode(dec_params,
+    /// zs[i])` (the backend's batched-decode contract); the server's
+    /// streaming aggregator leans on this to amortize same-decoder
+    /// updates.
+    pub fn decode_batch(&self, dec_params: &[f32], zs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if zs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for (i, z) in zs.iter().enumerate() {
+            if z.len() != self.latent {
+                return Err(FedAeError::Compression(format!(
+                    "ae `{}` decode_batch: latent {i} has {} floats, want {}",
+                    self.tag,
+                    z.len(),
+                    self.latent
+                )));
+            }
+        }
+        let mut flat = Vec::with_capacity(zs.len() * self.latent);
+        for z in zs {
+            flat.extend_from_slice(z);
+        }
+        let out = self.rt.run_decode_batch(
+            &format!("decode_{}", self.tag),
+            dec_params,
+            &flat,
+            zs.len(),
+        )?;
+        if out.len() != zs.len() * self.input_dim {
+            return Err(FedAeError::Compression(format!(
+                "ae `{}` decode_batch: got {} floats, want {} x {}",
+                self.tag,
+                out.len(),
+                zs.len(),
+                self.input_dim
+            )));
+        }
+        Ok(out.chunks(self.input_dim).map(|c| c.to_vec()).collect())
+    }
+
     /// Whole-AE roundtrip with metrics: (reconstruction, mse, accuracy).
     pub fn roundtrip(&self, ae_params: &[f32], w: &[f32]) -> Result<(Vec<f32>, f32, f32)> {
         let out = self
@@ -653,6 +757,49 @@ mod tests {
         assert!((mse - rust_mse).abs() < 1e-6 * (1.0 + mse.abs()));
         assert!((0.0..=1.0).contains(&acc));
         assert!(pipe.split(&ae_params[..10]).is_err());
+    }
+
+    #[test]
+    fn simd_kernel_reports_runtime_dispatch() {
+        let rt = Runtime::builder().kernel(Kernel::Simd).build().unwrap();
+        let name = rt.platform_name();
+        assert!(name.contains("simd"), "{name}");
+        if crate::backend::kernels::simd_available() {
+            assert!(name.contains("avx2+fma"), "{name}");
+        } else {
+            assert!(name.contains("fallback"), "{name}");
+        }
+    }
+
+    #[test]
+    fn decode_batch_matches_per_latent_decode_bitwise() {
+        for kernel in [Kernel::Naive, Kernel::Tiled, Kernel::Simd] {
+            let rt = Runtime::builder()
+                .kernel(kernel)
+                .step_parallelism(2)
+                .build()
+                .unwrap();
+            let pipe = AePipeline::new(&rt, "toy").unwrap();
+            let ae_params = rt.load_init("ae_toy_init").unwrap();
+            let (enc, dec) = pipe.split(&ae_params).unwrap();
+            let w = rt.load_init("toy_params").unwrap();
+            let zs: Vec<Vec<f32>> = (0..5)
+                .map(|i| {
+                    let scaled: Vec<f32> = w.iter().map(|v| v * (0.2 + 0.3 * i as f32)).collect();
+                    pipe.encode(&enc, &scaled).unwrap()
+                })
+                .collect();
+            let refs: Vec<&[f32]> = zs.iter().map(|z| z.as_slice()).collect();
+            let batched = pipe.decode_batch(&dec, &refs).unwrap();
+            assert_eq!(batched.len(), zs.len());
+            for (i, z) in zs.iter().enumerate() {
+                assert_eq!(batched[i], pipe.decode(&dec, z).unwrap(), "{kernel:?} row {i}");
+            }
+            // Validation: ragged latent and empty input.
+            let short = vec![0.0f32; pipe.latent - 1];
+            assert!(pipe.decode_batch(&dec, &[&short]).is_err());
+            assert!(pipe.decode_batch(&dec, &[]).unwrap().is_empty());
+        }
     }
 
     #[test]

@@ -293,6 +293,7 @@ fn shipped_config_presets_parse_and_validate() {
         "configs/mnist_ae_1m_sampled.json",
         "configs/mnist_ae_resume.json",
         "configs/baseline_topk.json",
+        "configs/cifar_ae_simd.json",
     ] {
         let cfg = ExperimentConfig::load(path).unwrap_or_else(|e| panic!("{path}: {e}"));
         cfg.validate(rt.manifest())
@@ -326,6 +327,13 @@ fn shipped_config_presets_parse_and_validate() {
     assert_eq!(cfg.engine.agg_path, fedae::config::AggPath::Stream);
     // ... and pins the local-training hot path to the tiled kernel layer.
     assert_eq!(cfg.backend.kernel, fedae::backend::Kernel::Tiled);
+    // The CIFAR preset pins the AVX2+FMA microkernel tier (falls back to
+    // tiled at runtime on CPUs without it) plus intra-step column
+    // parallelism — both bitwise-neutral execution knobs.
+    let cfg = ExperimentConfig::load("configs/cifar_ae_simd.json").unwrap();
+    assert_eq!(cfg.backend.kernel, fedae::backend::Kernel::Simd);
+    assert_eq!(cfg.engine.step_parallelism, 4);
+    assert_eq!(cfg.engine.agg_path, fedae::config::AggPath::Stream);
     // The million-client preset samples 256 of 1e6 registered clients per
     // round and bounds resident collaborator state via the LRU pool.
     let cfg = ExperimentConfig::load("configs/mnist_ae_1m_sampled.json").unwrap();

@@ -1,18 +1,26 @@
-//! Tiled-kernel equivalence suite (ISSUE 5): the cache-blocked GEMM /
-//! im2col layer in `fedae::backend::kernels` against the naive reference
-//! loops, at three levels —
+//! Kernel equivalence suite (ISSUE 5, extended by ISSUE 9 with the simd
+//! tier): the cache-blocked GEMM / im2col layer in
+//! `fedae::backend::kernels` against the naive reference loops, at three
+//! levels —
 //!
 //! 1. property tests: all three GEMM variants and the im2col convolution
 //!    vs. an f64 triple-loop reference over random shapes (including
 //!    ragged ones not divisible by the tile sizes), tight relative
-//!    tolerance;
+//!    tolerance, for every kernel tier;
 //! 2. train-step tests: `ae_train_step` / `classifier_train_step` on
-//!    `kernel=tiled` vs `kernel=naive` backends from identical state;
+//!    `kernel=tiled` / `kernel=simd` vs `kernel=naive` backends from
+//!    identical state;
 //! 3. integration: a full AE-compressed federated round agrees across
-//!    kernels at `AE_ACC_TOL` level, and tiled execution is **bitwise**
-//!    identical between the sequential and parallel round engines (the
-//!    determinism contract the parallel_round/streaming_agg/async_round
-//!    suites rely on).
+//!    kernels at `AE_ACC_TOL` level, and tiled/simd execution is
+//!    **bitwise** identical between the sequential and parallel round
+//!    engines and across `step_parallelism` settings (the determinism
+//!    contract the parallel_round/streaming_agg/async_round suites rely
+//!    on).
+//!
+//! `FEDAE_KERNEL=<naive|tiled|simd>` narrows the non-oracle grid to one
+//! kernel — the CI simd leg sets it; on CPUs without AVX2+FMA the simd
+//! tier transparently falls back to tiled, so that leg degrades to a
+//! tiled re-run instead of failing.
 
 use fedae::backend::kernels::{self, Act, Epilogue, PackBufs};
 use fedae::backend::native::AE_ACC_TOL;
@@ -24,7 +32,21 @@ use fedae::tensor;
 use fedae::testing::prop;
 use fedae::util::rng::Rng;
 
-/// Relative agreement between a tiled f32 result and an f64 reference.
+/// Kernels to grid over, naive oracle excluded. `FEDAE_KERNEL` narrows
+/// the grid to one kernel (set by the CI simd leg); `FEDAE_KERNEL=naive`
+/// yields an empty grid, which every comparison loop tolerates.
+fn kernels_under_test() -> Vec<Kernel> {
+    match std::env::var("FEDAE_KERNEL") {
+        Ok(name) => [Kernel::parse(&name).expect("FEDAE_KERNEL")]
+            .into_iter()
+            .filter(|&k| k != Kernel::Naive)
+            .collect(),
+        Err(_) => vec![Kernel::Tiled, Kernel::Simd],
+    }
+}
+
+/// Relative agreement between a blocked-kernel f32 result and an f64
+/// reference.
 fn assert_rel_close(got: &[f32], want: &[f64], tol: f64, what: &str) -> Result<(), String> {
     if got.len() != want.len() {
         return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
@@ -81,12 +103,28 @@ fn reference_mm(
     c
 }
 
+/// Exec configurations to grid the blocked GEMM layer over: the plain
+/// tiled path plus, per kernel under test, inline and column-split runs.
+fn exec_grid() -> Vec<kernels::Exec> {
+    let mut execs = vec![kernels::Exec::for_kernel(Kernel::Tiled, 1)];
+    for kernel in kernels_under_test() {
+        for threads in [1usize, 3] {
+            let e = kernels::Exec::for_kernel(kernel, threads);
+            if !execs.contains(&e) {
+                execs.push(e);
+            }
+        }
+    }
+    execs
+}
+
 #[test]
 fn prop_gemm_variants_match_reference_over_random_shapes() {
     let cfg = prop::PropConfig {
         cases: 32,
         ..Default::default()
     };
+    let execs = exec_grid();
     let mut packs = PackBufs::default();
     prop::check_with(&cfg, "gemm_vs_reference", |rng| {
         // Ragged shapes on purpose: nothing forces multiples of MR/NR/KC.
@@ -95,23 +133,27 @@ fn prop_gemm_variants_match_reference_over_random_shapes() {
         let n = prop::len_in(rng, 1, 70);
         let a = prop::vec_f32(rng, m * k, 1.0);
         let b = prop::vec_f32(rng, k * n, 1.0);
-
-        let mut c = vec![0.0f32; m * n];
-        kernels::gemm_nn(&mut packs, m, k, n, &a, &b, &mut c, Epilogue::Store);
-        let want = reference_mm(m, k, n, &a, |i, p| i * k + p, &b, |p, j| p * n + j);
-        assert_rel_close(&c, &want, 1e-4, &format!("nn {m}x{k}x{n}"))?;
-
         let at = prop::vec_f32(rng, k * m, 1.0);
-        let mut c = vec![0.0f32; m * n];
-        kernels::gemm_tn(&mut packs, m, k, n, &at, &b, &mut c, Epilogue::Store);
-        let want = reference_mm(m, k, n, &at, |i, p| p * m + i, &b, |p, j| p * n + j);
-        assert_rel_close(&c, &want, 1e-4, &format!("tn {m}x{k}x{n}"))?;
-
         let bt = prop::vec_f32(rng, n * k, 1.0);
-        let mut c = vec![0.0f32; m * n];
-        kernels::gemm_nt(&mut packs, m, k, n, &a, &bt, &mut c, Epilogue::Store);
-        let want = reference_mm(m, k, n, &a, |i, p| i * k + p, &bt, |p, j| j * k + p);
-        assert_rel_close(&c, &want, 1e-4, &format!("nt {m}x{k}x{n}"))?;
+
+        for &exec in &execs {
+            packs.exec = exec;
+
+            let mut c = vec![0.0f32; m * n];
+            kernels::gemm_nn(&mut packs, m, k, n, &a, &b, &mut c, Epilogue::Store);
+            let want = reference_mm(m, k, n, &a, |i, p| i * k + p, &b, |p, j| p * n + j);
+            assert_rel_close(&c, &want, 1e-4, &format!("nn {m}x{k}x{n} {exec:?}"))?;
+
+            let mut c = vec![0.0f32; m * n];
+            kernels::gemm_tn(&mut packs, m, k, n, &at, &b, &mut c, Epilogue::Store);
+            let want = reference_mm(m, k, n, &at, |i, p| p * m + i, &b, |p, j| p * n + j);
+            assert_rel_close(&c, &want, 1e-4, &format!("tn {m}x{k}x{n} {exec:?}"))?;
+
+            let mut c = vec![0.0f32; m * n];
+            kernels::gemm_nt(&mut packs, m, k, n, &a, &bt, &mut c, Epilogue::Store);
+            let want = reference_mm(m, k, n, &a, |i, p| i * k + p, &bt, |p, j| j * k + p);
+            assert_rel_close(&c, &want, 1e-4, &format!("nt {m}x{k}x{n} {exec:?}"))?;
+        }
         Ok(())
     });
 }
@@ -161,6 +203,7 @@ fn prop_im2col_conv_matches_reference_conv() {
         cases: 32,
         ..Default::default()
     };
+    let execs = exec_grid();
     let mut packs = PackBufs::default();
     prop::check_with(&cfg, "im2col_conv_vs_reference", |rng| {
         let batch = prop::len_in(rng, 1, 3);
@@ -174,95 +217,118 @@ fn prop_im2col_conv_matches_reference_conv() {
 
         let mut cols = Vec::new();
         kernels::im2col3x3(&img, batch, h, w, ci, &mut cols);
-        let mut out = vec![0.0f32; batch * h * w * co];
-        kernels::gemm_nn(
-            &mut packs,
-            batch * h * w,
-            9 * ci,
-            co,
-            &cols,
-            &wk,
-            &mut out,
-            Epilogue::BiasAct {
-                bias: &bias,
-                act: Act::Linear,
-            },
-        );
         let want = reference_conv3x3(&img, batch, h, w, ci, co, &wk, &bias);
-        assert_rel_close(&out, &want, 1e-4, &format!("conv {batch}x{h}x{w}x{ci}->{co}"))
+        for &exec in &execs {
+            packs.exec = exec;
+            let mut out = vec![0.0f32; batch * h * w * co];
+            kernels::gemm_nn(
+                &mut packs,
+                batch * h * w,
+                9 * ci,
+                co,
+                &cols,
+                &wk,
+                &mut out,
+                Epilogue::BiasAct {
+                    bias: &bias,
+                    act: Act::Linear,
+                },
+            );
+            assert_rel_close(
+                &out,
+                &want,
+                1e-4,
+                &format!("conv {batch}x{h}x{w}x{ci}->{co} {exec:?}"),
+            )?;
+        }
+        Ok(())
     });
 }
 
 #[test]
 fn ae_train_step_agrees_across_kernels() {
-    let tiled = Runtime::builder().kernel(Kernel::Tiled).build().unwrap();
     let naive = Runtime::builder().kernel(Kernel::Naive).build().unwrap();
-    for tag in ["toy", "mnist"] {
-        let pt = AePipeline::new(&tiled, tag).unwrap();
-        let pn = AePipeline::new(&naive, tag).unwrap();
-        let init = tiled.load_init(&format!("ae_{tag}_init")).unwrap();
-        let mut rng = Rng::new(5);
-        let batch: Vec<f32> = (0..pt.train_batch * pt.input_dim)
-            .map(|_| rng.uniform_in(-0.2, 0.2))
-            .collect();
-        let (mut ae_t, mut ae_n) = (init.clone(), init.clone());
-        let mut adam_t = AdamState::zeros(init.len());
-        let mut adam_n = AdamState::zeros(init.len());
-        // A few steps so Adam state (m, v) equivalence is exercised too.
-        let (mut mse_t, mut mse_n) = (0.0f32, 0.0f32);
-        for _ in 0..3 {
-            mse_t = pt.train_step(&mut ae_t, &mut adam_t, &batch).unwrap().0;
-            mse_n = pn.train_step(&mut ae_n, &mut adam_n, &batch).unwrap().0;
+    for kernel in kernels_under_test() {
+        let rt = Runtime::builder().kernel(kernel).build().unwrap();
+        for tag in ["toy", "mnist"] {
+            let pt = AePipeline::new(&rt, tag).unwrap();
+            let pn = AePipeline::new(&naive, tag).unwrap();
+            let init = rt.load_init(&format!("ae_{tag}_init")).unwrap();
+            let mut rng = Rng::new(5);
+            let batch: Vec<f32> = (0..pt.train_batch * pt.input_dim)
+                .map(|_| rng.uniform_in(-0.2, 0.2))
+                .collect();
+            let (mut ae_t, mut ae_n) = (init.clone(), init.clone());
+            let mut adam_t = AdamState::zeros(init.len());
+            let mut adam_n = AdamState::zeros(init.len());
+            // A few steps so Adam state (m, v) equivalence is exercised too.
+            let (mut mse_t, mut mse_n) = (0.0f32, 0.0f32);
+            for _ in 0..3 {
+                mse_t = pt.train_step(&mut ae_t, &mut adam_t, &batch).unwrap().0;
+                mse_n = pn.train_step(&mut ae_n, &mut adam_n, &batch).unwrap().0;
+            }
+            // Nearly every coordinate agrees tightly; sign-flip coordinates
+            // (see `agreement`) are bounded by the per-step Adam magnitude.
+            let what = format!("{}/{tag}", kernel.name());
+            let (frac, max_abs) = agreement(&ae_t, &ae_n, 1e-4);
+            assert!(frac >= 0.999, "{what}: only {frac} of params within 1e-4");
+            assert!(max_abs <= 0.02, "{what}: max param divergence {max_abs}");
+            let (frac_m, _) = agreement(&adam_t.m, &adam_n.m, 1e-3);
+            assert!(frac_m >= 0.999, "{what}: only {frac_m} of adam.m within 1e-3");
+            assert!(
+                (mse_t - mse_n).abs() <= 1e-4 * (1.0 + mse_n.abs()),
+                "{what}: mse {mse_t} vs {mse_n}"
+            );
         }
-        // Nearly every coordinate agrees tightly; sign-flip coordinates
-        // (see `agreement`) are bounded by the per-step Adam magnitude.
-        let (frac, max_abs) = agreement(&ae_t, &ae_n, 1e-4);
-        assert!(frac >= 0.999, "{tag}: only {frac} of params within 1e-4");
-        assert!(max_abs <= 0.02, "{tag}: max param divergence {max_abs}");
-        let (frac_m, _) = agreement(&adam_t.m, &adam_n.m, 1e-3);
-        assert!(frac_m >= 0.999, "{tag}: only {frac_m} of adam.m within 1e-3");
-        assert!(
-            (mse_t - mse_n).abs() <= 1e-4 * (1.0 + mse_n.abs()),
-            "{tag}: mse {mse_t} vs {mse_n}"
-        );
     }
 }
 
 #[test]
 fn classifier_train_step_agrees_across_kernels() {
-    let tiled = Runtime::builder().kernel(Kernel::Tiled).build().unwrap();
     let naive = Runtime::builder().kernel(Kernel::Naive).build().unwrap();
-    for family in ["mnist", "cifar"] {
-        let tt = TrainStep::new(&tiled, family).unwrap();
-        let tn = TrainStep::new(&naive, family).unwrap();
-        let init = tiled.load_init(&format!("{family}_params")).unwrap();
-        let mut rng = Rng::new(6);
-        let x: Vec<f32> = (0..tt.batch * tt.input_dim)
-            .map(|_| rng.uniform_in(0.0, 1.0))
-            .collect();
-        let mut y = vec![0.0f32; tt.batch * tt.classes];
-        for b in 0..tt.batch {
-            y[b * tt.classes + b % tt.classes] = 1.0;
+    for kernel in kernels_under_test() {
+        let rt = Runtime::builder().kernel(kernel).build().unwrap();
+        for family in ["mnist", "cifar"] {
+            let tt = TrainStep::new(&rt, family).unwrap();
+            let tn = TrainStep::new(&naive, family).unwrap();
+            let init = rt.load_init(&format!("{family}_params")).unwrap();
+            let mut rng = Rng::new(6);
+            let x: Vec<f32> = (0..tt.batch * tt.input_dim)
+                .map(|_| rng.uniform_in(0.0, 1.0))
+                .collect();
+            let mut y = vec![0.0f32; tt.batch * tt.classes];
+            for b in 0..tt.batch {
+                y[b * tt.classes + b % tt.classes] = 1.0;
+            }
+            let (pt, loss_t) = tt.step(&init, &x, &y, 0.05).unwrap();
+            let (pn, loss_n) = tn.step(&init, &x, &y, 0.05).unwrap();
+            // SGD has no sign amplification, but a ReLU unit whose
+            // pre-activation sits at the float-noise boundary can route a
+            // gradient differently — fraction-based with a loose cap.
+            let what = format!("{}/{family}", kernel.name());
+            let (frac, max_abs) = agreement(&pt, &pn, 1e-4);
+            assert!(frac >= 0.999, "{what}: only {frac} of params within 1e-4");
+            assert!(max_abs <= 0.02, "{what}: max param divergence {max_abs}");
+            assert!(
+                (loss_t - loss_n).abs() <= 1e-4 * (1.0 + loss_n.abs()),
+                "{what}: loss {loss_t} vs {loss_n}"
+            );
         }
-        let (pt, loss_t) = tt.step(&init, &x, &y, 0.05).unwrap();
-        let (pn, loss_n) = tn.step(&init, &x, &y, 0.05).unwrap();
-        // SGD has no sign amplification, but a ReLU unit whose
-        // pre-activation sits at the float-noise boundary can route a
-        // gradient differently — fraction-based with a loose cap.
-        let (frac, max_abs) = agreement(&pt, &pn, 1e-4);
-        assert!(frac >= 0.999, "{family}: only {frac} of params within 1e-4");
-        assert!(max_abs <= 0.02, "{family}: max param divergence {max_abs}");
-        assert!(
-            (loss_t - loss_n).abs() <= 1e-4 * (1.0 + loss_n.abs()),
-            "{family}: loss {loss_t} vs {loss_n}"
-        );
     }
 }
 
 /// Tiny AE-compressed federated schedule (prepass + 1 round) for the
 /// cross-kernel integration assertion.
-fn run_round(kernel: Kernel, parallelism: usize) -> (Vec<RoundOutcome>, Vec<f32>) {
-    let rt = Runtime::builder().kernel(kernel).build().unwrap();
+fn run_round(
+    kernel: Kernel,
+    parallelism: usize,
+    step_parallelism: usize,
+) -> (Vec<RoundOutcome>, Vec<f32>) {
+    let rt = Runtime::builder()
+        .kernel(kernel)
+        .step_parallelism(step_parallelism)
+        .build()
+        .unwrap();
     let pipeline = AePipeline::new(&rt, "mnist").unwrap();
     let mut cfg = ExperimentConfig::default();
     cfg.model = "mnist".into();
@@ -277,44 +343,52 @@ fn run_round(kernel: Kernel, parallelism: usize) -> (Vec<RoundOutcome>, Vec<f32>
     cfg.prepass.ae_epochs = 2;
     cfg.seed = 23;
     cfg.engine.parallelism = parallelism;
+    cfg.engine.step_parallelism = step_parallelism;
     let mut driver = FlDriver::builder(&rt, cfg).pipeline(&pipeline).build().unwrap();
     let outcomes = vec![driver.run_round().unwrap()];
     (outcomes, driver.global_params().to_vec())
 }
 
 #[test]
-fn full_round_tiled_vs_naive_agreement_and_bitwise_parallel_parity() {
-    // Tiled sequential == tiled parallel, BITWISE — the kernels are
-    // deterministic and thread-count-independent, so the parallel engine's
-    // parity guarantee survives the kernel swap.
-    let (out_seq, params_seq) = run_round(Kernel::Tiled, 1);
-    let (out_par, params_par) = run_round(Kernel::Tiled, 4);
-    assert_eq!(out_seq, out_par, "tiled seq vs parallel outcomes");
-    assert_eq!(params_seq, params_par, "tiled seq vs parallel params");
+fn full_round_kernels_vs_naive_agreement_and_bitwise_parallel_parity() {
+    let (out_naive, params_naive) = run_round(Kernel::Naive, 1, 1);
+    for kernel in kernels_under_test() {
+        let name = kernel.name();
+        // Sequential == parallel == intra-step-parallel, BITWISE — the
+        // kernels are deterministic and thread-count-independent, so the
+        // parallel engine's parity guarantee survives the kernel swap,
+        // and `step_parallelism` splits only disjoint output columns.
+        let (out_seq, params_seq) = run_round(kernel, 1, 1);
+        let (out_par, params_par) = run_round(kernel, 4, 1);
+        assert_eq!(out_seq, out_par, "{name} seq vs parallel outcomes");
+        assert_eq!(params_seq, params_par, "{name} seq vs parallel params");
+        let (out_sp, params_sp) = run_round(kernel, 1, 3);
+        assert_eq!(out_seq, out_sp, "{name} inline vs step-parallel outcomes");
+        assert_eq!(params_seq, params_sp, "{name} inline vs step-parallel params");
 
-    // Tiled vs naive: same math, different rounding — the full round
-    // (prepass AE training, local SGD, encode/decode, aggregation) stays
-    // in AE_ACC_TOL-level agreement.
-    let (out_naive, params_naive) = run_round(Kernel::Naive, 1);
-    let frac = tensor::within_tol_fraction(&params_seq, &params_naive, AE_ACC_TOL);
-    assert!(
-        frac >= 0.98,
-        "only {frac} of global params within {AE_ACC_TOL} across kernels"
-    );
-    let (t, n) = (&out_seq[0], &out_naive[0]);
-    assert!(
-        (t.eval_loss - n.eval_loss).abs() <= 0.1 * (1.0 + n.eval_loss.abs()),
-        "eval loss {} vs {}",
-        t.eval_loss,
-        n.eval_loss
-    );
-    assert!(
-        (t.eval_acc - n.eval_acc).abs() <= 0.05,
-        "eval acc {} vs {}",
-        t.eval_acc,
-        n.eval_acc
-    );
-    // Identical byte accounting: compression ratios are kernel-independent.
-    assert_eq!(t.bytes_up, n.bytes_up);
-    assert_eq!(t.bytes_down, n.bytes_down);
+        // Blocked kernel vs naive: same math, different rounding — the
+        // full round (prepass AE training, local SGD, encode/decode,
+        // aggregation) stays in AE_ACC_TOL-level agreement.
+        let frac = tensor::within_tol_fraction(&params_seq, &params_naive, AE_ACC_TOL);
+        assert!(
+            frac >= 0.98,
+            "{name}: only {frac} of global params within {AE_ACC_TOL} vs naive"
+        );
+        let (t, n) = (&out_seq[0], &out_naive[0]);
+        assert!(
+            (t.eval_loss - n.eval_loss).abs() <= 0.1 * (1.0 + n.eval_loss.abs()),
+            "{name}: eval loss {} vs {}",
+            t.eval_loss,
+            n.eval_loss
+        );
+        assert!(
+            (t.eval_acc - n.eval_acc).abs() <= 0.05,
+            "{name}: eval acc {} vs {}",
+            t.eval_acc,
+            n.eval_acc
+        );
+        // Identical byte accounting: compression ratios are kernel-independent.
+        assert_eq!(t.bytes_up, n.bytes_up);
+        assert_eq!(t.bytes_down, n.bytes_down);
+    }
 }

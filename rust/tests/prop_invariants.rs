@@ -723,6 +723,84 @@ fn prop_compressors_from_config_roundtrip_dimensionality() {
 }
 
 #[test]
+fn prop_decompress_batch_is_bitwise_equal_to_decompress_loop() {
+    // ISSUE 9: the server's batched decode path must be invisible in the
+    // results — for every scheme, `decompress_batch` over B updates is
+    // bitwise identical to B sequential `decompress` calls. The linear
+    // schemes exercise the trait default (literally that loop); the AE
+    // exercises the real override, where B latents run as one
+    // `[B, latent]` GEMM chain through the decoder.
+    use fedae::compression::ae::AeCompressor;
+    use fedae::runtime::AePipeline;
+    let rt = Runtime::native();
+    let pipe = AePipeline::new(&rt, "toy").unwrap();
+    let ae_params = rt.load_init("ae_toy_init").unwrap();
+    prop::check("decompress_batch_vs_loop", |rng| {
+        let n = prop::len_in(rng, 8, 256);
+        let b = prop::len_in(rng, 1, 5);
+        let cfgs = [
+            CompressionConfig::Identity,
+            CompressionConfig::TopK {
+                fraction: 0.1 + rng.uniform() * 0.9,
+            },
+            CompressionConfig::Quantize {
+                bits: 1 + rng.below(16) as u8,
+                stochastic: rng.below(2) == 0,
+            },
+            CompressionConfig::Subsample {
+                fraction: 0.1 + rng.uniform() * 0.9,
+            },
+            CompressionConfig::Sketch {
+                rows: 1 + rng.below(5),
+                cols: 8 + rng.below(64),
+                topk: 1 + rng.below(n),
+            },
+        ];
+        for cfg in cfgs {
+            let seed = rng.next_u64();
+            let mut enc = compression::from_config(&cfg, n, seed).unwrap();
+            let mut one = compression::from_config(&cfg, n, seed).unwrap();
+            let mut many = compression::from_config(&cfg, n, seed).unwrap();
+            let mut updates = Vec::with_capacity(b);
+            for r in 0..b {
+                let w = prop::vec_f32(rng, n, 1.0);
+                updates.push(enc.compress(r, &w).map_err(|e| format!("{e}"))?);
+            }
+            let refs: Vec<&CompressedUpdate> = updates.iter().collect();
+            let batched = many.decompress_batch(&refs).map_err(|e| format!("{e}"))?;
+            if batched.len() != b {
+                return Err(format!("{}: batch of {b} gave {}", many.name(), batched.len()));
+            }
+            for (i, u) in updates.iter().enumerate() {
+                let single = one.decompress(u).map_err(|e| format!("{e}"))?;
+                if single != batched[i] {
+                    return Err(format!("{}: row {i} differs from loop decode", one.name()));
+                }
+            }
+        }
+        // AE (toy artifacts): the override with the real batched GEMM.
+        let mut full = AeCompressor::full(&pipe, &ae_params).map_err(|e| format!("{e}"))?;
+        let mut updates = Vec::with_capacity(b);
+        for r in 0..b {
+            let w = prop::vec_f32(rng, pipe.input_dim, 0.5);
+            updates.push(full.compress(r, &w).map_err(|e| format!("{e}"))?);
+        }
+        let refs: Vec<&CompressedUpdate> = updates.iter().collect();
+        let batched = full.decompress_batch(&refs).map_err(|e| format!("{e}"))?;
+        if batched.len() != b {
+            return Err(format!("ae: batch of {b} gave {}", batched.len()));
+        }
+        for (i, u) in updates.iter().enumerate() {
+            let single = full.decompress(u).map_err(|e| format!("{e}"))?;
+            if single != batched[i] {
+                return Err(format!("ae: row {i} differs from loop decode"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_resume_at_any_round_is_bitwise_identical() {
     // ISSUE 7 tentpole: checkpoint at a random round R under random
     // (seed, policy, parallelism, shard size, agg path, aggregation)

@@ -240,6 +240,95 @@ fn decode_meter_one_full_decode_per_update_on_linear_path() {
 }
 
 #[test]
+fn ae_batched_decode_is_bitwise_invisible_and_metered() {
+    // ISSUE 9: when an async round aggregates two updates from the same
+    // collaborator (a buffered stale latent plus that cid's fresh one),
+    // the streaming path decodes them as ONE batched GEMM through the
+    // cid's decoder. The batching must be invisible — outcomes, global
+    // params and ledger bitwise-identical to the batch path (which
+    // decodes per update) across parallelism x shard_size — while the
+    // decode meter proves the batched path actually ran.
+    //
+    // Lateness recipe: an AE latent upload arrives at ~50.1 ms (tiny
+    // payload over the 10 Mbps / 50 ms link) plus uniform [0, 40) ms
+    // jitter; a 70 ms deadline makes each upload late with probability
+    // ~1/2, independently per (round, cid). Over 6 cids x 4 round
+    // transitions a late-then-on-time pair (= a duplicate-cid round) is
+    // then near-certain for the fixed seed.
+    let rt = runtime();
+    let pipeline = fedae::runtime::AePipeline::new(&rt, "mnist").unwrap();
+    let mk = |path: AggPath, parallelism: usize, shard_size: usize| {
+        let mut cfg = base_cfg(
+            CompressionConfig::Ae { ae: "mnist".into() },
+            AggregationConfig::FedAvg,
+        );
+        cfg.fl.rounds = 5;
+        cfg.prepass.epochs = 4;
+        cfg.prepass.ae_epochs = 2;
+        cfg.network.bandwidth_mbps = 10.0;
+        cfg.network.latency_ms = 50.0;
+        cfg.engine.mode = EngineMode::Async;
+        cfg.engine.deadline_ms = 70.0;
+        cfg.engine.jitter_ms = 40.0;
+        cfg.engine.staleness_decay = 0.7;
+        cfg.engine.agg_path = path;
+        cfg.engine.parallelism = parallelism;
+        cfg.engine.shard_size = shard_size;
+        cfg
+    };
+    let run = |cfg: ExperimentConfig| {
+        let rounds = cfg.fl.rounds;
+        let mut driver = FlDriver::builder(&rt, cfg).pipeline(&pipeline).build().unwrap();
+        let outcomes: Vec<_> = (0..rounds).map(|_| driver.run_round().unwrap()).collect();
+        assert!(driver.network.ledger().check_conservation());
+        let agg: Vec<_> = outcomes.iter().map(|o| o.agg).collect();
+        (
+            outcomes,
+            driver.global_params().to_vec(),
+            driver.network.ledger().transfers().to_vec(),
+            agg,
+        )
+    };
+
+    let batch = run(mk(AggPath::Batch, 1, 0));
+    // The realization must actually produce buffered stale updates.
+    let stale_total: usize = batch.0.iter().map(|o| o.stragglers.stale_applied).sum();
+    assert!(stale_total > 0, "no stale updates applied — recipe broken");
+    // The batch path never groups decodes.
+    assert_eq!(batch.3.iter().map(|a| a.batched_decodes).sum::<u64>(), 0);
+
+    let mut batched_counts = Vec::new();
+    for parallelism in [1usize, 4] {
+        for shard_size in [0usize, 4097] {
+            let stream = run(mk(AggPath::Stream, parallelism, shard_size));
+            assert_eq!(
+                batch.0, stream.0,
+                "parallelism={parallelism} shard={shard_size}: outcomes diverged"
+            );
+            assert_eq!(
+                batch.1, stream.1,
+                "parallelism={parallelism} shard={shard_size}: global params diverged"
+            );
+            assert_eq!(
+                batch.2, stream.2,
+                "parallelism={parallelism} shard={shard_size}: ledger diverged"
+            );
+            batched_counts.push(stream.3.iter().map(|a| a.batched_decodes).sum::<u64>());
+        }
+    }
+    // The streaming path batched the duplicate-cid decodes, identically
+    // under every parallelism x shard_size (grouping is data-driven).
+    assert!(
+        batched_counts[0] > 0,
+        "streaming path never batched a decode"
+    );
+    assert!(
+        batched_counts.iter().all(|&c| c == batched_counts[0]),
+        "batched decode counts varied across execution knobs: {batched_counts:?}"
+    );
+}
+
+#[test]
 fn streaming_peak_floats_independent_of_participants() {
     let rt = runtime();
     let peak_for = |collabs: usize, path: AggPath, shard_size: usize| {
