@@ -2,12 +2,17 @@
 //! decode throughput (frames/s and MB/s) at the mnist (15,910-param)
 //! and cifar (51,082-param) model sizes, plus one simulated round trip
 //! (GlobalModel down, EncodedUpdate up) over the in-proc channel versus
-//! a real loopback-TCP socket.
+//! a real loopback-TCP socket, and the reconnect path (ISSUE 10): a
+//! dead worker's TCP redial + `Rejoin` up + full-params `CatchUp` down,
+//! per model tier.
 //!
 //! Carries the byte-count parity assert: `Transport::send` must report
 //! exactly `Message::wire_bytes()` on both transports — the invariant
 //! that makes the protocol coordinator's traffic ledger bitwise-equal
 //! to the simulator's.
+//!
+//! Besides the tables, the run writes machine-readable results to
+//! `BENCH_transport.json` in the working directory.
 //!
 //! `cargo bench --bench bench_transport`
 
@@ -16,6 +21,7 @@ use std::thread;
 
 use fedae::metrics::print_table;
 use fedae::transport::{InProcChannel, Message, TcpTransport, Transport};
+use fedae::util::json::Json;
 use fedae::util::rng::Rng;
 use fedae::util::Stopwatch;
 
@@ -26,6 +32,12 @@ const TIERS: [(&str, usize); 2] = [("mnist", 15_910), ("cifar", 51_082)];
 const REPS: usize = 200;
 /// Round trips per transport per tier.
 const TRIPS: usize = 50;
+/// Reconnect → catch-up cycles per tier.
+const RECONNECTS: usize = 30;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
 
 fn global_model(n: usize) -> Message {
     let mut rng = Rng::new(0x7ea1);
@@ -47,7 +59,7 @@ fn encoded_update(payload_bytes: usize) -> Message {
     Message::encoded_update(3, 1, 512, payload)
 }
 
-fn encode_decode_row(tag: &str, msg: &Message) -> Vec<String> {
+fn encode_decode_row(tag: &str, msg: &Message) -> (Vec<String>, Json) {
     let frame = msg.to_frame();
     let mb = frame.len() as f64 / 1e6;
 
@@ -63,14 +75,23 @@ fn encode_decode_row(tag: &str, msg: &Message) -> Vec<String> {
     }
     let dec_s = sw.elapsed_secs();
 
-    vec![
+    let row = vec![
         tag.to_string(),
         format!("{}", frame.len()),
         format!("{:.0}", REPS as f64 / enc_s),
         format!("{:.1}", REPS as f64 * mb / enc_s),
         format!("{:.0}", REPS as f64 / dec_s),
         format!("{:.1}", REPS as f64 * mb / dec_s),
-    ]
+    ];
+    let json = obj(vec![
+        ("frame", Json::Str(tag.to_string())),
+        ("bytes", Json::Num(frame.len() as f64)),
+        ("enc_fps", Json::Num(REPS as f64 / enc_s)),
+        ("enc_mb_s", Json::Num(REPS as f64 * mb / enc_s)),
+        ("dec_fps", Json::Num(REPS as f64 / dec_s)),
+        ("dec_mb_s", Json::Num(REPS as f64 * mb / dec_s)),
+    ]);
+    (row, json)
 }
 
 /// One federated exchange: coordinator sends the global model, the
@@ -104,7 +125,7 @@ fn echo_worker(mut t: impl Transport + 'static, up: Message) -> thread::JoinHand
     })
 }
 
-fn transport_rows(n_params: usize, tag: &str) -> Vec<Vec<String>> {
+fn transport_row(n_params: usize, tag: &str) -> (Vec<String>, Json) {
     let down = global_model(n_params);
     // AE-latent-sized uplink: 600 latent floats ≈ the paper's z-dim.
     let up = encoded_update(600 * 4 + 9);
@@ -132,26 +153,97 @@ fn transport_rows(n_params: usize, tag: &str) -> Vec<Vec<String>> {
     let h = echo_worker(worker, up.clone());
     let tcp_ms = round_trip_ms(&mut coord, h, &down);
 
-    vec![vec![
+    let row = vec![
         tag.to_string(),
         format!("{}", down.wire_bytes()),
         format!("{}", up.wire_bytes()),
         format!("{inproc_ms:.3}"),
         format!("{tcp_ms:.3}"),
-    ]]
+    ];
+    let json = obj(vec![
+        ("model", Json::Str(tag.to_string())),
+        ("down_bytes", Json::Num(down.wire_bytes() as f64)),
+        ("up_bytes", Json::Num(up.wire_bytes() as f64)),
+        ("inproc_ms", Json::Num(inproc_ms)),
+        ("tcp_ms", Json::Num(tcp_ms)),
+    ]);
+    (row, json)
+}
+
+/// Reconnect → catch-up latency: a dead worker re-enters the federation
+/// with a fresh TCP dial, a `Rejoin` frame up, and a full-params
+/// `CatchUp` down — the recovery path `ReconnectingTransport` drives
+/// after a lost connection.
+fn reconnect_row(n_params: usize, tag: &str) -> (Vec<String>, Json) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let params = match global_model(n_params) {
+        Message::GlobalModel { params, .. } => params,
+        _ => unreachable!("global_model builds a GlobalModel"),
+    };
+    let catch_up = Message::CatchUp {
+        round: 3,
+        decoder_needed: false,
+        params,
+    };
+    let catch_up_bytes = catch_up.wire_bytes();
+    let coordinator = thread::spawn(move || {
+        for _ in 0..RECONNECTS {
+            let (stream, _) = listener.accept().expect("accept redial");
+            let mut t = TcpTransport::new(stream);
+            let rejoin = t.recv().expect("recv rejoin");
+            assert!(matches!(rejoin, Message::Rejoin { .. }));
+            t.send(&catch_up).expect("send catch-up");
+        }
+    });
+
+    let sw = Stopwatch::start();
+    for _ in 0..RECONNECTS {
+        let mut t = TcpTransport::connect(&addr).expect("redial");
+        t.send(&Message::Rejoin {
+            collab_id: 1,
+            last_round: 2,
+        })
+        .expect("send rejoin");
+        let got = t.recv().expect("recv catch-up");
+        assert!(matches!(got, Message::CatchUp { .. }));
+    }
+    let ms = sw.elapsed_secs() * 1e3 / RECONNECTS as f64;
+    coordinator.join().expect("coordinator thread");
+
+    let row = vec![
+        tag.to_string(),
+        format!("{catch_up_bytes}"),
+        format!("{ms:.3}"),
+    ];
+    let json = obj(vec![
+        ("model", Json::Str(tag.to_string())),
+        ("catch_up_bytes", Json::Num(catch_up_bytes as f64)),
+        ("reconnect_catch_up_ms", Json::Num(ms)),
+    ]);
+    (row, json)
 }
 
 fn main() {
+    let mut json_codec = Vec::new();
+    let mut json_trip = Vec::new();
+    let mut json_reconnect = Vec::new();
+
     println!("== frame encode/decode, {REPS} reps ==");
     let mut rows = Vec::new();
     for (tag, n) in TIERS {
-        rows.push(encode_decode_row(&format!("global_{tag}"), &global_model(n)));
-        rows.push(encode_decode_row(
-            &format!("update_raw_{tag}"),
-            &encoded_update(n * 4 + 1),
-        ));
+        for (label, msg) in [
+            (format!("global_{tag}"), global_model(n)),
+            (format!("update_raw_{tag}"), encoded_update(n * 4 + 1)),
+        ] {
+            let (row, json) = encode_decode_row(&label, &msg);
+            rows.push(row);
+            json_codec.push(json);
+        }
     }
-    rows.push(encode_decode_row("update_latent", &encoded_update(600 * 4 + 9)));
+    let (row, json) = encode_decode_row("update_latent", &encoded_update(600 * 4 + 9));
+    rows.push(row);
+    json_codec.push(json);
     println!(
         "{}",
         print_table(
@@ -163,7 +255,9 @@ fn main() {
     println!("== one round trip (GlobalModel down, latent update up), {TRIPS} trips ==");
     let mut rows = Vec::new();
     for (tag, n) in TIERS {
-        rows.extend(transport_rows(n, tag));
+        let (row, json) = transport_row(n, tag);
+        rows.push(row);
+        json_trip.push(json);
     }
     println!(
         "{}",
@@ -173,4 +267,25 @@ fn main() {
         )
     );
     println!("(Transport::send == wire_bytes asserted on both transports)");
+
+    println!("== reconnect -> catch-up (dial + Rejoin up + CatchUp down), {RECONNECTS} cycles ==");
+    let mut rows = Vec::new();
+    for (tag, n) in TIERS {
+        let (row, json) = reconnect_row(n, tag);
+        rows.push(row);
+        json_reconnect.push(json);
+    }
+    println!(
+        "{}",
+        print_table(&["model", "catch-up B", "reconnect ms"], &rows)
+    );
+
+    let doc = obj(vec![
+        ("encode_decode", Json::Arr(json_codec)),
+        ("round_trip", Json::Arr(json_trip)),
+        ("reconnect", Json::Arr(json_reconnect)),
+    ]);
+    std::fs::write("BENCH_transport.json", doc.to_string_pretty())
+        .expect("write BENCH_transport.json");
+    println!("machine-readable results written to BENCH_transport.json");
 }

@@ -623,6 +623,22 @@ pub struct ProtocolConfig {
     /// ([`crate::transport::TcpTransport`] rejects larger headers before
     /// allocating anything).
     pub max_frame_bytes: usize,
+    /// Survivor floor for quorum degradation: a round that loses workers
+    /// mid-flight still commits if at least this many updates arrive;
+    /// below it the coordinator falls back to STANDBY rendezvous and
+    /// retries the round. `0` (the default) disables degradation — any
+    /// shortfall is handled by eviction alone, as in protocol v2.
+    pub quorum: usize,
+    /// Worker-side retry budget per transport operation, including the
+    /// first attempt (validated `>= 1`; `1` means no retries).
+    pub retry_max: u32,
+    /// Base backoff in milliseconds for worker-side retries; attempt
+    /// `k` sleeps ~`retry_base_ms * 2^(k-1)` with seeded jitter.
+    pub retry_base_ms: u64,
+    /// Grace period in milliseconds before a worker whose connection
+    /// dropped is evicted from the current round, giving it a window to
+    /// `Rejoin`. `0` (the default) evicts immediately (v2 behaviour).
+    pub rejoin_grace_ms: u64,
 }
 
 impl Default for ProtocolConfig {
@@ -632,6 +648,10 @@ impl Default for ProtocolConfig {
             heartbeat_ms: 10_000,
             round_timeout_ms: 300_000,
             max_frame_bytes: crate::transport::DEFAULT_MAX_FRAME,
+            quorum: 0,
+            retry_max: 5,
+            retry_base_ms: 50,
+            rejoin_grace_ms: 0,
         }
     }
 }
@@ -866,6 +886,18 @@ impl ExperimentConfig {
             if let Some(v) = p.get("max_frame_bytes").and_then(|v| v.as_usize()) {
                 cfg.protocol.max_frame_bytes = v;
             }
+            if let Some(v) = p.get("quorum").and_then(|v| v.as_usize()) {
+                cfg.protocol.quorum = v;
+            }
+            if let Some(v) = p.get("retry_max").and_then(|v| v.as_usize()) {
+                cfg.protocol.retry_max = v as u32;
+            }
+            if let Some(v) = p.get("retry_base_ms").and_then(|v| v.as_usize()) {
+                cfg.protocol.retry_base_ms = v as u64;
+            }
+            if let Some(v) = p.get("rejoin_grace_ms").and_then(|v| v.as_usize()) {
+                cfg.protocol.rejoin_grace_ms = v as u64;
+            }
         }
         Ok(cfg)
     }
@@ -1099,6 +1131,19 @@ impl ExperimentConfig {
                  plus any payload (minimum 1024)",
                 p.max_frame_bytes
             )));
+        }
+        if p.quorum > p.resolve_min_participants(n) {
+            return Err(FedAeError::Config(format!(
+                "protocol.quorum {} exceeds the rendezvous floor of {} \
+                 (quorum must be reachable by the workers that joined)",
+                p.quorum,
+                p.resolve_min_participants(n)
+            )));
+        }
+        if p.retry_max == 0 {
+            return Err(FedAeError::Config(
+                "protocol.retry_max must be >= 1 (1 means a single attempt, no retries)".into(),
+            ));
         }
         if self.checkpoint.enabled() {
             if self.checkpoint.every_rounds == 0 {
@@ -1480,7 +1525,9 @@ mod tests {
         assert_eq!(cfg.protocol.resolve_min_participants(5), 5);
         let j = Json::parse(
             r#"{"protocol": {"min_participants": 2, "heartbeat_ms": 500,
-                "round_timeout_ms": 60000, "max_frame_bytes": 1048576}}"#,
+                "round_timeout_ms": 60000, "max_frame_bytes": 1048576,
+                "quorum": 1, "retry_max": 3, "retry_base_ms": 25,
+                "rejoin_grace_ms": 2000}}"#,
         )
         .unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
@@ -1489,6 +1536,10 @@ mod tests {
         assert_eq!(cfg.protocol.round_timeout_ms, 60_000);
         assert_eq!(cfg.protocol.max_frame_bytes, 1 << 20);
         assert_eq!(cfg.protocol.resolve_min_participants(5), 2);
+        assert_eq!(cfg.protocol.quorum, 1);
+        assert_eq!(cfg.protocol.retry_max, 3);
+        assert_eq!(cfg.protocol.retry_base_ms, 25);
+        assert_eq!(cfg.protocol.rejoin_grace_ms, 2000);
     }
 
     #[test]
@@ -1514,6 +1565,19 @@ mod tests {
         let mut cfg = base();
         cfg.protocol.max_frame_bytes = 64;
         assert!(cfg.validate(&m).is_err());
+        // quorum above the rendezvous floor is unreachable.
+        let mut cfg = base();
+        cfg.protocol.quorum = cfg.fl.collaborators + 1;
+        let err = cfg.validate(&m).unwrap_err().to_string();
+        assert!(err.contains("quorum"), "{err}");
+        // ... but quorum == the floor is fine.
+        let mut cfg = base();
+        cfg.protocol.quorum = cfg.protocol.resolve_min_participants(cfg.fl.collaborators);
+        cfg.validate(&m).unwrap();
+        let mut cfg = base();
+        cfg.protocol.retry_max = 0;
+        let err = cfg.validate(&m).unwrap_err().to_string();
+        assert!(err.contains("retry_max"), "{err}");
     }
 
     #[test]

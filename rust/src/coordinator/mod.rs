@@ -62,8 +62,9 @@ pub use async_engine::{AsyncRoundEngine, BufferedUpdate, StragglerStats};
 pub use checkpoint::{Checkpointer, EventRecord, Snapshot};
 pub use engine::ParallelRoundEngine;
 pub use protocol::{
-    run_worker, CoordinatorState, EndpointSource, ProtocolReport, ProtocolServer,
-    StaticEndpoints, TcpAcceptor, WorkerReport,
+    run_worker, ChannelEndpoints, CoordinatorState, EndpointSource, ProtocolReport,
+    ProtocolServer, StaticEndpoints, TcpAcceptor, WorkerReport, MAX_ROUND_STALLS,
+    RECV_ERROR_TOLERANCE,
 };
 pub use selection::{
     ClientSelector, SelectionStats, StratifiedSelector, UniformSelector, WeightedSelector,

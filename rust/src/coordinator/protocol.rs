@@ -6,11 +6,15 @@
 //! ```text
 //!            Hello (version/id checked)          all rounds done
 //! Standby ──────────────────────────▶ Round(0) ─▶ … ─▶ Round(R-1) ──▶ Finished
-//!    │  rendezvous until                  │ per round:                    │
-//!    │  `protocol.min_participants`       │  RoundStart → shipments →     │ Shutdown
-//!    │  workers joined                    │  GlobalModel → updates +      │ to every
-//!    ▼                                    │  eval reports → RoundEnd      ▼ worker
-//!  (timeout ⇒ error)                      ▼  (silent workers evicted)
+//!    │ ▲ rendezvous until                 │ per round:                    │
+//!    │ │ `protocol.min_participants`      │  RoundStart → shipments →     │ Shutdown
+//!    │ │ workers joined                   │  GlobalModel → updates +      │ to every
+//!    ▼ │                                  │  eval reports → RoundEnd      ▼ worker
+//!  (timeout ⇒ error)                      ▼  (silent workers evicted,
+//!      │                                     Rejoin ⇒ CatchUp re-entry)
+//!      └── quorum stall: fewer than `protocol.quorum` updates survive
+//!          ⇒ back to Standby, re-rendezvous, retry the same round
+//!          (bounded; repeated stalls are an error, never a deadlock)
 //! ```
 //!
 //! The coordinator ([`ProtocolServer`]) drives rounds purely by
@@ -52,11 +56,15 @@
 //!
 //! # Faults
 //!
-//! * A worker whose connection errors, or that stays silent past
+//! * A worker whose connection errors repeatedly
+//!   ([`RECV_ERROR_TOLERANCE`] consecutive receive errors; a single
+//!   transient error is tolerated), or that stays silent past
 //!   `protocol.heartbeat_ms` (before acking the round) /
 //!   `protocol.round_timeout_ms` (after acking — it is presumed
 //!   computing), is evicted: [`super::RoundState::evict`] removes it
-//!   from the barrier and the round completes without it.
+//!   from the barrier and the round completes without it. A dropped
+//!   connection gets `protocol.rejoin_grace_ms` before silence-eviction
+//!   kicks in, giving the worker a window to [`Message::Rejoin`].
 //! * `EncodedUpdate` / `DecoderShipment` frames carry an FNV-1a content
 //!   hash: mismatches are answered with
 //!   [`RejectReason::HashMismatch`] and ignored; byte-identical replays
@@ -65,6 +73,39 @@
 //!   an id that is already live is answered with a typed
 //!   [`Message::Reject`] and the connection dropped — a *dead* slot
 //!   with the same id is replaced instead (reconnect).
+//!
+//! # Recovery plane (protocol v3)
+//!
+//! A worker that lost its connection redials and opens with
+//! [`Message::Rejoin`] (see
+//! [`crate::transport::retry::ReconnectingTransport`]). The coordinator
+//! answers with one [`Message::CatchUp`] carrying the current round,
+//! whether the worker's one-time decoder shipment is still needed, and —
+//! only when the worker is an active participant of an in-flight
+//! broadcast whose update has not arrived — the current global params,
+//! so it re-enters the round barrier. A `Rejoin` supersedes any
+//! existing endpoint for that id: the worker is the authority on its
+//! own connection having died.
+//!
+//! Recovery frames are never metered: the `GlobalModel` broadcast they
+//! replace was already costed at send time, the decoder shipment is
+//! metered once per collaborator on arrival, and resent data-plane
+//! frames dedup by content hash — so a rejoin that lands before the
+//! round barrier leaves params, outcomes, and [`LedgerTotals`] bitwise
+//! identical to the fault-free run (`rust/tests/chaos.rs`).
+//!
+//! # Quorum degradation
+//!
+//! With `protocol.quorum > 0`, a round whose surviving updates fall
+//! below the floor is *not* committed: nothing is aggregated, the state
+//! machine returns to `Standby`, re-rendezvouses (bounded by
+//! `round_timeout_ms`), and retries the same round — re-broadcasting to
+//! the re-formed cohort (re-metered: retransmission is a real cost, so
+//! stalled runs do not claim bitwise ledger parity). Workers resend
+//! their cached frames instead of retraining, so the retried round's
+//! math is unchanged. [`MAX_ROUND_STALLS`] consecutive stalls abort
+//! with a typed error. Stalls are recorded in
+//! [`ProtocolReport::quorum_stalls`].
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::net::{SocketAddr, TcpListener, ToSocketAddrs};
@@ -89,6 +130,16 @@ use super::{AggRoundStats, RoundOutcome, RoundState, StragglerStats, SELECTION_S
 /// Per-endpoint poll interval of the coordinator's single-threaded
 /// event loop (every blocking wait is bounded by this).
 const POLL: Duration = Duration::from_millis(5);
+
+/// Consecutive receive errors on one endpoint before the coordinator
+/// marks it dead — a single transient error (one malformed frame, one
+/// hiccup) does not cost a worker its connection.
+pub const RECV_ERROR_TOLERANCE: u32 = 3;
+
+/// Consecutive below-quorum stalls of the *same* round before the
+/// coordinator gives up with a typed error instead of re-rendezvousing
+/// again (bounds the standby-retry loop).
+pub const MAX_ROUND_STALLS: usize = 3;
 
 /// The coordinator's explicit protocol state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,6 +188,31 @@ impl StaticEndpoints {
 impl EndpointSource for StaticEndpoints {
     fn poll(&mut self) -> Result<Option<Box<dyn Transport>>> {
         Ok(self.endpoints.pop())
+    }
+}
+
+/// Endpoints arriving over an in-process channel — the in-proc analogue
+/// of [`TcpAcceptor`] for reconnection tests: worker threads push
+/// freshly dialled server ends mid-run, exactly like a redialled TCP
+/// connection landing in the accept queue.
+pub struct ChannelEndpoints {
+    rx: std::sync::mpsc::Receiver<Box<dyn Transport>>,
+}
+
+impl ChannelEndpoints {
+    /// A connected (dial sender, endpoint source) pair.
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new() -> (std::sync::mpsc::Sender<Box<dyn Transport>>, ChannelEndpoints) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (tx, ChannelEndpoints { rx })
+    }
+}
+
+impl EndpointSource for ChannelEndpoints {
+    fn poll(&mut self) -> Result<Option<Box<dyn Transport>>> {
+        // Disconnected just means no more dialers exist — not an error;
+        // the coordinator keeps serving the endpoints it already has.
+        Ok(self.rx.try_recv().ok())
     }
 }
 
@@ -197,6 +273,15 @@ pub struct ProtocolReport {
     pub rejected_frames: u64,
     /// Unmetered control frames received (heartbeats, eval reports).
     pub control_frames: u64,
+    /// Successful [`Message::Rejoin`] re-admissions (each answered with
+    /// one unmetered [`Message::CatchUp`]).
+    pub rejoins: u64,
+    /// Worker connections that died on the coordinator side (transport
+    /// errors past [`RECV_ERROR_TOLERANCE`], or send failures).
+    pub conn_drops: u64,
+    /// `(round, surviving_updates)` for every below-quorum stall that
+    /// sent the coordinator back to STANDBY rendezvous.
+    pub quorum_stalls: Vec<(usize, usize)>,
 }
 
 /// One connected worker endpoint and its liveness bookkeeping.
@@ -211,12 +296,53 @@ struct WorkerSlot {
     /// acked workers are presumed computing and get the long
     /// `round_timeout_ms` silence allowance instead of `heartbeat_ms`.
     acked_round: Option<usize>,
+    /// When the slot died — silence-eviction of a dead slot waits out
+    /// `protocol.rejoin_grace_ms` from here (the rejoin window).
+    dead_since: Option<Instant>,
+    /// Consecutive receive errors; reset on any good frame, fatal at
+    /// [`RECV_ERROR_TOLERANCE`].
+    recv_errors: u32,
+}
+
+impl WorkerSlot {
+    /// A freshly admitted live slot.
+    fn live(transport: Box<dyn Transport>, acked_round: Option<usize>) -> WorkerSlot {
+        WorkerSlot {
+            transport,
+            alive: true,
+            last_seen: Instant::now(),
+            acked_round,
+            dead_since: None,
+            recv_errors: 0,
+        }
+    }
 }
 
 /// A connection that has not sent its `Hello` yet.
 struct PendingConn {
     transport: Box<dyn Transport>,
     since: Instant,
+}
+
+/// What one drive of a round produced: a committed [`RoundOutcome`], or
+/// a below-quorum stall that sends the machine back to STANDBY.
+enum RoundAttempt {
+    /// The round completed and was folded into the global model.
+    Committed(RoundOutcome),
+    /// Fewer than `protocol.quorum` updates survived; nothing was
+    /// aggregated and the round will be retried.
+    Stalled {
+        /// How many updates did arrive before the stall was declared.
+        survivors: usize,
+    },
+}
+
+/// One flushed operator log line (piped stdout is block-buffered, and
+/// the process-level chaos harness tails these lines live).
+fn log_line(msg: &str) {
+    use std::io::Write as _;
+    println!("[fedae serve] {msg}");
+    let _ = std::io::stdout().flush();
 }
 
 /// The message-driven coordinator: [`CoordinatorState`] machine,
@@ -259,6 +385,21 @@ pub struct ProtocolServer<'rt> {
     dedup_hits: u64,
     rejected_frames: u64,
     control_frames: u64,
+    /// Active participants of the in-flight round (mirrors the round's
+    /// `active` list for rejoin/catch-up decisions).
+    cur_active: BTreeSet<usize>,
+    /// Whether the in-flight round's `GlobalModel` broadcast went out —
+    /// the gate for shipping params in a [`Message::CatchUp`].
+    broadcast_done: bool,
+    /// Participants whose update for the in-flight round was accepted
+    /// (a rejoiner with an accepted update must not be re-triggered).
+    uploaded: BTreeSet<usize>,
+    rejoins: u64,
+    conn_drops: u64,
+    quorum_stalls: Vec<(usize, usize)>,
+    /// Emit one flushed log line per committed round / stall (the
+    /// `fedae serve` operator view).
+    log_rounds: bool,
 }
 
 impl<'rt> ProtocolServer<'rt> {
@@ -363,7 +504,20 @@ impl<'rt> ProtocolServer<'rt> {
             dedup_hits: 0,
             rejected_frames: 0,
             control_frames: 0,
+            cur_active: BTreeSet::new(),
+            broadcast_done: false,
+            uploaded: BTreeSet::new(),
+            rejoins: 0,
+            conn_drops: 0,
+            quorum_stalls: Vec::new(),
+            log_rounds: false,
         })
+    }
+
+    /// Emit one flushed log line per committed round and per quorum
+    /// stall (off by default; `fedae serve` turns it on).
+    pub fn set_round_logging(&mut self, on: bool) {
+        self.log_rounds = on;
     }
 
     /// The machine's current protocol state.
@@ -383,12 +537,43 @@ impl<'rt> ProtocolServer<'rt> {
 
     /// Drive the whole federation: rendezvous until
     /// `protocol.min_participants` workers joined, run every configured
-    /// round, then send `Shutdown` to all live workers and report.
+    /// round (retrying below-quorum rounds from STANDBY, bounded by
+    /// [`MAX_ROUND_STALLS`]), then send `Shutdown` to all live workers
+    /// and report.
     pub fn run(&mut self, source: &mut dyn EndpointSource) -> Result<ProtocolReport> {
         self.rendezvous(source)?;
-        for _ in 0..self.cfg.fl.rounds {
-            let outcome = self.run_protocol_round(source)?;
-            self.outcomes.push(outcome);
+        let mut consecutive_stalls = 0usize;
+        while self.outcomes.len() < self.cfg.fl.rounds {
+            let faults_before = self.fault_counters();
+            match self.run_protocol_round(source)? {
+                RoundAttempt::Committed(outcome) => {
+                    consecutive_stalls = 0;
+                    if self.log_rounds {
+                        self.log_committed(&outcome, faults_before);
+                    }
+                    self.outcomes.push(outcome);
+                }
+                RoundAttempt::Stalled { survivors } => {
+                    consecutive_stalls += 1;
+                    self.quorum_stalls.push((self.round, survivors));
+                    if self.log_rounds {
+                        log_line(&format!(
+                            "round {:>3} stalled: {survivors} update(s) below quorum {}; \
+                             standby rendezvous (stall {consecutive_stalls}/{MAX_ROUND_STALLS})",
+                            self.round, self.cfg.protocol.quorum
+                        ));
+                    }
+                    if consecutive_stalls >= MAX_ROUND_STALLS {
+                        return Err(FedAeError::Coordination(format!(
+                            "round {} stalled below quorum {} {consecutive_stalls} times in a \
+                             row; giving up",
+                            self.round, self.cfg.protocol.quorum
+                        )));
+                    }
+                    self.state = CoordinatorState::Standby;
+                    self.rendezvous(source)?;
+                }
+            }
         }
         self.state = CoordinatorState::Finished;
         let ids: Vec<usize> = self.workers.keys().copied().collect();
@@ -396,6 +581,40 @@ impl<'rt> ProtocolServer<'rt> {
             self.send_to(wid, &Message::Shutdown);
         }
         Ok(self.report())
+    }
+
+    /// Snapshot of the cumulative fault counters, for per-round deltas
+    /// in the operator log.
+    fn fault_counters(&self) -> [u64; 5] {
+        [
+            self.evictions.len() as u64,
+            self.rejoins,
+            self.conn_drops,
+            self.dedup_hits,
+            self.rejected_frames,
+        ]
+    }
+
+    /// One flushed per-round operator log line with fault-counter deltas.
+    fn log_committed(&self, outcome: &RoundOutcome, before: [u64; 5]) {
+        let [ev, rj, cd, dd, rf] = before;
+        let now = self.fault_counters();
+        log_line(&format!(
+            "round {:>3}/{}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B admitted={} \
+             evicted={} rejoined={} conn_drops={} dedup={} rejected={}",
+            outcome.round,
+            self.cfg.fl.rounds,
+            outcome.eval_loss,
+            outcome.eval_acc,
+            outcome.bytes_up,
+            outcome.bytes_down,
+            outcome.stragglers.admitted,
+            now[0] - ev,
+            now[1] - rj,
+            now[2] - cd,
+            now[3] - dd,
+            now[4] - rf,
+        ));
     }
 
     /// The parity + fault report as of now (valid mid-run too).
@@ -408,6 +627,9 @@ impl<'rt> ProtocolServer<'rt> {
             dedup_hits: self.dedup_hits,
             rejected_frames: self.rejected_frames,
             control_frames: self.control_frames,
+            rejoins: self.rejoins,
+            conn_drops: self.conn_drops,
+            quorum_stalls: self.quorum_stalls.clone(),
         }
     }
 
@@ -458,8 +680,9 @@ impl<'rt> ProtocolServer<'rt> {
     }
 
     /// Give every pending connection one bounded chance to produce its
-    /// `Hello`; anything else (or an error, or a `Hello` that does not
-    /// arrive within the round timeout) drops the connection.
+    /// `Hello` or `Rejoin`; anything else (or an error, or an opener
+    /// that does not arrive within the round timeout) drops the
+    /// connection.
     fn poll_pending(&mut self) {
         let pending = std::mem::take(&mut self.pending);
         let patience = Duration::from_millis(self.cfg.protocol.round_timeout_ms);
@@ -467,6 +690,9 @@ impl<'rt> ProtocolServer<'rt> {
             match conn.transport.recv_timeout(POLL) {
                 Ok(Some(Message::Hello { collab_id, version })) => {
                     self.admit(conn.transport, collab_id, version);
+                }
+                Ok(Some(Message::Rejoin { collab_id, .. })) => {
+                    self.admit_rejoin(conn.transport, collab_id);
                 }
                 Ok(Some(_)) => {
                     self.rejected_frames += 1;
@@ -510,19 +736,54 @@ impl<'rt> ProtocolServer<'rt> {
             self.rejected_frames += 1;
             return;
         }
-        self.workers.insert(
-            id,
-            WorkerSlot {
-                transport,
-                alive: true,
-                last_seen: Instant::now(),
-                acked_round: None,
-            },
-        );
+        self.workers.insert(id, WorkerSlot::live(transport, None));
+    }
+
+    /// Re-admit a reconnecting worker: validate the id, answer with one
+    /// unmetered [`Message::CatchUp`] (current round, whether the
+    /// decoder shipment is still owed, and the global params when the
+    /// worker is an active participant of an in-flight broadcast whose
+    /// update has not arrived), and install the new endpoint. The new
+    /// connection supersedes any previous slot for the id — the worker
+    /// is the authority on its own connection having died.
+    fn admit_rejoin(&mut self, mut transport: Box<dyn Transport>, collab_id: u32) {
+        let id = collab_id as usize;
+        if id >= self.n_clients {
+            let _ = transport.send(&Message::Reject {
+                reason: RejectReason::UnknownCollaborator { collab_id },
+            });
+            self.rejected_frames += 1;
+            return;
+        }
+        let params = if self.broadcast_done
+            && self.cur_active.contains(&id)
+            && !self.uploaded.contains(&id)
+        {
+            self.global.clone()
+        } else {
+            Vec::new()
+        };
+        let catch_up = Message::CatchUp {
+            round: self.round as u32,
+            decoder_needed: self.ae_tag.is_some() && !self.shipped.contains(&id),
+            params,
+        };
+        if transport.send(&catch_up).is_err() {
+            // Dead again already; the worker's next redial retries.
+            return;
+        }
+        // The rejoiner knows the round (it was just told), so it gets
+        // the long computing allowance straight away.
+        self.workers
+            .insert(id, WorkerSlot::live(transport, Some(self.round)));
+        self.rejoins += 1;
     }
 
     /// Bounded receive from one worker slot; updates liveness
-    /// bookkeeping and marks the slot dead on transport errors.
+    /// bookkeeping. Receive errors are tolerated up to
+    /// [`RECV_ERROR_TOLERANCE`] consecutive failures (one malformed
+    /// frame on a framed stream is survivable); past that the slot is
+    /// marked dead.
     fn pump_one(&mut self, wid: usize) -> Option<Message> {
         let round = self.round;
         let slot = self.workers.get_mut(&wid)?;
@@ -532,6 +793,7 @@ impl<'rt> ProtocolServer<'rt> {
         match slot.transport.recv_timeout(POLL) {
             Ok(Some(msg)) => {
                 slot.last_seen = Instant::now();
+                slot.recv_errors = 0;
                 if matches!(msg, Message::Heartbeat { .. }) {
                     slot.acked_round = Some(round);
                 }
@@ -539,7 +801,12 @@ impl<'rt> ProtocolServer<'rt> {
             }
             Ok(None) => None,
             Err(_) => {
-                slot.alive = false;
+                slot.recv_errors += 1;
+                if slot.recv_errors >= RECV_ERROR_TOLERANCE {
+                    slot.alive = false;
+                    slot.dead_since = Some(Instant::now());
+                    self.conn_drops += 1;
+                }
                 None
             }
         }
@@ -554,11 +821,14 @@ impl<'rt> ProtocolServer<'rt> {
         }
     }
 
-    /// Best-effort send to a worker; transport errors kill the slot.
+    /// Best-effort send to a worker; transport errors kill the slot
+    /// (a broken pipe on send is unambiguous, unlike a recv hiccup).
     fn send_to(&mut self, wid: usize, msg: &Message) {
         if let Some(slot) = self.workers.get_mut(&wid) {
             if slot.alive && slot.transport.send(msg).is_err() {
                 slot.alive = false;
+                slot.dead_since = Some(Instant::now());
+                self.conn_drops += 1;
             }
         }
     }
@@ -568,19 +838,28 @@ impl<'rt> ProtocolServer<'rt> {
         self.workers.get(&cid).map(|s| s.alive).unwrap_or(false)
     }
 
-    /// The ids among `waiting_on` whose workers are dead or have been
-    /// silent past their allowance (`heartbeat_ms` before the round
-    /// ack, `round_timeout_ms` after — an acked worker is computing).
+    /// The ids among `waiting_on` whose workers are dead past the
+    /// rejoin grace, or have been silent past their allowance
+    /// (`heartbeat_ms` before the round ack, `round_timeout_ms` after —
+    /// an acked worker is computing).
     fn silent_among(&self, round: usize, waiting_on: &[usize], deadline: Instant) -> Vec<usize> {
         let heartbeat = Duration::from_millis(self.cfg.protocol.heartbeat_ms);
         let computing = Duration::from_millis(self.cfg.protocol.round_timeout_ms);
+        let grace = Duration::from_millis(self.cfg.protocol.rejoin_grace_ms);
         let overdue = Instant::now() > deadline;
         waiting_on
             .iter()
             .copied()
             .filter(|cid| match self.workers.get(cid) {
                 None => true,
-                Some(s) if !s.alive => true,
+                Some(s) if !s.alive => {
+                    // A dropped connection gets `rejoin_grace_ms` to
+                    // redial before it costs the worker its round.
+                    overdue
+                        || s.dead_since
+                            .map(|t| t.elapsed() > grace)
+                            .unwrap_or(true)
+                }
                 Some(s) => {
                     let allowance = if s.acked_round == Some(round) {
                         computing
@@ -654,15 +933,20 @@ impl<'rt> ProtocolServer<'rt> {
     }
 
     /// Mark a worker slot dead (its transport is abandoned; the id can
-    /// be re-claimed by a reconnect).
+    /// be re-claimed by a reconnect or rejoin).
     fn kill(&mut self, cid: usize) {
         if let Some(slot) = self.workers.get_mut(&cid) {
-            slot.alive = false;
+            if slot.alive {
+                slot.alive = false;
+                slot.dead_since = Some(Instant::now());
+            }
         }
     }
 
     /// Evict `cid` from the in-flight round: dead slot, removed from
-    /// the barrier, recorded in the fault report.
+    /// the barrier, recorded in the fault report. A quorum retry can
+    /// re-select an already-evicted id; the `(round, cid)` pair is
+    /// recorded once.
     fn evict_now(
         &mut self,
         round: usize,
@@ -672,21 +956,29 @@ impl<'rt> ProtocolServer<'rt> {
     ) {
         self.kill(cid);
         active.retain(|&c| c != cid);
+        self.cur_active.remove(&cid);
         if let Some(state) = state {
             state.evict(cid);
         }
-        self.evictions.push((round, cid));
+        if !self.evictions.contains(&(round, cid)) {
+            self.evictions.push((round, cid));
+        }
     }
 
-    /// Drive one full round: select → `RoundStart` → decoder shipments
-    /// (fresh AE workers) → `GlobalModel` broadcast → collect updates +
-    /// eval reports (evicting silent workers) → decode/aggregate/eval →
+    /// Drive one attempt at the current round: select → `RoundStart` →
+    /// decoder shipments (fresh AE workers) → `GlobalModel` broadcast →
+    /// collect updates + eval reports (evicting silent workers,
+    /// re-admitting rejoiners) → quorum gate → decode/aggregate/eval →
     /// `RoundEnd`. The math mirrors [`super::FlDriver::run_round`]
     /// operation-for-operation — see the module docs for the parity
-    /// argument.
-    fn run_protocol_round(&mut self, source: &mut dyn EndpointSource) -> Result<RoundOutcome> {
+    /// argument. Selection is a stateless function of the round index,
+    /// so a stalled attempt retries with the identical participant set.
+    fn run_protocol_round(&mut self, source: &mut dyn EndpointSource) -> Result<RoundAttempt> {
         let round = self.round;
         self.state = CoordinatorState::Round(round);
+        self.cur_active.clear();
+        self.uploaded.clear();
+        self.broadcast_done = false;
         let n = self.n_clients;
         let sample = self.cfg.selection.sample_size(n, self.cfg.fl.participation);
         let participants = self.selector.select(round, n, sample);
@@ -696,7 +988,8 @@ impl<'rt> ProtocolServer<'rt> {
         };
 
         // Round start: reset acks, notify every selected live worker;
-        // selected ids with no live endpoint are evicted immediately.
+        // selected ids with no live endpoint are evicted immediately
+        // (recorded once even across quorum retries of this round).
         let mut active: Vec<usize> = Vec::with_capacity(participants.len());
         for &cid in &participants {
             if self.is_live(cid) {
@@ -707,10 +1000,11 @@ impl<'rt> ProtocolServer<'rt> {
             }
             if self.is_live(cid) {
                 active.push(cid);
-            } else {
+            } else if !self.evictions.contains(&(round, cid)) {
                 self.evictions.push((round, cid));
             }
         }
+        self.cur_active = active.iter().copied().collect();
 
         let phase_deadline =
             Instant::now() + Duration::from_millis(self.cfg.protocol.round_timeout_ms);
@@ -781,6 +1075,10 @@ impl<'rt> ProtocolServer<'rt> {
                 self.evict_now(round, cid, &mut active, None);
             }
         }
+        // From here a rejoining active participant is owed the params
+        // it may have missed (delivered via CatchUp, never re-metered:
+        // the broadcast above was already costed).
+        self.broadcast_done = true;
 
         // Phase B: collect one verified `EncodedUpdate` + one
         // `EvalReport` per active participant, evicting the silent.
@@ -870,6 +1168,7 @@ impl<'rt> ProtocolServer<'rt> {
                         received_hash.insert(cid, hash);
                         arrivals.insert(cid, arrival_s);
                         state.accept(round, cid, n_samples, update)?;
+                        self.uploaded.insert(cid);
                     }
                     Message::EvalReport {
                         round: r,
@@ -907,6 +1206,19 @@ impl<'rt> ProtocolServer<'rt> {
         // Fold in collaborator-id order (RoundState yields updates
         // sorted by id), mirroring the simulator's admission fold.
         let updates = state.take_updates();
+
+        // Quorum gate: too few survivors means the attempt is not
+        // committed — no aggregation, no round advance, no RoundEnd.
+        // The caller returns to STANDBY and retries this round.
+        let quorum = self.cfg.protocol.quorum;
+        if quorum > 0 && updates.len() < quorum {
+            let survivors = updates.len();
+            self.cur_active.clear();
+            self.uploaded.clear();
+            self.broadcast_done = false;
+            return Ok(RoundAttempt::Stalled { survivors });
+        }
+
         let mut stats = StragglerStats::default();
         let mut train_losses: Vec<(usize, f32)> = Vec::with_capacity(updates.len());
         for (cid, _, _) in &updates {
@@ -972,7 +1284,10 @@ impl<'rt> ProtocolServer<'rt> {
             self.send_to(cid, &Message::RoundEnd { round: round as u32 });
         }
         self.round += 1;
-        Ok(RoundOutcome {
+        self.cur_active.clear();
+        self.uploaded.clear();
+        self.broadcast_done = false;
+        Ok(RoundAttempt::Committed(RoundOutcome {
             round,
             train_losses,
             eval_loss,
@@ -983,7 +1298,7 @@ impl<'rt> ProtocolServer<'rt> {
             stragglers: stats,
             agg: agg_stats,
             selection: sel_stats,
-        })
+        }))
     }
 }
 
@@ -993,6 +1308,10 @@ impl<'rt> ProtocolServer<'rt> {
 struct ActiveWorker<'rt> {
     collaborator: Collaborator<'rt>,
     decoder: Box<dyn UpdateCompressor + 'rt>,
+    /// The decoder-shipment frame as sent (AE only) — kept for
+    /// byte-identical resends after a corrupted delivery or a catch-up
+    /// that reports the shipment was never received.
+    shipment: Option<Message>,
 }
 
 /// Build a worker's training state as the same pure function of
@@ -1013,6 +1332,7 @@ fn activate_worker<'rt>(
     bytes_up: &mut u64,
 ) -> Result<ActiveWorker<'rt>> {
     let shard: Dataset = factory.shard(id)?;
+    let mut shipment = None;
     let (compressor, decoder): (Box<dyn UpdateCompressor + 'rt>, Box<dyn UpdateCompressor + 'rt>) =
         match &cfg.compression {
             CompressionConfig::Ae { ae } => {
@@ -1036,6 +1356,7 @@ fn activate_worker<'rt>(
                 let ship =
                     Message::decoder_shipment(id as u32, ae.clone(), pp.dec_params.clone());
                 *bytes_up += transport.send(&ship)?;
+                shipment = Some(ship);
                 (
                     Box::new(AeCompressor::collaborator(pipeline, pp.enc_params)?)
                         as Box<dyn UpdateCompressor + 'rt>,
@@ -1063,7 +1384,64 @@ fn activate_worker<'rt>(
     Ok(ActiveWorker {
         collaborator,
         decoder,
+        shipment,
     })
+}
+
+/// Deliver the global params for `round` on the worker side: train and
+/// upload (update + eval report) the first time, resend the cached
+/// byte-identical frames on any repeat delivery (quorum re-broadcast,
+/// duplicated frame, catch-up after a reconnect). The training stream
+/// advances exactly once per round no matter how often the round's
+/// params arrive — that is what keeps faulted runs bitwise-identical.
+#[allow(clippy::too_many_arguments)]
+fn deliver_round<'rt>(
+    worker: &mut ActiveWorker<'rt>,
+    trained: &mut Option<(u32, Message, Message)>,
+    eval: &EvalStep<'rt>,
+    test_x: &[f32],
+    test_y: &[f32],
+    cfg: &ExperimentConfig,
+    id: usize,
+    round: u32,
+    params: &[f32],
+    transport: &mut dyn Transport,
+    report: &mut WorkerReport,
+) -> Result<()> {
+    if trained.as_ref().map(|(r, _, _)| *r) == Some(round) {
+        let (_, upd, rep) = trained.as_ref().expect("round checked above");
+        transport.send(upd)?;
+        transport.send(rep)?;
+        report.resends += 1;
+        return Ok(());
+    }
+    worker.collaborator.set_global(params);
+    let train_loss = worker
+        .collaborator
+        .local_train(cfg.fl.local_epochs, &cfg.train)?;
+    let (loss, acc) = eval.eval(worker.collaborator.params(), test_x, test_y)?;
+    let update = worker.collaborator.compressed_update(round as usize)?;
+    let recon = worker.decoder.decompress(&update)?;
+    let recon_mse = tensor::mse(&recon, worker.collaborator.params()) as f32;
+    let upd_msg = Message::encoded_update(
+        round,
+        id as u32,
+        worker.collaborator.n_samples() as u32,
+        update.to_bytes(),
+    );
+    report.bytes_up += transport.send(&upd_msg)?;
+    let rep_msg = Message::EvalReport {
+        round,
+        collab_id: id as u32,
+        train_loss,
+        loss,
+        acc,
+        recon_mse,
+    };
+    transport.send(&rep_msg)?;
+    report.rounds_participated += 1;
+    *trained = Some((round, upd_msg, rep_msg));
+    Ok(())
 }
 
 /// Accounting a worker hands back after a clean `Shutdown`.
@@ -1075,6 +1453,11 @@ pub struct WorkerReport {
     pub bytes_up: u64,
     /// Idle heartbeats sent.
     pub heartbeats_sent: u64,
+    /// [`Message::CatchUp`] frames received after rejoining.
+    pub catch_ups: u64,
+    /// Byte-identical data-plane resends (after a corrupted delivery
+    /// was rejected, a duplicate round delivery, or a catch-up).
+    pub resends: u64,
 }
 
 /// The worker half of the protocol: `Hello`, then react to coordinator
@@ -1084,6 +1467,15 @@ pub struct WorkerReport {
 /// [`Message::encoded_update`] and an [`Message::EvalReport`].
 /// Heartbeats are sent whenever the line goes idle for a third of
 /// `protocol.heartbeat_ms`.
+///
+/// Fault recovery (v3): repeat deliveries of a round's params —
+/// duplicated frames, quorum re-broadcasts, [`Message::CatchUp`] after
+/// a reconnect — resend the cached byte-identical frames instead of
+/// retraining, a [`RejectReason::HashMismatch`] triggers the same
+/// resend, and only non-recoverable rejects abort the worker. Wrap the
+/// transport in a [`crate::transport::retry::ReconnectingTransport`]
+/// (as `fedae worker` does) to survive dropped connections: it redials
+/// and opens with [`Message::Rejoin`] transparently.
 ///
 /// Every seeded stream matches the simulator's per-client activation,
 /// so a federation of these workers reproduces the in-process run
@@ -1147,6 +1539,12 @@ pub fn run_worker<'rt>(
     })?;
     let tick = Duration::from_millis((cfg.protocol.heartbeat_ms / 3).max(10));
     let mut state: Option<ActiveWorker<'rt>> = None;
+    // The last round trained for, with the update/report frames as
+    // sent — repeat deliveries resend these instead of retraining.
+    let mut trained: Option<(u32, Message, Message)> = None;
+    // The round the coordinator most recently told us about (gates
+    // which cached frames a hash-mismatch recovery may resend).
+    let mut cur_round: Option<u32> = None;
     loop {
         match transport.recv_timeout(tick)? {
             None => {
@@ -1155,7 +1553,8 @@ pub fn run_worker<'rt>(
                 })?;
                 report.heartbeats_sent += 1;
             }
-            Some(Message::RoundStart { .. }) => {
+            Some(Message::RoundStart { round }) => {
+                cur_round = Some(round);
                 // Ack first so the coordinator extends the silence
                 // allowance over the (possibly long) pre-pass.
                 transport.send(&Message::Heartbeat {
@@ -1177,6 +1576,7 @@ pub fn run_worker<'rt>(
                 }
             }
             Some(Message::GlobalModel { round, params }) => {
+                cur_round = Some(round);
                 if state.is_none() {
                     state = Some(activate_worker(
                         rt,
@@ -1192,32 +1592,95 @@ pub fn run_worker<'rt>(
                     )?);
                 }
                 let worker = state.as_mut().expect("activated above");
-                worker.collaborator.set_global(&params);
-                let train_loss = worker
-                    .collaborator
-                    .local_train(cfg.fl.local_epochs, &cfg.train)?;
-                let (loss, acc) = eval.eval(worker.collaborator.params(), &test_x, &test_y)?;
-                let update = worker.collaborator.compressed_update(round as usize)?;
-                let recon = worker.decoder.decompress(&update)?;
-                let recon_mse = tensor::mse(&recon, worker.collaborator.params()) as f32;
-                let msg = Message::encoded_update(
+                deliver_round(
+                    worker,
+                    &mut trained,
+                    &eval,
+                    &test_x,
+                    &test_y,
+                    cfg,
+                    id,
                     round,
-                    id as u32,
-                    worker.collaborator.n_samples() as u32,
-                    update.to_bytes(),
-                );
-                report.bytes_up += transport.send(&msg)?;
-                transport.send(&Message::EvalReport {
-                    round,
-                    collab_id: id as u32,
-                    train_loss,
-                    loss,
-                    acc,
-                    recon_mse,
-                })?;
-                report.rounds_participated += 1;
+                    &params,
+                    transport,
+                    &mut report,
+                )?;
+            }
+            Some(Message::CatchUp {
+                round,
+                decoder_needed,
+                params,
+            }) => {
+                // Reconnection state transfer: the coordinator tells us
+                // the current round, whether it still needs our decoder
+                // shipment, and (when we are an in-flight participant
+                // whose update it lacks) the params we missed.
+                cur_round = Some(round);
+                report.catch_ups += 1;
+                let was_active = state.is_some();
+                if state.is_none() && (decoder_needed || !params.is_empty()) {
+                    // Activation ships the decoder as a side effect, so
+                    // a decoder owed by a fresh (restarted) worker is
+                    // covered here.
+                    state = Some(activate_worker(
+                        rt,
+                        cfg,
+                        pipeline,
+                        ae_init.as_ref(),
+                        &init_params,
+                        model.n_params,
+                        &factory,
+                        id,
+                        transport,
+                        &mut report.bytes_up,
+                    )?);
+                }
+                if let Some(worker) = state.as_mut() {
+                    if decoder_needed && was_active {
+                        if let Some(ship) = &worker.shipment {
+                            transport.send(ship)?;
+                            report.resends += 1;
+                        }
+                    }
+                    if !params.is_empty() {
+                        deliver_round(
+                            worker,
+                            &mut trained,
+                            &eval,
+                            &test_x,
+                            &test_y,
+                            cfg,
+                            id,
+                            round,
+                            &params,
+                            transport,
+                            &mut report,
+                        )?;
+                    }
+                }
             }
             Some(Message::RoundEnd { .. }) => {}
+            Some(Message::Reject {
+                reason: RejectReason::HashMismatch { .. },
+            }) => {
+                // A data-plane frame arrived corrupted (lossy link):
+                // resend the cached byte-identical frames — the
+                // coordinator dedups whichever copies it already has by
+                // content hash. Other rejects stay fatal below.
+                if let Some(worker) = state.as_ref() {
+                    if let Some(ship) = &worker.shipment {
+                        transport.send(ship)?;
+                        report.resends += 1;
+                    }
+                }
+                if let Some((r, upd, rep)) = trained.as_ref() {
+                    if cur_round == Some(*r) {
+                        transport.send(upd)?;
+                        transport.send(rep)?;
+                        report.resends += 1;
+                    }
+                }
+            }
             Some(Message::Reject { reason }) => {
                 return Err(FedAeError::Protocol(format!(
                     "rejected by coordinator: {reason}"
@@ -1270,6 +1733,19 @@ mod tests {
         cfg.checkpoint.dir = "/tmp/nope".into();
         let err = ProtocolServer::new(&rt, cfg, None).unwrap_err();
         assert!(err.to_string().contains("checkpoint"), "got: {err}");
+    }
+
+    #[test]
+    fn channel_endpoints_polls_pushed_transports() {
+        let (tx, mut src) = ChannelEndpoints::new();
+        assert!(src.poll().unwrap().is_none());
+        let (server_end, _worker_end) = crate::transport::InProcChannel::pair();
+        tx.send(Box::new(server_end)).unwrap();
+        assert!(src.poll().unwrap().is_some());
+        // A dropped dial sender is not an error: the coordinator keeps
+        // serving whatever endpoints it already has.
+        drop(tx);
+        assert!(src.poll().unwrap().is_none());
     }
 
     #[test]

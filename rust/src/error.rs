@@ -46,6 +46,17 @@ pub enum FedAeError {
     /// mismatch, version skew, or a `--resume` config incompatibility.
     Checkpoint(String),
 
+    /// A [`crate::transport::retry::RetryPolicy`]-wrapped operation
+    /// failed on every allowed attempt.
+    RetriesExhausted {
+        /// The operation that was retried ("connect", "send", "recv").
+        op: String,
+        /// How many attempts were made.
+        attempts: u32,
+        /// The last underlying error, rendered.
+        last: String,
+    },
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -63,6 +74,9 @@ impl fmt::Display for FedAeError {
             FedAeError::Compression(msg) => write!(f, "compression error: {msg}"),
             FedAeError::Coordination(msg) => write!(f, "coordination error: {msg}"),
             FedAeError::Checkpoint(msg) => write!(f, "checkpoint error: {msg}"),
+            FedAeError::RetriesExhausted { op, attempts, last } => {
+                write!(f, "{op} failed after {attempts} attempts: {last}")
+            }
             FedAeError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -59,7 +59,10 @@ fn main() -> Result<()> {
                  inspect  [--artifacts DIR]\n\
                  serve    --port P [any train flags] [--min-participants N (0 = all collabs)]\n\
                  \u{20}        [--heartbeat-ms N] [--round-timeout-ms N] [--max-frame-bytes N]\n\
-                 worker   --connect HOST:PORT --id K [same config flags as the coordinator]"
+                 \u{20}        [--quorum N (0 = off; commit a degraded round with >= N survivors)]\n\
+                 \u{20}        [--rejoin-grace-ms N (grace before a dead worker is evicted)]\n\
+                 worker   --connect HOST:PORT --id K [same config flags as the coordinator]\n\
+                 \u{20}        [--retry-max N (send/recv attempts, >= 1)] [--retry-base-ms N (backoff base)]"
             );
             std::process::exit(2);
         }
@@ -159,6 +162,10 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         args.get_u64("round-timeout-ms", cfg.protocol.round_timeout_ms)?;
     cfg.protocol.max_frame_bytes =
         args.get_usize("max-frame-bytes", cfg.protocol.max_frame_bytes)?;
+    cfg.protocol.quorum = args.get_usize("quorum", cfg.protocol.quorum)?;
+    cfg.protocol.retry_max = args.get_usize("retry-max", cfg.protocol.retry_max as usize)? as u32;
+    cfg.protocol.retry_base_ms = args.get_u64("retry-base-ms", cfg.protocol.retry_base_ms)?;
+    cfg.protocol.rejoin_grace_ms = args.get_u64("rejoin-grace-ms", cfg.protocol.rejoin_grace_ms)?;
     if let Some(dir) = args.get("checkpoint-dir") {
         cfg.checkpoint.dir = dir.to_string();
     }
@@ -490,38 +497,42 @@ fn fedae_serve(args: &Args) -> Result<()> {
     };
     let mut acceptor = TcpAcceptor::bind(("0.0.0.0", port as u16), cfg.protocol.max_frame_bytes)?;
     println!(
-        "coordinator: model={} compression={} rounds={} collabs={} min_participants={} on :{port}",
+        "coordinator: model={} compression={} rounds={} collabs={} min_participants={} quorum={}",
         cfg.model,
         cfg.compression.kind_name(),
         cfg.fl.rounds,
         cfg.fl.collaborators,
         cfg.protocol.resolve_min_participants(cfg.fl.collaborators),
+        cfg.protocol.quorum,
     );
-    let mut server = ProtocolServer::new(&rt, cfg, pipe_ref)?;
-    let report = server.run(&mut acceptor)?;
-    for out in &report.outcomes {
-        println!(
-            "round {:>3}: eval_loss={:.4} eval_acc={:.4} up={}B down={}B recon_mse={:.2e} admitted={}",
-            out.round,
-            out.eval_loss,
-            out.eval_acc,
-            out.bytes_up,
-            out.bytes_down,
-            out.mean_recon_mse,
-            out.stragglers.admitted,
-        );
+    // A parseable, flushed line the process-level chaos harness waits
+    // for before spawning workers (also resolves `--port 0` binds).
+    {
+        use std::io::Write;
+        println!("listening on {}", acceptor.local_addr()?);
+        std::io::stdout().flush()?;
     }
+    let mut server = ProtocolServer::new(&rt, cfg, pipe_ref)?;
+    server.set_round_logging(true);
+    let report = server.run(&mut acceptor)?;
     for (round, cid) in &report.evictions {
         println!("evicted: collaborator {cid} in round {round}");
     }
+    for (round, survivors) in &report.quorum_stalls {
+        println!("stalled: round {round} closed with only {survivors} survivors, retried");
+    }
     let totals = &report.ledger_totals;
     println!(
-        "done: state={} total_bytes={} update_uploads={} dedup_hits={} rejected_frames={}",
+        "done: state={} total_bytes={} update_uploads={} dedup_hits={} rejected_frames={} \
+         rejoins={} conn_drops={} quorum_stalls={}",
         server.state(),
         totals.total_bytes,
         totals.update_up_count,
         report.dedup_hits,
         report.rejected_frames,
+        report.rejoins,
+        report.conn_drops,
+        report.quorum_stalls.len(),
     );
     Ok(())
 }
@@ -533,7 +544,8 @@ fn fedae_serve(args: &Args) -> Result<()> {
 /// flags must match the coordinator's.
 fn fedae_worker(args: &Args) -> Result<()> {
     use fedae::coordinator::run_worker;
-    use fedae::transport::TcpTransport;
+    use fedae::transport::retry::{DialFn, ReconnectingTransport, RetryPolicy};
+    use fedae::transport::{TcpTransport, Transport};
 
     let cfg = config_from_args(args)?;
     let addr = args
@@ -553,14 +565,31 @@ fn fedae_worker(args: &Args) -> Result<()> {
         }
         _ => None,
     };
-    let mut transport = TcpTransport::connect(addr)?;
-    transport.set_max_frame(cfg.protocol.max_frame_bytes);
-    transport.set_write_timeout(Some(std::time::Duration::from_secs(30)))?;
-    println!("worker {id}: connected to {addr}");
+    // Redial-on-disconnect transport: a dead socket is re-established
+    // under the retry policy and re-enters the federation with Rejoin,
+    // so a worker survives a coordinator-side drop (or its own crash
+    // window) without restarting from Hello.
+    let dial_addr = addr.to_string();
+    let max_frame = cfg.protocol.max_frame_bytes;
+    let dial: DialFn = Box::new(move || {
+        let mut t = TcpTransport::connect(&dial_addr)?;
+        t.set_max_frame(max_frame);
+        t.set_write_timeout(Some(std::time::Duration::from_secs(30)))?;
+        Ok(Box::new(t) as Box<dyn Transport>)
+    });
+    let policy = RetryPolicy::from_protocol(&cfg.protocol, cfg.seed ^ id as u64);
+    let mut transport = ReconnectingTransport::new(dial, policy);
+    println!("worker {id}: dialing {addr}");
     let report = run_worker(&rt, &cfg, pipe_ref, id, &mut transport)?;
     println!(
-        "worker {id}: shutdown after {} rounds ({} data bytes up, {} heartbeats)",
-        report.rounds_participated, report.bytes_up, report.heartbeats_sent,
+        "worker {id}: shutdown after {} rounds ({} data bytes up, {} heartbeats, \
+         {} reconnects, {} catch_ups, {} resends)",
+        report.rounds_participated,
+        report.bytes_up,
+        report.heartbeats_sent,
+        transport.reconnects(),
+        report.catch_ups,
+        report.resends,
     );
     Ok(())
 }

@@ -1,0 +1,291 @@
+//! Seeded fault-injecting [`Transport`] wrapper — the chaos harness.
+//!
+//! [`ChaosTransport`] decorates any transport and injects faults on the
+//! *egress* path, one independent seeded Bernoulli draw per fault class
+//! and send:
+//!
+//! * **drop** — the frame vanishes and `send` returns an error, exactly
+//!   like a send onto a broken link; a
+//!   [`crate::transport::retry::RetryTransport`] above it resends.
+//! * **truncate** — a hash-carrying data-plane frame (`EncodedUpdate`,
+//!   `DecoderShipment`) is delivered with a mangled payload but its
+//!   original content hash, so the receiver's verification fails and it
+//!   answers [`crate::transport::RejectReason::HashMismatch`]; the
+//!   worker then resends its cached byte-identical copy. Control frames
+//!   carry no hash and are never truncated.
+//! * **duplicate** — the frame is delivered twice; the coordinator
+//!   dedups byte-identical replays by content hash.
+//! * **delay** — the send sleeps first (jitter on a slow link).
+//!
+//! Ingress is left clean: every injected fault has a *sender-driven*
+//! recovery path (retry, resend-on-reject, dedup), which is what
+//! `rust/tests/chaos.rs` exercises — a faulted federation must still
+//! produce bitwise-identical params, outcomes, and ledger totals.
+//!
+//! All draws come from one seeded [`Rng`], so a chaos schedule replays
+//! exactly: same seed, same faults, same recovery, same bits.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{FedAeError, Result};
+use crate::transport::{Message, Transport};
+use crate::util::rng::Rng;
+
+/// Per-fault-class injection rates (independent Bernoulli draws per
+/// send, applied in drop → truncate → duplicate → delay order; the
+/// first hit wins).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Probability a send fails with a transport error (frame lost).
+    pub drop_rate: f64,
+    /// Probability a hash-carrying frame is delivered corrupted (stale
+    /// hash over a mangled payload).
+    pub truncate_rate: f64,
+    /// Probability a frame is delivered twice.
+    pub duplicate_rate: f64,
+    /// Probability a send sleeps [`ChaosConfig::delay`] first.
+    pub delay_rate: f64,
+    /// The injected latency for delayed sends.
+    pub delay: Duration,
+    /// Seed of the fault schedule (same seed ⇒ same schedule).
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            drop_rate: 0.0,
+            truncate_rate: 0.0,
+            duplicate_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::from_millis(1),
+            seed: 0,
+        }
+    }
+}
+
+/// Counts of injected faults, readable during and after the run via
+/// [`ChaosTransport::stats_handle`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Sends that failed with an injected error.
+    pub dropped: u64,
+    /// Frames delivered with a corrupted payload + stale hash.
+    pub truncated: u64,
+    /// Frames delivered twice.
+    pub duplicated: u64,
+    /// Sends that slept first.
+    pub delayed: u64,
+}
+
+impl ChaosStats {
+    /// Total injected faults across all classes.
+    pub fn total(&self) -> u64 {
+        self.dropped + self.truncated + self.duplicated + self.delayed
+    }
+}
+
+/// A [`Transport`] decorator injecting seeded egress faults — see the
+/// module docs for the fault classes and their recovery paths.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    cfg: ChaosConfig,
+    rng: Rng,
+    /// Shared so a test can keep a handle while the transport itself is
+    /// moved into a worker thread — green runs must prove faults
+    /// actually fired, not that the schedule was silently empty.
+    stats: Arc<Mutex<ChaosStats>>,
+}
+
+impl ChaosTransport {
+    /// Wrap `inner` under `cfg` (fault schedule seeded from
+    /// `cfg.seed`).
+    pub fn new(inner: Box<dyn Transport>, cfg: ChaosConfig) -> ChaosTransport {
+        let rng = Rng::new(cfg.seed ^ 0x43_48_41_4F_53); // "CHAOS"
+        ChaosTransport {
+            inner,
+            cfg,
+            rng,
+            stats: Arc::new(Mutex::new(ChaosStats::default())),
+        }
+    }
+
+    /// Snapshot of the injected-fault counters.
+    pub fn stats(&self) -> ChaosStats {
+        *self.stats.lock().expect("chaos stats lock")
+    }
+
+    /// A handle to the live counters, for reading after the transport
+    /// moved into a worker thread.
+    pub fn stats_handle(&self) -> Arc<Mutex<ChaosStats>> {
+        Arc::clone(&self.stats)
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut ChaosStats)) {
+        f(&mut self.stats.lock().expect("chaos stats lock"));
+    }
+
+    /// Deliver `msg` with its payload mangled but its content hash left
+    /// stale, so the receiver's hash verification must fail.
+    fn send_corrupted(&mut self, msg: &Message) -> Result<u64> {
+        let mut mangled = msg.clone();
+        match &mut mangled {
+            Message::EncodedUpdate { payload, .. } => {
+                if let Some(last) = payload.last_mut() {
+                    *last ^= 0xFF;
+                } else {
+                    payload.push(0xAA);
+                }
+            }
+            Message::DecoderShipment { dec_params, .. } => {
+                if let Some(first) = dec_params.first_mut() {
+                    *first = f32::from_bits(first.to_bits() ^ 1);
+                } else {
+                    dec_params.push(1.0);
+                }
+            }
+            _ => unreachable!("caller guards on hash-carrying frames"),
+        }
+        self.inner.send(&mangled)?;
+        // Report the clean frame's size: the sender believes the send
+        // succeeded untouched.
+        Ok(msg.wire_bytes())
+    }
+}
+
+/// Whether this frame carries an FNV-1a content hash (and so has a
+/// reject-and-resend recovery path for corruption).
+fn carries_hash(msg: &Message) -> bool {
+    matches!(
+        msg,
+        Message::EncodedUpdate { .. } | Message::DecoderShipment { .. }
+    )
+}
+
+impl Transport for ChaosTransport {
+    fn send(&mut self, msg: &Message) -> Result<u64> {
+        if self.rng.uniform() < self.cfg.drop_rate {
+            self.bump(|s| s.dropped += 1);
+            return Err(FedAeError::Protocol("chaos: frame dropped".into()));
+        }
+        if carries_hash(msg) && self.rng.uniform() < self.cfg.truncate_rate {
+            self.bump(|s| s.truncated += 1);
+            return self.send_corrupted(msg);
+        }
+        if self.rng.uniform() < self.cfg.duplicate_rate {
+            self.bump(|s| s.duplicated += 1);
+            self.inner.send(msg)?;
+            return self.inner.send(msg);
+        }
+        if self.rng.uniform() < self.cfg.delay_rate {
+            self.bump(|s| s.delayed += 1);
+            std::thread::sleep(self.cfg.delay);
+        }
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        self.inner.recv_timeout(timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InProcChannel;
+
+    fn chans(cfg: ChaosConfig) -> (InProcChannel, ChaosTransport) {
+        let (server, client) = InProcChannel::pair();
+        (server, ChaosTransport::new(Box::new(client), cfg))
+    }
+
+    #[test]
+    fn drop_rate_one_fails_every_send() {
+        let (server, mut t) = chans(ChaosConfig {
+            drop_rate: 1.0,
+            ..ChaosConfig::default()
+        });
+        for _ in 0..3 {
+            assert!(t.send(&Message::Heartbeat { collab_id: 1 }).is_err());
+        }
+        assert_eq!(t.stats().dropped, 3);
+        assert!(server.try_recv().is_none(), "dropped frames must vanish");
+    }
+
+    #[test]
+    fn duplicate_rate_one_delivers_twice() {
+        let (server, mut t) = chans(ChaosConfig {
+            duplicate_rate: 1.0,
+            ..ChaosConfig::default()
+        });
+        let msg = Message::Heartbeat { collab_id: 2 };
+        t.send(&msg).unwrap();
+        assert_eq!(server.recv().unwrap(), msg);
+        assert_eq!(server.recv().unwrap(), msg);
+        assert_eq!(t.stats().duplicated, 1);
+    }
+
+    #[test]
+    fn truncation_breaks_the_hash_but_spares_control_frames() {
+        let (server, mut t) = chans(ChaosConfig {
+            truncate_rate: 1.0,
+            ..ChaosConfig::default()
+        });
+
+        // A hash-carrying frame arrives corrupted: same wire-size
+        // report to the sender, failed verification at the receiver.
+        let clean = Message::encoded_update(0, 1, 64, vec![1, 2, 3, 4]);
+        assert!(clean.verify_hash().is_ok());
+        let reported = t.send(&clean).unwrap();
+        assert_eq!(reported, clean.wire_bytes());
+        let received = server.recv().unwrap();
+        assert!(received.verify_hash().is_err(), "stale hash must fail");
+        assert_eq!(t.stats().truncated, 1);
+
+        // Control frames carry no hash and pass untouched.
+        let hb = Message::Heartbeat { collab_id: 1 };
+        t.send(&hb).unwrap();
+        assert_eq!(server.recv().unwrap(), hb);
+        assert_eq!(t.stats().truncated, 1);
+    }
+
+    #[test]
+    fn delay_rate_one_sleeps_then_delivers() {
+        let (server, mut t) = chans(ChaosConfig {
+            delay_rate: 1.0,
+            delay: Duration::from_millis(5),
+            ..ChaosConfig::default()
+        });
+        let start = std::time::Instant::now();
+        t.send(&Message::Heartbeat { collab_id: 3 }).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(5));
+        assert_eq!(t.stats().delayed, 1);
+        assert!(server.try_recv().is_some());
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let run = |seed: u64| -> (Vec<bool>, ChaosStats) {
+            let (_server, mut t) = chans(ChaosConfig {
+                drop_rate: 0.4,
+                seed,
+                ..ChaosConfig::default()
+            });
+            let outcomes = (0..32)
+                .map(|i| t.send(&Message::Heartbeat { collab_id: i }).is_ok())
+                .collect();
+            (outcomes, t.stats())
+        };
+        let (a, sa) = run(7);
+        let (b, sb) = run(7);
+        assert_eq!(a, b, "same seed must replay the same fault schedule");
+        assert_eq!(sa, sb);
+        let (c, _) = run(8);
+        assert_ne!(a, c, "different seeds should differ somewhere");
+    }
+}

@@ -5,6 +5,12 @@
 //! be replayed (`PropConfig::only_seed`). Generators are plain closures
 //! over [`crate::util::rng::Rng`], composing naturally with the crate's
 //! deterministic RNG.
+//!
+//! [`chaos`] adds a seeded fault-injecting [`crate::transport::Transport`]
+//! wrapper (drop / delay / duplicate / truncate) for protocol robustness
+//! tests (`rust/tests/chaos.rs`).
+
+pub mod chaos;
 
 /// The property-run loop and its configuration.
 pub mod prop {

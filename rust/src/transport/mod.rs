@@ -20,6 +20,18 @@
 //! hash)` to dedup replayed uploads. See ARCHITECTURE.md §Coordinator
 //! protocol & transports for the full frame table.
 //!
+//! v3 adds the recovery plane: `Rejoin` lets a worker that lost its
+//! connection (or was evicted) re-attach mid-experiment without
+//! restarting from `Hello`, and `CatchUp` is the coordinator's state
+//! transfer in response (current round, whether the decoder shipment is
+//! still owed, and — when the rejoiner is an active participant of an
+//! in-flight broadcast — the current global model). Recovery frames are
+//! never metered in the traffic ledger: the broadcast they replace was
+//! already costed at send time, so Eq.-5 totals stay conserved (see
+//! [`crate::coordinator::protocol`]). The [`retry`] submodule wraps any
+//! transport with bounded retry/backoff and transparent
+//! redial-plus-`Rejoin`.
+//!
 //! Two transports implement the same protocol behind the [`Transport`]
 //! trait:
 //! * [`InProcChannel`] — mpsc pairs for the single-process simulator and
@@ -41,10 +53,16 @@ use std::time::Duration;
 use crate::error::{FedAeError, Result};
 use crate::tensor::{bytes_to_f32s, f32s_to_bytes};
 
+pub mod retry;
+
 /// Protocol version; bump on wire-format changes. v2 added content
 /// hashes + the scheme tag on data-plane frames and the control-plane
-/// messages (`Heartbeat`, `RoundStart`, `RoundEnd`, `Reject`).
-pub const PROTOCOL_VERSION: u16 = 2;
+/// messages (`Heartbeat`, `RoundStart`, `RoundEnd`, `Reject`); v3 added
+/// the recovery plane (`Rejoin`, `CatchUp`).
+pub const PROTOCOL_VERSION: u16 = 3;
+
+/// `Rejoin.last_round` sentinel: the worker never acted on any round.
+pub const NO_ROUND: u32 = u32::MAX;
 
 /// FNV-1a 64-bit offset basis.
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -240,6 +258,30 @@ pub enum Message {
         /// Why the server refused.
         reason: RejectReason,
     },
+    /// Collaborator -> server: re-attach after a lost connection or an
+    /// eviction, instead of restarting from `Hello`. The coordinator
+    /// answers with a [`Message::CatchUp`] (or a typed `Reject`).
+    Rejoin {
+        /// Sender's collaborator id.
+        collab_id: u32,
+        /// Last round whose `GlobalModel` the sender uploaded for
+        /// ([`NO_ROUND`] when it never did).
+        last_round: u32,
+    },
+    /// Server -> collaborator: reconnection state transfer answering a
+    /// [`Message::Rejoin`]. Never metered — the broadcast it replaces
+    /// was already costed at send time.
+    CatchUp {
+        /// The coordinator's current round.
+        round: u32,
+        /// Whether the coordinator still needs this collaborator's
+        /// one-time decoder shipment (it was never metered before).
+        decoder_needed: bool,
+        /// The current global model when the rejoiner is an active
+        /// participant of an in-flight broadcast (train or resend for
+        /// `round`); empty otherwise (idle until the next `RoundStart`).
+        params: Vec<f32>,
+    },
 }
 
 impl Message {
@@ -319,6 +361,8 @@ impl Message {
             Message::RoundStart { .. } => 8,
             Message::RoundEnd { .. } => 9,
             Message::Reject { .. } => 10,
+            Message::Rejoin { .. } => 11,
+            Message::CatchUp { .. } => 12,
         }
     }
 
@@ -394,6 +438,23 @@ impl Message {
                 put_u32(&mut payload, a);
                 put_u32(&mut payload, b);
             }
+            Message::Rejoin {
+                collab_id,
+                last_round,
+            } => {
+                put_u32(&mut payload, *collab_id);
+                put_u32(&mut payload, *last_round);
+            }
+            Message::CatchUp {
+                round,
+                decoder_needed,
+                params,
+            } => {
+                put_u32(&mut payload, *round);
+                payload.push(*decoder_needed as u8);
+                put_u32(&mut payload, params.len() as u32);
+                payload.extend_from_slice(&f32s_to_bytes(params));
+            }
         }
         let mut frame = Vec::with_capacity(6 + payload.len());
         put_u32(&mut frame, payload.len() as u32);
@@ -419,6 +480,8 @@ impl Message {
             Message::RoundStart { .. } => 4,
             Message::RoundEnd { .. } => 4,
             Message::Reject { .. } => 10,
+            Message::Rejoin { .. } => 8,
+            Message::CatchUp { params, .. } => 9 + 4 * params.len(),
         };
         6 + payload as u64
     }
@@ -499,6 +562,25 @@ impl Message {
                 let b = cur.u32()?;
                 Message::Reject {
                     reason: RejectReason::decode(code, a, b)?,
+                }
+            }
+            11 => Message::Rejoin {
+                collab_id: cur.u32()?,
+                last_round: cur.u32()?,
+            },
+            12 => {
+                let round = cur.u32()?;
+                let flag = cur.u8()?;
+                if flag > 1 {
+                    return Err(FedAeError::Protocol(format!(
+                        "catch-up decoder flag must be 0 or 1, got {flag}"
+                    )));
+                }
+                let n = cur.u32()? as usize;
+                Message::CatchUp {
+                    round,
+                    decoder_needed: flag != 0,
+                    params: cur.f32s(n)?,
                 }
             }
             other => {
@@ -905,6 +987,56 @@ mod tests {
         ] {
             roundtrip(Message::Reject { reason });
         }
+        roundtrip(Message::Rejoin {
+            collab_id: 5,
+            last_round: 2,
+        });
+        roundtrip(Message::Rejoin {
+            collab_id: 0,
+            last_round: NO_ROUND,
+        });
+        roundtrip(Message::CatchUp {
+            round: 3,
+            decoder_needed: true,
+            params: vec![1.0, -0.5],
+        });
+        roundtrip(Message::CatchUp {
+            round: 0,
+            decoder_needed: false,
+            params: vec![],
+        });
+    }
+
+    #[test]
+    fn catch_up_nan_params_roundtrip_bitwise_and_flag_is_strict() {
+        let weird = Message::CatchUp {
+            round: 1,
+            decoder_needed: true,
+            params: vec![f32::NAN, f32::INFINITY, -0.0],
+        };
+        let frame = weird.to_frame();
+        assert_eq!(frame.len() as u64, weird.wire_bytes());
+        assert_eq!(Message::from_frame(&frame).unwrap().to_frame(), frame);
+        // A decoder flag outside {0, 1} is a typed protocol error, so a
+        // corrupted flag byte can never silently decode.
+        let mut bad = Message::CatchUp {
+            round: 1,
+            decoder_needed: false,
+            params: vec![],
+        }
+        .to_frame();
+        bad[10] = 7; // flag byte (after 6-byte header + 4-byte round)
+        let err = Message::from_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("decoder flag"), "{err}");
+        // An oversized interior float count errors before allocating.
+        let mut frame = Message::CatchUp {
+            round: 0,
+            decoder_needed: false,
+            params: vec![0.0; 4],
+        }
+        .to_frame();
+        frame[11..15].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::from_frame(&frame).is_err());
     }
 
     #[test]
@@ -1052,6 +1184,17 @@ mod tests {
             Message::encoded_update(1, 2, 3, vec![1, 2, 3, 4, 5, 6]).to_frame(),
             Message::Reject {
                 reason: RejectReason::VersionMismatch { got: 1, want: 2 },
+            }
+            .to_frame(),
+            Message::Rejoin {
+                collab_id: 1,
+                last_round: 0,
+            }
+            .to_frame(),
+            Message::CatchUp {
+                round: 2,
+                decoder_needed: true,
+                params: vec![0.25; 3],
             }
             .to_frame(),
         ];

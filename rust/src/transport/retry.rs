@@ -1,0 +1,606 @@
+//! Worker-side fault tolerance for the protocol transports.
+//!
+//! Three layers, composable with any [`Transport`]:
+//!
+//! * [`RetryPolicy`] — bounded attempts with exponential backoff and
+//!   seeded deterministic jitter (same seed ⇒ same sleep schedule, so
+//!   chaos tests replay exactly).
+//! * [`RetryTransport`] — retries failed send/recv calls on the *same*
+//!   connection (lossy-link tolerance; the chaos harness in
+//!   [`crate::testing::chaos`] drives it).
+//! * [`ReconnectingTransport`] — redials a *dead* connection through a
+//!   caller-supplied dial closure and re-enters the federation with a
+//!   [`Message::Rejoin`], so [`crate::coordinator::protocol::run_worker`]
+//!   survives coordinator-side disconnects with no signature change. It
+//!   snoops the frames it forwards (`Hello` for the collaborator id,
+//!   `EncodedUpdate` for the last uploaded round) to fill the rejoin
+//!   frame.
+//!
+//! Every layer fails closed with the typed
+//! [`FedAeError::RetriesExhausted`] once its attempt budget is spent.
+
+use std::time::Duration;
+
+use crate::config::ProtocolConfig;
+use crate::error::{FedAeError, Result};
+use crate::transport::{Message, Transport, NO_ROUND};
+use crate::util::rng::Rng;
+
+/// Bounded-attempt exponential backoff with seeded jitter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Attempts per operation, including the first (`>= 1`; `1` means
+    /// no retries).
+    pub max_attempts: u32,
+    /// Base backoff: the sleep before retry `k` (1-based) is
+    /// `base_delay * 2^(k-1)`, jittered, capped at `max_delay`.
+    pub base_delay: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub max_delay: Duration,
+    /// Jitter stream seed — deterministic, so two runs with the same
+    /// seed sleep identically while distinct workers decorrelate.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(2),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Build from the `protocol.retry_*` knobs, with a caller-chosen
+    /// jitter seed (typically `cfg.seed ^ worker_id`).
+    pub fn from_protocol(p: &ProtocolConfig, seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: p.retry_max,
+            base_delay: Duration::from_millis(p.retry_base_ms),
+            max_delay: Duration::from_millis((p.retry_base_ms.max(1)) * 64),
+            seed,
+        }
+    }
+
+    /// The (jittered) sleep before retry `attempt` (1-based): full
+    /// jitter in `[d/2, d]` where `d = min(base * 2^(attempt-1),
+    /// max_delay)` — decorrelates a fleet of workers hammering a
+    /// recovering coordinator without ever sleeping below half the
+    /// deterministic schedule.
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let shift = attempt.saturating_sub(1).min(20);
+        let exp = self
+            .base_delay
+            .checked_mul(1u32 << shift)
+            .unwrap_or(self.max_delay);
+        let capped = exp.min(self.max_delay);
+        let micros = capped.as_micros() as u64;
+        Duration::from_micros(micros / 2 + rng.below((micros / 2 + 1) as usize) as u64)
+    }
+
+    /// Run `f` under this policy: up to `max_attempts` calls with the
+    /// backoff schedule between them, then the typed
+    /// [`FedAeError::RetriesExhausted`] carrying the last error.
+    pub fn run<T>(&self, op: &str, rng: &mut Rng, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+        let attempts = self.max_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.backoff(attempt, rng));
+            }
+            match f() {
+                Ok(v) => return Ok(v),
+                Err(e) => last = e.to_string(),
+            }
+        }
+        Err(FedAeError::RetriesExhausted {
+            op: op.into(),
+            attempts,
+            last,
+        })
+    }
+}
+
+/// A [`Transport`] decorator that retries failed operations on the
+/// *same* connection under a [`RetryPolicy`] — the lossy-link layer.
+/// For dead-connection redial see [`ReconnectingTransport`].
+pub struct RetryTransport {
+    inner: Box<dyn Transport>,
+    policy: RetryPolicy,
+    rng: Rng,
+    /// Operations that succeeded only after at least one retry.
+    retried_ops: u64,
+}
+
+impl RetryTransport {
+    /// Wrap `inner` under `policy` (jitter stream seeded from the
+    /// policy's seed).
+    pub fn new(inner: Box<dyn Transport>, policy: RetryPolicy) -> RetryTransport {
+        let rng = Rng::new(policy.seed ^ 0x52_45_54_52_59); // "RETRY"
+        RetryTransport {
+            inner,
+            policy,
+            rng,
+            retried_ops: 0,
+        }
+    }
+
+    /// Operations that needed at least one retry to succeed.
+    pub fn retried_ops(&self) -> u64 {
+        self.retried_ops
+    }
+}
+
+impl Transport for RetryTransport {
+    fn send(&mut self, msg: &Message) -> Result<u64> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff(attempt, &mut self.rng));
+            }
+            match self.inner.send(msg) {
+                Ok(n) => {
+                    if attempt > 0 {
+                        self.retried_ops += 1;
+                    }
+                    return Ok(n);
+                }
+                Err(e) => last = e.to_string(),
+            }
+        }
+        Err(FedAeError::RetriesExhausted {
+            op: "send".into(),
+            attempts,
+            last,
+        })
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff(attempt, &mut self.rng));
+            }
+            match self.inner.recv() {
+                Ok(m) => {
+                    if attempt > 0 {
+                        self.retried_ops += 1;
+                    }
+                    return Ok(m);
+                }
+                Err(e) => last = e.to_string(),
+            }
+        }
+        Err(FedAeError::RetriesExhausted {
+            op: "recv".into(),
+            attempts,
+            last,
+        })
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        // `Ok(None)` is a clean timeout, not a failure: return it
+        // without burning retry budget.
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff(attempt, &mut self.rng));
+            }
+            match self.inner.recv_timeout(timeout) {
+                Ok(m) => {
+                    if attempt > 0 {
+                        self.retried_ops += 1;
+                    }
+                    return Ok(m);
+                }
+                Err(e) => last = e.to_string(),
+            }
+        }
+        Err(FedAeError::RetriesExhausted {
+            op: "recv".into(),
+            attempts,
+            last,
+        })
+    }
+}
+
+/// The dial closure a [`ReconnectingTransport`] uses to (re)establish
+/// its connection.
+pub type DialFn = Box<dyn FnMut() -> Result<Box<dyn Transport>> + Send>;
+
+/// A [`Transport`] that transparently redials when its connection dies
+/// and re-enters the federation with a [`Message::Rejoin`].
+///
+/// The first dial is plain (the worker introduces itself with `Hello`
+/// as usual); every later dial — only possible once a `Hello` has been
+/// snooped — opens with `Rejoin{collab_id, last_round}` so the
+/// coordinator answers with a [`Message::CatchUp`] instead of treating
+/// the worker as a stranger.
+pub struct ReconnectingTransport {
+    inner: Option<Box<dyn Transport>>,
+    dial: DialFn,
+    policy: RetryPolicy,
+    rng: Rng,
+    /// Snooped from the forwarded `Hello`.
+    collab_id: Option<u32>,
+    /// Snooped from forwarded `EncodedUpdate`s: the last uploaded round.
+    last_round: Option<u32>,
+    reconnects: u64,
+}
+
+impl ReconnectingTransport {
+    /// Wrap a dial closure under `policy`. No connection is opened
+    /// until the first operation.
+    pub fn new(dial: DialFn, policy: RetryPolicy) -> ReconnectingTransport {
+        let rng = Rng::new(policy.seed ^ 0x52_45_44_49_41_4C); // "REDIAL"
+        ReconnectingTransport {
+            inner: None,
+            dial,
+            policy,
+            rng,
+            collab_id: None,
+            last_round: None,
+            reconnects: 0,
+        }
+    }
+
+    /// Completed redial + `Rejoin` cycles (0 on a fault-free run).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// One dial attempt; a redial (post-`Hello`) opens with `Rejoin`.
+    fn ensure(&mut self) -> Result<()> {
+        if self.inner.is_some() {
+            return Ok(());
+        }
+        let mut t = (self.dial)()?;
+        if let Some(collab_id) = self.collab_id {
+            t.send(&Message::Rejoin {
+                collab_id,
+                last_round: self.last_round.unwrap_or(NO_ROUND),
+            })?;
+            self.reconnects += 1;
+        }
+        self.inner = Some(t);
+        Ok(())
+    }
+
+    /// Record what a successfully forwarded frame tells us about our
+    /// identity and progress (used to fill later `Rejoin`s).
+    fn note_sent(&mut self, msg: &Message) {
+        match msg {
+            Message::Hello { collab_id, .. } => self.collab_id = Some(*collab_id),
+            Message::EncodedUpdate { round, .. } => self.last_round = Some(*round),
+            _ => {}
+        }
+    }
+}
+
+impl Transport for ReconnectingTransport {
+    fn send(&mut self, msg: &Message) -> Result<u64> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff(attempt, &mut self.rng));
+            }
+            if let Err(e) = self.ensure() {
+                last = e.to_string();
+                continue;
+            }
+            match self.inner.as_mut().expect("ensured").send(msg) {
+                Ok(n) => {
+                    self.note_sent(msg);
+                    return Ok(n);
+                }
+                Err(e) => {
+                    last = e.to_string();
+                    self.inner = None;
+                }
+            }
+        }
+        Err(FedAeError::RetriesExhausted {
+            op: "send".into(),
+            attempts,
+            last,
+        })
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff(attempt, &mut self.rng));
+            }
+            if let Err(e) = self.ensure() {
+                last = e.to_string();
+                continue;
+            }
+            match self.inner.as_mut().expect("ensured").recv() {
+                Ok(m) => return Ok(m),
+                Err(e) => {
+                    last = e.to_string();
+                    self.inner = None;
+                }
+            }
+        }
+        Err(FedAeError::RetriesExhausted {
+            op: "recv".into(),
+            attempts,
+            last,
+        })
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff(attempt, &mut self.rng));
+            }
+            if let Err(e) = self.ensure() {
+                last = e.to_string();
+                continue;
+            }
+            match self.inner.as_mut().expect("ensured").recv_timeout(timeout) {
+                Ok(m) => return Ok(m),
+                Err(e) => {
+                    last = e.to_string();
+                    self.inner = None;
+                }
+            }
+        }
+        Err(FedAeError::RetriesExhausted {
+            op: "recv".into(),
+            attempts,
+            last,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InProcChannel;
+    use std::sync::mpsc;
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_grows() {
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(100),
+            seed: 42,
+        };
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for attempt in 1..8 {
+            let d1 = policy.backoff(attempt, &mut a);
+            let d2 = policy.backoff(attempt, &mut b);
+            assert_eq!(d1, d2, "same seed, same schedule");
+            let cap = policy
+                .base_delay
+                .checked_mul(1 << (attempt - 1))
+                .unwrap_or(policy.max_delay)
+                .min(policy.max_delay);
+            assert!(d1 <= cap, "attempt {attempt}: {d1:?} > {cap:?}");
+            assert!(d1 >= cap / 2, "attempt {attempt}: {d1:?} < {:?}", cap / 2);
+        }
+        // Attempt 5+ hits the cap: 10ms * 2^4 = 160ms > 100ms.
+        assert!(policy.backoff(5, &mut a) <= policy.max_delay);
+    }
+
+    #[test]
+    fn policy_run_retries_then_exhausts_typed() {
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_micros(10),
+            max_delay: Duration::from_micros(50),
+            seed: 1,
+        };
+        let mut rng = Rng::new(1);
+        // Succeeds on the third attempt.
+        let mut calls = 0;
+        let out = policy.run("op", &mut rng, || {
+            calls += 1;
+            if calls < 3 {
+                Err(FedAeError::Protocol("flaky".into()))
+            } else {
+                Ok(calls)
+            }
+        });
+        assert_eq!(out.unwrap(), 3);
+        // Never succeeds: typed RetriesExhausted after exactly 3 calls.
+        let mut calls = 0;
+        let err = policy
+            .run("doomed", &mut rng, || -> Result<()> {
+                calls += 1;
+                Err(FedAeError::Protocol("always down".into()))
+            })
+            .unwrap_err();
+        assert_eq!(calls, 3);
+        match &err {
+            FedAeError::RetriesExhausted { op, attempts, last } => {
+                assert_eq!(op, "doomed");
+                assert_eq!(*attempts, 3);
+                assert!(last.contains("always down"));
+            }
+            other => panic!("expected RetriesExhausted, got {other}"),
+        }
+        assert!(err.to_string().contains("after 3 attempts"), "{err}");
+    }
+
+    /// A transport whose sends fail the first `fail_n` times.
+    struct Flaky {
+        inner: InProcChannel,
+        fail_n: usize,
+    }
+
+    impl Transport for Flaky {
+        fn send(&mut self, msg: &Message) -> Result<u64> {
+            if self.fail_n > 0 {
+                self.fail_n -= 1;
+                return Err(FedAeError::Protocol("injected send failure".into()));
+            }
+            self.inner.send(msg)?;
+            Ok(msg.wire_bytes())
+        }
+        fn recv(&mut self) -> Result<Message> {
+            InProcChannel::recv(&self.inner)
+        }
+        fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Message>> {
+            Transport::recv_timeout(&mut self.inner, timeout)
+        }
+    }
+
+    #[test]
+    fn retry_transport_rides_out_transient_send_failures() {
+        let (server, client) = InProcChannel::pair();
+        let flaky = Flaky {
+            inner: client,
+            fail_n: 2,
+        };
+        let policy = RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::from_micros(10),
+            max_delay: Duration::from_micros(100),
+            seed: 3,
+        };
+        let mut t = RetryTransport::new(Box::new(flaky), policy.clone());
+        t.send(&Message::Heartbeat { collab_id: 1 }).unwrap();
+        assert_eq!(t.retried_ops(), 1);
+        assert_eq!(server.recv().unwrap(), Message::Heartbeat { collab_id: 1 });
+
+        // More failures than the budget: typed exhaustion.
+        let (_server2, client2) = InProcChannel::pair();
+        let hopeless = Flaky {
+            inner: client2,
+            fail_n: 100,
+        };
+        let mut t = RetryTransport::new(Box::new(hopeless), policy);
+        let err = t.send(&Message::Shutdown).unwrap_err();
+        assert!(matches!(err, FedAeError::RetriesExhausted { .. }), "{err}");
+    }
+
+    #[test]
+    fn reconnecting_transport_redials_with_rejoin() {
+        // A dial closure handing out fresh in-proc pairs; the server
+        // ends arrive on a channel like a coordinator's accept loop.
+        let (tx, rx) = mpsc::channel::<InProcChannel>();
+        let dial: DialFn = Box::new(move || {
+            let (server_end, client_end) = InProcChannel::pair();
+            tx.send(server_end)
+                .map_err(|_| FedAeError::Protocol("acceptor gone".into()))?;
+            Ok(Box::new(client_end) as Box<dyn Transport>)
+        });
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_micros(10),
+            max_delay: Duration::from_micros(100),
+            seed: 9,
+        };
+        let mut t = ReconnectingTransport::new(dial, policy);
+
+        // First connection: plain dial, Hello flows through untouched.
+        t.send(&Message::Hello {
+            collab_id: 4,
+            version: crate::transport::PROTOCOL_VERSION,
+        })
+        .unwrap();
+        let conn1 = rx.try_recv().unwrap();
+        assert!(matches!(conn1.recv().unwrap(), Message::Hello { collab_id: 4, .. }));
+        t.send(&Message::encoded_update(2, 4, 8, vec![1, 2, 3]))
+            .unwrap();
+        assert!(matches!(
+            conn1.recv().unwrap(),
+            Message::EncodedUpdate { round: 2, .. }
+        ));
+        assert_eq!(t.reconnects(), 0);
+
+        // Kill the connection server-side: the next send redials and
+        // opens with Rejoin carrying the snooped id + last round.
+        drop(conn1);
+        t.send(&Message::Heartbeat { collab_id: 4 }).unwrap();
+        let conn2 = rx.try_recv().unwrap();
+        assert_eq!(
+            conn2.recv().unwrap(),
+            Message::Rejoin {
+                collab_id: 4,
+                last_round: 2,
+            }
+        );
+        assert_eq!(conn2.recv().unwrap(), Message::Heartbeat { collab_id: 4 });
+        assert_eq!(t.reconnects(), 1);
+
+        // recv() after another drop also redials; before any upload the
+        // rejoin would carry NO_ROUND (checked via a fresh transport).
+        conn2.send(Message::RoundEnd { round: 2 }).unwrap();
+        assert_eq!(t.recv().unwrap(), Message::RoundEnd { round: 2 });
+    }
+
+    #[test]
+    fn reconnecting_transport_first_rejoin_carries_no_round() {
+        let (tx, rx) = mpsc::channel::<InProcChannel>();
+        let dial: DialFn = Box::new(move || {
+            let (server_end, client_end) = InProcChannel::pair();
+            tx.send(server_end)
+                .map_err(|_| FedAeError::Protocol("acceptor gone".into()))?;
+            Ok(Box::new(client_end) as Box<dyn Transport>)
+        });
+        let mut t = ReconnectingTransport::new(
+            dial,
+            RetryPolicy {
+                max_attempts: 2,
+                base_delay: Duration::from_micros(10),
+                max_delay: Duration::from_micros(50),
+                seed: 5,
+            },
+        );
+        t.send(&Message::Hello {
+            collab_id: 7,
+            version: crate::transport::PROTOCOL_VERSION,
+        })
+        .unwrap();
+        let conn1 = rx.try_recv().unwrap();
+        drop(conn1);
+        t.send(&Message::Heartbeat { collab_id: 7 }).unwrap();
+        let conn2 = rx.try_recv().unwrap();
+        assert_eq!(
+            conn2.recv().unwrap(),
+            Message::Rejoin {
+                collab_id: 7,
+                last_round: NO_ROUND,
+            }
+        );
+    }
+
+    #[test]
+    fn reconnecting_transport_exhausts_when_dial_keeps_failing() {
+        let dial: DialFn = Box::new(|| Err(FedAeError::Protocol("connection refused".into())));
+        let mut t = ReconnectingTransport::new(
+            dial,
+            RetryPolicy {
+                max_attempts: 3,
+                base_delay: Duration::from_micros(10),
+                max_delay: Duration::from_micros(50),
+                seed: 2,
+            },
+        );
+        let err = t.send(&Message::Shutdown).unwrap_err();
+        match err {
+            FedAeError::RetriesExhausted { attempts, last, .. } => {
+                assert_eq!(attempts, 3);
+                assert!(last.contains("connection refused"));
+            }
+            other => panic!("expected RetriesExhausted, got {other}"),
+        }
+    }
+}

@@ -222,7 +222,7 @@ fn arbitrary_message(rng: &mut fedae::util::rng::Rng) -> Message {
             v[i] = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY][rng.below(3)];
         }
     }
-    match rng.below(10) {
+    match rng.below(12) {
         0 => Message::Hello {
             collab_id: rng.below(1000) as u32,
             version: rng.below(10) as u16,
@@ -276,6 +276,27 @@ fn arbitrary_message(rng: &mut fedae::util::rng::Rng) -> Message {
         8 => Message::RoundEnd {
             round: rng.below(500) as u32,
         },
+        // v3 recovery frames: Rejoin (NO_ROUND = u32::MAX for a worker
+        // that never uploaded) and CatchUp (possibly-empty, possibly
+        // NaN/Inf-poisoned params).
+        9 => Message::Rejoin {
+            collab_id: rng.below(1000) as u32,
+            last_round: if rng.below(4) == 0 {
+                u32::MAX
+            } else {
+                rng.below(500) as u32
+            },
+        },
+        10 => {
+            let n = prop::len_in(rng, 0, 300);
+            let mut params = prop::vec_f32(rng, n, 1.0);
+            maybe_poison(rng, &mut params);
+            Message::CatchUp {
+                round: rng.below(500) as u32,
+                decoder_needed: rng.below(2) == 0,
+                params,
+            }
+        }
         _ => Message::Reject {
             reason: match rng.below(4) {
                 0 => RejectReason::VersionMismatch {
@@ -933,7 +954,7 @@ fn prop_snapshot_wire_format_round_trips_bytes() {
     use fedae::network::{Direction, TrafficKind};
     prop::check("snapshot_wire_round_trip", |rng| {
         let n = prop::len_in(rng, 1, 64);
-        let mut global = prop::vec_f32(rng, n);
+        let mut global = prop::vec_f32(rng, n, 1.0);
         if rng.below(4) == 0 {
             global[rng.below(n)] = f32::NAN;
         }
@@ -942,7 +963,7 @@ fn prop_snapshot_wire_format_round_trips_bytes() {
                 collaborator: rng.below(100),
                 n_samples: rng.below(1000) as u32,
                 update: CompressedUpdate::Raw {
-                    values: prop::vec_f32(rng, n),
+                    values: prop::vec_f32(rng, n, 1.0),
                 },
                 origin_round: rng.below(10),
                 apply_round: rng.below(20),
